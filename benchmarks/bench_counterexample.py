@@ -1,0 +1,44 @@
+"""Figure 4: Local SGD on the summed objective fails; PEARL-SGD converges.
+
+Section B, equation (4): the bilinear couplings cancel in the sum, so joint
+Local SGD follows a negatively-regularized field and diverges whenever
+``lambda_min(A) < 1/10``, while PEARL-SGD (which respects the game structure)
+converges to the equilibrium and the objective values stabilize.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import stepsize
+from repro.core.baselines import local_sgd_on_sum
+from repro.core.games import make_counterexample_game
+from repro.core.pearl import pearl_sgd
+
+
+def run(steps: int = 4000):
+    game = make_counterexample_game()
+    c = game.constants()
+    x0 = jnp.ones((2, game.d))
+
+    t0 = time.perf_counter()
+    _, f1s, f2s, norms = local_sgd_on_sum(game, x0, steps=steps, gamma=0.05)
+    tau = 2
+    r = pearl_sgd(game, x0, tau=tau, rounds=steps // tau,
+                  gamma=stepsize.gamma_constant(c, tau), stochastic=False)
+    us = (time.perf_counter() - t0) * 1e6 / 2
+
+    blowup = norms[-1] / norms[0]
+    f_div = max(abs(f1s[-1]), abs(f2s[-1]))
+    emit("fig4_localsgd_vs_pearl", us,
+         f"localsgd_norm_blowup={blowup:.2e};localsgd_obj_end={f_div:.2e};"
+         f"pearl_rel_err={r.rel_errors[-1]:.2e}")
+    return blowup, r.rel_errors[-1]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall time and
+— more meaningfully on CPU — HBM-traffic accounting for the flash path.
+
+Wall times in interpret mode are NOT TPU performance; the derived metric that
+matters is the analytic HBM-bytes ratio (naive vs flash), which is what the
+roofline memory term uses in Section Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_scan.ops import ssd_scan
+from repro.kernels.mamba2_scan.ref import ssd_ref
+from repro.kernels.mlstm_chunk.ops import mlstm_scan
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+
+
+def flash_hbm_bytes(b, s, h, hd, block_q, bytes_per=2):
+    """Analytic HBM traffic: naive materializes S^2 scores; flash streams."""
+    naive = b * h * (2 * s * hd + 3 * s * s + s * hd) * bytes_per
+    flash = b * h * (3 * s * hd + (s // block_q) * s * hd * 0 + s * hd) * bytes_per
+    return naive, flash
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 1, 256, 2, 64
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+
+    us_ref = time_fn(jax.jit(lambda q, k, v: attention_ref(q, k, v)), q, k, v)
+    us_ker = time_fn(
+        lambda q, k, v: flash_attention(q, k, v, block_q=64, block_k=64,
+                                        interpret=True), q, k, v)
+    naive, flash = flash_hbm_bytes(32, 32768, 48, 128, 128)
+    emit("kernel_flash_attention", us_ker,
+         f"ref_us={us_ref:.0f};interpret=True;"
+         f"hbm_naive_GB={naive / 1e9:.1f};hbm_flash_GB={flash / 1e9:.1f};"
+         f"traffic_ratio={naive / flash:.1f}x")
+
+    L, H, P, N = 256, 4, 32, 16
+    x = jax.random.normal(key, (b, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (b, L, H)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.fold_in(key, 4), (H,)))
+    B = jax.random.normal(jax.random.fold_in(key, 5), (b, L, N))
+    C = jax.random.normal(jax.random.fold_in(key, 6), (b, L, N))
+    us_ref = time_fn(jax.jit(lambda *a: ssd_ref(*a)[0]), x, dt, A, B, C)
+    us_ker = time_fn(lambda *a: ssd_scan(*a, chunk=64, interpret=True)[0],
+                     x, dt, A, B, C)
+    emit("kernel_mamba2_scan", us_ker,
+         f"seq_ref_us={us_ref:.0f};interpret=True;chunk=64")
+
+    dh = 32
+    qm = jax.random.normal(key, (b, L, H, dh))
+    km = jax.random.normal(jax.random.fold_in(key, 7), (b, L, H, dh))
+    vm = jax.random.normal(jax.random.fold_in(key, 8), (b, L, H, dh))
+    logi = jax.random.normal(jax.random.fold_in(key, 9), (b, L, H))
+    logf = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 10), (b, L, H)) + 2.0)
+    us_ref = time_fn(jax.jit(lambda *a: mlstm_ref(*a)[0]), qm, km, vm, logi, logf)
+    us_ker = time_fn(lambda *a: mlstm_scan(*a, chunk=64, interpret=True)[0],
+                     qm, km, vm, logi, logf)
+    emit("kernel_mlstm_chunk", us_ker,
+         f"seq_ref_us={us_ref:.0f};interpret=True;chunk=64")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Roofline table emission: reads the dry-run JSON records and prints one row
+per (arch x shape x mesh) with the three terms and the bottleneck.
+
+Run ``python -m repro.launch.dryrun --arch all --shape all --multi-pod no
+--out experiments/dryrun_singlepod.json`` first (hours on this 1-core box);
+this benchmark only formats whatever records exist.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+FILES = (
+    "experiments/dryrun_singlepod.json",
+    "experiments/dryrun_multipod.json",
+)
+
+
+def run():
+    n = 0
+    for path in FILES:
+        if not os.path.exists(path):
+            emit(f"roofline_missing_{os.path.basename(path)}", 0.0,
+                 "run repro.launch.dryrun first")
+            continue
+        with open(path) as f:
+            records = json.load(f)
+        for r in records:
+            if "error" in r:
+                emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                     f"ERROR:{r['error'][:80]}")
+                continue
+            emit(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                r.get("compile_s", 0.0) * 1e6,
+                f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                f"collective_s={r['collective_s']:.4f};"
+                f"bottleneck={r['bottleneck']};"
+                f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                f"peak_mem_GB_per_dev={r['peak_memory_bytes'] / 1e9:.2f}",
+            )
+            n += 1
+    emit("roofline_total_rows", 0.0, f"rows={n}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper
+table/figure artifact) so ``python -m benchmarks.run`` output is machine
+readable; ``derived`` carries the figure-specific metric.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

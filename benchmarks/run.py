@@ -1,0 +1,59 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Heavier paper-figure
+reproductions accept reduced iteration counts via BENCH_FAST=1 (default on)
+so the full suite stays CPU-tractable; set BENCH_FAST=0 for paper-scale runs.
+"""
+
+from __future__ import annotations
+
+import os
+import traceback
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_counterexample,
+        bench_heatmap,
+        bench_kernels,
+        bench_pearl_comm,
+        bench_quadratic,
+        bench_robot,
+        bench_roofline,
+        bench_tuned,
+    )
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("quadratic", lambda: bench_quadratic.run(
+            rounds_det=200 if FAST else 300,
+            rounds_sto=1200 if FAST else 2000,
+            n_seeds=3 if FAST else 5)),
+        ("robot", lambda: bench_robot.run(
+            rounds=300 if FAST else 400, n_seeds=3 if FAST else 5)),
+        ("heatmap", lambda: bench_heatmap.run(rounds=100)),
+        ("counterexample", lambda: bench_counterexample.run(
+            steps=3000 if FAST else 4000)),
+        ("tuned", lambda: bench_tuned.run(
+            rounds=100 if FAST else 150, n_seeds=2 if FAST else 3)),
+        ("kernels", bench_kernels.run),
+        ("pearl_comm", lambda: bench_pearl_comm.run(
+            local_steps=16 if FAST else 24)),
+        ("roofline", bench_roofline.run),
+    ]
+    failures = []
+    for name, fn in jobs:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+            print(f"{name},0.0,ERROR:{e}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

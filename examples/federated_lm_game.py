@@ -1,0 +1,90 @@
+"""End-to-end driver: MpFL with LANGUAGE-MODEL players (the production story).
+
+    PYTHONPATH=src python examples/federated_lm_game.py [--steps 300] [--tau 8]
+
+Three silos each own a ~100M-parameter llama-style LM (a width-reduced
+smollm-360m) and a private heterogeneous token distribution. They play the
+paper's Section 2.2 consensus game: each minimizes its own LM loss plus a
+proximal pull toward the stale across-player parameter mean. PEARL-SGD =
+tau local AdamW/SGD steps per synchronization; the synchronization is the
+only cross-silo communication.
+
+On the production mesh each player is a pod (launch/dryrun.py --pearl lowers
+exactly this program on the 2x16x16 mesh); here the same code runs all
+players on CPU via vmap. Prints per-round losses and the communication ledger.
+"""
+
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.models.model import param_shapes
+from repro.optim.optimizers import sgd
+from repro.roofline.analysis import count_params
+from repro.train.pearl_trainer import PearlCommReport, PearlTrainer
+
+
+def build_player_config(target_params: str):
+    """~100M-param llama-style player ('full') or a CPU-friendly reduction."""
+    base = get_config("smollm-360m")
+    if target_params == "full":
+        # 12 layers x d_model 768 =~ 100M params mostly in embeddings + FFN
+        return dataclasses.replace(
+            base, name="lm-player-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=49152,
+            dtype="float32", attn_chunk=256,
+        )
+    return base.smoke_variant()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300,
+                    help="total LOCAL steps per player")
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--players", type=int, default=3)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--size", choices=["full", "smoke"], default="smoke",
+                    help="'full' = ~100M params/player (slow on CPU)")
+    ap.add_argument("--prox", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = build_player_config(args.size)
+    n_params = count_params(param_shapes(cfg))
+    print(f"player model: {cfg.name}  params={n_params / 1e6:.1f}M  "
+          f"players={args.players}  tau={args.tau}")
+
+    stream = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        n_players=args.players, seed=0,
+    ))
+    trainer = PearlTrainer(cfg, sgd(3e-2), n_players=args.players,
+                           tau=args.tau, prox_lambda=args.prox, seed=0)
+
+    rounds = max(1, args.steps // args.tau)
+    t0 = time.time()
+    for r in range(rounds):
+        hist = trainer.run(stream, rounds=1)
+        rec = hist[-1]
+        if r % max(1, rounds // 10) == 0 or r == rounds - 1:
+            print(f"round {r:4d}/{rounds}  lm_loss={rec['lm_loss']:.4f}  "
+                  f"({time.time() - t0:.0f}s)")
+
+    report = PearlCommReport(n_players=args.players, param_count=n_params,
+                             tau=args.tau, rounds=rounds)
+    base = PearlCommReport(n_players=args.players, param_count=n_params,
+                           tau=1, rounds=args.steps)
+    print("\ncommunication ledger (fp32 on the wire):")
+    print(f"  PEARL tau={args.tau}: {report.total_bytes / 1e9:.2f} GB over "
+          f"{rounds} syncs")
+    print(f"  non-local (tau=1):   {base.total_bytes / 1e9:.2f} GB over "
+          f"{args.steps} syncs")
+    print(f"  saving: {base.total_bytes / report.total_bytes:.1f}x — the "
+          "paper's claim, realized at LM scale")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: solve a 5-player game with PEARL-SGD in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's Section 4.1 quadratic game, runs PEARL-SGD with the
+theoretical step-size for a few synchronization intervals tau, and prints the
+relative error after a fixed communication budget — the paper's headline:
+more local steps, fewer communications, same (or better) accuracy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stepsize
+from repro.core.games import make_quadratic_game
+from repro.core.pearl import pearl_sgd
+
+game = make_quadratic_game(n=5, d=10, M=100, batch_size=1)
+consts = game.constants()
+print(f"game: n={game.n} d={game.d} kappa={consts.kappa:.0f} q={consts.q:.3f}")
+
+x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
+rounds = 2500  # communication budget (enough to reach the noise plateau)
+
+for tau in (1, 4, 20):
+    gamma = stepsize.gamma_constant(consts, tau)
+    result = pearl_sgd(game, x0, tau=tau, rounds=rounds, gamma=gamma,
+                       key=jax.random.PRNGKey(0))
+    print(f"tau={tau:2d}  gamma={gamma:.2e}  comms={result.communications}  "
+          f"local steps={result.iterations}  "
+          f"rel err={result.rel_errors[-1]:.3e}")
+
+print("\nLarger tau => smaller error for the SAME number of communications "
+      "(Theorem 3.4).")

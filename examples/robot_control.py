@@ -1,0 +1,40 @@
+"""Distributed mobile-robot control as MpFL (paper Section 4.2).
+
+    PYTHONPATH=src python examples/robot_control.py
+
+Five robots hold positions balancing an anchor attraction against pairwise
+displacement constraints — each robot optimizes its own objective, so the
+stable configuration is a Nash equilibrium, found here with PEARL-SGD under
+gradient noise (sigma^2 = 100). Prints the final formation and per-robot
+objective values, and the communication savings of tau = 8 vs tau = 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stepsize
+from repro.core.games import make_robot_game
+from repro.core.metrics import final_plateau
+from repro.core.pearl import pearl_sgd
+
+game = make_robot_game()
+consts = game.constants()
+x_star = game.equilibrium()
+print("equilibrium positions:", np.asarray(x_star).ravel().round(3))
+
+x0 = jnp.zeros((game.n, game.d))
+for tau in (1, 8):
+    gamma = stepsize.gamma_robot(consts, tau)
+    r = pearl_sgd(game, x0, tau=tau, rounds=400, gamma=gamma,
+                  key=jax.random.PRNGKey(0))
+    print(f"tau={tau}: plateau rel err={final_plateau(r.rel_errors, 50):.3e}  "
+          f"final positions={np.asarray(r.x_final).ravel().round(3)}")
+
+r = pearl_sgd(game, x0, tau=8, rounds=400,
+              gamma=stepsize.gamma_robot(consts, 8), key=jax.random.PRNGKey(0))
+print("\nper-robot objectives at the found equilibrium:")
+for i in range(game.n):
+    f_i = float(game.objective(i, r.x_final))
+    f_s = float(game.objective(i, x_star))
+    print(f"  robot {i + 1}: f_i={f_i:8.3f}   (at x*: {f_s:8.3f})")

@@ -1,0 +1,118 @@
+"""Render the Dry-run and Roofline tables of EXPERIMENTS.md from the dry-run
+JSON records (idempotent: replaces content between the AUTO markers).
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+SINGLE = os.path.join(ROOT, "experiments", "dryrun_singlepod.json")
+MULTI = os.path.join(ROOT, "experiments", "dryrun_multipod.json")
+
+BEGIN = "<!-- AUTO-DRYRUN-BEGIN -->"
+END = "<!-- AUTO-DRYRUN-END -->"
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def render() -> str:
+    single = _load(SINGLE)
+    multi = _load(MULTI)
+    lines = []
+
+    lines.append("### Dry-run summary (compile proof, both meshes)\n")
+    ok_s = [r for r in single if "error" not in r]
+    ok_m = [r for r in multi if "error" not in r]
+    lines.append(f"- single-pod 16x16 (256 chips): **{len(ok_s)}/{len(single)}"
+                 "** combos lowered + compiled")
+    lines.append(f"- multi-pod 2x16x16 (512 chips): **{len(ok_m)}/{len(multi)}"
+                 "** combos lowered + compiled")
+    for r in single + multi:
+        if "error" in r:
+            lines.append(f"  - FAIL {r['arch']}/{r['shape']}/{r['mesh']}: "
+                         f"{r['error'][:120]}")
+    lines.append("")
+
+    lines.append("### Multi-pod lowering proof (2x16x16, per-combo)\n")
+    lines.append("| arch | shape | kind | peak mem/dev | collective ops | "
+                 "compile s |")
+    lines.append("|---|---|---|---|---|---|")
+    for r in ok_m:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{_fmt_bytes(r['peak_memory_bytes'])} | {r['collective_ops']} | "
+            f"{r['compile_s']} |")
+    lines.append("")
+
+    lines.append("### Roofline table — single-pod 16x16, trip-count-corrected "
+                 "(Section Roofline)\n")
+    lines.append("All terms in seconds per step, per-chip convention "
+                 "(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI). "
+                 "`useful` = MODEL_FLOPS / HLO_FLOPs.\n")
+    lines.append("| arch | shape | compute s | memory s | collective s | "
+                 "bottleneck | useful | peak mem/dev | what would move the "
+                 "dominant term |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    suggestions = {
+        ("memory", "train"): "flash/fused attention keeps S^2 scores in VMEM; "
+                             "bf16 master-grad copies",
+        ("memory", "prefill"): "flash attention kernel (kernels/) removes "
+                               "S^2 HBM traffic",
+        ("memory", "decode"): "KV-cache layout/quantization; batch more "
+                              "requests per chip",
+        ("collective", "train"): "shard or replicate to kill activation "
+                                 "all-reduces; overlap grad reduce",
+        ("collective", "prefill"): "reduce tensor-parallel span; all-to-all "
+                                   "scheduling for MoE",
+        ("collective", "decode"): "replicate small weights; duplicate KV "
+                                  "heads per chip",
+        ("compute", "train"): "remat policy (drop cheap ops only); MXU-"
+                              "aligned tiles",
+        ("compute", "prefill"): "MXU-aligned flash tiles",
+        ("compute", "decode"): "speculative/multi-token decode",
+    }
+    for r in ok_s:
+        mode = ("train" if r["shape"] == "train_4k"
+                else "prefill" if r["shape"] == "prefill_32k" else "decode")
+        sug = suggestions.get((r["bottleneck"], mode), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{_fmt_bytes(r['peak_memory_bytes'])} | {sug} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    block = render()
+    with open(MD) as f:
+        text = f.read()
+    pattern = re.compile(re.escape(BEGIN) + ".*?" + re.escape(END), re.S)
+    new = pattern.sub(BEGIN + "\n" + block + "\n" + END, text)
+    with open(MD, "w") as f:
+        f.write(new)
+    print(f"rendered {MD}")
+
+
+if __name__ == "__main__":
+    main()

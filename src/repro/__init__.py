@@ -1,0 +1,3 @@
+"""repro: MpFL / PEARL-SGD production-grade JAX reproduction."""
+
+__version__ = "0.1.0"

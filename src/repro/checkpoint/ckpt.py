@@ -1,0 +1,75 @@
+"""Pytree checkpointing (npz + path-keyed layout, resume-safe).
+
+Arrays are gathered to host and stored under '/'-joined tree paths; restore
+rebuilds into the *target* pytree structure (so sharding/placement of the
+restored state is decided by the caller, e.g. ``jax.device_put`` with the
+production specs). Step metadata lives alongside for trainer resume.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree, *, widen: bool = False) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = np.asarray(leaf)
+        if widen and arr.dtype.kind not in "fiub":
+            # npz cannot round-trip extension dtypes (bfloat16): widen to f32;
+            # restore casts back to the target leaf dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: dict[str, Any]) -> str:
+    """Save {name: pytree} state dicts. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}")
+    payload = {}
+    for name, tree in state.items():
+        for k, v in _flatten_with_paths(tree, widen=True).items():
+            payload[f"{name}|{k}"] = v
+    np.savez(path + ".npz", **payload)
+    with open(path + ".json", "w") as f:
+        json.dump({"step": step, "names": sorted(state)}, f)
+    return path + ".npz"
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("ckpt_") : -len(".json")])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".json")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, targets: dict[str, Any]
+                       ) -> dict[str, Any]:
+    """Restore into the structure (and dtypes) of ``targets``."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        out = {}
+        for name, target in targets.items():
+            leaves_paths = jax.tree_util.tree_flatten_with_path(target)
+            rebuilt = []
+            for pth, leaf in leaves_paths[0]:
+                key = "/".join(
+                    str(p.key) if hasattr(p, "key") else str(p.idx) for p in pth
+                )
+                arr = data[f"{name}|{key}"]
+                rebuilt.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+            out[name] = jax.tree_util.tree_unflatten(leaves_paths[1], rebuilt)
+    return out

@@ -1,0 +1,29 @@
+"""Assigned architecture configs (importing this package registers them)."""
+
+from repro.configs import (  # noqa: F401  (registration side effects)
+    chameleon_34b,
+    granite_34b,
+    llama4_maverick,
+    moonshot_16b,
+    qwen3_moe_30b,
+    seamless_m4t,
+    smollm_360m,
+    stablelm_1_6b,
+    xlstm_125m,
+    zamba2_1_2b,
+)
+from repro.configs.base import ModelConfig, all_configs, get_config
+from repro.configs.shapes import ALL_SHAPES, SHAPES, InputShape, get_shape
+
+ARCH_IDS = tuple(sorted(all_configs()))
+
+__all__ = [
+    "ModelConfig",
+    "all_configs",
+    "get_config",
+    "ARCH_IDS",
+    "InputShape",
+    "ALL_SHAPES",
+    "SHAPES",
+    "get_shape",
+]

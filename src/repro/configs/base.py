@@ -1,0 +1,192 @@
+"""Model configuration system for the assigned architecture pool.
+
+Every architecture in the assignment is described by a single frozen
+:class:`ModelConfig`. Heterogeneous stacks (hybrid SSM/attention, alternating
+mLSTM/sLSTM, interleaved dense/MoE) are expressed via ``layer_types()``, a
+per-layer type list that the model assembler groups into contiguous runs and
+compiles with ``jax.lax.scan`` per run (bounded HLO size at 88 layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "vlm", "audio", "hybrid", "ssm"]
+
+# Layer type tags used by layer_types():
+#   "attn"   - attention + dense FFN decoder block
+#   "moe"    - attention + MoE FFN decoder block
+#   "mamba"  - Mamba2 (SSD) block
+#   "mlstm"  - matrix-LSTM block (xLSTM)
+#   "slstm"  - scalar-LSTM block (xLSTM)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (exact assigned values in configs/<id>.py)."""
+
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0            # per-expert FFN width
+    n_shared_experts: int = 0    # DeepSeek/Moonlight-style always-on experts
+    moe_every: int = 1           # 1 = every layer MoE; 2 = interleave dense/MoE
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512    # GShard dispatch group (perf knob, see Perf)
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_expand: int = 2          # d_inner = ssm_expand * d_model
+    conv_kernel: int = 4
+    attn_every: int = 0          # hybrid: one attention block every N layers
+
+    # --- xLSTM ---
+    slstm_every: int = 0         # one sLSTM block every N layers (rest mLSTM)
+
+    # --- attention ---
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0      # 0 = full causal attention
+    attn_chunk: int = 1024       # query-chunk size for memory-bounded attention
+
+    # --- encoder-decoder (audio) ---
+    enc_layers: int = 0
+
+    # --- modality frontend stubs ---
+    modality: Literal["", "vision", "audio"] = ""
+    n_modality_tokens: int = 0   # patches / frames prepended per sample
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- cost-model instrumentation (roofline/cost_model.py) ---
+    # XLA's HloCostAnalysis visits while-loop bodies ONCE (no trip-count
+    # multiplication), so scanned layer stacks/chunk loops undercount FLOPs.
+    # The cost model compiles tiny per-layer-kind variants with loops
+    # unrolled and recombines analytically. These fields exist only for that:
+    override_layer_types: tuple[str, ...] | None = None   # replace layer stack
+    unroll_loops: bool = False                             # unroll scans in HLO
+    ssm_chunk: int = 256                                   # SSD/mLSTM chunk len
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def layer_types(self) -> tuple[str, ...]:
+        """Per-layer block type tags, length ``n_layers`` (decoder stack)."""
+        if self.override_layer_types is not None:
+            return self.override_layer_types
+        types = []
+        for i in range(self.n_layers):
+            if self.family == "ssm" and self.slstm_every:
+                types.append("slstm" if (i + 1) % self.slstm_every == 0 else "mlstm")
+            elif self.family == "ssm":
+                types.append("mlstm")
+            elif self.family == "hybrid":
+                is_attn = self.attn_every and (i + 1) % self.attn_every == 0
+                types.append("attn" if is_attn else "mamba")
+            elif self.n_experts:
+                is_moe = (i % self.moe_every) == (self.moe_every - 1)
+                types.append("moe" if is_moe else "attn")
+            else:
+                types.append("attn")
+        return tuple(types)
+
+    def layer_runs(self) -> tuple[tuple[str, int], ...]:
+        """Contiguous (type, count) runs of :meth:`layer_types` for scan grouping."""
+        runs: list[tuple[str, int]] = []
+        for t in self.layer_types():
+            if runs and runs[-1][0] == t:
+                runs[-1] = (t, runs[-1][1] + 1)
+            else:
+                runs.append((t, 1))
+        return tuple(runs)
+
+    def supports_long_decode(self) -> tuple[bool, str]:
+        """Can this arch serve a 500k-token context sub-quadratically?
+
+        SSM/hybrid blocks carry O(1) state. Attention archs qualify only via
+        the sliding-window variant (cache ring-buffered to the window).
+        """
+        if self.family in ("ssm", "hybrid"):
+            return True, "recurrent state is O(1) in context length"
+        if self.sliding_window > 0:
+            return True, f"sliding-window attention (window={self.sliding_window})"
+        return False, "full attention; enable sliding_window for long_500k"
+
+    def smoke_variant(self) -> "ModelConfig":
+        """Reduced config for CPU smoke tests (<=2 layers, d_model<=512, <=4 experts)."""
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        while n_heads % n_kv:
+            n_kv -= 1
+        d_model = 256
+        head_dim = d_model // n_heads
+        n_layers = 2
+        updates = dict(
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=512 if self.d_ff else 0,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            moe_d_ff=256 if self.moe_d_ff else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_every=1 if self.n_experts else self.moe_every,
+            capacity_factor=8.0,  # no capacity drops -> deterministic smoke tests
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            attn_every=2 if self.attn_every else 0,
+            slstm_every=2 if self.slstm_every else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            attn_chunk=32,
+            n_modality_tokens=8 if self.n_modality_tokens else 0,
+            dtype="float32",
+        )
+        return dataclasses.replace(self, **updates)
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate config {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration side effects)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    import repro.configs  # noqa: F401
+
+    return dict(_REGISTRY)

@@ -1,0 +1,27 @@
+"""Chameleon 34B — early-fusion mixed-modal decoder [arXiv:2405.09818].
+
+48 layers, d_model 8192, 64 heads (GQA kv=8), d_ff 22016, vocab 65536
+(text + VQ image codes share one codebook-extended vocabulary). Early fusion:
+image content enters as precomputed patch/VQ embeddings from the stubbed
+vision frontend (``n_modality_tokens`` per sample) interleaved with text
+token embeddings — the transformer backbone we implement consumes both.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="chameleon-34b",
+        family="vlm",
+        n_layers=48,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22016,
+        vocab_size=65536,
+        citation="arXiv:2405.09818 (Chameleon)",
+        modality="vision",
+        n_modality_tokens=1024,
+        sliding_window=8192,
+    )
+)

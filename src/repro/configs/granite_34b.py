@@ -1,0 +1,25 @@
+"""IBM Granite 34B Code — dense llama-architecture decoder [arXiv:2405.04324].
+
+88 layers, d_model 6144, 48 heads with multi-query attention (GQA kv=1),
+d_ff 24576, vocab 49152. The single KV head is replicated across the tensor-
+parallel axis (1 does not divide 16); query heads shard 48/16 = 3 per device.
+``sliding_window`` enables the sub-quadratic variant used only for the
+``long_500k`` decode shape (full causal attention otherwise).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="granite-34b",
+        family="dense",
+        n_layers=88,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+        citation="arXiv:2405.04324 (Granite Code Models)",
+        sliding_window=8192,
+    )
+)

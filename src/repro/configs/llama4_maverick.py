@@ -1,0 +1,32 @@
+"""Llama 4 Maverick 400B-A17B — interleaved dense/MoE early-fusion decoder
+[hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48 layers, d_model 5120, 40 heads (GQA kv=8), 128 routed experts with top-1
+routing and per-expert d_ff 8192, plus one always-on shared expert; vocab
+202048. Maverick interleaves dense and MoE FFN layers (``moe_every=2``).
+Early fusion: image patches arrive as stub-frontend embeddings.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=16384,            # dense (non-MoE) interleaved layers
+        vocab_size=202048,
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E (Maverick variant)",
+        n_experts=128,
+        top_k=1,
+        moe_d_ff=8192,
+        n_shared_experts=1,
+        moe_every=2,
+        modality="vision",
+        n_modality_tokens=1024,
+        sliding_window=8192,
+    )
+)

@@ -1,0 +1,28 @@
+"""Qwen3 30B-A3B — fine-grained MoE decoder [hf:Qwen/Qwen3-30B-A3B].
+
+48 layers, d_model 2048, 32 heads (GQA kv=4), 128 routed experts with top-8
+routing and tiny per-expert d_ff 768; vocab 151936. Every layer is MoE; no
+shared expert.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=768,
+        vocab_size=151936,
+        citation="hf:Qwen/Qwen3-30B-A3B",
+        n_experts=128,
+        top_k=8,
+        moe_d_ff=768,
+        n_shared_experts=0,
+        moe_every=1,
+        sliding_window=8192,
+    )
+)

@@ -1,0 +1,29 @@
+"""SeamlessM4T Medium — encoder-decoder multimodal translation backbone
+[arXiv:2308.11596].
+
+12 encoder + 12 decoder layers, d_model 1024, 16 heads (kv=16), d_ff 4096,
+vocab 256206. The speech frontend (mel-spectrogram + conv feature extractor)
+is a STUB: ``input_specs()`` provides precomputed frame embeddings of shape
+(batch, seq, d_model) consumed by the bidirectional encoder; the decoder is
+causal with cross-attention into the encoder memory. Decode shapes exercise
+the decoder against a cached encoder memory + KV cache.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        citation="arXiv:2308.11596 (SeamlessM4T)",
+        enc_layers=12,
+        modality="audio",
+        sliding_window=8192,
+    )
+)

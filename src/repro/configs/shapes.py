@@ -1,0 +1,42 @@
+"""Assigned input shapes and per-shape ShapeDtypeStruct builders.
+
+The four assigned shapes exercise different execution modes:
+
+- ``train_4k``    — training step (loss + grad + update) on 4k sequences.
+- ``prefill_32k`` — inference prefill: forward over the full 32k prompt,
+  producing a populated KV cache + last-token logits.
+- ``decode_32k``  — inference decode: ONE new token against a 32k KV cache.
+- ``long_500k``   — long-context decode: one token against a 524,288-token
+  context; requires sub-quadratic attention (SSM state or sliding-window
+  ring-buffer cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Mode = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: Mode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES: tuple[InputShape, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES: dict[str, InputShape] = {s.name: s for s in ALL_SHAPES}
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]

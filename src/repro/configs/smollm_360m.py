@@ -1,0 +1,25 @@
+"""SmolLM 360M — small dense llama-architecture decoder
+[hf:HuggingFaceTB/SmolLM-135M family].
+
+32 layers, d_model 960, 15 heads (GQA kv=5), d_ff 2560, vocab 49152.
+15 heads do not divide the 16-way model axis: attention projections are
+replicated across ``model`` and the FFN/vocab dimensions carry the tensor
+parallelism instead (see models/sharding.py).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="smollm-360m",
+        family="dense",
+        n_layers=32,
+        d_model=960,
+        n_heads=15,
+        n_kv_heads=5,
+        d_ff=2560,
+        vocab_size=49152,
+        citation="hf:HuggingFaceTB/SmolLM-135M (360M variant)",
+        sliding_window=8192,
+    )
+)

@@ -1,0 +1,22 @@
+"""StableLM 2 1.6B — dense decoder, full multi-head attention
+[hf:stabilityai/stablelm-2-1_6b].
+
+24 layers, d_model 2048, 32 heads (kv=32 — MHA), d_ff 5632, vocab 100352.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="stablelm-1.6b",
+        family="dense",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=5632,
+        vocab_size=100352,
+        citation="hf:stabilityai/stablelm-2-1_6b",
+        sliding_window=8192,
+    )
+)

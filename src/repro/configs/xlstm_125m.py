@@ -1,0 +1,24 @@
+"""xLSTM 125M — sLSTM + mLSTM recurrent block stack [arXiv:2405.04517].
+
+12 layers, d_model 768, 4 heads, vocab 50304, d_ff = 0 (projections live
+inside the blocks: mLSTM pre-up-projects by 2x, sLSTM uses a 4/3-factor
+gated FFN). One sLSTM block every 4th layer, mLSTM otherwise. Decode is
+O(1)-state recurrent, so long_500k runs natively.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        citation="arXiv:2405.04517 (xLSTM)",
+        slstm_every=4,
+    )
+)

@@ -1,0 +1,29 @@
+"""Zamba2 1.2B — hybrid Mamba2 backbone with interleaved attention blocks
+[arXiv:2411.15242].
+
+38 layers, d_model 2048, ssm_state 64, d_inner 4096 (expand 2); one
+attention block (32 heads, kv=32, d_ff 8192) every 6th layer, Mamba2
+otherwise. Long-context decode is native: the recurrent state is O(1) in
+context length, and the sparse attention blocks use a sliding window.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        n_layers=38,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32000,
+        citation="arXiv:2411.15242 (Zamba2)",
+        ssm_state=64,
+        ssm_expand=2,
+        conv_kernel=4,
+        attn_every=6,
+        sliding_window=4096,
+    )
+)

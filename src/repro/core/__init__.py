@@ -1,0 +1,25 @@
+"""MpFL core: n-player games, PEARL-SGD, theoretical step-sizes, baselines."""
+
+from repro.core.game import (
+    GameConstants,
+    VectorGame,
+    register_game,
+    relative_error,
+    residual_norm,
+)
+from repro.core.pearl import PearlResult, pearl_sgd, pearl_sgd_mean
+from repro.core import baselines, metrics, stepsize
+
+__all__ = [
+    "GameConstants",
+    "VectorGame",
+    "register_game",
+    "relative_error",
+    "residual_norm",
+    "PearlResult",
+    "pearl_sgd",
+    "pearl_sgd_mean",
+    "baselines",
+    "metrics",
+    "stepsize",
+]

@@ -1,0 +1,196 @@
+"""n-player game abstraction for Multiplayer Federated Learning (MpFL).
+
+The paper (Yoon, Choudhury & Loizou, NeurIPS 2025) formulates MpFL as an
+n-player game: player ``i`` owns an action block ``x^i`` and an objective
+``f_i(x^i; x^{-i}) = E_{xi ~ D_i}[f_{i,xi}(x^i; x^{-i})]`` which it minimizes
+*only* in its own block. The target is a joint action ``x*`` with
+``F(x*) = 0`` for the joint gradient operator
+
+    F(x) = (grad_{x^1} f_1(x), ..., grad_{x^n} f_n(x)).
+
+This module defines the ``VectorGame`` interface used by the optimization
+algorithms in :mod:`repro.core.pearl` and :mod:`repro.core.baselines`. For
+the paper's experimental setups all players share the same dimension ``d``,
+so a joint action is a dense ``(n, d)`` array — this keeps every algorithm a
+single ``vmap``/``scan`` program. Neural-network players (whole parameter
+pytrees as actions) are handled separately by :mod:`repro.core.neural` and
+:mod:`repro.train.pearl_trainer`.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GameConstants:
+    """Problem constants used by the theoretical step-size rules.
+
+    Attributes:
+      mu:     quasi-strong monotonicity modulus of ``F`` (Assumption QSM).
+      ell:    star-cocoercivity parameter of ``F`` (Assumption SCO); following
+              the paper/[Facchinei-Pang] we set ``ell = L_F**2 / mu`` when only
+              Lipschitzness of ``F`` is available.
+      L_max:  max over players of the per-player smoothness ``L_i`` (SM).
+      L_F:    Lipschitz constant of the joint operator ``F`` (when finite).
+    """
+
+    mu: float
+    ell: float
+    L_max: float
+    L_F: float
+
+    @property
+    def kappa(self) -> float:
+        """Condition number ``kappa = ell / mu >= 1``."""
+        return self.ell / self.mu
+
+    @property
+    def q(self) -> float:
+        """``q = L_max / sqrt(ell * mu)`` from Theorem 3.4 / Corollary 3.5."""
+        return self.L_max / float(np.sqrt(self.ell * self.mu))
+
+
+class VectorGame(abc.ABC):
+    """An n-player game whose joint action is a dense ``(n, d)`` array.
+
+    Subclasses hold jnp arrays as attributes and are registered as pytrees
+    (see :func:`register_game`) so instances can cross ``jax.jit`` boundaries.
+    """
+
+    n: int
+    d: int
+
+    # ------------------------------------------------------------------ API
+    @abc.abstractmethod
+    def player_grad(self, i: Array, x_i: Array, x_ref: Array) -> Array:
+        """Deterministic ``grad_{x^i} f_i(x_i; x_ref^{-i})``.
+
+        Args:
+          i:      player index (traced scalar — must be usable under vmap).
+          x_i:    player ``i``'s *current local* action, shape ``(d,)``.
+          x_ref:  stale joint snapshot ``(n, d)``; row ``i`` is ignored and
+                  replaced by ``x_i`` (the player never differentiates w.r.t.
+                  the others' actions).
+
+        Returns:
+          gradient of shape ``(d,)``.
+        """
+
+    def player_grad_stoch(
+        self, i: Array, x_i: Array, x_ref: Array, key: Array
+    ) -> Array:
+        """Unbiased stochastic estimate of :meth:`player_grad` (BV).
+
+        Default: the deterministic gradient (``sigma_i = 0``).
+        """
+        del key
+        return self.player_grad(i, x_i, x_ref)
+
+    # --------------------------------------------------------- joint operator
+    def operator(self, x: Array) -> Array:
+        """Joint gradient operator ``F(x)``, shape ``(n, d)``."""
+        idx = jnp.arange(self.n)
+        return jax.vmap(lambda i, xi: self.player_grad(i, xi, x))(idx, x)
+
+    def operator_stoch(self, x: Array, key: Array) -> Array:
+        """One stochastic evaluation of ``F`` (independent noise per player)."""
+        idx = jnp.arange(self.n)
+        keys = jax.random.split(key, self.n)
+        return jax.vmap(lambda i, xi, k: self.player_grad_stoch(i, xi, x, k))(
+            idx, x, keys
+        )
+
+    # ----------------------------------------------------------- diagnostics
+    def equilibrium(self) -> Array:
+        """Exact equilibrium ``x*`` with ``F(x*) = 0`` (``(n, d)``).
+
+        Subclasses with closed-form/linear structure override this; the
+        default raises.
+        """
+        raise NotImplementedError(f"{type(self).__name__} has no closed form x*")
+
+    def constants(self) -> GameConstants:
+        """Theoretical constants (mu, ell, L_max, L_F) for step-size rules."""
+        raise NotImplementedError(f"{type(self).__name__} has no known constants")
+
+    def objective(self, i: int, x: Array) -> Array:
+        """Scalar objective ``f_i`` at joint action ``x`` (for plots/tests)."""
+        raise NotImplementedError
+
+
+def register_game(cls=None, *, data: tuple[str, ...] = (), meta: tuple[str, ...] = ()):
+    """Register a ``VectorGame`` dataclass as a JAX pytree.
+
+    ``data`` fields are traced leaves (jnp arrays), ``meta`` fields are static
+    hashable auxiliaries (ints, floats, tuples).
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+
+        def flatten(g):
+            children = tuple(getattr(g, f) for f in data)
+            aux = tuple(getattr(g, f) for f in meta)
+            return children, aux
+
+        def unflatten(aux, children):
+            kwargs = dict(zip(data, children)) | dict(zip(meta, aux))
+            return c(**kwargs)
+
+        jax.tree_util.register_pytree_node(c, flatten, unflatten)
+        return c
+
+    if cls is not None:
+        return wrap(cls)
+    return wrap
+
+
+def joint_with(x_ref: Array, i: Array, x_i: Array) -> Array:
+    """Joint action equal to ``x_ref`` with row ``i`` replaced by ``x_i``."""
+    return x_ref.at[i].set(x_i)
+
+
+def relative_error(x: Array, x_star: Array, x0: Array) -> Array:
+    """``||x - x*||^2 / ||x0 - x*||^2`` — the paper's plotted metric."""
+    return jnp.sum((x - x_star) ** 2) / jnp.sum((x0 - x_star) ** 2)
+
+
+def residual_norm(game: VectorGame, x: Array) -> Array:
+    """``||F(x)||`` — equilibrium residual."""
+    return jnp.sqrt(jnp.sum(game.operator(x) ** 2))
+
+
+def spectral_constants_from_block_matrix(
+    H: np.ndarray, block_sizes: list[int]
+) -> GameConstants:
+    """Constants for an *affine* game ``F(x) = H x + c`` with player blocks.
+
+    - ``mu``    = lambda_min of the symmetric part of ``H`` (strong monotonicity;
+      implies QSM).
+    - ``L_F``   = sigma_max(H) (Lipschitz constant of F).
+    - ``ell``   = L_F**2 / mu — the tight generic cocoercivity bound the paper
+      uses (following Facchinei & Pang), see Section 4.1 / Section F.1.
+    - ``L_max`` = max over players of sigma_max(H_ii) — the *per-player*
+      smoothness, typically far smaller than ``ell`` (Section F.1).
+    """
+    Hs = 0.5 * (H + H.T)
+    mu = float(np.linalg.eigvalsh(Hs).min())
+    if mu <= 0:
+        raise ValueError(f"game is not strongly monotone: mu={mu:.3e}")
+    L_F = float(np.linalg.norm(H, 2))
+    ell = L_F**2 / mu
+    L_max, off = 0.0, 0
+    for b in block_sizes:
+        Hii = H[off : off + b, off : off + b]
+        L_max = max(L_max, float(np.linalg.norm(Hii, 2)))
+        off += b
+    return GameConstants(mu=mu, ell=ell, L_max=L_max, L_F=L_F)

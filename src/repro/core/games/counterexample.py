@@ -1,0 +1,116 @@
+"""Two-player game where Local SGD on the summed objective fails (Section B).
+
+Equation (4) of the paper:
+
+    f_1(u; v) = 1/2 u^T (A u - a - B^T v) - ||v||^2 / 20
+    f_2(v; u) = 1/4 ||v||^2 + 1/2 v^T (B u - b) - ||u||^2 / 20
+
+with ``A > 0``. The per-player gradients are
+
+    grad_u f_1 = A u - a/2 - B^T v / 2
+    grad_v f_2 = v/2 + (B u - b)/2
+
+PEARL-SGD drives these to the equilibrium. Classical Local SGD applied to the
+*joint* variable on the sum ``(f_1 + f_2)/2`` sees the bilinear couplings
+cancel exactly, leaving the negatively-regularized gradient field
+
+    grad_u = A u - a/2 - u/10,      grad_v = 2v/5 - b/2,
+
+so whenever ``lambda_min(A) < 1/10`` the ``u`` dynamics *diverge* — the
+paper's Figure 4 phenomenon. We expose both vector fields so the benchmark
+can reproduce the figure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.game import (
+    GameConstants,
+    VectorGame,
+    register_game,
+    spectral_constants_from_block_matrix,
+)
+
+Array = jax.Array
+
+
+@register_game(data=("A", "B", "a", "b"), meta=("n", "d", "noise"))
+class CounterexampleGame(VectorGame):
+    """Equation (4) game; joint action is a (2, d) array of (u, v)."""
+
+    A: Array  # (d, d), symmetric positive definite
+    B: Array  # (d, d)
+    a: Array  # (d,)
+    b: Array  # (d,)
+    n: int
+    d: int
+    noise: float
+
+    def player_grad(self, i: Array, x_i: Array, x_ref: Array) -> Array:
+        g_u = self.A @ x_i - self.a / 2.0 - self.B.T @ x_ref[1] / 2.0
+        g_v = x_i / 2.0 + (self.B @ x_ref[0] - self.b) / 2.0
+        return jnp.where(i == 0, g_u, g_v)
+
+    def player_grad_stoch(self, i: Array, x_i: Array, x_ref: Array, key: Array) -> Array:
+        eps = self.noise * jax.random.normal(key, (self.d,))
+        return self.player_grad(i, x_i, x_ref) + eps
+
+    def objective(self, i: int, x: Array) -> Array:
+        u, v = x[0], x[1]
+        f1 = 0.5 * u @ (self.A @ u - self.a - self.B.T @ v) - jnp.sum(v**2) / 20.0
+        f2 = 0.25 * jnp.sum(v**2) + 0.5 * v @ (self.B @ u - self.b) - jnp.sum(u**2) / 20.0
+        return jnp.where(i == 0, f1, f2)
+
+    def sum_gradient(self, x: Array, key: Array | None = None) -> Array:
+        """Gradient of (f1+f2)/2 w.r.t. the *joint* (u, v) — what Local SGD
+        on the naive finite-sum formulation would follow (couplings cancel)."""
+        u, v = x[0], x[1]
+        g_u = 0.5 * (self.A @ u - self.a / 2.0 - u / 10.0)
+        g_v = 0.5 * (0.4 * v - self.b / 2.0)
+        g = jnp.stack([g_u, g_v])
+        if key is not None:
+            g = g + self.noise * jax.random.normal(key, g.shape)
+        return g
+
+    # ------------------------------------------------------------ diagnostics
+    def _block_matrix(self) -> np.ndarray:
+        d = self.d
+        A = np.asarray(self.A)
+        B = np.asarray(self.B)
+        H = np.zeros((2 * d, 2 * d))
+        H[:d, :d] = A
+        H[:d, d:] = -B.T / 2.0
+        H[d:, :d] = B / 2.0
+        H[d:, d:] = 0.5 * np.eye(d)
+        return H
+
+    def equilibrium(self) -> Array:
+        c = np.concatenate([-np.asarray(self.a) / 2.0, -np.asarray(self.b) / 2.0])
+        x = np.linalg.solve(self._block_matrix(), -c)
+        return jnp.asarray(x.reshape(2, self.d))
+
+    def constants(self) -> GameConstants:
+        return spectral_constants_from_block_matrix(self._block_matrix(), [self.d] * 2)
+
+
+def make_counterexample_game(
+    d: int = 10,
+    eig_lo: float = 0.02,
+    eig_hi: float = 1.0,
+    coupling: float = 2.0,
+    noise: float = 0.0,
+    seed: int = 0,
+) -> CounterexampleGame:
+    """Instance with ``lambda_min(A) < 1/10`` so Local-SGD-on-the-sum diverges."""
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+    A = (Q * rng.uniform(eig_lo, eig_hi, size=d)) @ Q.T
+    B = coupling * rng.standard_normal((d, d)) / np.sqrt(d)
+    return CounterexampleGame(
+        A=jnp.asarray(A), B=jnp.asarray(B),
+        a=jnp.asarray(rng.standard_normal(d)), b=jnp.asarray(rng.standard_normal(d)),
+        n=2, d=d, noise=noise,
+    )

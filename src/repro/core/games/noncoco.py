@@ -1,0 +1,54 @@
+"""Non-cocoercive game satisfying (CVX), (SM), (QSM), (SCO) — Section F.2.
+
+Player ``i`` (cyclically) minimizes ``f_i(x^i; x^{i+1}) = (x^i)^2/2 *
+phi(x^{i+1})`` with ``phi(t) = mu + (ell - mu) sin^2 t``. The joint operator
+
+    F(x)_i = x^i * phi(x^{i+1 mod n})
+
+satisfies QSM with modulus ``mu`` and SCO with parameter ``ell`` around the
+unique equilibrium ``x* = 0``, yet is neither Lipschitz nor monotone — the
+paper's witness that its assumption set strictly generalizes cocoercivity.
+Useful as a stress test: PEARL-SGD must still converge here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.game import GameConstants, VectorGame, register_game
+
+Array = jax.Array
+
+
+@register_game(data=(), meta=("n", "d", "mu", "ell"))
+class NonCocoercivegame(VectorGame):
+    """Cyclic sin^2-modulated quadratic game; d = 1 actions."""
+
+    n: int
+    d: int
+    mu: float
+    ell: float
+
+    def _phi(self, t: Array) -> Array:
+        return self.mu + (self.ell - self.mu) * jnp.sin(t) ** 2
+
+    def player_grad(self, i: Array, x_i: Array, x_ref: Array) -> Array:
+        nxt = jnp.mod(i + 1, self.n)
+        return x_i * self._phi(x_ref[nxt])
+
+    def objective(self, i: int, x: Array) -> Array:
+        nxt = (i + 1) % self.n
+        return 0.5 * jnp.sum(x[i] ** 2) * jnp.sum(self._phi(x[nxt]))
+
+    def equilibrium(self) -> Array:
+        return jnp.zeros((self.n, self.d))
+
+    def constants(self) -> GameConstants:
+        # QSM holds with mu; SCO holds with ell; L_i = sup phi = ell.
+        # F is *not* Lipschitz (L_F unbounded) — theory only needs the others.
+        return GameConstants(mu=self.mu, ell=self.ell, L_max=self.ell, L_F=float("inf"))
+
+
+def make_noncoco_game(n: int = 4, mu: float = 0.5, ell: float = 4.0) -> NonCocoercivegame:
+    return NonCocoercivegame(n=n, d=1, mu=mu, ell=ell)

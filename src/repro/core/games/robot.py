@@ -1,0 +1,113 @@
+"""Distributed mobile-robot control game (paper Section 4.2 / D.2).
+
+Robot ``i`` minimizes
+
+    f_i(x) = a_i/2 ||x^i - anc_i||^2  +  b_i/2 sum_j ||x^i - x^j - h_ij||^2
+
+over its own position ``x^i``. Parameter values follow [Kalyva & Psillakis,
+Automatica 2024] exactly as reproduced in Section D.2: ``n = 5``, ``d = 1``,
+``a_i = 10 + i/6``, ``b_i = i/6`` (1-indexed), anchors ``(1,-4,8,-9,13)`` and
+the fixed displacement matrix ``h``. Stochasticity is simulated by adding
+Gaussian noise with ``sigma^2 = 100`` to the gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.game import (
+    GameConstants,
+    VectorGame,
+    register_game,
+    spectral_constants_from_block_matrix,
+)
+
+Array = jax.Array
+
+_H = np.array(
+    [
+        [0.0, 5.0, -7.0, 9.0, -8.0],
+        [-5.0, 0.0, -6.0, 2.0, -9.0],
+        [7.0, 6.0, 0.0, 7.0, -4.0],
+        [-9.0, -2.0, -7.0, 0.0, -2.0],
+        [8.0, 9.0, 4.0, 2.0, 0.0],
+    ]
+)
+_ANCHORS = np.array([1.0, -4.0, 8.0, -9.0, 13.0])
+
+
+@register_game(data=("a_coef", "b_coef", "anchors", "h"), meta=("n", "d", "sigma"))
+class RobotGame(VectorGame):
+    """5-robot consensus/displacement game; actions are scalar positions."""
+
+    a_coef: Array   # (n,)
+    b_coef: Array   # (n,)
+    anchors: Array  # (n, d)
+    h: Array        # (n, n, d)
+    n: int
+    d: int
+    sigma: float
+
+    def player_grad(self, i: Array, x_i: Array, x_ref: Array) -> Array:
+        # d/dx^i [ b_i/2 sum_j ||x^i - x^j - h_ij||^2 ]. The j = i summand is
+        # ||x^i - x^i||^2 == 0 in the SAME variable, so its gradient is zero;
+        # subtract the spurious (x_i - x_ref[i]) that a frozen-snapshot sum
+        # would otherwise inject during PEARL local steps.
+        disp = jnp.sum(x_i[None, :] - x_ref - self.h[i], axis=0)
+        disp = disp - (x_i - x_ref[i])
+        return self.a_coef[i] * (x_i - self.anchors[i]) + self.b_coef[i] * disp
+
+    def player_grad_stoch(self, i: Array, x_i: Array, x_ref: Array, key: Array) -> Array:
+        noise = self.sigma * jax.random.normal(key, (self.d,))
+        return self.player_grad(i, x_i, x_ref) + noise
+
+    def objective(self, i: int, x: Array) -> Array:
+        anchor_cost = 0.5 * self.a_coef[i] * jnp.sum((x[i] - self.anchors[i]) ** 2)
+        disp_cost = 0.5 * self.b_coef[i] * jnp.sum((x[i][None, :] - x - self.h[i]) ** 2)
+        return anchor_cost + disp_cost
+
+    # ------------------------------------------------------------ diagnostics
+    def _block_matrix(self) -> np.ndarray:
+        """F is affine: F(x) = Hx + c with H_ii = a_i + (n-1) b_i, H_ij = -b_i."""
+        n, d = self.n, self.d
+        a = np.asarray(self.a_coef)
+        b = np.asarray(self.b_coef)
+        H = np.zeros((n * d, n * d))
+        I = np.eye(d)
+        for i in range(n):
+            for j in range(n):
+                blk = (a[i] + (n - 1) * b[i]) * I if i == j else -b[i] * I
+                H[i * d : (i + 1) * d, j * d : (j + 1) * d] = blk
+        return H
+
+    def _offset(self) -> np.ndarray:
+        a = np.asarray(self.a_coef)[:, None]
+        b = np.asarray(self.b_coef)[:, None]
+        h_sum = np.asarray(jnp.sum(self.h, axis=1))
+        return (-a * np.asarray(self.anchors) - b * h_sum).reshape(-1)
+
+    def equilibrium(self) -> Array:
+        x = np.linalg.solve(self._block_matrix(), -self._offset())
+        return jnp.asarray(x.reshape(self.n, self.d))
+
+    def constants(self) -> GameConstants:
+        return spectral_constants_from_block_matrix(
+            self._block_matrix(), [self.d] * self.n
+        )
+
+
+def make_robot_game(sigma: float = 10.0) -> RobotGame:
+    """The exact Section D.2 instance (``sigma**2 = 100`` gradient noise)."""
+    n, d = 5, 1
+    i = np.arange(1, n + 1)
+    return RobotGame(
+        a_coef=jnp.asarray(10.0 + i / 6.0),
+        b_coef=jnp.asarray(i / 6.0),
+        anchors=jnp.asarray(_ANCHORS[:, None]),
+        h=jnp.asarray(_H[:, :, None]),
+        n=n,
+        d=d,
+        sigma=sigma,
+    )

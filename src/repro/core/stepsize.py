@@ -1,0 +1,101 @@
+"""Theoretical step-size rules for PEARL-SGD (Theorems 3.3/3.4/3.6, Cor 3.5).
+
+All rules consume :class:`repro.core.game.GameConstants` and the
+synchronization interval ``tau``. Rates/step-sizes follow the paper exactly:
+
+- :func:`gamma_constant`    — Thms 3.3/3.4: ``1/(ell*tau + 2(tau-1) L_max sqrt(kappa))``.
+- :func:`gamma_robot`       — Section 4.2 variant ``1/(ell*tau + L_max (tau-1) sqrt(kappa))``.
+- :func:`gamma_horizon`     — Cor 3.5: ``1/(mu * eta * (1+2q))`` with
+  ``T = 2 (1+2q) eta log(eta)`` solved for ``eta`` (requires ``eta > kappa*tau``).
+- :func:`gamma_decreasing`  — Thm 3.6 round-indexed piecewise schedule.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.game import GameConstants
+
+
+def gamma_constant(c: GameConstants, tau: int) -> float:
+    """Largest constant step-size allowed by Theorems 3.3 / 3.4."""
+    if tau < 1:
+        raise ValueError("tau must be >= 1")
+    return 1.0 / (c.ell * tau + 2.0 * (tau - 1) * c.L_max * math.sqrt(c.kappa))
+
+
+def gamma_robot(c: GameConstants, tau: int) -> float:
+    """Step-size used for the Section 4.2 robot experiment."""
+    return 1.0 / (c.ell * tau + c.L_max * (tau - 1) * math.sqrt(c.kappa))
+
+
+def contraction_zeta(c: GameConstants, tau: int, gamma: float) -> float:
+    """``zeta = 2 - gamma*ell*tau - 2(tau-1) gamma L_max sqrt(kappa/3)`` (> 0)."""
+    return 2.0 - gamma * c.ell * tau - 2.0 * (tau - 1) * gamma * c.L_max * math.sqrt(
+        c.kappa / 3.0
+    )
+
+
+def linear_rate(c: GameConstants, tau: int, gamma: float) -> float:
+    """Per-round contraction factor ``1 - gamma * tau * mu * zeta`` (Thm 3.3/3.4)."""
+    return 1.0 - gamma * tau * c.mu * contraction_zeta(c, tau, gamma)
+
+
+def neighborhood_radius_sq(c: GameConstants, tau: int, gamma: float, sigma_sq: float) -> float:
+    """Size of the Theorem 3.4 convergence neighborhood (squared distance)."""
+    q = c.q
+    zeta = contraction_zeta(c, tau, gamma)
+    factor = 1.0 + (tau - 1) * (
+        (4.0 + math.sqrt(3.0) * q) * gamma * tau * c.L_max + q / (2.0 * tau)
+    )
+    return factor * gamma * sigma_sq / (c.mu * zeta)
+
+
+def solve_eta(c: GameConstants, T: int) -> float:
+    """Solve ``T = 2 (1 + 2q) eta log(eta)`` for ``eta`` by bisection."""
+    q = c.q
+    target = T / (2.0 * (1.0 + 2.0 * q))
+
+    def g(eta: float) -> float:
+        return eta * math.log(eta) - target
+
+    lo, hi = 1.0 + 1e-9, 2.0
+    while g(hi) < 0:
+        hi *= 2.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if g(mid) < 0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def gamma_horizon(c: GameConstants, tau: int, T: int) -> float:
+    """Corollary 3.5 horizon-dependent constant step-size.
+
+    Raises if ``T`` is too small for the corollary's ``eta > kappa * tau``
+    validity condition.
+    """
+    eta = solve_eta(c, T)
+    if eta <= c.kappa * tau:
+        raise ValueError(
+            f"T={T} too small: eta={eta:.1f} must exceed kappa*tau={c.kappa * tau:.1f}"
+        )
+    return 1.0 / (c.mu * eta * (1.0 + 2.0 * c.q))
+
+
+def gamma_decreasing(c: GameConstants, tau: int, rounds: int) -> np.ndarray:
+    """Theorem 3.6 round-indexed schedule, returned as an array of length ``rounds``.
+
+    gamma_p = 1/(ell tau (1+2q))            if p <  2 (1+2q) kappa
+            = (1/(tau mu)) (2p+1)/(p+1)^2   if p >= 2 (1+2q) kappa
+    """
+    q = c.q
+    p0 = 2.0 * (1.0 + 2.0 * q) * c.kappa
+    p = np.arange(rounds, dtype=np.float64)
+    warm = 1.0 / (c.ell * tau * (1.0 + 2.0 * q))
+    decay = (2.0 * p + 1.0) / ((p + 1.0) ** 2) / (tau * c.mu)
+    return np.where(p < p0, warm, decay)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic heterogeneous per-player token streams."""
+
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+
+__all__ = ["DataConfig", "SyntheticTokenStream"]

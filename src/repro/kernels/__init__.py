@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (interpret-validated on CPU; see kernels/common.py).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper) and ref.py (pure-jnp oracle used by tests/benchmarks).
+"""

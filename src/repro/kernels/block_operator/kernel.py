@@ -1,0 +1,65 @@
+"""Blocked joint-operator Pallas kernel for the Section 4.1 quadratic game.
+
+F(x)_i = A_i x^i + a_i + sum_{j != i} B_ij x^j — a block matvec whose
+coupling blocks dominate (n^2 of them). Grid = (n players, j-tiles); each
+step multiplies a (TILE_J, d, d) slab of player i's coupling row against the
+matching slice of the joint vector and accumulates into VMEM scratch, so the
+(n*d)^2 block matrix streams tile-by-tile while the accumulator stays
+resident. d is padded to the 128 MXU lane width by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _block_op_kernel(a_diag_ref, b_ref, a_vec_ref, x_ref, xall_ref, o_ref,
+                     acc_scr, *, tile_j: int, n_tiles: int):
+    ji = pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        # own-block term + offset once
+        x_i = x_ref[0]                                    # (d,)
+        acc_scr[...] = (a_diag_ref[0] @ x_i + a_vec_ref[0])[None, :]
+
+    b = b_ref[0]                                          # (tile_j, d, d)
+    xs = xall_ref[...]                                    # (tile_j, d)
+    acc_scr[...] += jnp.einsum(
+        "jde,je->d", b.astype(jnp.float32), xs.astype(jnp.float32)
+    )[None, :]
+
+    @pl.when(ji == n_tiles - 1)
+    def _emit():
+        o_ref[0] = acc_scr[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_j", "interpret"))
+def block_operator_pallas(A, B, a, x, *, tile_j: int = 1,
+                          interpret: bool = True):
+    """A (n,d,d); B (n,n,d,d) zero-diagonal; a (n,d); x (n,d) -> F (n,d)."""
+    n, d = x.shape
+    n_tiles = n // tile_j
+
+    kernel = functools.partial(_block_op_kernel, tile_j=tile_j,
+                               n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, tile_j, d, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_j, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(A, B, a, x, x)

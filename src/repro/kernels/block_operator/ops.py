@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the quadratic-game block-operator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_operator.kernel import block_operator_pallas
+from repro.kernels.common import default_interpret
+
+
+def block_operator(A: jax.Array, B: jax.Array, a: jax.Array, x: jax.Array, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """F(x) for the Section 4.1 game. A (n,d,d); B (n,n,d,d); a, x (n,d)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = x.shape
+    # pad d to the MXU lane width for the TPU target
+    pad = (-d) % 128 if not interpret else 0
+    if pad:
+        A = jnp.pad(A, ((0, 0), (0, pad), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, 0), (0, pad), (0, pad)))
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = block_operator_pallas(A, B, a, x, interpret=interpret)
+    return out[:, :d] if pad else out

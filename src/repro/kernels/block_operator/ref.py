@@ -1,0 +1,21 @@
+"""Oracle for the quadratic-game joint operator F(x) = A_i x^i + a_i + sum_j B_ij x^j."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_operator_ref(A: jax.Array, B: jax.Array, a: jax.Array,
+                       x: jax.Array) -> jax.Array:
+    """A (n,d,d); B (n,n,d,d) with zero diagonal blocks; a (n,d); x (n,d).
+
+    Returns F(x) of shape (n, d) in fp32.
+    """
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    own = jnp.einsum("ide,ie->id", A, x)
+    coupling = jnp.einsum("ijde,je->id", B, x)
+    return own + a + coupling

@@ -1,0 +1,28 @@
+"""Shared kernel plumbing: interpret-mode policy and padding helpers.
+
+TPU v5e is the TARGET; this container is CPU-only. All kernels are authored
+with ``pl.pallas_call`` + explicit BlockSpec VMEM tiling for the MXU (block
+dims multiples of 128 where the operand feeds a matmul) and VALIDATED with
+``interpret=True``, which executes the kernel body on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Interpret unless we are actually on TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value: float = 0.0):
+    """Pad ``axis`` up to a multiple; returns (padded, original_size)."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value), size

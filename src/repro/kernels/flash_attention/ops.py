@@ -1,0 +1,39 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, pad_to
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Flash attention over (B, S, H, hd) with KV pre-expanded to H heads.
+
+    Pads S to block multiples (mask handles the tail), reshapes heads into
+    the grid batch, and restores the original layout.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, max(16, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(16, 1 << (sk - 1).bit_length()))
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    qf, _ = pad_to(qf, 1, bq)
+    kf, _ = pad_to(kf, 1, bk)
+    vf, _ = pad_to(vf, 1, bk)
+
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret,
+                               kv_len=sk)
+    out = out[:, :sq]
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (numerically exact softmax attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Naive masked softmax attention.
+
+    q, k, v: (B, S, H, hd) with KV already expanded to H heads.
+    Returns (B, S, H, hd). fp32 softmax, output in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+    return out

@@ -1,0 +1,105 @@
+"""Chunked SSD (Mamba2) Pallas TPU kernel.
+
+Grid = (batch, n_chunks); the chunk axis is the sequentially-iterated minor
+grid dimension, so the inter-chunk recurrent state (H, P, N) persists in VMEM
+scratch across chunk steps — HBM sees only the chunk inputs/outputs, never
+the state. Within a chunk the computation is the attention-like masked
+``(C B^T (.) decay) X`` product, all MXU matmuls on (Q x N) / (Q x Q) tiles.
+
+TPU adaptation note (DESIGN.md): the CUDA Mamba2 kernel parallelizes the
+intra-chunk work across warps and keeps state in registers; on TPU the
+equivalent is VMEM scratch persistence across the sequential grid axis plus
+MXU-shaped (128-aligned) chunk tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+                *, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, H)
+    A = a_ref[...].astype(jnp.float32)      # (H,)
+    B = b_ref[0].astype(jnp.float32)        # (Q, N)
+    C = c_ref[0].astype(jnp.float32)        # (Q, N)
+    Q = x.shape[0]
+
+    log_a = dt * A[None, :]                 # (Q, H), <= 0
+    cum = jnp.cumsum(log_a, axis=0)         # inclusive
+    total = cum[-1]                         # (H,)
+
+    # ---- intra-chunk (attention-like) ----
+    seg = cum[:, None, :] - cum[None, :, :]               # (t, s, H)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(tri[..., None], jnp.exp(seg), 0.0)  # (t, s, H)
+    cb = C @ B.T                                          # (t, s)
+    w = cb[..., None] * decay * dt[None, :, :]            # (t, s, H)
+    y = jnp.einsum("tsh,shp->thp", w, x)
+
+    # ---- contribution of carried state ----
+    in_decay = jnp.exp(cum)                               # (t, H)
+    h_prev = h_scr[...]                                   # (H, P, N)
+    y += jnp.einsum("tn,hpn,th->thp", C, h_prev, in_decay)
+
+    # ---- update carried state ----
+    state_decay = jnp.exp(total[None, :] - cum) * dt      # (s, H)
+    s_new = jnp.einsum("sh,shp,sn->hpn", state_decay, x, B)
+    h_scr[...] = jnp.exp(total)[:, None, None] * h_prev + s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"),
+)
+def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int = 128,
+                       interpret: bool = True):
+    """x (b,L,H,P); dt (b,L,H); A (H,); B, C (b,L,N). L % chunk == 0.
+
+    Returns (y (b,L,H,P) in x.dtype, h_final (b,H,P,N) fp32).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    nc = L // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((H,), lambda i, j: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda i, j: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, h_final

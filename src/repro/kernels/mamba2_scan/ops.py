@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the chunked-SSD Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.mamba2_scan.kernel import ssd_chunked_pallas
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Drop-in replacement for models.ssm.ssd_chunked (same contract)."""
+    if interpret is None:
+        interpret = default_interpret()
+    L = x.shape[1]
+    q = min(chunk, L)
+    while L % q:
+        q //= 2
+    y, h_final = ssd_chunked_pallas(x, dt, A, B, C, chunk=q,
+                                    interpret=interpret)
+    return y, h_final.astype(x.dtype)

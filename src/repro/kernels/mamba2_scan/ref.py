@@ -1,0 +1,40 @@
+"""Sequential oracle for the Mamba2/SSD selective scan.
+
+The ground-truth recurrence, one timestep at a time:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t (x) x_t)
+    y_t = h_t @ C_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, h0: jax.Array | None = None):
+    """x (b,L,H,P); dt (b,L,H); A (H,); B, C (b,L,N).
+
+    Returns (y (b,L,H,P), h_final (b,H,P,N)). fp32 throughout.
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    h = jnp.zeros((b, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                 # (b,H,P) (b,H) (b,N) (b,N)
+        a_t = jnp.exp(dt_t * A[None, :])          # (b,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, b_t)
+        h = a_t[:, :, None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    inputs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h, inputs)
+    return jnp.moveaxis(ys, 0, 1), h_final

@@ -1,0 +1,119 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel.
+
+Grid = (batch*heads, n_chunks): chunk axis sequential, per-(batch, head)
+matrix memory C (dh x dh), normalizer n (dh) and log-stabilizer m held in
+VMEM scratch across chunks. Intra-chunk work is the masked decay-weighted
+QK^T V product (MXU matmuls); the S x S gate matrix only ever exists as a
+(chunk x chunk) VMEM tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
+                  c_out_ref, n_out_ref, m_out_ref,
+                  c_scr, n_scr, m_scr, *, n_chunks: int, scale: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    q = q_ref[0].astype(jnp.float32) * scale   # (Q, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)         # (Q,)
+    lf = lf_ref[0].astype(jnp.float32)
+    Q = q.shape[0]
+
+    Fl = jnp.cumsum(lf)                        # inclusive (Q,)
+    m_prev = m_scr[0, 0]
+    b_term = li - Fl
+    cmax = jnp.maximum(m_prev, jax.lax.cummax(b_term))   # (Q,)
+    m_t = Fl + cmax
+    inter = jnp.exp(m_prev - cmax)             # (Q,)
+
+    seg = Fl[:, None] - Fl[None, :] + li[None, :] - m_t[:, None]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    w = jnp.where(tri, jnp.exp(seg), 0.0)      # (t, s)
+    qk = q @ k.T                               # (t, s)
+
+    C_prev = c_scr[...]                        # (dh, dh)
+    n_prev = n_scr[...][:, 0]                  # (dh,)
+    num = (w * qk) @ v + inter[:, None] * (q @ C_prev.T)
+    den = jnp.sum(w * qk, axis=1) + inter * (q @ n_prev)
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    h_ref[0] = (num / denom[:, None]).astype(h_ref.dtype)
+
+    # ---- carry ----
+    F_tot = Fl[-1]
+    m_new = m_t[-1]
+    carry_decay = jnp.exp(m_prev + F_tot - m_new)
+    upd_w = jnp.exp(li + F_tot - Fl - m_new)   # (s,)
+    c_scr[...] = carry_decay * C_prev + (v * upd_w[:, None]).T @ k
+    n_scr[...] = carry_decay * n_scr[...] + jnp.sum(
+        k * upd_w[:, None], axis=0, keepdims=True
+    ).T
+    m_scr[...] = jnp.full_like(m_scr, m_new)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        c_out_ref[0] = c_scr[...]
+        n_out_ref[0] = n_scr[...][:, 0]
+        m_out_ref[0] = m_scr[0, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunked_pallas(q, k, v, logi, logf, *, chunk: int = 128,
+                         interpret: bool = True):
+    """q,k,v (bh, L, dh); logi/logf (bh, L). L % chunk == 0.
+
+    Returns (h (bh, L, dh), (C (bh, dh, dh), n (bh, dh), m (bh, 1))).
+    """
+    bh, L, dh = q.shape
+    nc = L // chunk
+    scale = dh**-0.5
+
+    kernel = functools.partial(_mlstm_kernel, n_chunks=nc, scale=scale)
+    h, C, n, m = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, dh, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, dh), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, L, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, logi, logf)
+    return h, (C, n, m)

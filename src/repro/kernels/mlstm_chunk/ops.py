@@ -1,0 +1,42 @@
+"""jit'd public wrapper for the chunkwise mLSTM Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunked_pallas
+
+
+def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, logi: jax.Array,
+               logf: jax.Array, *, chunk: int = 128,
+               interpret: bool | None = None):
+    """Drop-in replacement for models.xlstm.mlstm_chunked.
+
+    q,k,v: (b, L, H, dh); logi/logf (b, L, H). Returns (h (b,L,H,dh),
+    (C (b,H,dh,dh), n (b,H,dh), m (b,H))).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, L, H, dh = q.shape
+    cq = min(chunk, L)
+    while L % cq:
+        cq //= 2
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(b * H, L, dh)
+
+    def flat2(t):
+        return t.transpose(0, 2, 1).reshape(b * H, L)
+
+    h, (C, n, m) = mlstm_chunked_pallas(
+        flat(q), flat(k), flat(v), flat2(logi), flat2(logf),
+        chunk=cq, interpret=interpret,
+    )
+    h = h.reshape(b, H, L, dh).transpose(0, 2, 1, 3)
+    return h, (
+        C.reshape(b, H, dh, dh),
+        n.reshape(b, H, dh),
+        m.reshape(b, H),
+    )

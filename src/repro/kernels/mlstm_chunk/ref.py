@@ -1,0 +1,40 @@
+"""Sequential oracle for the stabilized mLSTM recurrence (xLSTM)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q: jax.Array, k: jax.Array, v: jax.Array, logi: jax.Array,
+              logf: jax.Array):
+    """q,k,v (b,L,H,dh); logi, logf (b,L,H). Returns (h, (C, n, m))."""
+    b, L, H, dh = q.shape
+    scale = dh**-0.5
+    C0 = jnp.zeros((b, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, H, dh), jnp.float32)
+    m0 = jnp.full((b, H), -1e30, jnp.float32)
+
+    def step(state, inp):
+        C, n, m = state
+        q_t, k_t, v_t, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        f_eff = jnp.exp(lf + m - m_new)
+        i_eff = jnp.exp(li - m_new)
+        C = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :]
+        )
+        n = f_eff[..., None] * n + i_eff[..., None] * k_t
+        qs = q_t * scale
+        num = jnp.einsum("bhde,bhe->bhd", C, qs)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qs)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    inputs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+        for t in (q, k, v, logi, logf)
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), inputs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (C, n, m)

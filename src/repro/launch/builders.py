@@ -1,0 +1,211 @@
+"""Shared jit/lower builders for dry-runs and the corrected cost model.
+
+Each builder returns ``(lowered, param_shapes)`` for one execution mode on a
+given mesh, with in_shardings from the sharding policy. These are imported by
+``launch.dryrun`` (which sets the 512-device XLA flag first) and by
+``roofline.cost_model`` (component variants).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import data_axes, model_axis_size
+from repro.launch.specs import decode_input_specs, train_input_specs
+from repro.models.model import param_shapes
+from repro.models.sharding import (
+    batch_specs,
+    cache_partition_specs,
+    param_partition_specs,
+)
+from repro.optim.optimizers import adamw, sgd
+from repro.serve.decode import make_serve_step
+from repro.train.train_step import make_train_step
+
+
+def _shard(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _zero1_opt_specs(ospecs, opt_shapes, axes, mesh):
+    """ZeRO-1: additionally shard optimizer moments over the data axes.
+
+    Adam m/v are touched only at the update, so sharding them over ``data``
+    costs one reduce-scatter/all-gather pair per step but divides optimizer
+    HBM by the data-parallel degree — the fix that brings the 400B llama4
+    train step under the per-chip HBM budget (EXPERIMENTS.md Section Perf).
+    """
+    import numpy as np
+
+    n_data = int(np.prod([mesh.shape[a] for a in axes]))
+    d = axes if len(axes) > 1 else axes[0]
+
+    def upd(spec, leaf):
+        if len(leaf.shape) != len(spec) or not leaf.shape:
+            return spec
+        for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+            if s is None and dim % n_data == 0 and dim >= n_data:
+                return P(*spec[:i], d, *spec[i + 1 :])
+        return spec
+
+    return jax.tree.map(upd, ospecs, opt_shapes)
+
+
+def build_train_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
+                        window: int = 0, sharding_profile: str = "tp"):
+    """sharding_profile:
+    - "tp"      — default: tensor-parallel over ``model``, batch over data axes.
+    - "tp+zero1" — as "tp" plus optimizer moments sharded over ``data``.
+    - "fsdp"    — as "tp+zero1" plus parameters/gradients sharded over
+      ``data`` too (ZeRO-3 semantics: XLA inserts per-layer all-gathers).
+      Required for 400B-class training state to fit HBM (Section Perf).
+    - "dp_only" — replicate parameters, spread the batch over data x model
+      axes too (pure data parallelism). The Perf winner for small models whose
+      head counts don't divide the model axis (e.g. xlstm-125m): it removes
+      the per-layer activation all-reduces entirely.
+    """
+    axes = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    if sharding_profile == "dp_only":
+        axes = (*axes, "model")
+        msize = 1
+    shapes = param_shapes(cfg)
+    pspecs = param_partition_specs(shapes, cfg, model_size=msize, data_axes=axes)
+    if sharding_profile == "fsdp":
+        pspecs = _zero1_opt_specs(pspecs, shapes, axes, mesh)
+    opt = adamw(3e-4)
+    opt_shapes = jax.eval_shape(opt.init, shapes)
+    ospecs = param_partition_specs(opt_shapes, cfg, model_size=msize,
+                                   data_axes=axes)
+    ospecs = jax.tree.map(
+        lambda spec, leaf: spec if len(leaf.shape) == len(spec) else P(),
+        ospecs, opt_shapes,
+    )
+    if sharding_profile in ("tp+zero1", "fsdp"):
+        ospecs = _zero1_opt_specs(ospecs, opt_shapes, axes, mesh)
+    bspecs = batch_specs(cfg, "train", data_axes=axes)
+    binputs = train_input_specs(cfg, shape)
+
+    step = make_train_step(cfg, opt, window=window)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs),
+                      _shard(mesh, bspecs)),
+    )
+    with mesh:
+        lowered = jitted.lower(shapes, opt_shapes, binputs)
+    return lowered, shapes
+
+
+def build_prefill_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
+                          window: int = 0, sharding_profile: str = "tp"):
+    """Inference prefill: forward over the prompt emitting last-token logits
+    + a populated KV/recurrent cache (no backward, no optimizer)."""
+    from repro.models.model import prefill as prefill_fn
+
+    axes = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    if sharding_profile == "dp_only":
+        axes = (*axes, "model")
+        msize = 1
+    shapes = param_shapes(cfg)
+    pspecs = param_partition_specs(shapes, cfg, model_size=msize, data_axes=axes)
+    bspecs = batch_specs(cfg, "prefill", data_axes=axes)
+    binputs = train_input_specs(cfg, shape)
+
+    def step(params, batch):
+        return prefill_fn(params, cfg, batch, capacity=shape.seq_len,
+                          window=window)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs)),
+    )
+    with mesh:
+        lowered = jitted.lower(shapes, binputs)
+    return lowered, shapes
+
+
+def build_decode_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
+                         window: int = 0):
+    axes = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    shapes = param_shapes(cfg)
+    pspecs = param_partition_specs(shapes, cfg, model_size=msize, data_axes=axes)
+    inputs = decode_input_specs(cfg, shape, window=window)
+    n_data = 1
+    for a in axes:
+        n_data *= mesh.shape[a]
+    shard_seq = shape.global_batch < n_data
+    cspecs = cache_partition_specs(inputs["cache"], data_axes=axes,
+                                   shard_seq=shard_seq)
+    d = axes if len(axes) > 1 else axes[0]
+    tok_spec = P(None, None) if shard_seq else P(d, None)
+
+    serve = make_serve_step(cfg, window=window)
+    jitted = jax.jit(
+        serve,
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec)),
+    )
+    with mesh:
+        lowered = jitted.lower(shapes, inputs["cache"], inputs["token"])
+    return lowered, shapes
+
+
+def build_pearl_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
+                        window: int = 0, tau: int = 8, n_players: int = 2,
+                        prox_lambda: float = 1e-4, unroll: bool = False,
+                        sync_dtype=None):
+    """One PEARL round: players on the pod axis, tau local steps, one sync."""
+    from repro.train.pearl_trainer import make_pearl_round, tree_mean
+
+    msize = model_axis_size(mesh)
+    shapes = param_shapes(cfg)
+    base = param_partition_specs(shapes, cfg, model_size=msize,
+                                 data_axes=("data",))
+    pspecs = jax.tree.map(lambda spec: P("pod", *spec), base)
+    stacked_shapes = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_players, *l.shape), l.dtype), shapes
+    )
+    opt = sgd(1e-3)
+    opt_shapes = jax.eval_shape(jax.vmap(opt.init), stacked_shapes)
+    ospecs = jax.tree.map(
+        lambda leaf: P("pod", *([None] * (len(leaf.shape) - 1))), opt_shapes
+    )
+    xbar_shapes = jax.eval_shape(tree_mean, stacked_shapes)
+    xspecs = param_partition_specs(xbar_shapes, cfg, model_size=msize,
+                                   data_axes=("data",))
+    b_local = shape.global_batch // n_players
+    batch_sds = {"tokens": jax.ShapeDtypeStruct(
+        (n_players, tau, b_local, shape.seq_len), jnp.int32)}
+    bspec = {"tokens": P("pod", None, "data", None)}
+
+    rnd = make_pearl_round(cfg, opt, tau=tau, prox_lambda=prox_lambda,
+                           window=window, unroll=unroll,
+                           sync_dtype=sync_dtype)
+    jitted = jax.jit(
+        rnd,
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs),
+                      _shard(mesh, bspec), _shard(mesh, xspecs)),
+    )
+    with mesh:
+        lowered = jitted.lower(stacked_shapes, opt_shapes, batch_sds,
+                               xbar_shapes)
+    return lowered, shapes
+
+
+def build_lowered(cfg: ModelConfig, shape: InputShape, mesh, *, window: int = 0,
+                  sharding_profile: str = "tp"):
+    """Mode dispatch: train_step / prefill / serve_step per shape.mode."""
+    if shape.mode == "decode":
+        return build_decode_lowered(cfg, shape, mesh, window=window)
+    if shape.mode == "prefill":
+        return build_prefill_lowered(cfg, shape, mesh, window=window,
+                                     sharding_profile=sharding_profile)
+    return build_train_lowered(cfg, shape, mesh, window=window,
+                               sharding_profile=sharding_profile)

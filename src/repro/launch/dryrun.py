@@ -1,0 +1,181 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) combination on the production meshes and emit
+trip-count-corrected roofline terms (deliverable g).
+
+The two lines above MUST precede any other import: jax locks the device
+count at first initialization, and the dry-run needs 512 placeholder host
+devices so ``jax.make_mesh((2, 16, 16), ...)`` can build the 2-pod mesh.
+Only this entrypoint sets the flag — smoke tests and benchmarks see the
+single real CPU device.
+
+For each combo we compile twice:
+  1. the production program (scan-over-layers) — proves the sharding config
+     lowers and compiles, and provides memory_analysis();
+  2. tiny per-layer-kind component variants with loops unrolled — provides
+     trip-count-corrected FLOPs/bytes/collective bytes (XLA cost analysis
+     does not multiply while-loop bodies; see roofline/cost_model.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod both --out dry.json
+  python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --pearl --multi-pod yes
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool, pearl: bool = False,
+              tau: int = 8, save_hlo: str | None = None,
+              corrected: bool = True) -> dict:
+    from repro.configs import get_config, get_shape
+    from repro.launch import builders
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import pick_window
+    from repro.roofline import analysis as ra
+    from repro.roofline.cost_model import corrected_cost
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    window = pick_window(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+    t0 = time.time()
+
+    # ---- 1. production program: prove it lowers + compiles; memory ----
+    if pearl:
+        if not multi_pod:
+            raise ValueError("PEARL dry-run needs the multi-pod mesh (players=pods)")
+        lowered, shapes = builders.build_pearl_lowered(
+            cfg, shape, mesh, window=window, tau=tau)
+        kind = f"pearl_round(tau={tau})"
+    else:
+        lowered, shapes = builders.build_lowered(cfg, shape, mesh, window=window)
+        kind = {"decode": "serve_step", "prefill": "prefill",
+                "train": "train_step"}[shape.mode]
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    peak = (getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0))
+    hlo = compiled.as_text()
+    raw_cost = dict(compiled.cost_analysis())
+    raw_coll = ra.parse_collectives(hlo, chips_per_pod=256)
+
+    # ---- 2. corrected costs from unrolled component variants ----
+    detail = {}
+    if corrected and not pearl:
+        t0 = time.time()
+        cost, detail = corrected_cost(cfg, shape, mesh, window=window)
+        detail["correct_s"] = round(time.time() - t0, 1)
+        cost_dict = {"flops": cost.flops, "bytes accessed": cost.bytes}
+        coll = cost.collectives
+    else:
+        cost_dict, coll = raw_cost, raw_coll
+
+    n_active = ra.active_params(cfg, shapes)
+    n_total = ra.count_params(shapes)
+    model_flops = ra.model_flops_estimate(cfg, shape, n_active)
+    report = ra.build_report(
+        arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        cost=cost_dict, collectives=coll, peak_memory=peak,
+        model_flops=model_flops,
+    )
+    rec = report.to_json()
+    rec.update(
+        kind=kind, window=window, params_total=n_total, params_active=n_active,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        collective_ops=coll.count, collective_by_op=coll.bytes_by_op,
+        raw_flops_per_device=raw_cost.get("flops", 0.0),
+        hlo_bytes=len(hlo), corrected=bool(corrected and not pearl),
+        **{f"detail_{k}": v for k, v in detail.items()},
+    )
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, help="arch id or 'all'")
+    ap.add_argument("--shape", required=True, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--pearl", action="store_true",
+                    help="lower a PEARL round instead of a plain train step")
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the unrolled cost-correction compiles")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="reuse non-error records already present in --out")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    records = []
+    done = {}
+    if args.skip_existing and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                if "error" not in r:
+                    done[(r["arch"], r["shape"], r["mesh"])] = r
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}/{shape}/{mesh_name}"
+                if (arch, shape, mesh_name) in done:
+                    records.append(done[(arch, shape, mesh_name)])
+                    print(f"SKIP {tag} (existing record reused)", flush=True)
+                    continue
+                try:
+                    rec = run_combo(arch, shape, multi_pod=mp, pearl=args.pearl,
+                                    tau=args.tau,
+                                    save_hlo=args.save_hlo or None,
+                                    corrected=not args.no_correct)
+                    records.append(rec)
+                    print(f"OK   {tag}: compute={rec['compute_s']:.4f}s "
+                          f"memory={rec['memory_s']:.4f}s "
+                          f"collective={rec['collective_s']:.4f}s "
+                          f"bottleneck={rec['bottleneck']} "
+                          f"useful={rec['useful_flops_ratio']:.2f} "
+                          f"(compile {rec['compile_s']}s)", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    traceback.print_exc()
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "error": str(e)})
+                    print(f"FAIL {tag}: {e}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+
+    failures = [r for r in records if "error" in r]
+    print(f"\n{len(records) - len(failures)}/{len(records)} combos lowered+compiled")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

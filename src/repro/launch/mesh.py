@@ -1,0 +1,34 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 per pod; 2 pods when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (possibly fake) devices are available."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes carrying batch parallelism for ``mesh``."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,354 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf hillclimbing driver (Section Perf of EXPERIMENTS.md).
+
+Each experiment is a named (arch x shape) pair plus a list of VARIANTS — a
+config/builder mutation encoding one hypothesis from the napkin math. For
+every variant we recompute the trip-count-corrected roofline terms and print
+before/after, so the hypothesis -> change -> measure -> validate loop is
+mechanical:
+
+  python -m repro.launch.perf --pair moe      # qwen3 train_4k
+  python -m repro.launch.perf --pair small    # xlstm train_4k
+  python -m repro.launch.perf --pair pearl    # stablelm multi-pod PEARL round
+  python -m repro.launch.perf --pair granite  # granite-34b prefill_32k
+
+Results land in experiments/perf_<pair>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _terms(cost, chips):
+    from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+    return {
+        "compute_s": cost.flops / PEAK_FLOPS,
+        "memory_s": cost.bytes / HBM_BW,
+        "collective_s": cost.collectives.total_bytes / ICI_BW,
+        "pod_collective_bytes": cost.collectives.pod_bytes,
+        "collective_by_op": cost.collectives.bytes_by_op,
+    }
+
+
+def run_variant(arch: str, shape_name: str, *, label: str, hypothesis: str,
+                cfg_updates: dict | None = None, window: int | None = None,
+                sharding_profile: str = "tp", multi_pod: bool = False) -> dict:
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import pick_window
+    from repro.roofline.cost_model import corrected_cost
+
+    cfg = get_config(arch)
+    if cfg_updates:
+        cfg = dataclasses.replace(cfg, **cfg_updates)
+    shape = get_shape(shape_name)
+    w = pick_window(cfg, shape) if window is None else window
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cost, detail = corrected_cost(cfg, shape, mesh, window=w,
+                                  sharding_profile=sharding_profile)
+    rec = {
+        "label": label, "hypothesis": hypothesis, "arch": arch,
+        "shape": shape_name, "window": w, "profile": sharding_profile,
+        "cfg_updates": cfg_updates or {}, "wall_s": round(time.time() - t0, 1),
+    }
+    rec.update(_terms(cost, mesh.size))
+    return rec
+
+
+def _sharded_state_bytes_per_chip(cfg, mesh, sharding_profile: str) -> float:
+    """Analytic resident bytes/chip for params + grads + Adam moments under
+    the given sharding profile (what memory_analysis cannot attribute:
+    its argument sizes are logical/global)."""
+    import numpy as np
+
+    from repro.launch.builders import _zero1_opt_specs
+    from repro.launch.mesh import data_axes, model_axis_size
+    from repro.models.model import param_shapes
+    from repro.models.sharding import param_partition_specs
+    from repro.optim.optimizers import adamw
+
+    axes = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    if sharding_profile == "dp_only":
+        axes = (*axes, "model")
+        msize = 1
+    shapes = param_shapes(cfg)
+    pspecs = param_partition_specs(shapes, cfg, model_size=msize,
+                                   data_axes=axes)
+    if sharding_profile == "fsdp":
+        pspecs = _zero1_opt_specs(pspecs, shapes, axes, mesh)
+    opt = adamw(3e-4)
+    opt_shapes = jax.eval_shape(opt.init, shapes)
+    ospecs = param_partition_specs(opt_shapes, cfg, model_size=msize,
+                                   data_axes=axes)
+    ospecs = jax.tree.map(
+        lambda spec, leaf: spec if len(leaf.shape) == len(spec) else P(),
+        ospecs, opt_shapes)
+    if sharding_profile in ("tp+zero1", "fsdp"):
+        ospecs = _zero1_opt_specs(ospecs, opt_shapes, axes, mesh)
+
+    def shard_factor(spec):
+        f = 1
+        for axis in spec:
+            if axis is None:
+                continue
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                f *= mesh.shape[a]
+        return f
+
+    def tally(shapes_tree, specs_tree, copies=1.0):
+        total = 0.0
+        for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes_tree)[0],
+            jax.tree_util.tree_flatten_with_path(specs_tree)[0],
+        ):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += copies * n * leaf.dtype.itemsize / shard_factor(spec)
+        return total
+
+    # params + grads (same sharding) + opt state
+    return tally(shapes, pspecs, copies=2.0) + tally(opt_shapes, ospecs)
+
+
+def run_memory_variant(arch: str, shape_name: str, *, label: str,
+                       hypothesis: str, sharding_profile: str = "tp",
+                       cfg_updates: dict | None = None,
+                       multi_pod: bool = False, compile: bool = True) -> dict:
+    """Compile the PRODUCTION program and report peak-memory metrics:
+    temp bytes from memory_analysis (live activations/buffers) plus the
+    analytic per-chip resident state under the sharding profile."""
+    from repro.configs import get_config, get_shape
+    from repro.launch.builders import build_lowered
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import pick_window
+
+    cfg = get_config(arch)
+    if cfg_updates:
+        cfg = dataclasses.replace(cfg, **cfg_updates)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    temps = 0
+    if compile:
+        lowered, _ = build_lowered(cfg, shape, mesh,
+                                   window=pick_window(cfg, shape),
+                                   sharding_profile=sharding_profile)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        temps = getattr(mem, "temp_size_in_bytes", 0)
+    state = _sharded_state_bytes_per_chip(cfg, mesh, sharding_profile) \
+        if shape.mode == "train" else 0.0
+    return {
+        "label": label, "hypothesis": hypothesis, "arch": arch,
+        "shape": shape_name, "profile": sharding_profile,
+        "cfg_updates": cfg_updates or {},
+        "temp_bytes": int(temps),
+        "state_bytes_per_chip": int(state),
+        "state_gb_per_chip": state / 1e9,
+        "chips": mesh.size, "wall_s": round(time.time() - t0, 1),
+    }
+
+
+def run_pearl_variant(arch: str, shape_name: str, *, label: str,
+                      hypothesis: str, tau: int, sync_dtype=None) -> dict:
+    """PEARL pod-collective accounting: lower a round, parse pod-axis bytes.
+
+    Costs inside the tau-step local scan are per-HLO-visit; the pod-axis
+    collective (the sync) sits OUTSIDE the scan, so its bytes are exact. We
+    report pod-collective bytes PER LOCAL STEP — the metric PEARL divides by
+    tau (paper Theorem 3.4's communication saving, measured on compiled HLO).
+    """
+    from repro.configs import get_config, get_shape
+    from repro.launch.builders import build_pearl_lowered
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import ICI_BW, parse_collectives
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=True)
+    t0 = time.time()
+    lowered, _ = build_pearl_lowered(cfg, shape, mesh, window=0, tau=tau,
+                                     sync_dtype=sync_dtype)
+    compiled = lowered.compile()
+    coll = parse_collectives(compiled.as_text(), chips_per_pod=256)
+    return {
+        "label": label, "hypothesis": hypothesis, "arch": arch,
+        "shape": shape_name, "tau": tau,
+        "pod_collective_bytes_per_round": coll.pod_bytes,
+        "pod_collective_bytes_per_local_step": coll.pod_bytes / tau,
+        "pod_collective_s_per_local_step": coll.pod_bytes / tau / ICI_BW,
+        "collective_by_op": coll.bytes_by_op,
+        "wall_s": round(time.time() - t0, 1),
+    }
+
+
+PAIRS = {}
+
+
+def pair(name):
+    def deco(fn):
+        PAIRS[name] = fn
+        return fn
+    return deco
+
+
+@pair("moe")
+def pair_moe():
+    """qwen3-moe-30b-a3b x train_4k: MoE dispatch-einsum and collective load."""
+    a, s = "qwen3-moe-30b-a3b", "train_4k"
+    return [
+        run_variant(a, s, label="baseline(group=512,cf=1.25)",
+                    hypothesis="baseline GShard grouping"),
+        run_variant(a, s, label="group=256",
+                    hypothesis="dispatch einsum FLOPs scale with group size; "
+                               "halving group halves dispatch compute at equal "
+                               "capacity variance",
+                    cfg_updates={"moe_group_size": 256}),
+        run_variant(a, s, label="group=128",
+                    hypothesis="further halving keeps winning until capacity "
+                               "quantization (ceil) dominates",
+                    cfg_updates={"moe_group_size": 128}),
+        run_variant(a, s, label="group=256,cf=1.0",
+                    hypothesis="cf 1.25->1.0 cuts expert matmul + all-to-all "
+                               "bytes by 20% at the cost of more drops",
+                    cfg_updates={"moe_group_size": 256, "capacity_factor": 1.0}),
+    ]
+
+
+@pair("small")
+def pair_small():
+    """xlstm-125m x train_4k: collective-bound from unshardable 4-head blocks."""
+    a, s = "xlstm-125m", "train_4k"
+    return [
+        run_variant(a, s, label="baseline(tp)",
+                    hypothesis="baseline: weights partially replicated, "
+                               "per-layer activation all-reduces dominate"),
+        run_variant(a, s, label="dp_only",
+                    hypothesis="125M params fit one chip; pure data "
+                               "parallelism removes ALL per-layer activation "
+                               "all-reduces; only the gradient all-reduce "
+                               "remains (one per step, overlappable)",
+                    sharding_profile="dp_only"),
+    ]
+
+
+@pair("granite")
+def pair_granite():
+    """granite-34b x prefill_32k: memory-dominated; the chunk knob moves PEAK
+    LIVE memory (temp bytes of the compiled program), not bytes-accessed —
+    which is exactly the VMEM/HBM working-set trade the flash kernel makes."""
+    a, s = "granite-34b", "prefill_32k"
+    return [
+        run_memory_variant(a, s, label="baseline(chunk=1024)",
+                           hypothesis="live score buffer per chunk ~ "
+                                      "B_loc*H_loc*chunk*S"),
+        run_memory_variant(a, s, label="chunk=256",
+                           hypothesis="4x smaller chunks -> ~4x smaller live "
+                                      "score buffers at equal FLOPs",
+                           cfg_updates={"attn_chunk": 256}),
+        run_memory_variant(a, s, label="chunk=4096",
+                           hypothesis="4x larger chunks -> ~4x larger live "
+                                      "buffers (regression expected)",
+                           cfg_updates={"attn_chunk": 4096}),
+    ]
+
+
+@pair("llama4mem")
+def pair_llama4mem():
+    """llama4 400B x train_4k: HBM feasibility — fp32 Adam moments blow the
+    16 GB/chip budget on one pod; ZeRO-1 shards them over data."""
+    a, s = "llama4-maverick-400b-a17b", "train_4k"
+    return [
+        run_memory_variant(a, s, label="baseline(tp)", compile=False,
+                           hypothesis="TP-16 replicates params over data=16: "
+                                      "6.4 TB fp32 state / 16 >> 16 GB HBM"),
+        run_memory_variant(a, s, label="tp+zero1", compile=False,
+                           hypothesis="sharding m/v over data removes 15/16 "
+                                      "of optimizer bytes; params still "
+                                      "replicated -> still infeasible",
+                           sharding_profile="tp+zero1"),
+        run_memory_variant(a, s, label="fsdp(1 pod)", compile=False,
+                           hypothesis="ZeRO-3: params+grads+moments over "
+                                      "data x model = 256 -> 6.4 TB/256 = "
+                                      "~25 GB, still over 16 GB",
+                           sharding_profile="fsdp"),
+        run_memory_variant(a, s, label="fsdp(2 pods)", multi_pod=True,
+                           hypothesis="512-way FSDP halves resident state "
+                                      "again -> ~12.5 GB/chip, fits; compile "
+                                      "proves the all-gather program lowers",
+                           sharding_profile="fsdp"),
+    ]
+
+
+@pair("pearl")
+def pair_pearl():
+    """stablelm-1.6b x train_4k on 2 pods: the paper's technique itself."""
+    a, s = "stablelm-1.6b", "train_4k"
+    import jax.numpy as jnp
+
+    out = [
+        run_pearl_variant(a, s, label=f"pearl(tau={t})",
+                          hypothesis="pod-axis bytes per local step = "
+                                     "sync_bytes / tau (Thm 3.4 realized as "
+                                     "cross-pod traffic)", tau=t)
+        for t in (1, 2, 8)
+    ]
+    out.append(run_pearl_variant(
+        a, s, label="pearl(tau=8)+bf16 sync",
+        hypothesis="compressed broadcast (paper future work): quantizing the "
+                   "sync operands should halve wire bytes again -> 16x vs "
+                   "tau=1 fp32. MEASURED: unchanged — XLA CPU reassociates "
+                   "the convert around its f32 reduce; needs explicit "
+                   "shard_map psum on TPU. Convergence side validated in "
+                   "tests (plateau unchanged).",
+        tau=8, sync_dtype=jnp.bfloat16))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pair", choices=sorted(PAIRS), required=True)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    records = PAIRS[args.pair]()
+    out = args.out or f"experiments/perf_{args.pair}.json"
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+
+    base = records[0]
+    for r in records:
+        if "compute_s" in r:
+            print(f"{r['label']:28s} compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s "
+                  f"(vs base mem x{r['memory_s'] / max(base['memory_s'], 1e-12):.2f}, "
+                  f"coll x{r['collective_s'] / max(base['collective_s'], 1e-12):.2f})",
+                  flush=True)
+        elif "pod_collective_bytes_per_local_step" in r:
+            print(f"{r['label']:28s} pod_bytes/local_step="
+                  f"{r['pod_collective_bytes_per_local_step'] / 1e9:.3f} GB "
+                  f"({r['pod_collective_s_per_local_step']:.4f}s)", flush=True)
+        else:
+            print(f"{r['label']:28s} temp={r['temp_bytes'] / 1e9:.2f} GB "
+                  f"state/chip={r['state_gb_per_chip']:.2f} GB", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct input builders for every (architecture x shape) combo.
+
+``input_specs`` mirrors what the data pipeline / serving frontend would feed
+each step, as abstract shapes only — the dry-run lowers against these without
+allocating anything. Modality frontends are stubbed exactly here: VLM archs
+receive (B, n_patches, d_model) patch embeddings, the audio enc-dec receives
+(B, seq, d_model) frame embeddings (DESIGN.md carve-out).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.model import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.modality == "vision":
+        n_mod = cfg.n_modality_tokens
+        specs["tokens"] = SDS((b, s - n_mod), jnp.int32)
+        specs["patch_embeds"] = SDS((b, n_mod, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif cfg.enc_layers:
+        specs["tokens"] = SDS((b, s), jnp.int32)
+        specs["enc_frames"] = SDS((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        specs["tokens"] = SDS((b, s), jnp.int32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, *,
+                       window: int = 0) -> dict:
+    """Specs for serve_step: one token + a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = s if cfg.enc_layers else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, window=window, enc_len=enc_len)
+    )
+    return {"token": SDS((b, 1), jnp.int32), "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, window: int = 0) -> dict:
+    if shape.mode in ("train", "prefill"):
+        return train_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape, window=window)
+
+
+def pick_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding-window policy per DESIGN.md:
+
+    - hybrid archs always use their architectural window on attention blocks;
+    - pure-attention archs enable the window only for long_500k (the
+      sub-quadratic requirement); all other shapes run full attention.
+    """
+    if cfg.family == "hybrid":
+        return cfg.sliding_window
+    if shape.name == "long_500k":
+        return cfg.sliding_window
+    return 0

@@ -1,0 +1,115 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --steps 20 [--pearl --players 2 --tau 4]
+
+On real hardware this would run under one process per host with the
+production mesh; on this CPU container it drives the same code paths on the
+single device (optionally with a reduced config via --smoke). Supports both
+classical single-model training and the MpFL PEARL mode (players + tau +
+consensus coupling), with checkpointing/resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.models.model import init_params
+from repro.optim.optimizers import adamw, cosine_schedule, sgd
+from repro.train.pearl_trainer import PearlTrainer
+from repro.train.train_step import make_train_step
+
+
+def train_single(args, cfg):
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw(cosine_schedule(args.lr, warmup=20, total=args.steps))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    stream = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        n_players=1, seed=args.seed,
+    ))
+
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(args.ckpt_dir, last,
+                                       {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = last
+            print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {"tokens": jnp.asarray(stream.batch(0, step))}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss={float(metrics['lm_loss']):.4f}  "
+                  f"grad_norm={float(metrics['grad_norm']):.3f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state})
+    return params
+
+
+def train_pearl(args, cfg):
+    trainer = PearlTrainer(cfg, sgd(args.lr), n_players=args.players,
+                           tau=args.tau, prox_lambda=args.prox,
+                           seed=args.seed)
+    stream = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        n_players=args.players, seed=args.seed,
+    ))
+    rounds = max(1, args.steps // args.tau)
+    t0 = time.time()
+    for r in range(rounds):
+        hist = trainer.run(stream, rounds=1)
+        if r % args.log_every == 0 or r == rounds - 1:
+            print(f"round {r:4d}  lm_loss={hist[-1]['lm_loss']:.4f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return trainer.params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-360m", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    # MpFL / PEARL
+    ap.add_argument("--pearl", action="store_true")
+    ap.add_argument("--players", type=int, default=2)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--prox", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_variant()
+    print(f"arch={cfg.name}  layers={cfg.n_layers}  d_model={cfg.d_model}  "
+          f"devices={jax.device_count()}")
+    if args.pearl:
+        train_pearl(args, cfg)
+    else:
+        train_single(args, cfg)
+
+
+if __name__ == "__main__":
+    main()

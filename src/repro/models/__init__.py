@@ -1,0 +1,19 @@
+"""Architecture zoo: shared layers + per-family blocks + assembler."""
+
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "param_shapes",
+    "prefill",
+]

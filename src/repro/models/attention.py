@@ -1,0 +1,218 @@
+"""GQA attention: memory-bounded prefill/train path + KV-cache decode path.
+
+Prefill/train uses a query-chunked online-softmax formulation (a pure-jnp
+flash pattern: scores for one query chunk at a time, O(S * chunk) live
+memory) so 32k-sequence dry-runs do not materialize S^2 score tensors. The
+Pallas kernel in :mod:`repro.kernels.flash_attention` implements the same
+contract for the TPU target; ``use_kernel=True`` switches to it.
+
+Sliding-window masking makes dense architectures eligible for the
+``long_500k`` decode shape: windowed layers keep a ring-buffer cache of
+``window`` entries (see :mod:`repro.serve.cache`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def init_attention(key: Array, d_model: int, n_heads: int, n_kv: int, head_dim: int) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d_model, n_heads, head_dim)),
+        "wk": dense_init(kk, (d_model, n_kv, head_dim)),
+        "wv": dense_init(kv, (d_model, n_kv, head_dim)),
+        "wo": dense_init(ko, (n_heads, head_dim, d_model), in_axis=2),
+    }
+
+
+def qkv_project(params: dict, x: Array, positions: Array, rope_theta: float,
+                use_rope: bool = True):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), roped."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each KV head H/KV times."""
+    b, s, kv, hd = k.shape
+    rep = n_heads // kv
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    chunk: int = 1024,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: Array | None = None,
+    unroll: bool = False,
+) -> Array:
+    """Query-chunked softmax attention.
+
+    Args:
+      q: (B, Sq, H, hd); k, v: (B, Sk, H, hd) (KV already head-expanded).
+      chunk: query-chunk size (memory bound: B*H*chunk*Sk live scores).
+      causal: apply causal mask (query position i attends to key j <= i).
+      window: if > 0, additionally mask keys with i - j >= window.
+      q_offset: scalar offset of query positions relative to key positions
+        (decode: Sq=1 queries sit at position ``q_offset``).
+
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    offset = jnp.asarray(0 if q_offset is None else q_offset, jnp.int32)
+
+    kt = jnp.swapaxes(k, 1, 2)  # (B, H, Sk, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    n_chunks = max(1, sq // chunk)
+    if sq % chunk:
+        # fall back to a single chunk when the sequence doesn't tile
+        n_chunks, chunk_ = 1, sq
+    else:
+        chunk_ = chunk
+
+    qs = jnp.swapaxes(q, 1, 2).reshape(b, h, n_chunks, chunk_, hd)
+    key_pos = jnp.arange(sk)
+
+    def one_chunk(c):
+        qc = qs[:, :, c]                                   # (B, H, cq, hd)
+        q_pos = offset + c * chunk_ + jnp.arange(chunk_)
+        scores = jnp.einsum("bhqk,bhsk->bhqs", qc, kt) * scale
+        mask = jnp.ones((chunk_, sk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= key_pos[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - key_pos[None, :] < window
+        scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhqs,bhsk->bhqk", probs, vt)
+
+    if n_chunks == 1:
+        out = one_chunk(0)[None]
+    else:
+        # scan (not map) so the cost model can unroll chunk bodies into the
+        # HLO — XLA's cost analysis does not multiply while-loop trip counts.
+        _, out = jax.lax.scan(
+            lambda carry, c: (carry, one_chunk(c)),
+            0, jnp.arange(n_chunks), unroll=unroll,
+        )                                                     # (n, B, H, cq, hd)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, sq, hd)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def attention_block(
+    params: dict,
+    x: Array,
+    positions: Array,
+    *,
+    n_heads: int,
+    rope_theta: float,
+    chunk: int,
+    causal: bool = True,
+    window: int = 0,
+    kv_override: tuple[Array, Array] | None = None,
+    use_kernel: bool = False,
+    return_kv: bool = False,
+    unroll: bool = False,
+):
+    """Full attention sub-block: QKV -> (flash) attention -> output proj.
+
+    ``kv_override`` supplies externally-computed K/V (cross-attention).
+    ``return_kv`` additionally returns the (unexpanded, roped) K/V for KV
+    cache construction at prefill.
+    """
+    q, k, v = qkv_project(params, x, positions, rope_theta,
+                          use_rope=kv_override is None)
+    if kv_override is not None:
+        k, v = kv_override
+    kv_raw = (k, v)
+    k = _expand_kv(k, n_heads)
+    v = _expand_kv(v, n_heads)
+    if use_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = chunked_attention(q, k, v, chunk=chunk, causal=causal,
+                                window=window, unroll=unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if return_kv:
+        return out, kv_raw
+    return out
+
+
+def decode_attention(
+    params: dict,
+    x: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Array,
+    position: Array,
+    *,
+    n_heads: int,
+    rope_theta: float,
+    window: int = 0,
+    ring: bool = False,
+) -> tuple[Array, Array, Array]:
+    """One-token decode against a KV cache.
+
+    Args:
+      x: (B, 1, D) current token activations.
+      k_cache, v_cache: (B, C, KV, hd) — C is the cache capacity (= seq_len
+        for full-attention layers; = window for ring-buffered layers).
+      cache_len: number of valid entries currently in the cache (scalar).
+      position: absolute position of the new token (scalar).
+      ring: if True the cache is a ring buffer (sliding-window layers);
+        the new KV overwrites slot ``position % C``.
+
+    Returns (attn_out (B,1,D), new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = qkv_project(
+        params, x, position[None][None].repeat(b, 0), rope_theta
+    )
+    capacity = k_cache.shape[1]
+    slot = jnp.where(ring, position % capacity, position)
+    zero = jnp.zeros((), slot.dtype)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (zero, slot, zero, zero)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (zero, slot, zero, zero)
+    )
+
+    k = _expand_kv(k_cache, n_heads)
+    v = _expand_kv(v_cache, n_heads)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bshk,bchk->bhc", q, k.astype(q.dtype)) * scale  # s == 1
+    idx = jnp.arange(capacity)
+    valid = idx <= jnp.minimum(cache_len, position)
+    if ring:
+        valid = idx < jnp.minimum(capacity, position + 1)
+    elif window > 0:
+        valid &= position - idx < window
+    scores = jnp.where(valid[None, None, :], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhc,bchk->bhk", probs, v.astype(q.dtype))[:, None]  # (B,1,H,hd)
+    attn = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return attn, k_cache, v_cache

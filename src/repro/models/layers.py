@@ -1,0 +1,118 @@
+"""Shared neural-network primitives (pure-functional, pytree params).
+
+Conventions:
+- Parameters are nested dicts of ``float32`` arrays; compute is cast to the
+  config dtype (bf16 on the TPU target) at block entry.
+- Linear weights are stored ``(in, out)`` (or head-factored) with no biases
+  (llama-style) unless a block explicitly needs them.
+- All functions are shape-polymorphic in batch/sequence and jit/vmap/scan
+  safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------ initialers
+def dense_init(key: Array, shape: tuple[int, ...], in_axis: int = 0) -> Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in**-0.5
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+
+
+def embed_init(key: Array, vocab: int, dim: int) -> Array:
+    return jax.random.truncated_normal(key, -3.0, 3.0, (vocab, dim), jnp.float32)
+
+
+# ------------------------------------------------------------------------ norm
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+def init_rms_norm(dim: int) -> Array:
+    return jnp.ones((dim,), jnp.float32)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary position embedding.
+
+    Args:
+      x: (..., seq, heads, head_dim)
+      positions: (..., seq) integer positions.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- FFN
+def init_swiglu(key: Array, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff)),
+        "up": dense_init(k2, (d_model, d_ff)),
+        "down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    dtype = x.dtype
+    g = x @ params["gate"].astype(dtype)
+    u = x @ params["up"].astype(dtype)
+    return (jax.nn.silu(g) * u) @ params["down"].astype(dtype)
+
+
+# ------------------------------------------------------------------- embedding
+def embed_tokens(embedding: Array, tokens: Array, dtype) -> Array:
+    return embedding.astype(dtype)[tokens]
+
+
+def unembed(x: Array, head: Array) -> Array:
+    """Project to vocab logits in float32 for a numerically-stable loss."""
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- depthwise conv
+def init_causal_conv(key: Array, channels: int, kernel: int) -> dict:
+    return {
+        "w": dense_init(key, (kernel, channels), in_axis=0),
+        "b": jnp.zeros((channels,), jnp.float32),
+    }
+
+
+def causal_conv1d(params: dict, x: Array) -> Array:
+    """Depthwise causal conv over time. x: (batch, seq, channels)."""
+    k = params["w"].shape[0]
+    w = params["w"].astype(x.dtype)
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + params["b"].astype(x.dtype)
+
+
+def causal_conv1d_step(params: dict, window: Array, x_t: Array) -> tuple[Array, Array]:
+    """Single decode step. window: (batch, kernel-1, C) past inputs; x_t: (batch, C).
+
+    Returns (new_window, y_t).
+    """
+    w = params["w"].astype(x_t.dtype)
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)      # (b, k, C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + params["b"].astype(x_t.dtype)
+    return full[:, 1:, :], y

@@ -1,0 +1,474 @@
+"""Model assembly: init / forward / prefill / decode for all 10 architectures.
+
+A model is a pytree of parameters plus pure functions driven by
+:class:`repro.configs.base.ModelConfig`. Heterogeneous stacks are split into
+contiguous same-type *runs* (``cfg.layer_runs()``); each run's parameters are
+stacked along a leading layer axis and executed with ``jax.lax.scan`` (with
+``jax.checkpoint`` per layer in train mode), which keeps HLO size and
+activation memory bounded for 88-layer dry-runs.
+
+Execution modes:
+- ``train``   — full forward, logits for every position (loss in train/).
+- ``prefill`` — forward that additionally emits per-layer caches (KV /
+  recurrent states) for decode continuation.
+- ``decode``  — ONE token against the cache (see :func:`decode_step`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm, xlstm
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    embed_tokens,
+    init_rms_norm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+Array = jax.Array
+
+
+# ===================================================================== init
+def _init_attn_layer(key: Array, cfg: ModelConfig, kind: str,
+                     cross: bool = False) -> dict:
+    ks = jax.random.split(key, 5)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln1": init_rms_norm(cfg.d_model),
+        "attn": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, hd),
+        "ln2": init_rms_norm(cfg.d_model),
+    }
+    if kind == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.n_experts, cfg.moe_d_ff,
+                            cfg.n_shared_experts, cfg.moe_d_ff)
+    else:
+        p["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff)
+    if cross:
+        p["ln_x"] = init_rms_norm(cfg.d_model)
+        p["xattn"] = attn.init_attention(ks[2], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, hd)
+    return p
+
+
+def _init_layer(key: Array, cfg: ModelConfig, kind: str, cross: bool) -> dict:
+    if kind in ("attn", "moe"):
+        return _init_attn_layer(key, cfg, kind, cross)
+    if kind == "mamba":
+        return {
+            "ln": init_rms_norm(cfg.d_model),
+            "mamba": ssm.init_mamba(key, cfg.d_model, cfg.d_inner, cfg.n_heads,
+                                    cfg.ssm_state, cfg.conv_kernel),
+        }
+    if kind == "mlstm":
+        return {
+            "ln": init_rms_norm(cfg.d_model),
+            "mlstm": xlstm.init_mlstm(key, cfg.d_model, cfg.n_heads),
+        }
+    if kind == "slstm":
+        return {
+            "ln": init_rms_norm(cfg.d_model),
+            "slstm": xlstm.init_slstm(key, cfg.d_model, cfg.n_heads),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _init_runs(key: Array, cfg: ModelConfig, runs, cross: bool) -> list[dict]:
+    out = []
+    for r, (kind, count) in enumerate(runs):
+        keys = jax.random.split(jax.random.fold_in(key, r), count)
+        stacked = jax.vmap(lambda k: _init_layer(k, cfg, kind, cross))(keys)
+        out.append(stacked)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    """Initialize the full parameter pytree for ``cfg``."""
+    k_emb, k_dec, k_enc, k_head, k_mod = jax.random.split(key, 5)
+    cross = cfg.enc_layers > 0
+    params: dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model),
+        "blocks": _init_runs(k_dec, cfg, cfg.layer_runs(), cross),
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size))
+    if cfg.enc_layers:
+        params["enc_proj"] = dense_init(k_mod, (cfg.d_model, cfg.d_model))
+        params["enc_blocks"] = _init_runs(
+            k_enc, cfg, (("attn", cfg.enc_layers),), cross=False
+        )
+        params["enc_norm"] = init_rms_norm(cfg.d_model)
+    if cfg.modality == "vision":
+        params["vision_proj"] = dense_init(k_mod, (cfg.d_model, cfg.d_model))
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree of the parameters — no allocation (dry-run)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# =================================================================== context
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Static + traced context threaded through block application."""
+
+    cfg: ModelConfig
+    positions: Array                 # (B, S) query positions
+    window: int                      # sliding window (0 = full attention)
+    mode: str                        # train | prefill
+    memory_kv_fn: Any = None         # layer params -> (k, v) for cross-attn
+    use_kernels: bool = False
+
+
+def _apply_layer(kind: str, p: dict, x: Array, ctx: RunCtx):
+    """One block; returns (x, aux, cache) — cache only populated at prefill."""
+    cfg = ctx.cfg
+    want_cache = ctx.mode == "prefill"
+    aux = jnp.zeros((), jnp.float32)
+    cache: dict[str, Array] = {}
+
+    if kind in ("attn", "moe"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        res = attn.attention_block(
+            p["attn"], h, ctx.positions,
+            n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+            chunk=cfg.attn_chunk, causal=True, window=ctx.window,
+            use_kernel=ctx.use_kernels, return_kv=want_cache,
+            unroll=cfg.unroll_loops,
+        )
+        if want_cache:
+            res, (k, v) = res
+            cache["k"], cache["v"] = k, v
+        x = x + res
+        if "xattn" in p:
+            h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            mk, mv = ctx.memory_kv_fn(p["xattn"])
+            res = attn.attention_block(
+                p["xattn"], h, ctx.positions,
+                n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+                chunk=cfg.attn_chunk, causal=False, window=0,
+                kv_override=(mk, mv), unroll=cfg.unroll_loops,
+            )
+            if want_cache:
+                cache["xk"], cache["xv"] = mk, mv
+            x = x + res
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            out, aux = moe_ffn(p["moe"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               group_size=cfg.moe_group_size)
+        else:
+            out = swiglu(p["mlp"], h)
+        x = x + out
+    elif kind == "mamba":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        res = ssm.mamba_block(
+            p["mamba"], h, d_inner=cfg.d_inner, n_heads=cfg.n_heads,
+            ssm_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+            return_cache=want_cache, use_kernel=ctx.use_kernels,
+            unroll=cfg.unroll_loops,
+        )
+        if want_cache:
+            res, cache = res
+        x = x + res
+    elif kind == "mlstm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        res = xlstm.mlstm_block(p["mlstm"], h, n_heads=cfg.n_heads,
+                                chunk=cfg.ssm_chunk,
+                                return_cache=want_cache,
+                                use_kernel=ctx.use_kernels,
+                                unroll=cfg.unroll_loops)
+        if want_cache:
+            res, cache = res
+        x = x + res
+    elif kind == "slstm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        res = xlstm.slstm_block(p["slstm"], h, n_heads=cfg.n_heads,
+                                return_cache=want_cache)
+        if want_cache:
+            res, cache = res
+        x = x + res
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _apply_runs(blocks: list[dict], runs, x: Array, ctx: RunCtx):
+    """Scan each stacked run; returns (x, total_aux, caches per run)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    caches = []
+
+    for (kind, _count), stacked in zip(runs, blocks):
+
+        def body(carry, layer_params, kind=kind):
+            h, aux_sum = carry
+            h, aux, cache = _apply_layer(kind, layer_params, h, ctx)
+            return (h, aux_sum + aux), cache
+
+        if ctx.mode == "train":
+            body = jax.checkpoint(body)
+        (x, total_aux), run_cache = jax.lax.scan(
+            body, (x, total_aux), stacked, unroll=ctx.cfg.unroll_loops)
+        caches.append(run_cache)
+    return x, total_aux, caches
+
+
+# ==================================================================== forward
+def _encode(params: dict, cfg: ModelConfig, frames: Array, ctx_kernels: bool):
+    """Bidirectional encoder over stub frame embeddings. frames: (B,S,D)."""
+    x = (frames @ params["enc_proj"].astype(frames.dtype))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    ctx = RunCtx(cfg=cfg, positions=positions, window=0, mode="train",
+                 use_kernels=ctx_kernels)
+
+    for (kind, _), stacked in zip((("attn", cfg.enc_layers),),
+                                  params["enc_blocks"]):
+
+        def body(carry, layer_params):
+            h = rms_norm(carry, layer_params["ln1"], cfg.norm_eps)
+            res = attn.attention_block(
+                layer_params["attn"], h, ctx.positions,
+                n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+                chunk=cfg.attn_chunk, causal=False, window=0,
+                unroll=cfg.unroll_loops,
+            )
+            h2 = carry + res
+            out = swiglu(layer_params["mlp"], rms_norm(h2, layer_params["ln2"],
+                                                       cfg.norm_eps))
+            return h2 + out, None
+
+        x, _ = jax.lax.scan(body, x, stacked, unroll=cfg.unroll_loops)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    mode: str = "train",
+    window: int = 0,
+    use_kernels: bool = False,
+) -> dict:
+    """Forward pass (train or prefill).
+
+    batch keys: ``tokens`` (B, S_text) int32; ``patch_embeds`` (B, P, D) for
+    vision archs; ``enc_frames`` (B, S_enc, D) for the audio enc-dec.
+
+    Returns dict with ``logits`` (B, S_total, V) fp32, ``aux`` (MoE load
+    balance loss), ``caches`` (prefill only) and ``memory`` (audio only).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, dtype)
+
+    memory = None
+    memory_kv_fn = None
+    if cfg.enc_layers:
+        memory = _encode(params, cfg, batch["enc_frames"].astype(dtype),
+                         use_kernels)
+
+        def memory_kv_fn(xattn_params, memory=memory):
+            k = jnp.einsum("bsd,dhk->bshk", memory,
+                           xattn_params["wk"].astype(memory.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", memory,
+                           xattn_params["wv"].astype(memory.dtype))
+            return k, v
+
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        patches = batch["patch_embeds"].astype(dtype)
+        patches = patches @ params["vision_proj"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)   # early fusion
+
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    ctx = RunCtx(cfg=cfg, positions=positions, window=window, mode=mode,
+                 memory_kv_fn=memory_kv_fn, use_kernels=use_kernels)
+    x, aux, caches = _apply_runs(params["blocks"], cfg.layer_runs(), x, ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)
+    out = {"logits": logits, "aux": aux}
+    if mode == "prefill":
+        out["caches"] = caches
+        out["length"] = jnp.asarray(s, jnp.int32)
+    if memory is not None:
+        out["memory"] = memory
+    return out
+
+
+# ================================================================== decoding
+def init_cache(cfg: ModelConfig, batch_size: int, capacity: int, *,
+               window: int = 0, enc_len: int = 0, dtype=None) -> dict:
+    """Empty decode cache sized for ``capacity`` context tokens.
+
+    Windowed attention layers get ring buffers of ``min(window, capacity)``.
+    SSM/xLSTM layers get O(1) state slots. The audio enc-dec also carries the
+    per-layer cross-attention K/V over an ``enc_len``-frame memory.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    attn_cap = min(window, capacity) if window else capacity
+
+    def one(kind):
+        if kind in ("attn", "moe"):
+            c = {
+                "k": jnp.zeros((batch_size, attn_cap, kv, hd), dtype),
+                "v": jnp.zeros((batch_size, attn_cap, kv, hd), dtype),
+            }
+            if cfg.enc_layers:
+                c["xk"] = jnp.zeros((batch_size, enc_len, kv, hd), dtype)
+                c["xv"] = jnp.zeros((batch_size, enc_len, kv, hd), dtype)
+            return c
+        if kind == "mamba":
+            return ssm.init_mamba_cache(batch_size, cfg.d_inner, cfg.n_heads,
+                                        cfg.ssm_state, cfg.conv_kernel, dtype)
+        if kind == "mlstm":
+            return xlstm.init_mlstm_cache(batch_size, cfg.d_model, cfg.n_heads,
+                                          dtype)
+        if kind == "slstm":
+            return xlstm.init_slstm_cache(batch_size, cfg.d_model, cfg.n_heads,
+                                          dtype)
+        raise ValueError(kind)
+
+    runs = []
+    for kind, count in cfg.layer_runs():
+        sliced = one(kind)
+        runs.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (count, *a.shape)), sliced))
+    return {"runs": runs, "length": jnp.zeros((), jnp.int32)}
+
+
+def _kv_into_cache(kv: Array, capacity: int, ring: bool) -> Array:
+    """Place prefill K or V (B, S, KV, hd) into a capacity-C cache buffer."""
+    b, s, n_kv, hd = kv.shape
+    if not ring:
+        if s > capacity:
+            raise ValueError(f"prefill length {s} exceeds cache capacity {capacity}")
+        return jnp.pad(kv, ((0, 0), (0, capacity - s), (0, 0), (0, 0)))
+    take = min(s, capacity)
+    last = kv[:, s - take:]
+    slots = jnp.arange(s - take, s) % capacity
+    buf = jnp.zeros((b, capacity, n_kv, hd), kv.dtype)
+    return buf.at[:, slots].set(last)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, *, capacity: int,
+            window: int = 0, use_kernels: bool = False) -> tuple[Array, dict]:
+    """Run the prompt and build the decode cache.
+
+    Returns (last-token logits (B, V), cache).
+    """
+    out = forward(params, cfg, batch, mode="prefill", window=window,
+                  use_kernels=use_kernels)
+    attn_cap = min(window, capacity) if window else capacity
+    ring = window > 0
+
+    runs = []
+    for (kind, _), cache in zip(cfg.layer_runs(), out["caches"]):
+        if kind in ("attn", "moe"):
+            fixed = dict(cache)
+            fixed["k"] = jax.vmap(
+                lambda k: _kv_into_cache(k, attn_cap, ring))(cache["k"])
+            fixed["v"] = jax.vmap(
+                lambda v: _kv_into_cache(v, attn_cap, ring))(cache["v"])
+            runs.append(fixed)
+        else:
+            runs.append(cache)
+    cache = {"runs": runs, "length": out["length"]}
+    return out["logits"][:, -1], cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    token: Array,
+    *,
+    window: int = 0,
+) -> tuple[Array, dict]:
+    """Generate logits for ONE new token and update the cache.
+
+    Args:
+      token: (B, 1) int32 — the token being fed at position ``cache.length``.
+
+    Returns (logits (B, V) fp32, new cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    pos = cache["length"]
+    x = embed_tokens(params["embed"], token, dtype)     # (B, 1, D)
+    new_runs = []
+
+    for (kind, _), stacked_p, stacked_c in zip(cfg.layer_runs(),
+                                               params["blocks"],
+                                               cache["runs"]):
+
+        def body(h, inp, kind=kind):
+            p, c = inp
+            if kind in ("attn", "moe"):
+                hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+                res, k_new, v_new = attn.decode_attention(
+                    p["attn"], hn, c["k"], c["v"], pos, pos,
+                    n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+                    window=window, ring=window > 0,
+                )
+                h = h + res
+                c_out = dict(c, k=k_new, v=v_new)
+                if "xattn" in p:
+                    hn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+                    res = attn.attention_block(
+                        p["xattn"], hn, jnp.zeros_like(token),
+                        n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+                        chunk=cfg.attn_chunk, causal=False, window=0,
+                        kv_override=(c["xk"], c["xv"]),
+                    )
+                    h = h + res
+                hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+                if kind == "moe":
+                    res, _ = moe_ffn(p["moe"], hn, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     group_size=cfg.moe_group_size)
+                else:
+                    res = swiglu(p["mlp"], hn)
+                return h + res, c_out
+            if kind == "mamba":
+                hn = rms_norm(h, p["ln"], cfg.norm_eps)
+                res, c_out = ssm.mamba_decode_step(
+                    p["mamba"], c, hn, d_inner=cfg.d_inner,
+                    n_heads=cfg.n_heads, ssm_state=cfg.ssm_state)
+                return h + res, c_out
+            if kind == "mlstm":
+                hn = rms_norm(h, p["ln"], cfg.norm_eps)
+                res, c_out = xlstm.mlstm_decode_step(p["mlstm"], c, hn,
+                                                     n_heads=cfg.n_heads)
+                return h + res, c_out
+            if kind == "slstm":
+                hn = rms_norm(h, p["ln"], cfg.norm_eps)
+                res, c_out = xlstm.slstm_decode_step(p["slstm"], c, hn,
+                                                     n_heads=cfg.n_heads)
+                return h + res, c_out
+            raise ValueError(kind)
+
+        x, new_c = jax.lax.scan(body, x, (stacked_p, stacked_c),
+                                unroll=cfg.unroll_loops)
+        new_runs.append(new_c)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x[:, 0], head)
+    return logits, {"runs": new_runs, "length": pos + 1}

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Tokens are grouped by their leading (batch) dimension; each group dispatches
+independently to ``E`` experts with per-group capacity
+``C = ceil(S * top_k * capacity_factor / E)``. Dispatch/combine are dense
+einsums — the canonical TPU formulation: with tokens sharded over
+(``pod``, ``data``) and experts sharded over ``model``, XLA lowers the
+dispatch einsums to all-to-alls over the expert axis (visible in the dry-run
+HLO and counted by the roofline's collective term).
+
+The router adds the standard load-balance auxiliary loss (Switch/GShard),
+returned alongside the output so the train step can weight it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key: Array, d_model: int, n_experts: int, d_ff: int,
+             n_shared: int = 0, shared_d_ff: int = 0) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(kr, (d_model, n_experts)),
+        "gate": dense_init(kg, (n_experts, d_model, d_ff), in_axis=1),
+        "up": dense_init(ku, (n_experts, d_model, d_ff), in_axis=1),
+        "down": dense_init(kd, (n_experts, d_ff, d_model), in_axis=1),
+    }
+    if n_shared:
+        from repro.models.layers import init_swiglu
+
+        params["shared"] = init_swiglu(ks, d_model, n_shared * (shared_d_ff or d_ff))
+    return params
+
+
+def _top_k_dispatch(probs: Array, top_k: int, capacity: int):
+    """Build dispatch/combine tensors from router probabilities.
+
+    Args:
+      probs: (G, S, E) router softmax.
+    Returns:
+      dispatch: (G, S, E, C) one-hot bool-ish float;
+      combine:  (G, S, E, C) combine weights;
+      aux: load-balance loss scalar.
+    """
+    g, s, e = probs.shape
+    remaining = probs
+    location = jnp.zeros((g, e), jnp.int32)     # next free slot per expert
+    dispatch = jnp.zeros((g, s, e, capacity), probs.dtype)
+    combine = jnp.zeros((g, s, e, capacity), probs.dtype)
+    total_weight = jnp.zeros((g, s), probs.dtype)
+
+    for _ in range(top_k):
+        choice = jnp.argmax(remaining, axis=-1)                    # (G, S)
+        onehot = jax.nn.one_hot(choice, e, dtype=probs.dtype)      # (G, S, E)
+        gate = jnp.sum(remaining * onehot, axis=-1)                # (G, S)
+        remaining = remaining * (1.0 - onehot)
+        # slot index for each token within its chosen expert (FIFO by position)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + location[:, None, :]
+        slot = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)    # (G, S)
+        keep = (slot < capacity).astype(probs.dtype)               # capacity drop
+        slot_oh = jax.nn.one_hot(slot, capacity, dtype=probs.dtype)
+        d = onehot[..., None] * slot_oh[:, :, None, :] * keep[..., None, None]
+        dispatch = dispatch + d
+        combine = combine + gate[..., None, None] * d
+        total_weight = total_weight + gate * keep
+        location = location + jnp.sum(onehot, axis=1).astype(jnp.int32)
+
+    # renormalize combine weights over the kept top-k choices
+    combine = combine / jnp.maximum(total_weight, 1e-9)[..., None, None]
+    # Switch-style load-balance loss: E * sum_e fraction_e * prob_e
+    frac = jnp.mean(jnp.sum(dispatch, axis=-1), axis=1)            # (G, E)
+    mean_prob = jnp.mean(probs, axis=1)                            # (G, E)
+    aux = e * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+    return dispatch, combine, aux
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+    router_in_fp32: bool = True,
+) -> tuple[Array, Array]:
+    """Apply the MoE FFN. x: (B, S, D) -> (out (B, S, D), aux-loss scalar).
+
+    Tokens are re-grouped to ``(T/group_size, group_size, D)`` before
+    dispatch so the dispatch/combine tensors stay ``O(T * group_size * k)``
+    instead of ``O(T * S * k)`` — the standard GShard grouping. ``group_size``
+    trades dispatch-einsum FLOPs (linear in it) against capacity-drop
+    variance; it is a tuning knob for the Perf loop.
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    dtype = x.dtype
+    tokens = b * s
+    gs = min(group_size, tokens)
+    while tokens % gs:
+        gs //= 2
+    x_in = x
+    x = x.reshape(tokens // gs, gs, d)
+    g, s_, _ = x.shape
+
+    router_x = x.astype(jnp.float32) if router_in_fp32 else x
+    logits = router_x @ params["router"].astype(router_x.dtype)   # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+
+    capacity = max(1, math.ceil(s_ * top_k * capacity_factor / e))
+    dispatch, combine, aux = _top_k_dispatch(probs, top_k, capacity)
+
+    # dispatch tokens to experts: (E, G, C, D)
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, x)
+    gate = jnp.einsum("egcd,edf->egcf", expert_in, params["gate"].astype(dtype))
+    up = jnp.einsum("egcd,edf->egcf", expert_in, params["up"].astype(dtype))
+    act = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("egcf,efd->egcd", act, params["down"].astype(dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+    out = out.reshape(b, s, d)
+
+    if "shared" in params:
+        from repro.models.layers import swiglu
+
+        out = out + swiglu(params["shared"], x_in)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,161 @@
+"""Partition-spec policy: parameter/activation sharding over the production mesh.
+
+Mesh axes: ``data`` (+ optional ``pod``) carry batch parallelism; ``model``
+carries tensor/expert parallelism. Rules (DESIGN.md Section 5):
+
+- attention Q/KV/O shard the *head* axis over ``model`` when head count is
+  divisible by the axis size, else replicate (e.g. smollm's 15 heads,
+  granite's single KV head);
+- FFN up/gate shard d_ff (column), down shards d_ff (row);
+- embeddings / lm_head shard the vocab axis;
+- MoE experts shard the *expert* axis (expert parallelism — dispatch einsums
+  become all-to-alls over ``model``);
+- Mamba2/xLSTM inner projections shard the inner dim when divisible;
+- norms, gates, scalar per-head params replicate.
+
+Stacked layer runs carry a leading layer axis; rules match on *trailing*
+dimensions, so every rule below is written for the unstacked shape and
+``None`` is prepended for the stack axis automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _prepend(spec: P, extra: int) -> P:
+    return P(*([None] * extra), *spec)
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], cfg: ModelConfig,
+               model_size: int, data_axes: tuple[str, ...]) -> P:
+    """Base spec for the *unstacked* trailing dims of one parameter leaf."""
+    name = path[-1]
+    joined = "/".join(path)
+    m = "model"
+
+    def maybe(dim_size: int) -> str | None:
+        return m if _div(dim_size, model_size) else None
+
+    # ---- embeddings & head ----
+    if name == "embed":
+        return P(maybe(shape[-2]), None)                      # (V, D)
+    if name == "lm_head":
+        return P(None, maybe(shape[-1]))                      # (D, V)
+    if name in ("enc_proj", "vision_proj"):
+        return P(None, maybe(shape[-1]))
+
+    # ---- attention ----
+    if "attn" in path or "xattn" in path:
+        if name in ("wq", "wk", "wv"):                        # (D, H, hd)
+            return P(None, maybe(shape[-2]), None)
+        if name == "wo":                                      # (H, hd, D)
+            return P(maybe(shape[-3]), None, None)
+
+    # ---- MoE ----
+    if "moe" in path:
+        if name == "router":                                  # (D, E)
+            return P(None, maybe(shape[-1]))
+        if name in ("gate", "up", "down") and len(shape) >= 3:  # (E, D, F)
+            return P(maybe(shape[-3]), None, None)
+
+    # ---- dense FFN (mlp / shared expert / slstm ffn) ----
+    if name in ("gate", "up", "ffn_up"):                      # (D, F)
+        return P(None, maybe(shape[-1]))
+    if name in ("down", "ffn_down"):                          # (F, D)
+        return P(maybe(shape[-2]), None)
+
+    # ---- Mamba2 ----
+    if "mamba" in path:
+        if name == "in_proj":                                 # (D, proj_out)
+            return P(None, maybe(shape[-1]))
+        if name == "out_proj":                                # (d_inner, D)
+            return P(maybe(shape[-2]), None)
+
+    # ---- mLSTM ----
+    if "mlstm" in path:
+        if name in ("up_x", "up_z"):                          # (D, d_inner)
+            return P(None, maybe(shape[-1]))
+        if name in ("wq", "wk", "wv"):                        # (d_inner, H, dh)
+            # one mesh axis only: prefer head sharding, else inner-dim
+            if _div(shape[-2], model_size):
+                return P(None, m, None)
+            return P(maybe(shape[-3]), None, None)
+
+    # everything else (norms, biases, convs, gates, sLSTM recurrent) replicates
+    return P()
+
+
+def param_partition_specs(shapes: dict, cfg: ModelConfig, *,
+                          model_size: int,
+                          data_axes: tuple[str, ...] = ("data",)) -> dict:
+    """PartitionSpec pytree matching a ``param_shapes(cfg)`` pytree."""
+
+    def build(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        spec = _leaf_spec(keys, leaf.shape, cfg, model_size, data_axes)
+        extra = len(leaf.shape) - len(spec)
+        if extra > 0:
+            spec = _prepend(spec, extra)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(build, shapes)
+
+
+def batch_specs(cfg: ModelConfig, mode: str, *, data_axes: tuple[str, ...],
+                shard_cache_seq: bool = False) -> dict:
+    """PartitionSpecs for step inputs.
+
+    Training/prefill shard the batch over the data axes. Decode with batch=1
+    (long_500k) instead shards the KV-cache *sequence* dimension over
+    ``data`` (``shard_cache_seq=True``) — context parallelism for cache
+    reads.
+    """
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    spec = {"tokens": P(d, None)}
+    if cfg.modality == "vision":
+        spec["patch_embeds"] = P(d, None, None)
+    if cfg.enc_layers:
+        spec["enc_frames"] = P(d, None, None)
+    return spec
+
+
+def cache_partition_specs(cache_shapes: dict, *, data_axes: tuple[str, ...],
+                          shard_seq: bool = False) -> dict:
+    """Specs for the decode cache.
+
+    Default: batch over data axes, KV heads over ``model`` when divisible.
+    ``shard_seq``: shard the cache *sequence/capacity* axis over ``data``
+    (batch=1 long-context decode).
+    """
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def build(path, leaf):
+        keys = tuple(p.key if hasattr(p, "key") else str(p.idx) for p in path)
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):      # (runs, B, C, KV, hd)
+            if shard_seq:
+                return P(None, None, d, None, None)
+            return P(None, d, None, None, None)
+        if name == "length":
+            return P()
+        # recurrent states: (runs, B, ...) -> batch over data unless batch=1
+        if nd >= 2:
+            if shard_seq:
+                return P(*([None] * nd))
+            return P(None, d, *([None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(build, cache_shapes)

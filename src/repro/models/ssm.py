@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block: chunked selective-state-space scan + O(1) decode.
+
+State-space recurrence per head (state size N, head dim P):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t outer x_t)      h in R^{P x N}
+    y_t = h_t @ C_t + D * x_t
+
+with input-dependent ``a_t = exp(dt_t * A)`` (A < 0 per head), ``B_t, C_t``
+shared across heads (single group), and ``dt_t = softplus(...)`` per head.
+
+The train/prefill path uses the chunked (block-parallel) SSD algorithm:
+within a chunk of length Q the contribution is an attention-like masked
+``(C B^T ⊙ decay) x`` product; across chunks a short ``lax.scan`` carries the
+(H, P, N) state. Live memory is O(L*Q) per head instead of O(L^2) or
+O(L*P*N). The Pallas kernel in :mod:`repro.kernels.mamba2_scan` implements
+the same chunk kernel with VMEM tiling; ``ref.py`` holds the sequential
+oracle both are tested against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    causal_conv1d,
+    causal_conv1d_step,
+    dense_init,
+    init_causal_conv,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+def init_mamba(key: Array, d_model: int, d_inner: int, n_heads: int,
+               ssm_state: int, conv_kernel: int) -> dict:
+    """Parameters for one Mamba2 block (single B/C group)."""
+    k_in, k_conv, k_out, k_dt = jax.random.split(key, 4)
+    # in_proj emits [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    proj_out = 2 * d_inner + 2 * ssm_state + n_heads
+    return {
+        "in_proj": dense_init(k_in, (d_model, proj_out)),
+        "conv": init_causal_conv(k_conv, d_inner + 2 * ssm_state, conv_kernel),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(k_out, (d_inner, d_model)),
+    }
+
+
+def _split_proj(params: dict, x: Array, d_inner: int, n: int, h: int):
+    """Project input and split into (z, xBC, dt)."""
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z = proj[..., :d_inner]
+    x_bc = proj[..., d_inner : 2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return z, x_bc, dt
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int = 256, h0: Array | None = None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    Args:
+      x:  (batch, L, H, P) inputs.
+      dt: (batch, L, H) step sizes (post-softplus, fp32).
+      A:  (H,) negative decay rates.
+      B:  (batch, L, N); C: (batch, L, N) (single group).
+      h0: optional initial state (batch, H, P, N).
+
+    Returns (y (batch, L, H, P), h_final (batch, H, P, N)).
+    """
+    bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q //= 2
+    nc = L // Q
+
+    dtype = x.dtype
+    log_a = (dt * A[None, None, :]).astype(jnp.float32)            # (b, L, H) <= 0
+    xr = x.reshape(bsz, nc, Q, H, P)
+    br = B.reshape(bsz, nc, Q, N)
+    cr = C.reshape(bsz, nc, Q, N)
+    dtr = dt.reshape(bsz, nc, Q, H)
+    lar = log_a.reshape(bsz, nc, Q, H)
+
+    # cumulative decay within each chunk (inclusive)
+    cum = jnp.cumsum(lar, axis=2)                                  # (b, nc, Q, H)
+    total = cum[:, :, -1]                                          # (b, nc, H)
+
+    # ---- intra-chunk: attention-like masked product ----
+    # decay(t, s) = exp(cum_t - cum_s) for s <= t  (strictly: prod_{s<r<=t} a_r)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (b,nc,t,s,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(seg), 0.0).astype(dtype)
+    cb = jnp.einsum("bgtn,bgsn->bgts", cr, br).astype(dtype)       # (b,nc,t,s)
+    w = cb[..., None] * decay * dtr[:, :, None, :, :].astype(dtype)  # (b,nc,t,s,H)
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", w, xr)
+
+    # ---- chunk states: S_g = sum_s exp(total - cum_s) dt_s B_s (x) x_s ----
+    state_decay = jnp.exp(total[:, :, None, :] - cum).astype(dtype)  # (b,nc,Q,H)
+    su = jnp.einsum("bgsh,bgshp,bgsn->bghpn",
+                    state_decay * dtr.astype(dtype), xr, br)        # (b,nc,H,P,N)
+
+    # ---- inter-chunk recurrence over nc chunks ----
+    a_chunk = jnp.exp(total).astype(dtype)                          # (b, nc, H)
+
+    def scan_fn(h, inp):
+        a_g, s_g = inp
+        h_new = a_g[:, :, None, None] * h + s_g
+        return h_new, h
+
+    init = (jnp.zeros((bsz, H, P, N), dtype) if h0 is None else h0.astype(dtype))
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(su, 1, 0)),
+        unroll=unroll,
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                           # (b,nc,H,P,N)
+
+    # ---- inter-chunk contribution: y_t += C_t . (exp(cum_t) h_prev) ----
+    in_decay = jnp.exp(cum).astype(dtype)                           # (b,nc,Q,H)
+    y_inter = jnp.einsum("bgtn,bghpn->bgthp", cr, h_prevs) * in_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, L, H, P)
+    return y, h_final
+
+
+def mamba_block(params: dict, x: Array, *, d_inner: int, n_heads: int,
+                ssm_state: int, chunk: int = 256, return_cache: bool = False,
+                use_kernel: bool = False, unroll: bool = False):
+    """Full Mamba2 block forward (train/prefill). x: (B, L, D).
+
+    With ``return_cache`` the final recurrent state + conv window are returned
+    for decode continuation.
+    """
+    bsz, L, _ = x.shape
+    P = d_inner // n_heads
+    z, x_bc_raw, dt = _split_proj(params, x, d_inner, ssm_state, n_heads)
+    x_bc = jax.nn.silu(causal_conv1d(params["conv"], x_bc_raw))
+    xs = x_bc[..., :d_inner].reshape(bsz, L, n_heads, P)
+    B = x_bc[..., d_inner : d_inner + ssm_state]
+    C = x_bc[..., d_inner + ssm_state :]
+    A = -jnp.exp(params["A_log"])
+    if use_kernel:
+        from repro.kernels.mamba2_scan.ops import ssd_scan
+
+        y, h_final = ssd_scan(xs, dt, A, B, C, chunk=chunk)
+    else:
+        y, h_final = ssd_chunked(xs, dt, A, B, C, chunk=chunk, unroll=unroll)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, L, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    if not return_cache:
+        return out
+    k = params["conv"]["w"].shape[0]
+    pad = jnp.pad(x_bc_raw, ((0, 0), (k - 1, 0), (0, 0)))
+    cache = {"h": h_final, "conv": pad[:, L : L + k - 1, :]}
+    return out, cache
+
+
+def init_mamba_cache(bsz: int, d_inner: int, n_heads: int, ssm_state: int,
+                     conv_kernel: int, dtype) -> dict:
+    P = d_inner // n_heads
+    return {
+        "h": jnp.zeros((bsz, n_heads, P, ssm_state), dtype),
+        "conv": jnp.zeros((bsz, conv_kernel - 1, d_inner + 2 * ssm_state), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, cache: dict, x: Array, *, d_inner: int,
+                      n_heads: int, ssm_state: int) -> tuple[Array, dict]:
+    """One-token recurrent step. x: (B, 1, D) -> (y (B, 1, D), new cache)."""
+    bsz = x.shape[0]
+    P = d_inner // n_heads
+    z, x_bc, dt = _split_proj(params, x[:, 0], d_inner, ssm_state, n_heads)
+    conv_win, x_bc = causal_conv1d_step(params["conv"], cache["conv"], x_bc)
+    x_bc = jax.nn.silu(x_bc)
+    xs = x_bc[..., :d_inner].reshape(bsz, n_heads, P)
+    B = x_bc[..., d_inner : d_inner + ssm_state]
+    C = x_bc[..., d_inner + ssm_state :]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :]).astype(x.dtype)                    # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), xs, B)
+    h = a[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, C)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(bsz, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "conv": conv_win}

@@ -1,0 +1,321 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM [arXiv:2405.04517].
+
+mLSTM keeps a matrix memory ``C in R^{dh x dh}`` per head with exponential
+input gates and forget-gate decay, stabilized in log space:
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) v_t k_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+The train/prefill path evaluates this in chunkwise-parallel form (intra-chunk
+attention-like masked product + inter-chunk state carry in a ``lax.scan``) —
+mirrored by the Pallas kernel in :mod:`repro.kernels.mlstm_chunk`.
+
+sLSTM has genuinely sequential recurrence (recurrent weights R act on
+``h_{t-1}``), so prefill is a ``lax.scan`` over time — the paper's point that
+sLSTM trades parallelism for memory mixing. Decode for both is O(1)-state,
+which is what qualifies xlstm-125m for the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    causal_conv1d,
+    causal_conv1d_step,
+    dense_init,
+    init_causal_conv,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+# =============================================================== mLSTM block
+def init_mlstm(key: Array, d_model: int, n_heads: int, proj_factor: int = 2,
+               conv_kernel: int = 4) -> dict:
+    d_inner = proj_factor * d_model
+    dh = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": dense_init(ks[0], (d_model, d_inner)),
+        "up_z": dense_init(ks[1], (d_model, d_inner)),
+        "conv": init_causal_conv(ks[2], d_inner, conv_kernel),
+        "wq": dense_init(ks[3], (d_inner, n_heads, dh)),
+        "wk": dense_init(ks[4], (d_inner, n_heads, dh)),
+        "wv": dense_init(ks[5], (d_inner, n_heads, dh)),
+        "w_if": dense_init(ks[6], (d_inner, n_heads, 2)),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((n_heads, 1)), 3.0 * jnp.ones((n_heads, 1))], axis=-1
+        ),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "down": dense_init(ks[7], (d_inner, d_model)),
+    }
+
+
+def mlstm_chunked(
+    q: Array, k: Array, v: Array, logi: Array, logf: Array,
+    *, chunk: int = 256, state: tuple[Array, Array, Array] | None = None,
+    unroll: bool = False,
+):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    Args:
+      q, k, v: (B, L, H, dh); logi, logf: (B, L, H) gate pre-activations in
+        log space (logf = logsigmoid(raw_f), logi = raw_i).
+      state: optional (C (B,H,dh,dh), n (B,H,dh), m (B,H)) carry-in.
+
+    Returns (h (B, L, H, dh), final state).
+    """
+    bsz, L, H, dh = q.shape
+    Q = min(chunk, L)
+    while L % Q:
+        Q //= 2
+    nc = L // Q
+    scale = dh**-0.5
+    dtype = q.dtype
+
+    qr = q.reshape(bsz, nc, Q, H, dh) * scale
+    kr = k.reshape(bsz, nc, Q, H, dh)
+    vr = v.reshape(bsz, nc, Q, H, dh)
+    li = logi.reshape(bsz, nc, Q, H).astype(jnp.float32)
+    lf = logf.reshape(bsz, nc, Q, H).astype(jnp.float32)
+    Fl = jnp.cumsum(lf, axis=2)                                    # (b,nc,Q,H)
+
+    if state is None:
+        C0 = jnp.zeros((bsz, H, dh, dh), dtype)
+        n0 = jnp.zeros((bsz, H, dh), dtype)
+        m0 = jnp.full((bsz, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    b_term = li - Fl                                               # (b,nc,Q,H)
+    cmax_in = jax.lax.cummax(b_term, axis=2)                       # running max
+
+    def chunk_body(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, Flc, cmaxc = inp                           # per chunk
+        # cmax_t = max(m_prev - 0, cummax_s<=t (li_s - Fl_s)); note m carries
+        # the previous chunk's total decay already folded in.
+        cmax = jnp.maximum(m_prev[:, None, :], cmaxc)              # (b,Q,H)
+        m_t = Flc + cmax
+        inter = jnp.exp(m_prev[:, None, :] - cmax).astype(dtype)   # (b,Q,H)
+        # intra-chunk weights w[t, s] = exp(Fl_t - Fl_s + li_s - m_t)
+        seg = (Flc[:, :, None, :] - Flc[:, None, :, :]
+               + lic[:, None, :, :] - m_t[:, :, None, :])          # (b,t,s,H)
+        mask = (jnp.arange(qc.shape[1])[:, None]
+                >= jnp.arange(qc.shape[1])[None, :])[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(seg), 0.0).astype(dtype)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)                 # (b,t,s,H)
+        num = (jnp.einsum("btsh,bshd->bthd", w * qk, vc)
+               + inter[..., None] * jnp.einsum("bthe,bhde->bthd", qc, C_prev))
+        den = (jnp.einsum("btsh->bth", w * qk)
+               + inter * jnp.einsum("bthd,bhd->bth", qc, n_prev))
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t).astype(dtype))
+        h = num / denom[..., None]
+        # ---- carry to next chunk ----
+        F_tot = Flc[:, -1]                                         # (b,H)
+        m_new = m_t[:, -1]
+        # exp(Flc_Q + m_prev - m_new) = exp(m_prev - cmax_Q)
+        carry_decay = jnp.exp(m_prev + F_tot - m_new).astype(dtype)
+        upd_w = jnp.exp(lic + F_tot[:, None] - Flc - m_new[:, None]).astype(dtype)
+        C_new = (carry_decay[:, :, None, None] * C_prev
+                 + jnp.einsum("bsh,bshd,bshe->bhde", upd_w, vc, kc))
+        n_new = (carry_decay[:, :, None] * n_prev
+                 + jnp.einsum("bsh,bshd->bhd", upd_w, kc))
+        return (C_new, n_new, m_new), h
+
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qr, kr, vr, li, Fl, cmax_in)
+    )
+    (C, n, m), hs = jax.lax.scan(chunk_body, (C0, n0, m0), inputs,
+                                 unroll=unroll)
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, L, H, dh)
+    return h, (C, n, m)
+
+
+def mlstm_block(params: dict, x: Array, *, n_heads: int, chunk: int = 256,
+                return_cache: bool = False, use_kernel: bool = False,
+                unroll: bool = False):
+    """Full mLSTM residual block body. x: (B, L, D)."""
+    bsz, L, _ = x.shape
+    dtype = x.dtype
+    xu = x @ params["up_x"].astype(dtype)
+    z = x @ params["up_z"].astype(dtype)
+    xc = jax.nn.silu(causal_conv1d(params["conv"], xu))
+    q = jnp.einsum("bld,dhk->blhk", xc, params["wq"].astype(dtype))
+    k = jnp.einsum("bld,dhk->blhk", xc, params["wk"].astype(dtype))
+    v = jnp.einsum("bld,dhk->blhk", xu, params["wv"].astype(dtype))
+    gates = (jnp.einsum("bld,dhg->blhg", xc.astype(jnp.float32), params["w_if"])
+             + params["if_bias"])
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+    if use_kernel:
+        from repro.kernels.mlstm_chunk.ops import mlstm_scan
+
+        h, (C, n, m) = mlstm_scan(q, k, v, logi, logf, chunk=chunk)
+    else:
+        h, (C, n, m) = mlstm_chunked(q, k, v, logi, logf, chunk=chunk,
+                                     unroll=unroll)
+    h = h.reshape(bsz, L, -1)
+    h = rms_norm(h, params["out_norm"]) * jax.nn.silu(z)
+    out = h @ params["down"].astype(dtype)
+    if not return_cache:
+        return out
+    kk = params["conv"]["w"].shape[0]
+    pad = jnp.pad(xu, ((0, 0), (kk - 1, 0), (0, 0)))
+    cache = {"C": C, "n": n, "m": m, "conv": pad[:, L : L + kk - 1, :]}
+    return out, cache
+
+
+def init_mlstm_cache(bsz: int, d_model: int, n_heads: int, dtype,
+                     proj_factor: int = 2, conv_kernel: int = 4) -> dict:
+    d_inner = proj_factor * d_model
+    dh = d_inner // n_heads
+    return {
+        "C": jnp.zeros((bsz, n_heads, dh, dh), dtype),
+        "n": jnp.zeros((bsz, n_heads, dh), dtype),
+        "m": jnp.full((bsz, n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((bsz, conv_kernel - 1, d_inner), dtype),
+    }
+
+
+def mlstm_decode_step(params: dict, cache: dict, x: Array, *, n_heads: int
+                      ) -> tuple[Array, dict]:
+    """One-token mLSTM step. x: (B, 1, D)."""
+    bsz = x.shape[0]
+    dtype = x.dtype
+    xt = x[:, 0]
+    xu = xt @ params["up_x"].astype(dtype)
+    z = xt @ params["up_z"].astype(dtype)
+    conv_win, xc = causal_conv1d_step(params["conv"], cache["conv"], xu)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bd,dhk->bhk", xc, params["wq"].astype(dtype))
+    k = jnp.einsum("bd,dhk->bhk", xc, params["wk"].astype(dtype))
+    v = jnp.einsum("bd,dhk->bhk", xu, params["wv"].astype(dtype))
+    gates = (jnp.einsum("bd,dhg->bhg", xc.astype(jnp.float32), params["w_if"])
+             + params["if_bias"])
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+
+    m_new = jnp.maximum(logf + cache["m"], logi)                   # (B, H)
+    f_eff = jnp.exp(logf + cache["m"] - m_new).astype(dtype)
+    i_eff = jnp.exp(logi - m_new).astype(dtype)
+    C = f_eff[..., None, None] * cache["C"] + i_eff[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = f_eff[..., None] * cache["n"] + i_eff[..., None] * k
+    scale = q.shape[-1] ** -0.5
+    num = jnp.einsum("bhde,bhe->bhd", C, q * scale)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q * scale)),
+        jnp.exp(-m_new).astype(dtype),
+    )
+    h = (num / den[..., None]).reshape(bsz, -1)
+    h = rms_norm(h, params["out_norm"]) * jax.nn.silu(z)
+    out = (h @ params["down"].astype(dtype))[:, None]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_win}
+
+
+# =============================================================== sLSTM block
+def init_slstm(key: Array, d_model: int, n_heads: int, conv_kernel: int = 4,
+               ffn_factor: float = 4.0 / 3.0) -> dict:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 5)
+    d_ff = int(2 * ffn_factor * d_model)
+    return {
+        "conv": init_causal_conv(ks[0], d_model, conv_kernel),
+        "w": dense_init(ks[1], (d_model, n_heads, 4, dh)),          # z i f o
+        "r": dense_init(ks[2], (n_heads, dh, 4, dh), in_axis=1),
+        "b": jnp.zeros((n_heads, 4, dh), jnp.float32),
+        "out_norm": jnp.ones((d_model,), jnp.float32),
+        "ffn_up": dense_init(ks[3], (d_model, d_ff)),
+        "ffn_down": dense_init(ks[4], (d_ff // 2, d_model)),
+    }
+
+
+def _slstm_cell(params: dict, wx_t: Array, state: dict):
+    """One sLSTM time step from precomputed input projection wx_t (B,H,4,dh)."""
+    h_prev, c_prev, n_prev, m_prev = state["h"], state["c"], state["n"], state["m"]
+    rec = jnp.einsum("bhd,hdge->bhge", h_prev, params["r"].astype(h_prev.dtype))
+    pre = wx_t + rec + params["b"].astype(wx_t.dtype)               # (B,H,4,dh)
+    z = jnp.tanh(pre[:, :, 0])
+    i_raw = pre[:, :, 1].astype(jnp.float32)
+    f_raw = pre[:, :, 2].astype(jnp.float32)
+    o = jax.nn.sigmoid(pre[:, :, 3])
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m_prev, i_raw)
+    i_eff = jnp.exp(i_raw - m_new).astype(z.dtype)
+    f_eff = jnp.exp(logf + m_prev - m_new).astype(z.dtype)
+    c = f_eff * c_prev + i_eff * z
+    n = f_eff * n_prev + i_eff
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_block(params: dict, x: Array, *, n_heads: int,
+                return_cache: bool = False):
+    """Full sLSTM block (sequential over time). x: (B, L, D)."""
+    bsz, L, d_model = x.shape
+    dtype = x.dtype
+    xc = jax.nn.silu(causal_conv1d(params["conv"], x))
+    wx = jnp.einsum("bld,dhge->blhge", xc, params["w"].astype(dtype))
+
+    state = init_slstm_state(bsz, d_model, n_heads, dtype)
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, wx_t, state)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, L, d_model)
+    h = rms_norm(h, params["out_norm"])
+    u = h @ params["ffn_up"].astype(dtype)
+    a, b = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.silu(a) * b) @ params["ffn_down"].astype(dtype)
+    if not return_cache:
+        return out
+    k = params["conv"]["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    cache = dict(final)
+    cache["conv"] = pad[:, L : L + k - 1, :]
+    return out, cache
+
+
+def init_slstm_state(bsz: int, d_model: int, n_heads: int, dtype) -> dict:
+    dh = d_model // n_heads
+    shape = (bsz, n_heads, dh)
+    return {
+        "h": jnp.zeros(shape, dtype),
+        "c": jnp.zeros(shape, dtype),
+        "n": jnp.zeros(shape, dtype),
+        "m": jnp.full((bsz, n_heads, dh), -1e30, jnp.float32),
+    }
+
+
+def init_slstm_cache(bsz: int, d_model: int, n_heads: int, dtype,
+                     conv_kernel: int = 4) -> dict:
+    cache = init_slstm_state(bsz, d_model, n_heads, dtype)
+    cache["conv"] = jnp.zeros((bsz, conv_kernel - 1, d_model), dtype)
+    return cache
+
+
+def slstm_decode_step(params: dict, cache: dict, x: Array, *, n_heads: int
+                      ) -> tuple[Array, dict]:
+    """One-token sLSTM step. x: (B, 1, D)."""
+    bsz, _, d_model = x.shape
+    dtype = x.dtype
+    conv_win, xc = causal_conv1d_step(params["conv"], cache["conv"], x[:, 0])
+    xc = jax.nn.silu(xc)
+    wx = jnp.einsum("bd,dhge->bhge", xc, params["w"].astype(dtype))
+    state = {k: cache[k] for k in ("h", "c", "n", "m")}
+    new = _slstm_cell(params, wx, state)
+    h = rms_norm(new["h"].reshape(bsz, d_model), params["out_norm"])
+    u = h @ params["ffn_up"].astype(dtype)
+    a, b = jnp.split(u, 2, axis=-1)
+    out = ((jax.nn.silu(a) * b) @ params["ffn_down"].astype(dtype))[:, None]
+    new["conv"] = conv_win
+    return out, new

@@ -1,0 +1,15 @@
+"""Pure-pytree optimizers and schedules."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    pearl_local_schedule,
+    sgd,
+)
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "clip_by_global_norm",
+           "cosine_schedule", "global_norm", "pearl_local_schedule", "sgd"]

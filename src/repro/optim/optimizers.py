@@ -1,0 +1,128 @@
+"""Minimal pure-pytree optimizers (no external deps).
+
+API mirrors optax: an optimizer is ``(init_fn, update_fn)`` over parameter
+pytrees; ``update_fn(grads, state, params) -> (updates, state)`` and updates
+are *added* to params. All state lives in plain dicts so it shards/checkpoints
+like any other pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def sgd(lr: float | Callable[[Array], Array], momentum: float = 0.0) -> Optimizer:
+    """SGD with optional (heavy-ball) momentum.
+
+    PEARL-SGD's local steps use this with momentum=0 — the paper's update
+    rule x <- x - gamma * g, with gamma possibly a schedule of the step count.
+    """
+
+    def init(params):
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params):
+        del params
+        step_lr = lr(state["count"]) if callable(lr) else lr
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            updates = jax.tree.map(lambda m: -step_lr * m, mu)
+            new_state = {"count": state["count"] + 1, "mu": mu}
+        else:
+            updates = jax.tree.map(lambda g: -step_lr * g, grads)
+            new_state = {"count": state["count"] + 1}
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable[[Array], Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with decoupled weight decay and bias correction."""
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr(count) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        c1 = 1 - b1**count.astype(jnp.float32)
+        c2 = 1 - b2**count.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            step = m_ / c1 / (jnp.sqrt(v_ / c2) + eps)
+            return -step_lr * (step + weight_decay * p)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ----------------------------------------------------------------- schedules
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[Array], Array]:
+    def fn(count):
+        count = count.astype(jnp.float32)
+        warm = peak_lr * count / max(warmup, 1)
+        frac = jnp.clip((count - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(count < warmup, warm, cos)
+
+    return fn
+
+
+def pearl_local_schedule(gamma_rounds, tau: int) -> Callable[[Array], Array]:
+    """Map a per-round PEARL step-size array to a per-local-step schedule.
+
+    gamma_k = gamma_rounds[k // tau] — the paper keeps gamma constant within
+    each round (Theorem 3.6's schedule changes only at synchronizations).
+    """
+    gammas = jnp.asarray(gamma_rounds, jnp.float32)
+
+    def fn(count):
+        idx = jnp.minimum(count // tau, gammas.shape[0] - 1)
+        return gammas[idx]
+
+    return fn

@@ -1,0 +1,1 @@
+"""Roofline: HLO cost/collective parsing + trip-count-corrected cost model."""

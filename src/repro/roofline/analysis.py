@@ -1,0 +1,224 @@
+"""Roofline-term derivation from compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) we derive, from ``lowered.compile()``:
+
+  compute term    = HLO_FLOPs_global / (chips * 197e12  bf16 FLOP/s)
+  memory term     = HLO_bytes_global / (chips * 819e9   B/s HBM)
+  collective term = collective_bytes_global / (chips * 50e9 B/s ICI per link)
+
+``cost_analysis()`` on a partitioned module reports *per-device* numbers; we
+multiply by chip count for the global view and divide back for the terms, so
+either convention yields the same seconds. collective_bytes is not in
+cost_analysis — we parse the optimized HLO text and sum the result-shape
+bytes of every collective op (all-reduce counted twice: a ring all-reduce
+moves ~2x the buffer). Collectives over the ``pod`` axis are additionally
+tallied separately (``pod_collective_bytes``) by their replica-group span —
+that is the byte count PEARL-SGD divides by tau.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\([0-9,]+\))?"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed array shape in an HLO result clause."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_clause(line: str) -> str:
+    """The result-shape portion of an HLO instruction line (LHS of the op)."""
+    idx = line.find("= ")
+    if idx < 0:
+        return line
+    rest = line[idx + 2 :]
+    op = _COLLECTIVE_RE.search(line)
+    if op:
+        return rest[: op.end() - idx - 2]
+    return rest
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    total_bytes: int
+    pod_bytes: int            # collectives whose replica group spans pods
+    count: int
+
+
+def parse_collectives(hlo_text: str, *, chips_per_pod: int = 256) -> CollectiveStats:
+    """Sum collective-op bytes from optimized HLO text (per-device module)."""
+    by_op: dict[str, int] = {}
+    pod_bytes = 0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result clause sits inside the match: "= <shape> <op>(".
+        nbytes = _shape_bytes(m.group(0))
+        factor = 2 if op == "all-reduce" else 1
+        moved = nbytes * factor
+        by_op[op] = by_op.get(op, 0) + moved
+        count += 1
+        # does the replica group cross a pod boundary?
+        span = _group_span(line)
+        if span and span > chips_per_pod:
+            pod_bytes += moved
+    return CollectiveStats(
+        bytes_by_op=by_op,
+        total_bytes=sum(by_op.values()),
+        pod_bytes=pod_bytes,
+        count=count,
+    )
+
+
+def _group_span(line: str) -> int | None:
+    """Max replica-group span (min..max device-id distance within a group).
+
+    Iota form ``[N,M]<=[dims](T(perm))?``: without a transpose the N groups
+    are contiguous runs of M devices (span M); with a transpose the members
+    stride by N (span (M-1)*N + 1) — the pattern a ``pod``-major axis
+    collective produces on the (pod, data, model) mesh.
+    """
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        if m.group(4):  # transposed iota: strided groups
+            return (group_size - 1) * n_groups + 1
+        return group_size
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return None
+    span = 0
+    for grp in re.findall(r"\{([0-9, ]+)\}", "{" + m.group(1) + "}"):
+        ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+        if ids:
+            span = max(span, max(ids) - min(ids) + 1)
+    return span or None
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """Per (arch x shape x mesh) roofline summary (all terms in seconds)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    pod_collective_bytes: float
+    peak_memory_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_flops_ratio: float
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def build_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    collectives: CollectiveStats,
+    peak_memory: float,
+    model_flops: float,
+) -> RooflineReport:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = collectives.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    hlo_flops_global = flops_dev * chips
+    ratio = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=float(collectives.total_bytes),
+        pod_collective_bytes=float(collectives.pod_bytes),
+        peak_memory_bytes=float(peak_memory),
+        model_flops=float(model_flops),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_flops_ratio=float(ratio),
+    )
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes_tree)))
+
+
+def active_params(cfg, shapes_tree) -> int:
+    """Active parameter count per token (MoE experts scaled by top_k/E)."""
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        keys = [str(p.key) if hasattr(p, "key") else str(p.idx) for p in path]
+        n = int(np.prod(leaf.shape))
+        if cfg.n_experts and "moe" in keys and keys[-1] in ("gate", "up", "down") \
+                and len(leaf.shape) >= 3:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops_estimate(cfg, shape, n_active_params: int) -> float:
+    """6 * N_active * tokens for training; 2 * N_active * tokens for inference."""
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    factor = 6.0 if shape.mode == "train" else 2.0
+    return factor * n_active_params * tokens

@@ -1,0 +1,5 @@
+"""Serving: batched prefill + KV/recurrent-cache decode."""
+
+from repro.serve.decode import generate, make_serve_step
+
+__all__ = ["generate", "make_serve_step"]

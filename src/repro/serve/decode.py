@@ -1,0 +1,54 @@
+"""Serving: batched prefill + token-by-token decode with KV/recurrent caches."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+
+Array = jax.Array
+
+
+def make_serve_step(cfg: ModelConfig, *, window: int = 0) -> Callable:
+    """``serve_step(params, cache, token) -> (next_token, logits, cache)``.
+
+    This is the function lowered for the decode dry-run shapes: ONE new token
+    against a ``seq_len``-deep cache.
+    """
+
+    def serve_step(params, cache, token):
+        logits, cache = decode_step(params, cfg, cache, token, window=window)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, batch: dict, *, max_new_tokens: int,
+             capacity: int, window: int = 0, temperature: float = 0.0,
+             key: Array | None = None) -> Array:
+    """Greedy (or sampled) generation loop for examples/tests.
+
+    Returns generated tokens (B, max_new_tokens).
+    """
+    logits, cache = prefill(params, cfg, batch, capacity=capacity, window=window)
+    if temperature > 0.0 and key is None:
+        key = jax.random.PRNGKey(0)
+
+    def pick(logits, key):
+        if temperature > 0.0:
+            return jax.random.categorical(key, logits / temperature)
+        return jnp.argmax(logits, axis=-1)
+
+    serve_step = jax.jit(make_serve_step(cfg, window=window))
+    token = pick(logits, key).astype(jnp.int32)[:, None]
+    out = [token]
+    for _ in range(max_new_tokens - 1):
+        token, logits, cache = serve_step(params, cache, token)
+        out.append(token)
+    return jnp.concatenate(out, axis=1)

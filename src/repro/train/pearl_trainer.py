@@ -1,0 +1,194 @@
+"""PEARL-SGD for neural players — the paper's technique at production scale.
+
+Each of ``n`` players/silos owns a full model (one per pod on the multi-pod
+mesh) trained on its own heterogeneous data shard. The players are coupled
+through the consensus game of paper Section 2.2:
+
+    f_i(x^i; x^{-i}) = h_i(x^i) + (lambda/2) ||x^i - mean_j x^j||^2,
+
+whose first-order conditions are exactly an n-player equilibrium — the MpFL
+instance we scale up. PEARL-SGD (Algorithm 1) becomes:
+
+  - tau local steps per round: each player minimizes its LM loss plus the
+    proximal pull toward the *stale* across-player mean (snapshot at the
+    last synchronization) — zero cross-player communication;
+  - one synchronization per round: recompute the across-player mean. On the
+    production mesh, player = pod, so this mean is THE only ``pod``-axis
+    collective; every step of the tau-step inner scan stays pod-local.
+
+The non-local baseline (SGDA / gradient play, tau = 1) synchronizes every
+step; the paper's claim — same accuracy with tau-fold less communication —
+shows up in the dry-run HLO as a tau-fold drop in pod-axis collective bytes
+per local step (EXPERIMENTS.md Section Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.train.train_step import make_loss_fn
+
+Array = jax.Array
+
+
+def tree_mean(stacked, axis: int = 0, sync_dtype=None):
+    """Across-player parameter mean — the PEARL synchronization collective.
+
+    ``sync_dtype`` (e.g. jnp.bfloat16) quantizes the operands BEFORE the
+    cross-player reduction, so the pod-axis collective moves half (or less)
+    the bytes — the paper's "gradient compression" future-work item composed
+    with local steps: wire bytes fall by tau x (32/bits). Convergence-wise
+    this adds bounded quantization noise to the stale snapshot, absorbed by
+    Theorem 3.4's sigma^2 term (validated in tests/test_pearl_trainer.py).
+    """
+
+    def mean(x):
+        if sync_dtype is not None:
+            # Quantize then reduce. NOTE (Section Perf, recorded negative
+            # result): the XLA CPU build reassociates the convert around its
+            # f32 reduction accumulator, so the compiled cross-pod wire stays
+            # f32 in the dry-run HLO; forcing bf16 on the wire needs an
+            # explicit shard_map psum over a bf16 buffer on real TPU
+            # backends. The convergence semantics (bounded quantization
+            # noise) hold either way and are what the tests validate.
+            return jnp.mean(x.astype(sync_dtype), axis=axis).astype(jnp.float32)
+        return jnp.mean(x, axis=axis, dtype=jnp.float32)
+
+    return jax.tree.map(mean, stacked)
+
+
+def stack_players(params_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def make_pearl_round(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    tau: int,
+    prox_lambda: float,
+    aux_weight: float = 0.01,
+    clip_norm: float = 1.0,
+    window: int = 0,
+    use_kernels: bool = False,
+    unroll: bool = False,
+    sync_dtype=None,
+) -> Callable:
+    """Build one compiled PEARL round.
+
+    ``pearl_round(stacked_params, stacked_opt, batches, xbar)``:
+      - stacked_params/opt: player-stacked pytrees, leading dim n (sharded
+        over ``pod`` on the production mesh);
+      - batches: {"tokens": (n, tau, B_local, S)} — tau local batches per
+        player drawn from that player's distribution D_i;
+      - xbar: stale across-player mean (pytree, replicated).
+
+    Returns (new_params, new_opt, new_xbar, metrics). ``new_xbar`` is the
+    synchronization output; in PEARL it is computed once per round.
+    """
+    loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
+                           use_kernels=use_kernels, prox_lambda=prox_lambda)
+
+    def player_local_steps(params_i, opt_i, batches_i, xbar):
+        """tau optimizer steps against the frozen snapshot xbar."""
+
+        def local_step(carry, tokens):
+            p, o = carry
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, {"tokens": tokens}, xbar
+            )
+            if clip_norm:
+                grads = clip_by_global_norm(grads, clip_norm)
+            updates, o = optimizer.update(grads, o, p)
+            p = apply_updates(p, updates)
+            return (p, o), metrics
+
+        (params_i, opt_i), metrics = jax.lax.scan(
+            local_step, (params_i, opt_i), batches_i, unroll=unroll
+        )
+        return params_i, opt_i, metrics
+
+    def pearl_round(stacked_params, stacked_opt, batches, xbar):
+        new_p, new_o, metrics = jax.vmap(
+            player_local_steps, in_axes=(0, 0, 0, None)
+        )(stacked_params, stacked_opt, batches["tokens"], xbar)
+        # --- synchronization: the only cross-player (pod-axis) collective ---
+        new_xbar = tree_mean(new_p, sync_dtype=sync_dtype)
+        return new_p, new_o, new_xbar, metrics
+
+    return pearl_round
+
+
+@dataclasses.dataclass
+class PearlCommReport:
+    """Communication accounting for a PEARL training run (paper Section 3.1)."""
+
+    n_players: int
+    param_count: int
+    tau: int
+    rounds: int
+    bytes_per_scalar: int = 4   # 2 with bf16 compressed sync
+
+    @property
+    def sync_bytes_per_round(self) -> int:
+        # each player uploads its block (D_i = param_count) and downloads the
+        # joint/mean vector: per the paper the downlink carries the full
+        # concatenation; the consensus game needs only the mean (same size).
+        up = self.n_players * self.param_count * self.bytes_per_scalar
+        down = self.n_players * self.param_count * self.bytes_per_scalar
+        return up + down
+
+    @property
+    def total_bytes(self) -> int:
+        return self.rounds * self.sync_bytes_per_round
+
+    def vs_nonlocal(self) -> float:
+        """Bytes ratio vs tau=1 for the same number of local steps."""
+        return 1.0 / self.tau
+
+
+class PearlTrainer:
+    """Host-side loop around :func:`make_pearl_round` (small-scale/CPU runs)."""
+
+    def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,
+                 tau: int, prox_lambda: float, seed: int = 0, **round_kwargs):
+        from repro.models.model import init_params
+
+        self.cfg = cfg
+        self.tau = tau
+        self.n_players = n_players
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_players)
+        params = [init_params(cfg, k) for k in keys]
+        self.params = stack_players(params)
+        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self.xbar = tree_mean(self.params)
+        self._round = jax.jit(make_pearl_round(
+            cfg, optimizer, tau=tau, prox_lambda=prox_lambda, **round_kwargs
+        ))
+        self.history: list[dict] = []
+
+    def run(self, stream, rounds: int):
+        """stream: SyntheticTokenStream with n_players configured."""
+        import numpy as np
+
+        step = 0
+        for r in range(rounds):
+            batches = np.stack([
+                stream.player_batches(step + t) for t in range(self.tau)
+            ], axis=1)  # (n, tau, B, S)
+            self.params, self.opt_state, self.xbar, metrics = self._round(
+                self.params, self.opt_state, {"tokens": jnp.asarray(batches)},
+                self.xbar,
+            )
+            step += self.tau
+            rec = {k: float(jnp.mean(v)) for k, v in metrics.items()}
+            rec["round"] = r
+            self.history.append(rec)
+        return self.history

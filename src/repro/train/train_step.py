@@ -1,0 +1,91 @@
+"""Loss and single-player train step (the building block PEARL wraps).
+
+The loss is next-token cross-entropy over the text segment (VLM patch
+positions and audio encoder frames carry no labels) plus the weighted MoE
+load-balance auxiliary.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.optim.optimizers import (
+    Optimizer,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+
+Array = jax.Array
+
+
+def lm_loss(logits: Array, tokens: Array, text_offset: int = 0) -> Array:
+    """Mean next-token NLL. logits (B, S_total, V) fp32; tokens (B, S_text).
+
+    ``text_offset`` skips leading non-text positions (vision patches) so
+    logits[:, text_offset + t] predicts tokens[:, t + 1].
+    """
+    s_text = tokens.shape[1]
+    lg = logits[:, text_offset : text_offset + s_text - 1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_loss_fn(cfg: ModelConfig, *, aux_weight: float = 0.01,
+                 window: int = 0, use_kernels: bool = False,
+                 prox_lambda: float = 0.0) -> Callable:
+    """Build ``loss(params, batch, ref_params=None) -> (scalar, metrics)``.
+
+    ``prox_lambda`` adds the MpFL consensus-game coupling
+    ``lambda/2 * ||params - ref_params||^2`` against a *stale* reference
+    (the across-player mean from the last PEARL synchronization) — the
+    Section 2.2 personalized-FL instance of the n-player game.
+    """
+    text_offset = cfg.n_modality_tokens if cfg.modality == "vision" else 0
+
+    def loss_fn(params, batch, ref_params=None):
+        out = forward(params, cfg, batch, mode="train", window=window,
+                      use_kernels=use_kernels)
+        loss = lm_loss(out["logits"], batch["tokens"], text_offset)
+        total = loss + aux_weight * out["aux"]
+        metrics = {"lm_loss": loss, "aux_loss": out["aux"]}
+        if prox_lambda > 0.0 and ref_params is not None:
+            sq = sum(
+                jnp.sum(jnp.square(p.astype(jnp.float32) - r.astype(jnp.float32)))
+                for p, r in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(ref_params))
+            )
+            total = total + 0.5 * prox_lambda * sq
+            metrics["prox"] = sq
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    aux_weight: float = 0.01, clip_norm: float = 1.0,
+                    window: int = 0, use_kernels: bool = False) -> Callable:
+    """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``."""
+    loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
+                           use_kernels=use_kernels)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, total_loss=total, grad_norm=global_norm(grads))
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,146 @@
+"""Config/spec-layer tests: assigned hyperparameters, shapes, window policy."""
+
+import jax
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, get_shape
+from repro.configs.shapes import DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K
+from repro.launch.specs import (
+    decode_input_specs,
+    input_specs,
+    pick_window,
+    train_input_specs,
+)
+
+ASSIGNED = {
+    "granite-34b": dict(n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+                        d_ff=24576, vocab_size=49152),
+    "stablelm-1.6b": dict(n_layers=24, d_model=2048, n_heads=32,
+                          n_kv_heads=32, d_ff=5632, vocab_size=100352),
+    "chameleon-34b": dict(n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+                          d_ff=22016, vocab_size=65536),
+    "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv_heads=8, vocab_size=202048,
+                                      n_experts=128, top_k=1, moe_d_ff=8192),
+    "smollm-360m": dict(n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+                        d_ff=2560, vocab_size=49152),
+    "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                n_kv_heads=16, vocab_size=163840,
+                                n_experts=64, top_k=6, moe_d_ff=1408),
+    "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                              n_kv_heads=4, vocab_size=151936, n_experts=128,
+                              top_k=8, moe_d_ff=768),
+    "seamless-m4t-medium": dict(n_layers=12, d_model=1024, n_heads=16,
+                                n_kv_heads=16, d_ff=4096, vocab_size=256206,
+                                enc_layers=12),
+    "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+                        d_ff=8192, vocab_size=32000, ssm_state=64),
+    "xlstm-125m": dict(n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+                       d_ff=0, vocab_size=50304),
+}
+
+
+class TestAssignedHyperparameters:
+    @pytest.mark.parametrize("arch", sorted(ASSIGNED))
+    def test_exact_assigned_values(self, arch):
+        cfg = get_config(arch)
+        for field, expected in ASSIGNED[arch].items():
+            assert getattr(cfg, field) == expected, (arch, field)
+
+    def test_all_ten_archs_registered(self):
+        assert len(ARCH_IDS) == 10
+        assert set(ASSIGNED) == set(ARCH_IDS)
+
+    def test_citations_present(self):
+        for arch in ARCH_IDS:
+            assert get_config(arch).citation, arch
+
+    def test_head_dims_are_consistent(self):
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            assert cfg.d_model % cfg.n_heads == 0 or cfg.head_dim
+            assert cfg.n_heads % cfg.n_kv_heads == 0
+
+
+class TestShapes:
+    def test_assigned_shapes(self):
+        assert (TRAIN_4K.seq_len, TRAIN_4K.global_batch) == (4096, 256)
+        assert (PREFILL_32K.seq_len, PREFILL_32K.global_batch) == (32768, 32)
+        assert (DECODE_32K.seq_len, DECODE_32K.global_batch) == (32768, 128)
+        assert (LONG_500K.seq_len, LONG_500K.global_batch) == (524288, 1)
+        assert len(ALL_SHAPES) == 4
+
+    def test_modes(self):
+        assert TRAIN_4K.mode == "train"
+        assert PREFILL_32K.mode == "prefill"
+        assert DECODE_32K.mode == LONG_500K.mode == "decode"
+
+    def test_get_shape_errors(self):
+        with pytest.raises(KeyError):
+            get_shape("nope")
+
+
+class TestInputSpecs:
+    def test_dense_train_specs(self):
+        cfg = get_config("stablelm-1.6b")
+        specs = train_input_specs(cfg, TRAIN_4K)
+        assert specs["tokens"].shape == (256, 4096)
+        assert specs["tokens"].dtype == jnp.int32
+
+    def test_vlm_specs_split_patches(self):
+        cfg = get_config("chameleon-34b")
+        specs = train_input_specs(cfg, TRAIN_4K)
+        assert specs["patch_embeds"].shape == (256, 1024, 8192)
+        assert specs["tokens"].shape == (256, 4096 - 1024)
+
+    def test_audio_specs_have_frames(self):
+        cfg = get_config("seamless-m4t-medium")
+        specs = train_input_specs(cfg, TRAIN_4K)
+        assert specs["enc_frames"].shape == (256, 4096, 1024)
+
+    def test_decode_specs_cache_sized_to_context(self):
+        cfg = get_config("stablelm-1.6b")
+        specs = decode_input_specs(cfg, DECODE_32K)
+        assert specs["token"].shape == (128, 1)
+        k = specs["cache"]["runs"][0]["k"]
+        assert k.shape == (24, 128, 32768, 32, 64)   # (layers, B, C, KV, hd)
+
+    def test_windowed_decode_cache_is_ring_sized(self):
+        cfg = get_config("granite-34b")
+        specs = decode_input_specs(cfg, LONG_500K, window=cfg.sliding_window)
+        k = specs["cache"]["runs"][0]["k"]
+        assert k.shape[2] == cfg.sliding_window      # ring buffer, not 500k
+
+    def test_ssm_decode_cache_is_o1(self):
+        cfg = get_config("xlstm-125m")
+        specs = decode_input_specs(cfg, LONG_500K)
+        total = sum(
+            int(jnp.prod(jnp.asarray(l.shape)))
+            for l in jax.tree.leaves(specs["cache"])
+        )
+        # recurrent state is independent of the 524288-token context
+        assert total < 50_000_000
+
+    def test_input_specs_dispatch(self):
+        cfg = get_config("smollm-360m")
+        assert "tokens" in input_specs(cfg, TRAIN_4K)
+        assert "cache" in input_specs(cfg, DECODE_32K)
+
+
+class TestWindowPolicy:
+    def test_dense_full_attention_except_long(self):
+        cfg = get_config("granite-34b")
+        assert pick_window(cfg, TRAIN_4K) == 0
+        assert pick_window(cfg, PREFILL_32K) == 0
+        assert pick_window(cfg, DECODE_32K) == 0
+        assert pick_window(cfg, LONG_500K) == cfg.sliding_window > 0
+
+    def test_hybrid_always_windowed(self):
+        cfg = get_config("zamba2-1.2b")
+        for shape in ALL_SHAPES:
+            assert pick_window(cfg, shape) == cfg.sliding_window
+
+
+

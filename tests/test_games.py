@@ -1,0 +1,161 @@
+"""Unit tests for the paper's game constructions (Sections 4.1, 4.2, B, F.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.games import (
+    make_counterexample_game,
+    make_noncoco_game,
+    make_quadratic_game,
+    make_robot_game,
+)
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    """float64 for the game dynamics — scoped so it can't leak into other
+    test modules (bf16/int32 model paths break under global x64)."""
+    old = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture(scope="module")
+def quad(_x64):
+    return make_quadratic_game(n=4, d=6, M=20, seed=3)
+
+
+class TestQuadraticGame:
+    def test_equilibrium_is_zero_of_operator(self, quad):
+        res = jnp.linalg.norm(quad.operator(quad.equilibrium()))
+        assert float(res) < 1e-8
+
+    def test_operator_matches_autodiff(self, quad):
+        """F must equal the per-player autodiff gradients of the objectives."""
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((quad.n, quad.d)))
+        F = quad.operator(x)
+        for i in range(quad.n):
+            gi = jax.grad(lambda xi: quad.objective(i, x.at[i].set(xi)))(x[i])
+            np.testing.assert_allclose(np.asarray(F[i]), np.asarray(gi), atol=1e-8)
+
+    def test_antisymmetric_coupling_cancels_in_monotonicity(self, quad):
+        """<F(x)-F(y), x-y> >= mu ||x-y||^2 with mu = min eig of the A blocks."""
+        c = quad.constants()
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            x = jnp.asarray(rng.standard_normal((quad.n, quad.d)))
+            y = jnp.asarray(rng.standard_normal((quad.n, quad.d)))
+            lhs = float(jnp.sum((quad.operator(x) - quad.operator(y)) * (x - y)))
+            rhs = c.mu * float(jnp.sum((x - y) ** 2))
+            assert lhs >= rhs - 1e-8
+
+    def test_stochastic_oracle_unbiased(self, quad):
+        x = jnp.asarray(np.random.default_rng(2).standard_normal((quad.n, quad.d)))
+        full = quad.operator(x)
+        keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+        samples = jax.vmap(lambda k: quad.operator_stoch(x, k))(keys)
+        np.testing.assert_allclose(
+            np.asarray(jnp.mean(samples, axis=0)), np.asarray(full),
+            atol=5e-2, rtol=5e-2,
+        )
+
+    def test_weak_coupling_regime(self, quad):
+        """The §F.1 regime L_max << ell must hold for the default instance."""
+        c = quad.constants()
+        assert c.L_max < c.ell / 10
+        assert c.q < 1.0
+
+
+class TestRobotGame:
+    def test_equilibrium(self):
+        g = make_robot_game()
+        res = jnp.linalg.norm(g.operator(g.equilibrium()))
+        assert float(res) < 1e-10
+
+    def test_grad_matches_autodiff(self):
+        g = make_robot_game()
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((5, 1)))
+        F = g.operator(x)
+        for i in range(5):
+            gi = jax.grad(lambda xi: g.objective(i, x.at[i].set(xi)))(x[i])
+            np.testing.assert_allclose(np.asarray(F[i]), np.asarray(gi), atol=1e-10)
+
+    def test_paper_coefficients(self):
+        g = make_robot_game()
+        np.testing.assert_allclose(np.asarray(g.a_coef), 10.0 + np.arange(1, 6) / 6.0)
+        np.testing.assert_allclose(np.asarray(g.b_coef), np.arange(1, 6) / 6.0)
+        assert np.asarray(g.h).shape == (5, 5, 1)
+        # h is antisymmetric in the paper's table
+        h = np.asarray(g.h)[:, :, 0]
+        np.testing.assert_allclose(h, -h.T)
+
+    def test_noise_variance(self):
+        g = make_robot_game(sigma=10.0)
+        x = jnp.zeros((5, 1))
+        keys = jax.random.split(jax.random.PRNGKey(1), 5000)
+        det = g.player_grad(jnp.asarray(0), x[0], x)
+        samp = jax.vmap(lambda k: g.player_grad_stoch(jnp.asarray(0), x[0], x, k))(keys)
+        var = float(jnp.var(samp - det))
+        assert abs(var - 100.0) / 100.0 < 0.1
+
+
+class TestNonCocoGame:
+    def test_qsm_and_sco_hold(self):
+        """Numerically check <F(x), x-x*> >= mu||x-x*||^2 and >= ||F(x)||^2/ell."""
+        g = make_noncoco_game(n=5, mu=0.5, ell=4.0)
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            x = jnp.asarray(rng.uniform(-10, 10, size=(5, 1)))
+            F = g.operator(x)
+            inner = float(jnp.sum(F * x))
+            assert inner >= 0.5 * float(jnp.sum(x**2)) - 1e-9
+            assert inner >= float(jnp.sum(F**2)) / 4.0 - 1e-9
+
+    def test_not_lipschitz(self):
+        """Cross-sensitivity of F grows with ||x|| — F is non-Lipschitz."""
+        g = make_noncoco_game(n=2, mu=0.5, ell=4.0)
+
+        def ratio(scale):
+            x = jnp.asarray([[scale], [0.7]])
+            y = jnp.asarray([[scale], [0.7 + 1e-4]])
+            return float(
+                jnp.linalg.norm(g.operator(x) - g.operator(y))
+                / jnp.linalg.norm(x - y)
+            )
+
+        assert ratio(1e4) > 100 * ratio(1.0)
+
+
+class TestCounterexampleGame:
+    def test_equilibrium(self):
+        g = make_counterexample_game()
+        res = jnp.linalg.norm(g.operator(g.equilibrium()))
+        assert float(res) < 1e-10
+
+    def test_sum_gradient_couplings_cancel(self):
+        """grad of (f1+f2)/2 must not depend on the bilinear coupling B."""
+        g = make_counterexample_game(coupling=5.0, seed=1)
+        g0 = make_counterexample_game(coupling=0.0, seed=1)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((2, g.d)))
+        np.testing.assert_allclose(
+            np.asarray(g.sum_gradient(x)), np.asarray(g0.sum_gradient(x)), atol=1e-12
+        )
+
+    def test_sum_gradient_matches_autodiff(self):
+        g = make_counterexample_game(seed=2)
+        x = jnp.asarray(np.random.default_rng(3).standard_normal((2, g.d)))
+
+        def fsum(xx):
+            return 0.5 * (g.objective(0, xx) + g.objective(1, xx))
+
+        np.testing.assert_allclose(
+            np.asarray(g.sum_gradient(x)), np.asarray(jax.grad(fsum)(x)), atol=1e-10
+        )
+
+    def test_divergent_instance(self):
+        """Default instance has lambda_min(A) < 1/10 -> sum-dynamics diverge."""
+        g = make_counterexample_game()
+        lam = np.linalg.eigvalsh(np.asarray(g.A)).min()
+        assert lam < 0.1

@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode.
+
+Each kernel family gets (a) hypothesis-driven randomized shape sweeps and
+(b) fixed MXU-aligned cases mirroring production block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.block_operator.ops import block_operator
+from repro.kernels.block_operator.ref import block_operator_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_scan.ops import ssd_scan
+from repro.kernels.mamba2_scan.ref import ssd_ref
+from repro.kernels.mlstm_chunk.ops import mlstm_scan
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestFlashAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.sampled_from([1, 2]),
+        s=st.sampled_from([32, 64, 96, 128, 160]),
+        h=st.sampled_from([1, 3]),
+        hd=st.sampled_from([16, 64]),
+        causal=st.booleans(),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_matches_oracle(self, b, s, h, hd, causal, dtype):
+        key = jax.random.PRNGKey(b * 1000 + s + h + hd)
+        q = _rand(key, (b, s, h, hd), dtype)
+        k = _rand(jax.random.fold_in(key, 1), (b, s, h, hd), dtype)
+        v = _rand(jax.random.fold_in(key, 2), (b, s, h, hd), dtype)
+        out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                              interpret=True)
+        ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=causal)
+        atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref), atol=atol, rtol=atol)
+
+    @pytest.mark.parametrize("window", [16, 48])
+    def test_sliding_window(self, window):
+        key = jax.random.PRNGKey(0)
+        b, s, h, hd = 2, 128, 2, 32
+        q = _rand(key, (b, s, h, hd), jnp.float32)
+        k = _rand(jax.random.fold_in(key, 1), (b, s, h, hd), jnp.float32)
+        v = _rand(jax.random.fold_in(key, 2), (b, s, h, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=32, block_k=32, interpret=True)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_unaligned_seq_padding(self):
+        """Sequence not a multiple of the block size exercises the pad path."""
+        key = jax.random.PRNGKey(3)
+        b, s, h, hd = 1, 100, 2, 32
+        q = _rand(key, (b, s, h, hd), jnp.float32)
+        k = _rand(jax.random.fold_in(key, 1), (b, s, h, hd), jnp.float32)
+        v = _rand(jax.random.fold_in(key, 2), (b, s, h, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_mxu_aligned_production_blocks(self):
+        key = jax.random.PRNGKey(7)
+        b, s, h, hd = 1, 512, 2, 128
+        q = _rand(key, (b, s, h, hd), jnp.bfloat16)
+        k = _rand(jax.random.fold_in(key, 1), (b, s, h, hd), jnp.bfloat16)
+        v = _rand(jax.random.fold_in(key, 2), (b, s, h, hd), jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                              interpret=True)
+        ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                                   atol=3e-2, rtol=3e-2)
+
+
+class TestMamba2Scan:
+    @settings(**SETTINGS)
+    @given(
+        b=st.sampled_from([1, 2]),
+        L=st.sampled_from([32, 64, 128]),
+        H=st.sampled_from([1, 4]),
+        P=st.sampled_from([8, 16]),
+        N=st.sampled_from([4, 8]),
+        chunk=st.sampled_from([16, 32]),
+    )
+    def test_matches_sequential_oracle(self, b, L, H, P, N, chunk):
+        key = jax.random.PRNGKey(L + H * 10 + P)
+        x = _rand(key, (b, L, H, P), jnp.float32)
+        dt = jax.nn.softplus(_rand(jax.random.fold_in(key, 1), (b, L, H),
+                                   jnp.float32))
+        A = -jnp.exp(0.3 * _rand(jax.random.fold_in(key, 2), (H,), jnp.float32))
+        B = _rand(jax.random.fold_in(key, 3), (b, L, N), jnp.float32)
+        C = _rand(jax.random.fold_in(key, 4), (b, L, N), jnp.float32)
+        y, h = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+        y_ref, h_ref = ssd_ref(x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_bf16_inputs(self):
+        key = jax.random.PRNGKey(0)
+        b, L, H, P, N = 1, 64, 2, 16, 8
+        x = _rand(key, (b, L, H, P), jnp.bfloat16)
+        dt = jax.nn.softplus(_rand(jax.random.fold_in(key, 1), (b, L, H),
+                                   jnp.float32))
+        A = -jnp.exp(0.3 * _rand(jax.random.fold_in(key, 2), (H,), jnp.float32))
+        B = _rand(jax.random.fold_in(key, 3), (b, L, N), jnp.bfloat16)
+        C = _rand(jax.random.fold_in(key, 4), (b, L, N), jnp.bfloat16)
+        y, _ = ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+        y_ref, _ = ssd_ref(x.astype(jnp.float32), dt, A,
+                           B.astype(jnp.float32), C.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y_ref),
+                                   atol=0.15, rtol=0.1)
+
+
+class TestMlstmChunk:
+    @settings(**SETTINGS)
+    @given(
+        b=st.sampled_from([1, 2]),
+        L=st.sampled_from([32, 64, 128]),
+        H=st.sampled_from([1, 3]),
+        dh=st.sampled_from([8, 16]),
+        chunk=st.sampled_from([16, 32]),
+    )
+    def test_matches_sequential_oracle(self, b, L, H, dh, chunk):
+        key = jax.random.PRNGKey(L + H + dh)
+        q = _rand(key, (b, L, H, dh), jnp.float32)
+        k = _rand(jax.random.fold_in(key, 1), (b, L, H, dh), jnp.float32)
+        v = _rand(jax.random.fold_in(key, 2), (b, L, H, dh), jnp.float32)
+        logi = _rand(jax.random.fold_in(key, 3), (b, L, H), jnp.float32)
+        logf = jax.nn.log_sigmoid(
+            _rand(jax.random.fold_in(key, 4), (b, L, H), jnp.float32) + 2.0)
+        h, (C, n, m) = mlstm_scan(q, k, v, logi, logf, chunk=chunk,
+                                  interpret=True)
+        h_ref, (C_r, n_r, m_r) = mlstm_ref(q, k, v, logi, logf)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(C), np.asarray(C_r), atol=1e-3,
+                                   rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), atol=1e-4)
+
+
+class TestBlockOperator:
+    @settings(**SETTINGS)
+    @given(
+        n=st.sampled_from([2, 3, 5, 8]),
+        d=st.sampled_from([4, 10, 16]),
+    )
+    def test_matches_oracle(self, n, d):
+        rng = np.random.default_rng(n * 100 + d)
+        A = jnp.asarray(rng.standard_normal((n, d, d)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((n, n, d, d)), jnp.float32)
+        B = B.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+        a = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        out = block_operator(A, B, a, x, interpret=True)
+        ref = block_operator_ref(A, B, a, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                                   rtol=1e-4)
+
+    def test_matches_quadratic_game_operator(self):
+        """The kernel must agree with QuadraticGame.operator on a real game."""
+        from repro.core.games import make_quadratic_game
+
+        g = make_quadratic_game(n=4, d=8, M=10, seed=1)
+        A = jnp.mean(g.A, axis=1).astype(jnp.float32)
+        B = jnp.mean(g.B, axis=2).astype(jnp.float32)
+        a = jnp.mean(g.a, axis=1).astype(jnp.float32)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)),
+                        jnp.float32)
+        out = block_operator(A, B, a, x, interpret=True)
+        ref = g.operator(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,95 @@
+"""Coverage extension: comm metrics edge cases, stochastic EG, sampling serve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import stepsize
+from repro.core.baselines import extragradient
+from repro.core.games import make_quadratic_game
+from repro.core.metrics import (
+    CommunicationModel,
+    communication_savings,
+    final_plateau,
+    rounds_to_reach,
+)
+from repro.models import init_params
+from repro.serve.decode import generate
+
+
+class TestMetrics:
+    def test_rounds_to_reach(self):
+        errs = np.array([1.0, 0.5, 0.2, 0.05, 0.01])
+        assert rounds_to_reach(errs, 0.2) == 2
+        assert rounds_to_reach(errs, 1e-9) is None
+
+    def test_communication_savings(self):
+        errs = {
+            1: np.array([1.0, 0.5, 0.25, 0.12, 0.06]),
+            4: np.array([1.0, 0.2, 0.05, 0.02, 0.01]),
+        }
+        s = communication_savings(errs, threshold=0.06)
+        assert s[1] == pytest.approx(1.0)
+        assert s[4] == pytest.approx(2.0)  # tau=4 reaches at round 2 vs 4
+
+    def test_savings_raises_if_tau1_never_reaches(self):
+        errs = {1: np.array([1.0, 0.9]), 4: np.array([1.0, 0.01])}
+        with pytest.raises(ValueError):
+            communication_savings(errs, threshold=0.05)
+
+    def test_final_plateau_window_clamps(self):
+        assert final_plateau(np.array([3.0]), window=50) == 3.0
+
+    def test_comm_model_heterogeneous_dims(self):
+        cm = CommunicationModel((10, 20, 30), bytes_per_scalar=2)
+        assert cm.D == 60 and cm.n == 3
+        assert cm.bytes_per_round() == (60 + 3 * 60) * 2
+        # ceil division on partial rounds
+        assert cm.bytes_for_iterations(10, tau=4) == 3 * cm.bytes_per_round()
+
+
+class TestStochasticExtragradient:
+    def test_converges_to_neighborhood(self):
+        g = make_quadratic_game(n=3, d=5, M=20, batch_size=2, seed=4)
+        c = g.constants()
+        x0 = jnp.asarray(np.random.default_rng(0).standard_normal((3, 5)))
+        r = extragradient(g, x0, steps=3000, gamma=0.2 / c.L_F,
+                          key=jax.random.PRNGKey(0), stochastic=True)
+        assert final_plateau(r.rel_errors, 200) < 0.05
+
+
+class TestSampledServe:
+    def test_temperature_sampling_changes_tokens(self):
+        cfg = get_config("stablelm-1.6b").smoke_variant()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        greedy = generate(params, cfg, {"tokens": toks}, max_new_tokens=6,
+                          capacity=32, temperature=0.0)
+        sampled = generate(params, cfg, {"tokens": toks}, max_new_tokens=6,
+                           capacity=32, temperature=5.0,
+                           key=jax.random.PRNGKey(7))
+        assert greedy.shape == sampled.shape == (2, 6)
+        # at high temperature, sampling should diverge from greedy somewhere
+        assert np.any(np.asarray(greedy) != np.asarray(sampled))
+
+
+class TestRobotGradientExactness:
+    """Regression test for the stale-snapshot j=i displacement bug: the
+    player's own block must never be pulled toward the frozen snapshot."""
+
+    def test_own_term_uses_live_variable(self):
+        from repro.core.games import make_robot_game
+
+        g = make_robot_game(sigma=0.0)
+        x_ref = jnp.asarray(np.random.default_rng(0).standard_normal((5, 1)))
+        x_i = x_ref[0] + 5.0   # player 0 drifted far from the snapshot
+        grad = g.player_grad(jnp.asarray(0), x_i, x_ref)
+        # analytic: a_0 (x_i - anc_0) + b_0 sum_{j != 0} (x_i - x_ref_j - h_0j)
+        manual = g.a_coef[0] * (x_i - g.anchors[0])
+        for j in range(1, 5):
+            manual = manual + g.b_coef[0] * (x_i - x_ref[j] - g.h[0, j])
+        np.testing.assert_allclose(np.asarray(grad), np.asarray(manual),
+                                   atol=1e-6)

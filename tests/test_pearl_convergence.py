@@ -1,0 +1,234 @@
+"""Integration tests: PEARL-SGD convergence matches the paper's theorems.
+
+These are the paper-claims validations referenced from EXPERIMENTS.md:
+- Theorem 3.3: deterministic linear+exact convergence, rate bounded by
+  (1 - gamma tau mu zeta)^R; tau-curves indistinguishable in rounds.
+- Theorem 3.4: stochastic linear convergence to a neighborhood; neighborhood
+  shrinks as tau grows (the communication gain).
+- Theorem 3.6: decreasing step-sizes give exact convergence (error keeps
+  falling below any constant-step plateau).
+- Section B: Local SGD on the summed objective diverges where PEARL-SGD
+  converges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.baselines import extragradient, local_sgd_on_sum, pearl_eg, sgda
+from repro.core.games import (
+    make_counterexample_game,
+    make_noncoco_game,
+    make_quadratic_game,
+    make_robot_game,
+)
+from repro.core.metrics import final_plateau
+from repro.core.pearl import pearl_sgd, pearl_sgd_mean
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    """float64 for the game dynamics — scoped so it can't leak into other
+    test modules (bf16/int32 model paths break under global x64)."""
+    old = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+@pytest.fixture(scope="module")
+def quad(_x64):
+    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0(quad):
+    return jnp.asarray(np.random.default_rng(7).standard_normal((quad.n, quad.d)))
+
+
+class TestTheorem33Deterministic:
+    @pytest.mark.parametrize("tau", [1, 2, 5, 8])
+    def test_linear_rate_bound(self, quad, x0, tau):
+        """rel_err at round R must respect (1 - gamma tau mu zeta)^R."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, tau)
+        rounds = 300
+        r = pearl_sgd(quad, x0, tau=tau, rounds=rounds, gamma=gamma, stochastic=False)
+        rate = stepsize.linear_rate(c, tau, gamma)
+        bound = rate ** np.arange(rounds + 1)
+        assert np.all(r.rel_errors <= bound * (1 + 1e-6))
+        # and it must actually make progress
+        assert r.rel_errors[-1] < r.rel_errors[0]
+
+    def test_tau_curves_indistinguishable(self, quad, x0):
+        """Fig 2a: with theoretical gamma ~ 1/tau, all tau give the same
+        per-round progress in the deterministic setting."""
+        c = quad.constants()
+        finals = {}
+        for tau in (1, 2, 4, 8):
+            gamma = stepsize.gamma_constant(c, tau)
+            r = pearl_sgd(quad, x0, tau=tau, rounds=200, gamma=gamma, stochastic=False)
+            finals[tau] = r.rel_errors[-1]
+        vals = np.array(list(finals.values()))
+        # all within a small multiplicative band of each other
+        assert vals.max() / vals.min() < 1.6
+
+    def test_exact_convergence(self, quad, x0):
+        """Unlike heterogeneous Local SGD, convergence is to the *exact*
+        equilibrium (no neighborhood) in the deterministic case."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 2)
+        r = pearl_sgd(quad, x0, tau=2, rounds=5000, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-6
+
+
+class TestTheorem34Stochastic:
+    def test_converges_to_neighborhood(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        mean, _ = pearl_sgd_mean(quad, x0, tau=4, rounds=1500, gamma=gamma, n_seeds=3)
+        assert final_plateau(mean) < 0.05
+
+    def test_neighborhood_shrinks_with_tau(self, quad, x0):
+        """The communication gain: larger tau -> smaller plateau at the same
+        number of communication rounds (Fig 2b / Thm 3.4 remark)."""
+        c = quad.constants()
+        plateaus = {}
+        for tau in (1, 4, 16):
+            gamma = stepsize.gamma_constant(c, tau)
+            mean, _ = pearl_sgd_mean(
+                quad, x0, tau=tau, rounds=2500, gamma=gamma, n_seeds=4
+            )
+            plateaus[tau] = final_plateau(mean, window=100)
+        assert plateaus[4] < plateaus[1]
+        assert plateaus[16] < plateaus[1]
+
+    def test_robot_game_matches_fig2c(self):
+        """On the Section 4.2 problem larger tau reaches lower error within a
+        fixed communication budget."""
+        g = make_robot_game()
+        c = g.constants()
+        x0 = jnp.zeros((5, 1))
+        plateaus = {}
+        for tau in (1, 8):
+            gamma = stepsize.gamma_robot(c, tau)
+            mean, _ = pearl_sgd_mean(g, x0, tau=tau, rounds=400, gamma=gamma, n_seeds=5)
+            plateaus[tau] = final_plateau(mean, window=50)
+        assert plateaus[8] < plateaus[1]
+
+
+class TestTheorem36DecreasingStep:
+    def test_exact_convergence_beats_constant_plateau(self, quad, x0):
+        c = quad.constants()
+        tau, rounds = 4, 10000
+        const = stepsize.gamma_constant(c, tau)
+        r_const = pearl_sgd(
+            quad, x0, tau=tau, rounds=rounds, gamma=const,
+            key=jax.random.PRNGKey(0),
+        )
+        sched = stepsize.gamma_decreasing(c, tau, rounds)
+        r_dec = pearl_sgd(
+            quad, x0, tau=tau, rounds=rounds, gamma=sched,
+            key=jax.random.PRNGKey(0),
+        )
+        assert final_plateau(r_dec.rel_errors, 100) < final_plateau(
+            r_const.rel_errors, 100
+        )
+
+    def test_schedule_shape(self, quad):
+        c = quad.constants()
+        sched = stepsize.gamma_decreasing(c, 4, 5000)
+        # warmup is constant, tail decays ~ 1/p
+        assert sched[0] == sched[1]
+        assert sched[-1] < sched[0]
+        assert sched[-1] == pytest.approx(
+            (2 * 4999 + 1) / (5000**2) / (4 * c.mu)
+        )
+
+
+class TestCorollary35:
+    def test_horizon_stepsize_valid_and_converges(self, quad, x0):
+        c = quad.constants()
+        tau = 4
+        T = int(40 * c.kappa * tau)  # large enough for eta > kappa tau
+        gamma = stepsize.gamma_horizon(c, tau, T)
+        assert gamma <= stepsize.gamma_constant(c, 1)
+        rounds = T // tau
+        r = pearl_sgd(quad, x0, tau=tau, rounds=rounds, gamma=gamma,
+                      key=jax.random.PRNGKey(1))
+        assert final_plateau(r.rel_errors, 50) < 0.02
+
+    def test_horizon_too_small_raises(self, quad):
+        c = quad.constants()
+        with pytest.raises(ValueError):
+            stepsize.gamma_horizon(c, tau=50, T=10)
+
+
+class TestBaselines:
+    def test_sgda_equals_pearl_tau1(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 1)
+        r1 = sgda(quad, x0, steps=50, gamma=gamma, key=jax.random.PRNGKey(3))
+        r2 = pearl_sgd(quad, x0, tau=1, rounds=50, gamma=gamma,
+                       key=jax.random.PRNGKey(3))
+        np.testing.assert_allclose(
+            np.asarray(r1.x_final), np.asarray(r2.x_final), rtol=1e-10
+        )
+
+    def test_local_sgd_on_sum_diverges_where_pearl_converges(self):
+        g = make_counterexample_game()
+        c = g.constants()
+        x0 = jnp.ones((2, g.d))
+        _, _, _, norms = local_sgd_on_sum(g, x0, steps=4000, gamma=0.05)
+        assert norms[-1] > 100 * norms[0]  # divergence
+        r = pearl_sgd(g, x0, tau=2, rounds=3000,
+                      gamma=stepsize.gamma_constant(c, 2), stochastic=False)
+        assert r.rel_errors[-1] < 1e-6
+
+    def test_extragradient_converges(self, quad, x0):
+        c = quad.constants()
+        r = extragradient(quad, x0, steps=3000, gamma=0.5 / c.L_F,
+                          stochastic=False)
+        assert r.rel_errors[-1] < 1e-8
+
+    def test_pearl_eg_converges(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        r = pearl_eg(quad, x0, tau=4, rounds=1500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < r.rel_errors[0] * 0.1
+
+
+class TestCompressedSync:
+    """Beyond-paper: bf16 compressed broadcast (the paper's Section 3.1
+    compression future-work) composed with local steps."""
+
+    def test_bf16_sync_same_plateau(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        full = pearl_sgd(quad, x0, tau=4, rounds=1500, gamma=gamma,
+                         key=jax.random.PRNGKey(0))
+        comp = pearl_sgd(quad, x0, tau=4, rounds=1500, gamma=gamma,
+                         key=jax.random.PRNGKey(0), sync_dtype=jnp.bfloat16)
+        p_full = final_plateau(full.rel_errors, 100)
+        p_comp = final_plateau(comp.rel_errors, 100)
+        # quantization noise is absorbed by the Thm 3.4 sigma^2 term
+        assert p_comp < 1.5 * p_full
+
+    def test_bf16_sync_deterministic_still_converges(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 2)
+        r = pearl_sgd(quad, x0, tau=2, rounds=2000, gamma=gamma,
+                      stochastic=False, sync_dtype=jnp.bfloat16)
+        # converges to the bf16-resolution neighborhood of x*
+        assert r.rel_errors[-1] < 1e-3
+
+
+class TestNonCocoerciveStress:
+    def test_pearl_converges_without_lipschitzness(self):
+        g = make_noncoco_game(n=6, mu=0.5, ell=4.0)
+        c = g.constants()
+        x0 = 3.0 * jnp.ones((6, 1))
+        r = pearl_sgd(g, x0, tau=4, rounds=400,
+                      gamma=stepsize.gamma_constant(c, 4), stochastic=False)
+        assert r.rel_errors[-1] < 1e-6

@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants.
+
+- Generated quadratic games always satisfy QSM/antisymmetry regardless of
+  draw (the D.1 construction).
+- PEARL-SGD with the theoretical step-size never diverges (deterministic).
+- Theoretical step-sizes respect their defining inequalities.
+- MoE dispatch conserves token mass and respects capacity.
+- Communication accounting is monotone in tau.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stepsize
+from repro.core.games import make_quadratic_game
+from repro.core.metrics import CommunicationModel
+from repro.core.pearl import pearl_sgd
+from repro.models.moe import _top_k_dispatch
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+class TestQuadraticGameConstruction:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(2, 5),
+        d=st.integers(2, 8),
+        L_B=st.floats(0.5, 30.0),
+        seed=st.integers(0, 10_000),
+    )
+    def test_qsm_holds_for_any_draw(self, n, d, L_B, seed):
+        g = make_quadratic_game(n=n, d=d, M=5, L_B=L_B, seed=seed)
+        c = g.constants()
+        assert c.mu > 0
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, d)))
+        y = jnp.asarray(rng.standard_normal((n, d)))
+        lhs = float(jnp.sum((g.operator(x) - g.operator(y)) * (x - y)))
+        assert lhs >= c.mu * float(jnp.sum((x - y) ** 2)) - 1e-6
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000), tau=st.sampled_from([1, 2, 5, 10]))
+    def test_pearl_never_diverges_with_theory_stepsize(self, seed, tau):
+        g = make_quadratic_game(n=3, d=4, M=5, seed=seed)
+        c = g.constants()
+        x0 = jnp.asarray(np.random.default_rng(seed).standard_normal((3, 4)))
+        r = pearl_sgd(g, x0, tau=tau, rounds=50,
+                      gamma=stepsize.gamma_constant(c, tau), stochastic=False)
+        assert np.all(np.isfinite(r.rel_errors))
+        assert r.rel_errors[-1] <= 1.0 + 1e-9  # monotone-ish contraction
+
+
+class TestStepsizeRules:
+    @settings(**SETTINGS)
+    @given(
+        mu=st.floats(0.1, 2.0),
+        kappa=st.floats(1.0, 500.0),
+        q=st.floats(0.01, 1.0),
+        tau=st.integers(1, 50),
+    )
+    def test_constant_stepsize_bounds(self, mu, kappa, q, tau):
+        from repro.core.game import GameConstants
+
+        ell = mu * kappa
+        L_max = q * float(np.sqrt(ell * mu))
+        c = GameConstants(mu=mu, ell=ell, L_max=L_max, L_F=float(np.sqrt(ell * mu)))
+        gamma = stepsize.gamma_constant(c, tau)
+        # defining inequality of Thm 3.3/3.4
+        assert gamma <= 1.0 / (ell * tau + 2 * (tau - 1) * L_max * np.sqrt(kappa)) + 1e-12
+        # zeta > 0 (contraction well-defined); 1 > rate > 0
+        assert stepsize.contraction_zeta(c, tau, gamma) > 0
+        assert 0.0 <= stepsize.linear_rate(c, tau, gamma) < 1.0
+
+    @settings(**SETTINGS)
+    @given(tau=st.integers(1, 8), rounds=st.integers(10, 200))
+    def test_decreasing_schedule_is_nonincreasing_after_warmup(self, tau, rounds):
+        from repro.core.game import GameConstants
+
+        c = GameConstants(mu=0.5, ell=10.0, L_max=1.0, L_F=3.0)
+        sched = stepsize.gamma_decreasing(c, tau, rounds)
+        assert np.all(sched > 0)
+        tail = sched[int(2 * (1 + 2 * c.q) * c.kappa) + 1 :]
+        assert np.all(np.diff(tail) <= 1e-12)
+
+
+class TestMoEDispatchInvariants:
+    @settings(**SETTINGS)
+    @given(
+        g=st.integers(1, 3),
+        s=st.sampled_from([8, 16, 32]),
+        e=st.sampled_from([2, 4, 8]),
+        k=st.integers(1, 3),
+        seed=st.integers(0, 100),
+    )
+    def test_capacity_and_mass(self, g, s, e, k, seed):
+        k = min(k, e)
+        key = jax.random.PRNGKey(seed)
+        probs = jax.nn.softmax(jax.random.normal(key, (g, s, e)), axis=-1)
+        capacity = max(1, int(np.ceil(s * k * 2.0 / e)))
+        dispatch, combine, aux = _top_k_dispatch(probs, k, capacity)
+        d = np.asarray(dispatch)
+        # each (expert, slot) holds at most one token
+        assert d.sum(axis=1).max() <= 1.0 + 1e-6
+        # each token dispatched at most k times, never negatively
+        per_token = d.sum(axis=(2, 3))
+        assert per_token.max() <= k + 1e-6 and d.min() >= 0.0
+        # combine weights of surviving tokens sum to ~1
+        cw = np.asarray(combine).sum(axis=(2, 3))
+        surviving = per_token >= k - 1e-6
+        np.testing.assert_allclose(cw[surviving], 1.0, atol=1e-5)
+        assert float(aux) >= 1.0 - 1e-5  # >= 1 with equality iff balanced
+
+
+class TestCommunicationModel:
+    @settings(**SETTINGS)
+    @given(
+        dims=st.lists(st.integers(1, 100), min_size=2, max_size=6),
+        tau_a=st.integers(1, 10),
+    )
+    def test_bytes_monotone_in_tau(self, dims, tau_a):
+        cm = CommunicationModel(tuple(dims))
+        iters = 1000
+        b1 = cm.bytes_for_iterations(iters, tau_a)
+        b2 = cm.bytes_for_iterations(iters, tau_a + 1)
+        assert b2 <= b1
+        # downlink carries the n-scaled joint vector (Section 3.1)
+        assert cm.bytes_per_round() == (1 + cm.n) * cm.D * 4

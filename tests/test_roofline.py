@@ -1,0 +1,102 @@
+"""Roofline analysis units: HLO collective parsing, report math, param counts."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import DECODE_32K, TRAIN_4K
+from repro.models.model import param_shapes
+from repro.roofline.analysis import (
+    CollectiveStats,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    active_params,
+    build_report,
+    count_params,
+    model_flops_estimate,
+    parse_collectives,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+  %all-reduce.81 = f32[16,4096,960]{2,1,0} all-reduce(%fusion.1), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true
+  %all-gather.3 = bf16[2048,1024]{1,0} all-gather(%p0), channel_id=2, replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(%x), channel_id=3, replica_groups=[256,2]<=[2,256]T(1,0)
+  %unrelated = f32[16]{0} add(%a, %b)
+  %all-reduce.99 = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce(%c, %d), channel_id=4, replica_groups=[512,1]<=[512]
+"""
+
+
+class TestCollectiveParsing:
+    def test_bytes_and_counts(self):
+        st = parse_collectives(HLO_SAMPLE, chips_per_pod=256)
+        assert st.count == 4
+        ar1 = 16 * 4096 * 960 * 4 * 2          # all-reduce counts 2x
+        ag = 2048 * 1024 * 2
+        rs = 128 * 4
+        ar2 = 2 * 8 * 8 * 4 * 2                # tuple all-reduce, both operands
+        assert st.bytes_by_op["all-reduce"] == ar1 + ar2
+        assert st.bytes_by_op["all-gather"] == ag
+        assert st.bytes_by_op["reduce-scatter"] == rs
+        assert st.total_bytes == ar1 + ar2 + ag + rs
+
+    def test_pod_span_detection(self):
+        st = parse_collectives(HLO_SAMPLE, chips_per_pod=256)
+        # the transposed-iota reduce-scatter strides across pods (span 257);
+        # the first all-reduce's groups span 16; the tuple all-reduce's
+        # groups are contiguous runs of 1.
+        rs = 128 * 4
+        assert st.pod_bytes == rs
+
+    def test_no_collectives(self):
+        st = parse_collectives("%x = f32[4] add(%a, %b)")
+        assert st.count == 0 and st.total_bytes == 0
+
+
+class TestReportMath:
+    def test_terms_and_bottleneck(self):
+        coll = CollectiveStats({"all-reduce": int(50e9)}, int(50e9), 0, 3)
+        rep = build_report(
+            arch="a", shape="s", mesh_name="16x16", chips=256,
+            cost={"flops": PEAK_FLOPS, "bytes accessed": HBM_BW / 2},
+            collectives=coll, peak_memory=1e9, model_flops=PEAK_FLOPS * 256,
+        )
+        assert rep.compute_s == pytest.approx(1.0)
+        assert rep.memory_s == pytest.approx(0.5)
+        assert rep.collective_s == pytest.approx(1.0)
+        assert rep.bottleneck in ("compute", "collective")
+        assert rep.useful_flops_ratio == pytest.approx(1.0)
+
+
+class TestParamAccounting:
+    def test_dense_count_scale(self):
+        cfg = get_config("smollm-360m")
+        n = count_params(param_shapes(cfg))
+        # 360M-class: embeddings 2*49152*960 ~ 94M + 32 blocks
+        assert 2.5e8 < n < 5.5e8
+
+    def test_moe_active_far_below_total(self):
+        cfg = get_config("qwen3-moe-30b-a3b")
+        shapes = param_shapes(cfg)
+        total = count_params(shapes)
+        active = active_params(cfg, shapes)
+        assert 2.0e10 < total < 4.5e10          # ~30B class
+        assert active < total / 6               # top-8 of 128 experts
+        # known identity: active ~ total - experts*(1-k/E)
+        assert active > 1e9
+
+    def test_llama4_total_param_class(self):
+        cfg = get_config("llama4-maverick-400b-a17b")
+        total = count_params(param_shapes(cfg))
+        assert 3.0e11 < total < 5.0e11          # ~400B class
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = get_config("smollm-360m")
+        shapes = param_shapes(cfg)
+        act = active_params(cfg, shapes)
+        train = model_flops_estimate(cfg, TRAIN_4K, act)
+        dec = model_flops_estimate(cfg, DECODE_32K, act)
+        assert train == pytest.approx(6.0 * act * 256 * 4096)
+        assert dec == pytest.approx(2.0 * act * 128)

@@ -1,0 +1,95 @@
+"""Sharding-policy unit tests (no multi-device mesh needed: specs are data)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import param_shapes
+from repro.models.sharding import param_partition_specs
+
+
+def _flat(tree):
+    return {
+        "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
+
+
+@pytest.fixture(scope="module")
+def granite_specs():
+    cfg = get_config("granite-34b")
+    shapes = param_shapes(cfg)
+    specs = param_partition_specs(shapes, cfg, model_size=16)
+    return cfg, _flat(shapes), _flat(specs)
+
+
+class TestSpecRanksAndRules:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_spec_rank_matches_every_leaf(self, arch):
+        cfg = get_config(arch)
+        shapes = param_shapes(cfg)
+        specs = param_partition_specs(shapes, cfg, model_size=16)
+        fs, fp = _flat(shapes), _flat(specs)
+        for k in fs:
+            assert len(fp[k]) == len(fs[k].shape), (arch, k, fp[k], fs[k].shape)
+
+    def test_granite_q_heads_sharded_kv_replicated(self, granite_specs):
+        cfg, shapes, specs = granite_specs
+        wq = next(k for k in specs if k.endswith("attn/wq"))
+        wk = next(k for k in specs if k.endswith("attn/wk"))
+        # stacked run: leading layer axis is None
+        assert specs[wq] == P(None, None, "model", None)   # 48 % 16 == 0
+        assert specs[wk] == P(None, None, None, None)      # kv=1 replicated
+
+    def test_granite_ffn_and_vocab_sharded(self, granite_specs):
+        cfg, shapes, specs = granite_specs
+        up = next(k for k in specs if k.endswith("mlp/up"))
+        down = next(k for k in specs if k.endswith("mlp/down"))
+        assert specs[up][-1] == "model"
+        assert specs[down][-2] == "model"
+        assert specs["embed"] == P("model", None)
+        assert specs["lm_head"] == P(None, "model")
+
+    def test_smollm_heads_replicated_ffn_sharded(self):
+        cfg = get_config("smollm-360m")
+        shapes = param_shapes(cfg)
+        specs = _flat(param_partition_specs(shapes, cfg, model_size=16))
+        wq = next(k for k in specs if k.endswith("attn/wq"))
+        assert specs[wq] == P(None, None, None, None)      # 15 % 16 != 0
+        up = next(k for k in specs if k.endswith("mlp/up"))
+        assert specs[up][-1] == "model"                    # 2560 % 16 == 0
+
+    def test_moe_experts_sharded_on_expert_axis(self):
+        cfg = get_config("qwen3-moe-30b-a3b")
+        shapes = param_shapes(cfg)
+        specs = _flat(param_partition_specs(shapes, cfg, model_size=16))
+        gate = next(k for k in specs if "moe/gate" in k)
+        down = next(k for k in specs if "moe/down" in k)
+        assert specs[gate] == P(None, "model", None, None)  # (layer, E, D, F)
+        assert specs[down] == P(None, "model", None, None)
+
+    def test_mamba_inner_sharded(self):
+        cfg = get_config("zamba2-1.2b")
+        shapes = param_shapes(cfg)
+        specs = _flat(param_partition_specs(shapes, cfg, model_size=16))
+        outp = next(k for k in specs if k.endswith("mamba/out_proj"))
+        assert specs[outp][-2] == "model"                  # d_inner=4096 % 16
+        conv = next(k for k in specs if "mamba/conv/w" in k)
+        assert all(a is None for a in specs[conv])
+
+    def test_norms_replicated_everywhere(self):
+        for arch in ("granite-34b", "xlstm-125m", "seamless-m4t-medium"):
+            cfg = get_config(arch)
+            shapes = param_shapes(cfg)
+            specs = _flat(param_partition_specs(shapes, cfg, model_size=16))
+            for k, s in specs.items():
+                if "norm" in k or k.endswith("ln") or "/ln" in k:
+                    assert all(a is None for a in s), (arch, k, s)
+
+    def test_dp_only_profile_replicates_everything(self):
+        cfg = get_config("xlstm-125m")
+        shapes = param_shapes(cfg)
+        specs = _flat(param_partition_specs(shapes, cfg, model_size=1))
+        for k, s in specs.items():
+            assert all(a is None for a in s), (k, s)
