@@ -16,6 +16,7 @@ FAST = os.environ.get("BENCH_FAST", "1") == "1"
 def main() -> None:
     from benchmarks import (
         bench_counterexample,
+        bench_engine,
         bench_heatmap,
         bench_kernels,
         bench_pearl_comm,
@@ -38,6 +39,8 @@ def main() -> None:
             steps=3000 if FAST else 4000)),
         ("tuned", lambda: bench_tuned.run(
             rounds=100 if FAST else 150, n_seeds=2 if FAST else 3)),
+        ("engine", lambda: bench_engine.run(
+            rounds=400 if FAST else 800)),
         ("kernels", bench_kernels.run),
         ("pearl_comm", lambda: bench_pearl_comm.run(
             local_steps=16 if FAST else 24)),

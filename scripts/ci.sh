@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 CI: bytecode-compile the whole tree, then the repo's canonical test
+# command (ROADMAP.md "Tier-1 verify"). Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src benchmarks examples scripts
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

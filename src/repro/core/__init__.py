@@ -1,4 +1,4 @@
-"""MpFL core: n-player games, PEARL-SGD, theoretical step-sizes, baselines."""
+"""MpFL core: n-player games, the PEARL engine, step-sizes, baselines."""
 
 from repro.core.game import (
     GameConstants,
@@ -7,7 +7,24 @@ from repro.core.game import (
     relative_error,
     residual_norm,
 )
-from repro.core.pearl import PearlResult, pearl_sgd, pearl_sgd_mean
+from repro.core.engine import (
+    DropoutSync,
+    ExactSync,
+    ExtragradientUpdate,
+    HeavyBallUpdate,
+    JointExtragradientUpdate,
+    OptimisticGradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    PearlResult,
+    PLAYER_UPDATES,
+    QuantizedSync,
+    SgdUpdate,
+    SumLocalSgdUpdate,
+    SYNC_STRATEGIES,
+    SyncStrategy,
+)
+from repro.core.pearl import pearl_sgd, pearl_sgd_mean
 from repro.core import baselines, metrics, stepsize
 
 __all__ = [
@@ -16,7 +33,21 @@ __all__ = [
     "register_game",
     "relative_error",
     "residual_norm",
+    "PearlEngine",
     "PearlResult",
+    "SgdUpdate",
+    "ExtragradientUpdate",
+    "OptimisticGradientUpdate",
+    "HeavyBallUpdate",
+    "JointExtragradientUpdate",
+    "SumLocalSgdUpdate",
+    "SyncStrategy",
+    "ExactSync",
+    "QuantizedSync",
+    "PartialParticipation",
+    "DropoutSync",
+    "PLAYER_UPDATES",
+    "SYNC_STRATEGIES",
     "pearl_sgd",
     "pearl_sgd_mean",
     "baselines",

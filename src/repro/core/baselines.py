@@ -10,18 +10,27 @@
   include it as a stronger fully-communicating baseline.
 - :func:`pearl_eg`         — **beyond-paper**: per-player *local extragradient*
   with the same stale-snapshot communication pattern as PEARL-SGD.
+
+All four are adapters over :class:`repro.core.engine.PearlEngine`: the local
+variants plug a :class:`PlayerUpdate` into the shared rounds-scan; the
+fully-communicating ones plug a :class:`JointUpdate` (their step reads fresh
+iterates mid-round, which the per-player template cannot express).
 """
 
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import (
+    ExtragradientUpdate,
+    JointExtragradientUpdate,
+    PearlEngine,
+    PearlResult,
+    SumLocalSgdUpdate,
+)
 from repro.core.game import VectorGame
-from repro.core.pearl import PearlResult, _as_round_gammas
 
 Array = jax.Array
 
@@ -37,112 +46,14 @@ def sgda(game: VectorGame, x0: Array, *, steps: int, gamma, key=None,
     )
 
 
-@partial(jax.jit, static_argnames=("steps", "stochastic"))
-def _local_sgd_sum_run(game, x0, gamma, key, *, steps: int, stochastic: bool):
-    def step(carry, _):
-        x, key = carry
-        key, sub = jax.random.split(key)
-        g = game.sum_gradient(x, sub if stochastic else None)
-        x = x - gamma * g
-        f1 = game.objective(0, x)
-        f2 = game.objective(1, x)
-        return (x, key), (f1, f2, jnp.sqrt(jnp.sum(x**2)))
-
-    (x, _), (f1s, f2s, norms) = jax.lax.scan(step, (x0, key), None, length=steps)
-    return x, f1s, f2s, norms
-
-
-def local_sgd_on_sum(game, x0: Array, *, steps: int, gamma: float,
-                     key=None, stochastic: bool = False):
-    """Local SGD on the summed objective of the Section B counterexample.
-
-    Returns (x_final, f1_trace, f2_trace, ||x||_trace). With
-    ``lambda_min(A) < 1/10`` the iterates (and one objective) diverge — the
-    Figure 4(left) phenomenon showing classical FL algorithms cannot solve
-    MpFL.
-    """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    x, f1s, f2s, norms = _local_sgd_sum_run(
-        game, x0, gamma, key, steps=steps, stochastic=stochastic
-    )
-    return x, np.asarray(f1s), np.asarray(f2s), np.asarray(norms)
-
-
-@partial(jax.jit, static_argnames=("steps", "stochastic"))
-def _eg_run(game, x0, gammas, key, *, steps: int, stochastic: bool):
-    def step(carry, gamma):
-        x, key = carry
-        key, k1, k2 = jax.random.split(key, 3)
-        if stochastic:
-            g_half = game.operator_stoch(x, k1)
-            x_half = x - gamma * g_half
-            g = game.operator_stoch(x_half, k2)
-        else:
-            x_half = x - gamma * game.operator(x)
-            g = game.operator(x_half)
-        x_new = x - gamma * g
-        res = jnp.sqrt(jnp.sum(game.operator(x_new) ** 2))
-        return (x_new, key), (x_new, res)
-
-    (x, _), (xs, res) = jax.lax.scan(step, (x0, key), gammas)
-    return x, xs, res
-
-
 def extragradient(game: VectorGame, x0: Array, *, steps: int, gamma,
                   key=None, stochastic: bool = True, x_star=None) -> PearlResult:
     """Fully-communicating stochastic extragradient (two syncs per step)."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if x_star is None:
-        x_star = game.equilibrium()
-    gammas = _as_round_gammas(gamma, steps)
-    x_final, xs, residuals = _eg_run(game, x0, gammas, key, steps=steps,
-                                     stochastic=stochastic)
-    init = jnp.sum((x0 - x_star) ** 2)
-    errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init
-    res0 = float(jnp.sqrt(jnp.sum(game.operator(x0) ** 2)))
-    return PearlResult(
-        x_final=x_final,
-        rel_errors=np.concatenate([[1.0], np.asarray(errs)]),
-        residuals=np.concatenate([[res0], np.asarray(residuals)]),
-        tau=1,
-        rounds=steps,
+    engine = PearlEngine(update=JointExtragradientUpdate())
+    return engine.run(
+        game, x0, rounds=steps, gamma=gamma, key=key, stochastic=stochastic,
+        x_star=x_star,
     )
-
-
-@partial(jax.jit, static_argnames=("tau", "rounds", "stochastic"))
-def _pearl_eg_run(game, x0, gammas, key, *, tau: int, rounds: int, stochastic: bool):
-    n = x0.shape[0]
-
-    def local(i, x_sync, gamma, key):
-        def step(x_i, k):
-            k1, k2 = jax.random.split(k)
-            if stochastic:
-                g_half = game.player_grad_stoch(i, x_i, x_sync, k1)
-                x_half = x_i - gamma * g_half
-                g = game.player_grad_stoch(i, x_half, x_sync, k2)
-            else:
-                x_half = x_i - gamma * game.player_grad(i, x_i, x_sync)
-                g = game.player_grad(i, x_half, x_sync)
-            return x_i - gamma * g, None
-
-        keys = jax.random.split(key, tau)
-        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
-        return x_i
-
-    def round_body(carry, gamma):
-        x_sync, key = carry
-        key, sub = jax.random.split(key)
-        pkeys = jax.random.split(sub, n)
-        x_next = jax.vmap(local, in_axes=(0, None, None, 0))(
-            jnp.arange(n), x_sync, gamma, pkeys
-        )
-        res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
-        return (x_next, key), (x_next, res)
-
-    (x, _), (xs, res) = jax.lax.scan(round_body, (x0, key), gammas)
-    return x, xs, res
 
 
 def pearl_eg(game: VectorGame, x0: Array, *, tau: int, rounds: int, gamma,
@@ -153,21 +64,27 @@ def pearl_eg(game: VectorGame, x0: Array, *, tau: int, rounds: int, gamma,
     stale snapshot; one synchronization per round. The paper's conclusion
     lists extragradient incorporation as future work.
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if x_star is None:
-        x_star = game.equilibrium()
-    gammas = _as_round_gammas(gamma, rounds)
-    x_final, xs, residuals = _pearl_eg_run(
-        game, x0, gammas, key, tau=tau, rounds=rounds, stochastic=stochastic
+    engine = PearlEngine(update=ExtragradientUpdate())
+    return engine.run(
+        game, x0, tau=tau, rounds=rounds, gamma=gamma, key=key,
+        stochastic=stochastic, x_star=x_star,
     )
-    init = jnp.sum((x0 - x_star) ** 2)
-    errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init
-    res0 = float(jnp.sqrt(jnp.sum(game.operator(x0) ** 2)))
-    return PearlResult(
-        x_final=x_final,
-        rel_errors=np.concatenate([[1.0], np.asarray(errs)]),
-        residuals=np.concatenate([[res0], np.asarray(residuals)]),
-        tau=tau,
-        rounds=rounds,
-    )
+
+
+def local_sgd_on_sum(game, x0: Array, *, steps: int, gamma: float,
+                     key=None, stochastic: bool = False):
+    """Local SGD on the summed objective of the Section B counterexample.
+
+    Returns (x_final, f1_trace, f2_trace, ||x||_trace). With
+    ``lambda_min(A) < 1/10`` the iterates (and one objective) diverge — the
+    Figure 4(left) phenomenon showing classical FL algorithms cannot solve
+    MpFL. Runs through the engine's joint-update path; the per-step objective
+    and norm traces are recovered from the recorded trajectory.
+    """
+    engine = PearlEngine(update=SumLocalSgdUpdate())
+    xs = engine.trajectory(game, x0, rounds=steps, gamma=gamma, key=key,
+                           stochastic=stochastic)
+    f1s = jax.vmap(lambda x: game.objective(0, x))(xs)
+    f2s = jax.vmap(lambda x: game.objective(1, x))(xs)
+    norms = jnp.sqrt(jnp.sum(xs**2, axis=(1, 2)))
+    return xs[-1], np.asarray(f1s), np.asarray(f2s), np.asarray(norms)

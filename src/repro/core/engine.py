@@ -1,0 +1,642 @@
+"""Unified PEARL engine: one rounds-scan, pluggable updates x communication.
+
+The paper's central object is a single loop — per-player local updates against
+a frozen snapshot, punctuated by periodic synchronization. Before this module
+the repo implemented that loop four separate times (PEARL-SGD, joint
+extragradient, PEARL-EG, Local-SGD-on-the-sum), each with a hard-coded update
+rule and exactly one sync pattern. :class:`PearlEngine` factors the loop into
+three orthogonal protocols:
+
+- :class:`PlayerUpdate` — what ONE local step does on a player's own block
+  (:class:`SgdUpdate`, :class:`ExtragradientUpdate`,
+  :class:`OptimisticGradientUpdate`, :class:`HeavyBallUpdate`);
+- :class:`SyncStrategy` — what the server broadcast looks like each round and
+  which players take part (:class:`ExactSync`, :class:`QuantizedSync`,
+  :class:`PartialParticipation`, :class:`DropoutSync`), plus the bytes each
+  synchronization moves in each direction;
+- the step-size *schedule* — a scalar, a per-round array (Thm 3.6), or any
+  callable ``rounds -> (rounds,)`` such as
+  :func:`repro.core.stepsize.gamma_warmup_cosine`.
+
+Fully-communicating baselines (joint extragradient, Local SGD on the summed
+objective) do not fit the per-player template — their step reads the OTHER
+players' fresh iterates mid-round — so they plug in as :class:`JointUpdate`
+rules that own the whole within-round computation while the engine keeps
+rounds, diagnostics, and communication accounting.
+
+The engine reproduces the legacy ``pearl_sgd`` / ``pearl_eg`` trajectories
+bit-for-bit (tests/test_engine.py pins this): the RNG chain is
+``key -> (key, sub); sub -> n player keys; player key -> tau step keys`` and
+each update rule consumes its step key exactly as the legacy loop did.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.game import VectorGame
+
+Array = jax.Array
+
+
+# =========================================================================
+# Result type (extended with communication accounting)
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class PearlResult:
+    """Trajectory diagnostics recorded at synchronization points.
+
+    ``bytes_up`` / ``bytes_down`` are per-round wire bytes derived from the
+    active :class:`SyncStrategy` (no wall clock involved): uplink counts each
+    participating player's block once; downlink counts the joint vector to
+    every participating player — the Section 3.1 convention of
+    :class:`repro.core.metrics.CommunicationModel`, now per-round and
+    compression-aware.
+    """
+
+    x_final: Array          # (n, d) final joint action x_{tau R}
+    rel_errors: np.ndarray  # (R+1,) ||x_{tau p} - x*||^2 / ||x_0 - x*||^2
+    residuals: np.ndarray   # (R+1,) ||F(x_{tau p})||
+    tau: int
+    rounds: int
+    bytes_up: np.ndarray | None = None    # (R,) uplink bytes per round
+    bytes_down: np.ndarray | None = None  # (R,) downlink bytes per round
+
+    @property
+    def iterations(self) -> int:
+        return self.tau * self.rounds
+
+    @property
+    def communications(self) -> int:
+        """Number of synchronization rounds (the paper's communication cost)."""
+        return self.rounds
+
+    @property
+    def total_bytes(self) -> int:
+        """Total wire bytes over the run (0 when accounting was not recorded)."""
+        if self.bytes_up is None or self.bytes_down is None:
+            return 0
+        return int(self.bytes_up.sum() + self.bytes_down.sum())
+
+
+# =========================================================================
+# Schedules
+# =========================================================================
+def as_round_gammas(gamma, rounds: int) -> jnp.ndarray:
+    """Normalize a step-size spec to a per-round array of shape (rounds,).
+
+    Accepts a scalar (constant step-size, Thms 3.3/3.4 and Cor 3.5), an array
+    of per-round values (Thm 3.6's round-indexed schedule — the paper keeps
+    gamma_k constant *within* each round), or any callable
+    ``rounds -> (rounds,)`` array (e.g. :func:`stepsize.gamma_warmup_cosine`).
+    """
+    if callable(gamma):
+        gamma = gamma(rounds)
+    g = jnp.asarray(gamma, dtype=jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    if g.ndim == 0:
+        return jnp.full((rounds,), g)
+    if g.shape != (rounds,):
+        raise ValueError(f"gamma must be scalar or shape ({rounds},), got {g.shape}")
+    return g
+
+
+# =========================================================================
+# PlayerUpdate protocol — one local step on a player's own block
+# =========================================================================
+class PlayerUpdate(abc.ABC):
+    """One local step of player ``i`` against the frozen reference ``x_ref``.
+
+    Implementations are frozen (hashable) dataclasses so they can be jit
+    static arguments. ``state`` is per-player local memory (e.g. momentum),
+    re-initialized at every synchronization — the snapshot the player reasons
+    against has changed, so carrying stale local memory across rounds would
+    mix gradients of different games.
+    """
+
+    name: str = "update"
+
+    def init_state(self, game: VectorGame, i: Array, x_i: Array, x_ref: Array):
+        """Local state at the start of a round (default: stateless)."""
+        del game, i, x_i, x_ref
+        return ()
+
+    @abc.abstractmethod
+    def step(self, game: VectorGame, i: Array, x_i: Array, x_ref: Array,
+             gamma: Array, key: Array, state, stochastic: bool):
+        """Return ``(x_i_next, state_next)`` for one local step."""
+
+
+def _grad(game, i, x_i, x_ref, key, stochastic: bool):
+    if stochastic:
+        return game.player_grad_stoch(i, x_i, x_ref, key)
+    return game.player_grad(i, x_i, x_ref)
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdUpdate(PlayerUpdate):
+    """Plain local SGD — paper Algorithm 1's inner step."""
+
+    name: str = "sgd"
+
+    def step(self, game, i, x_i, x_ref, gamma, key, state, stochastic):
+        g = _grad(game, i, x_i, x_ref, key, stochastic)
+        return x_i - gamma * g, state
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtragradientUpdate(PlayerUpdate):
+    """Local extragradient (Korpelevich) on the player's own block.
+
+    The paper's conclusion lists extragradient incorporation as future work;
+    composed with PEARL communication this is the beyond-paper ``pearl_eg``.
+    """
+
+    name: str = "extragradient"
+
+    def step(self, game, i, x_i, x_ref, gamma, key, state, stochastic):
+        k1, k2 = jax.random.split(key)
+        g_half = _grad(game, i, x_i, x_ref, k1, stochastic)
+        x_half = x_i - gamma * g_half
+        g = _grad(game, i, x_half, x_ref, k2, stochastic)
+        return x_i - gamma * g, state
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimisticGradientUpdate(PlayerUpdate):
+    """Optimistic gradient (OGDA): ``x - gamma * (2 g_k - g_{k-1})``.
+
+    Single oracle call per step (vs extragradient's two). The past-gradient
+    state initializes to the deterministic gradient at the round snapshot, so
+    the first local step of each round reduces to plain gradient descent.
+    """
+
+    name: str = "optimistic_gradient"
+
+    def init_state(self, game, i, x_i, x_ref):
+        return game.player_grad(i, x_i, x_ref)
+
+    def step(self, game, i, x_i, x_ref, gamma, key, state, stochastic):
+        g = _grad(game, i, x_i, x_ref, key, stochastic)
+        return x_i - gamma * (2.0 * g - state), g
+
+
+@dataclasses.dataclass(frozen=True)
+class HeavyBallUpdate(PlayerUpdate):
+    """Polyak heavy-ball momentum on the local block (velocity resets at sync)."""
+
+    beta: float = 0.9
+    name: str = "heavy_ball"
+
+    def init_state(self, game, i, x_i, x_ref):
+        return jnp.zeros_like(x_i)
+
+    def step(self, game, i, x_i, x_ref, gamma, key, state, stochastic):
+        g = _grad(game, i, x_i, x_ref, key, stochastic)
+        v = self.beta * state + g
+        return x_i - gamma * v, v
+
+
+# =========================================================================
+# JointUpdate protocol — fully-communicating baselines
+# =========================================================================
+class JointUpdate(abc.ABC):
+    """A round that operates on the WHOLE joint action with fresh iterates.
+
+    Used for baselines whose step cannot be decomposed into stale-snapshot
+    player blocks (joint extragradient syncs at the midpoint; Local SGD on the
+    summed objective follows the wrong vector field entirely).
+    ``syncs_per_round`` feeds the communication accounting; ``keys_per_round``
+    is how many PRNG keys the round consumes — the engine splits the carry
+    key into ``1 + keys_per_round`` exactly like the legacy loops did, which
+    keeps the stochastic baselines bit-for-bit reproducible.
+    """
+
+    name: str = "joint"
+    syncs_per_round: int = 1
+    keys_per_round: int = 1
+
+    @abc.abstractmethod
+    def round(self, game: VectorGame, x: Array, gamma: Array, keys: Array,
+              stochastic: bool) -> Array:
+        """Return the next joint action; ``keys`` has ``keys_per_round`` keys."""
+
+
+@dataclasses.dataclass(frozen=True)
+class JointExtragradientUpdate(JointUpdate):
+    """Fully-synchronized stochastic extragradient on the joint operator.
+
+    Two synchronizations per iteration: the extrapolation point ``x_half`` is
+    broadcast so every player's second gradient sees the others' half-steps.
+    """
+
+    name: str = "joint_extragradient"
+    syncs_per_round: int = 2
+    keys_per_round: int = 2
+
+    def round(self, game, x, gamma, keys, stochastic):
+        k1, k2 = keys
+        if stochastic:
+            g_half = game.operator_stoch(x, k1)
+            x_half = x - gamma * g_half
+            g = game.operator_stoch(x_half, k2)
+        else:
+            x_half = x - gamma * game.operator(x)
+            g = game.operator(x_half)
+        return x - gamma * g
+
+
+@dataclasses.dataclass(frozen=True)
+class SumLocalSgdUpdate(JointUpdate):
+    """Local SGD on the summed objective — the Section B failure mode.
+
+    Classical FL applied to the naive finite-sum formulation: the bilinear
+    couplings cancel in the sum, so the iterates follow a vector field that
+    diverges whenever ``lambda_min(A) < 1/10`` (Figure 4 left).
+    """
+
+    name: str = "sum_local_sgd"
+    syncs_per_round: int = 1
+    keys_per_round: int = 1
+
+    def round(self, game, x, gamma, keys, stochastic):
+        g = game.sum_gradient(x, keys[0] if stochastic else None)
+        return x - gamma * g
+
+
+# =========================================================================
+# SyncStrategy protocol — what the server broadcast looks like
+# =========================================================================
+class SyncStrategy(abc.ABC):
+    """Server-side communication pattern for one synchronization round.
+
+    A strategy controls three things:
+    - ``view(i, x_sync, ctx)`` — the reference snapshot player ``i`` locally
+      optimizes against (its own row is always exact: a player never
+      quantizes its own live block);
+    - ``mask(n, ctx)`` — which players' updated blocks the server receives
+      this round (``None`` = everyone); non-participating players keep their
+      stale block in the next snapshot;
+    - ``round_bytes(participants, n, d, base_bps)`` — per-round wire bytes.
+
+    Strategies are frozen hashable dataclasses (randomized ones carry an int
+    seed, not a PRNG key, so they can be jit static args); per-round
+    randomness lives in a key threaded through the rounds-scan, independent
+    of the sampling-noise key chain — switching strategy never perturbs the
+    gradient noise stream.
+    """
+
+    name: str = "sync"
+
+    # ----------------------------------------------------------- round state
+    def init_state(self):
+        return ()
+
+    def pre_round(self, state):
+        """Advance per-round strategy state; returns ``(state, ctx)``."""
+        return state, ()
+
+    # ------------------------------------------------------------- semantics
+    def view(self, i: Array, x_sync: Array, ctx) -> Array:
+        del i, ctx
+        return x_sync
+
+    def mask(self, n: int, ctx) -> Array | None:
+        """Boolean participation mask of shape ``(n,)`` or None for all."""
+        del n, ctx
+        return None
+
+    # ----------------------------------------------------------- trainer use
+    def compress(self, x: Array) -> Array:
+        """Wire representation of a tensor (used by the neural trainer's
+        pre-reduction quantization); exact by default."""
+        return x
+
+    # ------------------------------------------------------------ accounting
+    def wire_itemsize(self, base_bps: int) -> int:
+        """Bytes per scalar on the broadcast wire."""
+        return base_bps
+
+    def round_bytes(self, participants: np.ndarray, n: int, d: int,
+                    base_bps: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-round (uplink, downlink) byte arrays.
+
+        ``participants`` is the per-round count of players whose blocks the
+        server actually received. Uplink: one ``d``-block per participant at
+        the joint dtype. Downlink: the ``n*d`` joint vector to each
+        participant at the (possibly compressed) wire dtype.
+        """
+        up = participants * d * base_bps
+        down = participants * n * d * self.wire_itemsize(base_bps)
+        return up.astype(np.int64), down.astype(np.int64)
+
+
+def resolve_sync(sync: "SyncStrategy | None", sync_dtype) -> "SyncStrategy":
+    """Resolve the ``(sync, sync_dtype)`` argument pair used across adapters:
+    an explicit strategy wins, a bare dtype is shorthand for
+    ``QuantizedSync(dtype)``, neither means :class:`ExactSync`."""
+    if sync is not None:
+        return sync
+    if sync_dtype is not None:
+        return QuantizedSync(sync_dtype)
+    return ExactSync()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactSync(SyncStrategy):
+    """Every round, every player; full-precision broadcast (Algorithm 1)."""
+
+    name: str = "exact"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedSync(SyncStrategy):
+    """Compressed broadcast: players see the others' blocks quantized to
+    ``dtype`` (e.g. ``jnp.bfloat16``) while keeping their own block exact —
+    the paper's Section 3.1 compression future-work composed with local
+    steps. Quantization noise on the stale snapshot is absorbed by the
+    Theorem 3.4 ``sigma^2`` term."""
+
+    dtype: Any = jnp.bfloat16
+    name: str = "quantized"
+
+    def view(self, i, x_sync, ctx):
+        x_ref = x_sync.astype(self.dtype).astype(x_sync.dtype)
+        return x_ref.at[i].set(x_sync[i])
+
+    def compress(self, x):
+        return x.astype(self.dtype)
+
+    def wire_itemsize(self, base_bps):
+        del base_bps
+        return int(np.dtype(self.dtype).itemsize)
+
+
+class _RandomizedSync(SyncStrategy):
+    """Shared plumbing for strategies that draw a per-round player mask."""
+
+    seed: int
+
+    def init_state(self):
+        return jax.random.PRNGKey(self.seed)
+
+    def pre_round(self, state):
+        state, sub = jax.random.split(state)
+        return state, sub
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialParticipation(_RandomizedSync):
+    """Each round an independent random subset of players synchronizes
+    (GreedyFed-style client sampling transplanted to the game setting): a
+    player participates with probability ``fraction``; the rest keep their
+    stale block and move no bytes this round."""
+
+    fraction: float = 0.5
+    seed: int = 0
+    name: str = "partial"
+
+    def mask(self, n, ctx):
+        return jax.random.uniform(ctx, (n,)) < self.fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutSync(_RandomizedSync):
+    """Unreliable links: every player transmits, but each round a player's
+    sync is LOST with probability ``p`` (its stale block survives on the
+    server). Unlike :class:`PartialParticipation` the bytes are still paid —
+    the accounting charges the full round regardless of delivery."""
+
+    p: float = 0.1
+    seed: int = 0
+    name: str = "dropout"
+
+    def mask(self, n, ctx):
+        return jax.random.uniform(ctx, (n,)) >= self.p
+
+    def round_bytes(self, participants, n, d, base_bps):
+        full = np.full_like(participants, float(n))
+        return super().round_bytes(full, n, d, base_bps)
+
+
+# =========================================================================
+# The engine
+# =========================================================================
+@partial(jax.jit, static_argnames=("update", "sync", "tau", "stochastic"))
+def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
+                 update, sync: SyncStrategy, tau: int, stochastic: bool):
+    """One compiled program: rounds-scan over (local phase -> synchronize).
+
+    RNG chain (bit-compatible with the legacy loops): per round
+    ``key, sub = split(key)``; per-player keys ``split(sub, n)``; per-step
+    keys ``split(player_key, tau)``. Strategy randomness (participation
+    masks) is threaded separately so it never perturbs sampling noise.
+    """
+    n = x0.shape[0]
+
+    if isinstance(update, JointUpdate):
+        def round_body(carry, gamma):
+            x, key, s = carry
+            # split exactly as the legacy loops did (key, k1, ..., k_m) so
+            # stochastic baseline trajectories stay bit-for-bit reproducible
+            keys = jax.random.split(key, 1 + update.keys_per_round)
+            x_next = update.round(game, x, gamma, keys[1:], stochastic)
+            res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+            return (x_next, keys[0], s), (x_next, res, jnp.asarray(n, jnp.int32))
+    else:
+        def round_body(carry, gamma):
+            x_sync, key, s = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+
+            def local(i, pkey):
+                """tau local steps for player i against the frozen view."""
+                x_ref = sync.view(i, x_sync, ctx)
+                state0 = update.init_state(game, i, x_sync[i], x_ref)
+                keys = jax.random.split(pkey, tau)
+
+                def step(c, k):
+                    x_i, st = c
+                    x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
+                                          stochastic)
+                    return (x_i, st), None
+
+                (x_i, _), _ = jax.lax.scan(step, (x_sync[i], state0), keys)
+                return x_i
+
+            x_prop = jax.vmap(local)(jnp.arange(n), player_keys)
+            m = sync.mask(n, ctx)
+            if m is None:
+                x_next = x_prop
+                participants = jnp.asarray(n, jnp.int32)
+            else:
+                x_next = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+            return (x_next, key, s), (x_next, res, participants)
+
+    init = (x0, key, sync.init_state())
+    (x_final, _, _), (xs, residuals, participants) = jax.lax.scan(
+        round_body, init, gammas
+    )
+    return x_final, xs, residuals, participants
+
+
+@dataclasses.dataclass(frozen=True)
+class PearlEngine:
+    """Composable PEARL loop: ``update`` x ``sync`` x step-size schedule.
+
+    Every algorithm in :mod:`repro.core.pearl` and
+    :mod:`repro.core.baselines` is a ~5-line adapter over this class; new
+    variants (compressed sync, partial participation, momentum locals) are
+    constructor arguments, not new scan loops.
+    """
+
+    update: PlayerUpdate | JointUpdate = SgdUpdate()
+    sync: SyncStrategy = ExactSync()
+
+    def run(
+        self,
+        game: VectorGame,
+        x0: Array,
+        *,
+        rounds: int,
+        tau: int = 1,
+        gamma,
+        key: Array | None = None,
+        stochastic: bool = True,
+        x_star: Array | None = None,
+    ) -> PearlResult:
+        """Run ``rounds`` synchronization rounds and record diagnostics.
+
+        Args:
+          game:       the n-player game.
+          x0:         initial joint action, shape ``(n, d)``.
+          rounds:     number of communication rounds ``R``.
+          tau:        local steps per round (ignored by joint updates, which
+                      define their own within-round structure).
+          gamma:      scalar, per-round ``(rounds,)`` array, or callable
+                      ``rounds -> array`` (schedule).
+          key:        PRNG key (drives sampling noise; strategy randomness is
+                      seeded independently by the strategy itself).
+          stochastic: use the players' stochastic oracles or full gradients.
+          x_star:     equilibrium for error tracking; defaults to
+                      ``game.equilibrium()``.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if x_star is None:
+            x_star = game.equilibrium()
+        gammas = as_round_gammas(gamma, rounds)
+        x_final, xs, residuals, participants = _engine_scan(
+            game, x0, gammas, key,
+            update=self.update, sync=self.sync, tau=tau, stochastic=stochastic,
+        )
+        init_err_sq = jnp.sum((x0 - x_star) ** 2)
+        errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init_err_sq
+        res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
+
+        n, d = x0.shape
+        base_bps = int(np.dtype(x0.dtype).itemsize)
+        parts = np.asarray(participants, dtype=np.float64)
+        if isinstance(self.update, JointUpdate):
+            per_sync_up, per_sync_down = ExactSync().round_bytes(
+                parts, n, d, base_bps
+            )
+            bytes_up = self.update.syncs_per_round * per_sync_up
+            bytes_down = self.update.syncs_per_round * per_sync_down
+        else:
+            bytes_up, bytes_down = self.sync.round_bytes(parts, n, d, base_bps)
+
+        return PearlResult(
+            x_final=x_final,
+            rel_errors=np.concatenate([[1.0], np.asarray(errs)]),
+            residuals=np.concatenate([[float(res0)], np.asarray(residuals)]),
+            tau=1 if isinstance(self.update, JointUpdate) else tau,
+            rounds=rounds,
+            bytes_up=bytes_up,
+            bytes_down=bytes_down,
+        )
+
+    def trajectory(
+        self,
+        game: VectorGame,
+        x0: Array,
+        *,
+        rounds: int,
+        tau: int = 1,
+        gamma,
+        key: Array | None = None,
+        stochastic: bool = True,
+    ) -> Array:
+        """Raw per-round iterates ``(rounds, n, d)`` — no equilibrium needed.
+
+        For runs where :meth:`run`'s error tracking does not apply (e.g. the
+        Section B divergence demonstration, where no equilibrium is reached).
+        """
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        gammas = as_round_gammas(gamma, rounds)
+        _, xs, _, _ = _engine_scan(
+            game, x0, gammas, key,
+            update=self.update, sync=self.sync, tau=tau, stochastic=stochastic,
+        )
+        return xs
+
+
+# =========================================================================
+# Generic federated-round scaffold (shared with the neural trainer)
+# =========================================================================
+def make_federated_round(
+    local_step: Callable,
+    collect: Callable,
+    *,
+    unroll: bool = False,
+) -> Callable:
+    """The PEARL round template over arbitrary per-player state pytrees.
+
+    ``local_step(carry_i, batch, broadcast) -> (carry_i, metrics)`` is one
+    local optimization step of a single player; ``collect(stacked_carry)``
+    is the synchronization collective (e.g. the across-player parameter
+    mean). The returned ``round_fn(stacked_carry, stacked_batches,
+    broadcast)`` scans ``tau`` local steps per player (leading batch axis),
+    vmaps over players, then collects — the exact structure
+    :func:`_engine_scan` uses for dense games, reused by
+    :mod:`repro.train.pearl_trainer` for neural players where actions are
+    whole parameter pytrees.
+    """
+
+    def round_fn(stacked_carry, stacked_batches, broadcast):
+        def player(carry_i, batches_i):
+            def step(c, b):
+                return local_step(c, b, broadcast)
+
+            return jax.lax.scan(step, carry_i, batches_i, unroll=unroll)
+
+        new_carry, metrics = jax.vmap(player)(stacked_carry, stacked_batches)
+        return new_carry, collect(new_carry), metrics
+
+    return round_fn
+
+
+# ------------------------------------------------------------------ registry
+PLAYER_UPDATES: dict[str, Callable[[], PlayerUpdate]] = {
+    "sgd": SgdUpdate,
+    "extragradient": ExtragradientUpdate,
+    "optimistic_gradient": OptimisticGradientUpdate,
+    "heavy_ball": HeavyBallUpdate,
+}
+
+SYNC_STRATEGIES: dict[str, Callable[[], SyncStrategy]] = {
+    "exact": ExactSync,
+    "bf16": lambda: QuantizedSync(jnp.bfloat16),
+    "partial": PartialParticipation,
+    "dropout": DropoutSync,
+}

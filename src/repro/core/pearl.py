@@ -7,107 +7,35 @@ Every round ``p``:
          x^i_{k+1} = x^i_k - gamma_k * grad f_{i, xi}(x^i_k ; x^{-i}_{tau p});
   3. the server collects the updated blocks (synchronization).
 
-Here the whole round is a single compiled program: the ``tau`` local steps are
-a ``jax.lax.scan`` per player, players run under ``vmap``, and rounds are an
-outer ``scan`` — mirroring the fact that no communication happens inside a
-round. For the production multi-pod variant where each player owns a sharded
-LLM, see :mod:`repro.train.pearl_trainer` (players = pods; synchronization =
-the only cross-pod collective).
+This module is now a thin adapter over :class:`repro.core.engine.PearlEngine`
+(SGD local update x exact-or-quantized sync): the rounds-scan, vmap over
+players, and communication accounting all live in the engine. For the
+production multi-pod variant where each player owns a sharded LLM, see
+:mod:`repro.train.pearl_trainer` (players = pods; synchronization = the only
+cross-pod collective).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import (
+    PearlEngine,
+    PearlResult,
+    SgdUpdate,
+    SyncStrategy,
+    as_round_gammas,
+    resolve_sync,
+)
 from repro.core.game import VectorGame
 
 Array = jax.Array
 
+# Back-compat aliases: PearlResult and the gamma normalizer originated here.
+_as_round_gammas = as_round_gammas
 
-@dataclasses.dataclass(frozen=True)
-class PearlResult:
-    """Trajectory diagnostics recorded at synchronization points."""
-
-    x_final: Array          # (n, d) final joint action x_{tau R}
-    rel_errors: np.ndarray  # (R+1,) ||x_{tau p} - x*||^2 / ||x_0 - x*||^2
-    residuals: np.ndarray   # (R+1,) ||F(x_{tau p})||
-    tau: int
-    rounds: int
-
-    @property
-    def iterations(self) -> int:
-        return self.tau * self.rounds
-
-    @property
-    def communications(self) -> int:
-        """Number of synchronization rounds (the paper's communication cost)."""
-        return self.rounds
-
-
-def _as_round_gammas(gamma, rounds: int) -> jnp.ndarray:
-    """Normalize a step-size spec to a per-round array of shape (rounds,).
-
-    Accepts a scalar (constant step-size, Thms 3.3/3.4 and Cor 3.5) or an
-    array of per-round values (Thm 3.6's round-indexed schedule — the paper
-    keeps gamma_k constant *within* each round).
-    """
-    g = jnp.asarray(gamma, dtype=jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
-    if g.ndim == 0:
-        return jnp.full((rounds,), g)
-    if g.shape != (rounds,):
-        raise ValueError(f"gamma must be scalar or shape ({rounds},), got {g.shape}")
-    return g
-
-
-@partial(jax.jit, static_argnames=("tau", "rounds", "stochastic", "sync_dtype"))
-def _run(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
-         tau: int, rounds: int, stochastic: bool, sync_dtype=None):
-    n = x0.shape[0]
-
-    def local_updates(i, x_sync, gamma, key):
-        """tau local SGD steps for player i against the frozen snapshot.
-
-        With ``sync_dtype`` the player sees a QUANTIZED view of the others'
-        blocks (compressed broadcast) while keeping its own block exact.
-        """
-        if sync_dtype is not None:
-            x_ref = x_sync.astype(sync_dtype).astype(x_sync.dtype)
-            x_ref = x_ref.at[i].set(x_sync[i])
-        else:
-            x_ref = x_sync
-
-        def step(x_i, k):
-            if stochastic:
-                g = game.player_grad_stoch(i, x_i, x_ref, k)
-            else:
-                g = game.player_grad(i, x_i, x_ref)
-            return x_i - gamma * g, None
-
-        keys = jax.random.split(key, tau)
-        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
-        return x_i
-
-    def round_body(carry, inp):
-        x_sync, key = carry
-        gamma = inp
-        key, sub = jax.random.split(key)
-        player_keys = jax.random.split(sub, n)
-        # All players update in parallel, then the server concatenates: the
-        # new joint snapshot IS the synchronization step.
-        x_next = jax.vmap(local_updates, in_axes=(0, None, None, 0))(
-            jnp.arange(n), x_sync, gamma, player_keys
-        )
-        res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
-        return (x_next, key), (x_next, res)
-
-    (x_final, _), (xs, residuals) = jax.lax.scan(round_body, (x0, key), gammas)
-    return x_final, xs, residuals
+__all__ = ["PearlResult", "pearl_sgd", "pearl_sgd_mean"]
 
 
 def pearl_sgd(
@@ -121,6 +49,7 @@ def pearl_sgd(
     stochastic: bool = True,
     x_star: Array | None = None,
     sync_dtype=None,
+    sync: SyncStrategy | None = None,
 ) -> PearlResult:
     """Run PEARL-SGD (Algorithm 1) and record sync-point diagnostics.
 
@@ -129,35 +58,22 @@ def pearl_sgd(
       x0:         initial joint action, shape ``(n, d)``.
       tau:        synchronization interval (local steps per round).
       rounds:     number of communication rounds ``R``.
-      gamma:      scalar constant step-size or per-round array (Thm 3.6).
+      gamma:      scalar constant step-size, per-round array (Thm 3.6), or a
+                  schedule callable ``rounds -> array``.
       key:        PRNG key (required when ``stochastic=True``).
       stochastic: use the players' stochastic oracles (Thm 3.4/3.6) or the
                   full-batch gradients (Thm 3.3).
       x_star:     equilibrium for error tracking; defaults to
                   ``game.equilibrium()``.
-      sync_dtype: quantize the server broadcast (e.g. jnp.bfloat16) — the
-                  paper's compression future-work composed with local steps.
+      sync_dtype: quantize the server broadcast (e.g. jnp.bfloat16) — shorthand
+                  for ``sync=QuantizedSync(sync_dtype)``.
+      sync:       any :class:`repro.core.engine.SyncStrategy` (exact,
+                  quantized, partial participation, dropout links).
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if x_star is None:
-        x_star = game.equilibrium()
-    gammas = _as_round_gammas(gamma, rounds)
-    x_final, xs, residuals = _run(
-        game, x0, gammas, key, tau=tau, rounds=rounds, stochastic=stochastic,
-        sync_dtype=sync_dtype,
-    )
-    init_err_sq = jnp.sum((x0 - x_star) ** 2)
-    errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init_err_sq
-    res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
-    rel_errors = np.concatenate([[1.0], np.asarray(errs)])
-    residuals = np.concatenate([[float(res0)], np.asarray(residuals)])
-    return PearlResult(
-        x_final=x_final,
-        rel_errors=rel_errors,
-        residuals=residuals,
-        tau=tau,
-        rounds=rounds,
+    engine = PearlEngine(update=SgdUpdate(), sync=resolve_sync(sync, sync_dtype))
+    return engine.run(
+        game, x0, tau=tau, rounds=rounds, gamma=gamma, key=key,
+        stochastic=stochastic, x_star=x_star,
     )
 
 

@@ -8,6 +8,14 @@ synchronization interval ``tau``. Rates/step-sizes follow the paper exactly:
 - :func:`gamma_horizon`     — Cor 3.5: ``1/(mu * eta * (1+2q))`` with
   ``T = 2 (1+2q) eta log(eta)`` solved for ``eta`` (requires ``eta > kappa*tau``).
 - :func:`gamma_decreasing`  — Thm 3.6 round-indexed piecewise schedule.
+
+Beyond-paper round schedules consumed by the engine (any callable
+``rounds -> (rounds,)`` plugs into :func:`repro.core.engine.as_round_gammas`):
+
+- :func:`gamma_warmup_cosine` — linear warmup to a peak then cosine decay,
+  the standard large-batch training schedule transplanted to communication
+  rounds (the paper keeps gamma constant within a round, so scheduling at
+  round granularity preserves the Thm 3.6 analysis structure).
 """
 
 from __future__ import annotations
@@ -99,3 +107,34 @@ def gamma_decreasing(c: GameConstants, tau: int, rounds: int) -> np.ndarray:
     warm = 1.0 / (c.ell * tau * (1.0 + 2.0 * q))
     decay = (2.0 * p + 1.0) / ((p + 1.0) ** 2) / (tau * c.mu)
     return np.where(p < p0, warm, decay)
+
+
+def gamma_warmup_cosine(
+    peak: float,
+    rounds: int | None = None,
+    *,
+    warmup_frac: float = 0.1,
+    final_frac: float = 0.05,
+):
+    """Linear warmup to ``peak`` over ``warmup_frac`` of the rounds, then
+    cosine decay to ``final_frac * peak`` — per-ROUND, not per-step, so the
+    step-size stays constant within each round as the paper's analysis
+    assumes.
+
+    With ``rounds`` given, returns the ``(rounds,)`` array directly; without
+    it, returns a schedule callable ``rounds -> array`` that plugs straight
+    into the engine's ``gamma`` argument.
+    """
+    if not 0.0 <= warmup_frac < 1.0:
+        raise ValueError(f"warmup_frac must be in [0, 1), got {warmup_frac}")
+
+    def build(r: int) -> np.ndarray:
+        p = np.arange(r, dtype=np.float64)
+        warmup = max(int(round(warmup_frac * r)), 1)
+        ramp = peak * (p + 1.0) / warmup
+        t = np.clip((p - warmup) / max(r - 1 - warmup, 1), 0.0, 1.0)
+        floor = final_frac * peak
+        cos = floor + (peak - floor) * 0.5 * (1.0 + np.cos(math.pi * t))
+        return np.where(p < warmup, ramp, cos)
+
+    return build(rounds) if rounds is not None else build

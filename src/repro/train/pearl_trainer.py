@@ -16,6 +16,14 @@ instance we scale up. PEARL-SGD (Algorithm 1) becomes:
     production mesh, player = pod, so this mean is THE only ``pod``-axis
     collective; every step of the tau-step inner scan stays pod-local.
 
+This module is the neural-player adapter over the unified engine: the
+"tau local steps under vmap, then one collective" round template comes from
+:func:`repro.core.engine.make_federated_round` (the same structure the dense
+:class:`~repro.core.engine.PearlEngine` compiles for vector games), the wire
+quantization comes from the engine's :class:`~repro.core.engine.SyncStrategy`
+objects, and :class:`PearlCommReport` derives its bytes-per-scalar from the
+active sync dtype instead of hard-coding fp32.
+
 The non-local baseline (SGDA / gradient play, tau = 1) synchronizes every
 step; the paper's claim — same accuracy with tau-fold less communication —
 shows up in the dry-run HLO as a tau-fold drop in pod-axis collective bytes
@@ -25,32 +33,57 @@ per local step (EXPERIMENTS.md Section Perf).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import (
+    ExactSync,
+    QuantizedSync,
+    SyncStrategy,
+    make_federated_round,
+    resolve_sync,
+)
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.train.train_step import make_loss_fn
 
 Array = jax.Array
 
 
-def tree_mean(stacked, axis: int = 0, sync_dtype=None):
+def _resolve_trainer_sync(sync: SyncStrategy | None, sync_dtype) -> SyncStrategy:
+    """The neural trainer implements exact and quantized synchronization only:
+    mask-based strategies (partial participation, dropout links) would need
+    the round to merge stale per-player pytrees, which the pod-mapped
+    collective does not express yet (see ROADMAP "Adaptive participation")."""
+    strategy = resolve_sync(sync, sync_dtype)
+    if not isinstance(strategy, (ExactSync, QuantizedSync)):
+        raise NotImplementedError(
+            f"PearlTrainer supports ExactSync/QuantizedSync, got "
+            f"{type(strategy).__name__}"
+        )
+    return strategy
+
+
+def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None = None):
     """Across-player parameter mean — the PEARL synchronization collective.
 
-    ``sync_dtype`` (e.g. jnp.bfloat16) quantizes the operands BEFORE the
-    cross-player reduction, so the pod-axis collective moves half (or less)
-    the bytes — the paper's "gradient compression" future-work item composed
-    with local steps: wire bytes fall by tau x (32/bits). Convergence-wise
-    this adds bounded quantization noise to the stale snapshot, absorbed by
-    Theorem 3.4's sigma^2 term (validated in tests/test_pearl_trainer.py).
+    The wire representation is delegated to the engine's sync strategy:
+    ``QuantizedSync(jnp.bfloat16)`` (or the ``sync_dtype`` shorthand)
+    quantizes the operands BEFORE the cross-player reduction, so the pod-axis
+    collective moves half (or less) the bytes — the paper's "gradient
+    compression" future-work item composed with local steps: wire bytes fall
+    by tau x (32/bits). Convergence-wise this adds bounded quantization noise
+    to the stale snapshot, absorbed by Theorem 3.4's sigma^2 term (validated
+    in tests/test_pearl_trainer.py).
     """
+    strategy = _resolve_trainer_sync(sync, sync_dtype)
+    quantized = isinstance(strategy, QuantizedSync)
 
     def mean(x):
-        if sync_dtype is not None:
+        if quantized:
             # Quantize then reduce. NOTE (Section Perf, recorded negative
             # result): the XLA CPU build reassociates the convert around its
             # f32 reduction accumulator, so the compiled cross-pod wire stays
@@ -58,7 +91,7 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None):
             # explicit shard_map psum over a bf16 buffer on real TPU
             # backends. The convergence semantics (bounded quantization
             # noise) hold either way and are what the tests validate.
-            return jnp.mean(x.astype(sync_dtype), axis=axis).astype(jnp.float32)
+            return jnp.mean(strategy.compress(x), axis=axis).astype(jnp.float32)
         return jnp.mean(x, axis=axis, dtype=jnp.float32)
 
     return jax.tree.map(mean, stacked)
@@ -80,8 +113,9 @@ def make_pearl_round(
     use_kernels: bool = False,
     unroll: bool = False,
     sync_dtype=None,
+    sync: SyncStrategy | None = None,
 ) -> Callable:
-    """Build one compiled PEARL round.
+    """Build one compiled PEARL round on the engine's federated-round template.
 
     ``pearl_round(stacked_params, stacked_opt, batches, xbar)``:
       - stacked_params/opt: player-stacked pytrees, leading dim n (sharded
@@ -93,34 +127,34 @@ def make_pearl_round(
     Returns (new_params, new_opt, new_xbar, metrics). ``new_xbar`` is the
     synchronization output; in PEARL it is computed once per round.
     """
+    strategy = _resolve_trainer_sync(sync, sync_dtype)
     loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
                            use_kernels=use_kernels, prox_lambda=prox_lambda)
 
-    def player_local_steps(params_i, opt_i, batches_i, xbar):
-        """tau optimizer steps against the frozen snapshot xbar."""
-
-        def local_step(carry, tokens):
-            p, o = carry
-            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                p, {"tokens": tokens}, xbar
-            )
-            if clip_norm:
-                grads = clip_by_global_norm(grads, clip_norm)
-            updates, o = optimizer.update(grads, o, p)
-            p = apply_updates(p, updates)
-            return (p, o), metrics
-
-        (params_i, opt_i), metrics = jax.lax.scan(
-            local_step, (params_i, opt_i), batches_i, unroll=unroll
+    def local_step(carry, tokens, xbar):
+        """One optimizer step of a single player against the frozen xbar."""
+        p, o = carry
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, {"tokens": tokens}, xbar
         )
-        return params_i, opt_i, metrics
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, o = optimizer.update(grads, o, p)
+        p = apply_updates(p, updates)
+        return (p, o), metrics
+
+    round_fn = make_federated_round(
+        local_step,
+        lambda stacked: tree_mean(stacked[0], sync=strategy),
+        unroll=unroll,
+    )
 
     def pearl_round(stacked_params, stacked_opt, batches, xbar):
-        new_p, new_o, metrics = jax.vmap(
-            player_local_steps, in_axes=(0, 0, 0, None)
-        )(stacked_params, stacked_opt, batches["tokens"], xbar)
-        # --- synchronization: the only cross-player (pod-axis) collective ---
-        new_xbar = tree_mean(new_p, sync_dtype=sync_dtype)
+        # --- tau local steps per player, then the only cross-player
+        # (pod-axis) collective: the across-player mean ---
+        (new_p, new_o), new_xbar, metrics = round_fn(
+            (stacked_params, stacked_opt), batches["tokens"], xbar
+        )
         return new_p, new_o, new_xbar, metrics
 
     return pearl_round
@@ -128,13 +162,47 @@ def make_pearl_round(
 
 @dataclasses.dataclass
 class PearlCommReport:
-    """Communication accounting for a PEARL training run (paper Section 3.1)."""
+    """Communication accounting for a PEARL training run (paper Section 3.1).
+
+    ``bytes_per_scalar`` derives from the active sync dtype when not given
+    explicitly: fp32 exact sync reports 4, a ``sync_dtype=jnp.bfloat16``
+    compressed sync reports 2. The accounting is direction-aware and follows
+    what :func:`tree_mean` actually does: players quantize BEFORE the
+    reduction (uplink at the sync dtype) while the server broadcasts the f32
+    mean (downlink at 4). An explicit ``bytes_per_scalar`` overrides both
+    directions (legacy behavior). NOTE the dense engine's
+    :class:`~repro.core.engine.QuantizedSync` compresses the opposite
+    direction (broadcast quantized, uplink exact) — the two systems quantize
+    different wires, and each accounting matches its own system.
+    """
 
     n_players: int
     param_count: int
     tau: int
     rounds: int
-    bytes_per_scalar: int = 4   # 2 with bf16 compressed sync
+    bytes_per_scalar: int | None = None
+    sync_dtype: Any = None
+
+    def __post_init__(self):
+        self._explicit_bps = self.bytes_per_scalar is not None
+        if self.bytes_per_scalar is None:
+            self.bytes_per_scalar = (
+                int(np.dtype(self.sync_dtype).itemsize)
+                if self.sync_dtype is not None else 4
+            )
+
+    @property
+    def downlink_bytes_per_scalar(self) -> int:
+        """f32 mean broadcast unless an explicit override was given."""
+        return self.bytes_per_scalar if self._explicit_bps else 4
+
+    @classmethod
+    def from_sync(cls, sync: SyncStrategy, *, n_players: int, param_count: int,
+                  tau: int, rounds: int) -> "PearlCommReport":
+        """Report for an engine sync strategy (exact or quantized)."""
+        dtype = sync.dtype if isinstance(sync, QuantizedSync) else None
+        return cls(n_players=n_players, param_count=param_count, tau=tau,
+                   rounds=rounds, sync_dtype=dtype)
 
     @property
     def sync_bytes_per_round(self) -> int:
@@ -142,8 +210,23 @@ class PearlCommReport:
         # joint/mean vector: per the paper the downlink carries the full
         # concatenation; the consensus game needs only the mean (same size).
         up = self.n_players * self.param_count * self.bytes_per_scalar
-        down = self.n_players * self.param_count * self.bytes_per_scalar
+        down = self.n_players * self.param_count * self.downlink_bytes_per_scalar
         return up + down
+
+    def per_round_bytes(self) -> tuple[np.ndarray, np.ndarray]:
+        """(uplink, downlink) byte arrays of shape ``(rounds,)`` — the same
+        per-round shape :class:`repro.core.engine.PearlResult` records."""
+        up = np.full(
+            (self.rounds,),
+            self.n_players * self.param_count * self.bytes_per_scalar,
+            dtype=np.int64,
+        )
+        down = np.full(
+            (self.rounds,),
+            self.n_players * self.param_count * self.downlink_bytes_per_scalar,
+            dtype=np.int64,
+        )
+        return up, down
 
     @property
     def total_bytes(self) -> int:
@@ -164,6 +247,8 @@ class PearlTrainer:
         self.cfg = cfg
         self.tau = tau
         self.n_players = n_players
+        self.sync = _resolve_trainer_sync(round_kwargs.get("sync"),
+                                          round_kwargs.get("sync_dtype"))
         keys = jax.random.split(jax.random.PRNGKey(seed), n_players)
         params = [init_params(cfg, k) for k in keys]
         self.params = stack_players(params)
@@ -192,3 +277,17 @@ class PearlTrainer:
             rec["round"] = r
             self.history.append(rec)
         return self.history
+
+    def comm_report(self, rounds: int | None = None) -> PearlCommReport:
+        """Byte accounting for this trainer's sync strategy over ``rounds``
+        (defaults to the rounds run so far)."""
+        from repro.roofline.analysis import count_params
+        from repro.models.model import param_shapes
+
+        return PearlCommReport.from_sync(
+            self.sync,
+            n_players=self.n_players,
+            param_count=count_params(param_shapes(self.cfg)),
+            tau=self.tau,
+            rounds=len(self.history) if rounds is None else rounds,
+        )

@@ -46,7 +46,9 @@ class TestDebugMeshDryrun:
             lowered, _ = build_train_lowered(cfg, shape, mesh)
             compiled = lowered.compile()
             coll = parse_collectives(compiled.as_text(), chips_per_pod=4)
-            print(json.dumps({'flops': compiled.cost_analysis()['flops'],
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca  # jax<0.4.30 wraps in a list
+            print(json.dumps({'flops': ca['flops'],
                               'coll_ops': coll.count,
                               'coll_bytes': coll.total_bytes}))
         """)
@@ -69,8 +71,9 @@ class TestDebugMeshDryrun:
             lowered, _ = build_decode_lowered(cfg, shape, mesh,
                                               window=cfg.sliding_window)
             compiled = lowered.compile()
-            print(json.dumps({'ok': True,
-                              'flops': compiled.cost_analysis()['flops']}))
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca  # jax<0.4.30 wraps in a list
+            print(json.dumps({'ok': True, 'flops': ca['flops']}))
         """)
         assert json.loads(out.strip().splitlines()[-1])["ok"]
 

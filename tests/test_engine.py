@@ -1,0 +1,349 @@
+"""The unified PEARL engine: equivalence, new plugins, communication accounting.
+
+The load-bearing test is the bit-for-bit equivalence of the engine against
+compact copies of the PRE-ENGINE scan loops (the seed repo's ``_run`` and
+``_pearl_eg_run``): the refactor must not perturb a single ULP of the paper
+reproductions, including the RNG chain. The public ``pearl_sgd`` /
+``pearl_eg`` adapters are exercised through the engine, so this pins the
+whole stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.baselines import pearl_eg
+from repro.core.engine import (
+    DropoutSync,
+    ExactSync,
+    ExtragradientUpdate,
+    HeavyBallUpdate,
+    JointExtragradientUpdate,
+    OptimisticGradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+    SgdUpdate,
+    as_round_gammas,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.metrics import final_plateau
+from repro.core.pearl import pearl_sgd
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0(quad):
+    return jnp.asarray(
+        np.random.default_rng(7).standard_normal((quad.n, quad.d)),
+        dtype=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------- references
+def _legacy_pearl_sgd(game, x0, gammas, key, *, tau, stochastic, sync_dtype=None):
+    """Verbatim-compact copy of the seed repo's pearl.py::_run scan loop."""
+    n = x0.shape[0]
+
+    def local_updates(i, x_sync, gamma, key):
+        if sync_dtype is not None:
+            x_ref = x_sync.astype(sync_dtype).astype(x_sync.dtype)
+            x_ref = x_ref.at[i].set(x_sync[i])
+        else:
+            x_ref = x_sync
+
+        def step(x_i, k):
+            if stochastic:
+                g = game.player_grad_stoch(i, x_i, x_ref, k)
+            else:
+                g = game.player_grad(i, x_i, x_ref)
+            return x_i - gamma * g, None
+
+        keys = jax.random.split(key, tau)
+        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
+        return x_i
+
+    def round_body(carry, gamma):
+        x_sync, key = carry
+        key, sub = jax.random.split(key)
+        player_keys = jax.random.split(sub, n)
+        x_next = jax.vmap(local_updates, in_axes=(0, None, None, 0))(
+            jnp.arange(n), x_sync, gamma, player_keys
+        )
+        return (x_next, key), x_next
+
+    (x_final, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
+    return x_final, xs
+
+
+def _legacy_pearl_eg(game, x0, gammas, key, *, tau, stochastic):
+    """Verbatim-compact copy of the seed repo's baselines.py::_pearl_eg_run."""
+    n = x0.shape[0]
+
+    def local(i, x_sync, gamma, key):
+        def step(x_i, k):
+            k1, k2 = jax.random.split(k)
+            if stochastic:
+                g_half = game.player_grad_stoch(i, x_i, x_sync, k1)
+                x_half = x_i - gamma * g_half
+                g = game.player_grad_stoch(i, x_half, x_sync, k2)
+            else:
+                x_half = x_i - gamma * game.player_grad(i, x_i, x_sync)
+                g = game.player_grad(i, x_half, x_sync)
+            return x_i - gamma * g, None
+
+        keys = jax.random.split(key, tau)
+        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
+        return x_i
+
+    def round_body(carry, gamma):
+        x_sync, key = carry
+        key, sub = jax.random.split(key)
+        pkeys = jax.random.split(sub, n)
+        x_next = jax.vmap(local, in_axes=(0, None, None, 0))(
+            jnp.arange(n), x_sync, gamma, pkeys
+        )
+        return (x_next, key), x_next
+
+    (x, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
+    return x, xs
+
+
+# -------------------------------------------------------------- equivalence
+class TestLegacyEquivalence:
+    ROUNDS = 50
+
+    @pytest.mark.parametrize("tau", [1, 4])
+    @pytest.mark.parametrize("stochastic", [False, True])
+    @pytest.mark.parametrize("sync_dtype", [None, jnp.bfloat16])
+    def test_pearl_sgd_bit_for_bit(self, quad, x0, tau, stochastic, sync_dtype):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, tau)
+        gammas = as_round_gammas(gamma, self.ROUNDS)
+        key = jax.random.PRNGKey(0)
+        x_ref, _ = _legacy_pearl_sgd(
+            quad, x0, gammas, key, tau=tau, stochastic=stochastic,
+            sync_dtype=sync_dtype,
+        )
+        r = pearl_sgd(
+            quad, x0, tau=tau, rounds=self.ROUNDS, gamma=gamma, key=key,
+            stochastic=stochastic, sync_dtype=sync_dtype,
+        )
+        np.testing.assert_array_equal(np.asarray(r.x_final), np.asarray(x_ref))
+
+    @pytest.mark.parametrize("tau", [1, 4])
+    @pytest.mark.parametrize("stochastic", [False, True])
+    def test_pearl_eg_bit_for_bit(self, quad, x0, tau, stochastic):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, tau)
+        gammas = as_round_gammas(gamma, self.ROUNDS)
+        key = jax.random.PRNGKey(3)
+        x_ref, _ = _legacy_pearl_eg(
+            quad, x0, gammas, key, tau=tau, stochastic=stochastic,
+        )
+        r = pearl_eg(
+            quad, x0, tau=tau, rounds=self.ROUNDS, gamma=gamma, key=key,
+            stochastic=stochastic,
+        )
+        np.testing.assert_array_equal(np.asarray(r.x_final), np.asarray(x_ref))
+
+    @pytest.mark.parametrize("stochastic", [False, True])
+    def test_joint_extragradient_bit_for_bit(self, quad, x0, stochastic):
+        """The fully-communicating EG baseline preserves the seed repo's
+        key chain (key, k1, k2 = split(key, 3)) exactly."""
+        from repro.core.baselines import extragradient
+
+        c = quad.constants()
+        gamma = jnp.float32(0.5 / c.L_F)
+        gammas = as_round_gammas(gamma, self.ROUNDS)
+        key = jax.random.PRNGKey(2)
+
+        def step(carry, g):
+            x, k = carry
+            k, k1, k2 = jax.random.split(k, 3)
+            if stochastic:
+                x_half = x - g * quad.operator_stoch(x, k1)
+                grad = quad.operator_stoch(x_half, k2)
+            else:
+                x_half = x - g * quad.operator(x)
+                grad = quad.operator(x_half)
+            return (x - g * grad, k), None
+
+        (x_ref, _), _ = jax.lax.scan(step, (x0, key), gammas)
+        r = extragradient(quad, x0, steps=self.ROUNDS, gamma=gamma, key=key,
+                          stochastic=stochastic)
+        np.testing.assert_array_equal(np.asarray(r.x_final), np.asarray(x_ref))
+
+    def test_direct_engine_matches_adapter(self, quad, x0):
+        """PearlEngine called directly == the pearl_sgd adapter."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        eng = PearlEngine(update=SgdUpdate(), sync=ExactSync())
+        r1 = eng.run(quad, x0, tau=4, rounds=40, gamma=gamma,
+                     key=jax.random.PRNGKey(1))
+        r2 = pearl_sgd(quad, x0, tau=4, rounds=40, gamma=gamma,
+                       key=jax.random.PRNGKey(1))
+        np.testing.assert_array_equal(np.asarray(r1.x_final),
+                                      np.asarray(r2.x_final))
+        np.testing.assert_array_equal(r1.rel_errors, r2.rel_errors)
+
+
+# ------------------------------------------------------------- new plugins
+class TestNewUpdateRules:
+    def test_optimistic_gradient_converges(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        eng = PearlEngine(update=OptimisticGradientUpdate())
+        r = eng.run(quad, x0, tau=4, rounds=2500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-3
+        assert r.rel_errors[-1] < r.rel_errors[0]
+
+    def test_heavy_ball_converges(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        eng = PearlEngine(update=HeavyBallUpdate(beta=0.5))
+        r = eng.run(quad, x0, tau=4, rounds=2500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-3
+
+    def test_joint_eg_counts_two_syncs(self, quad, x0):
+        c = quad.constants()
+        eng = PearlEngine(update=JointExtragradientUpdate())
+        r = eng.run(quad, x0, rounds=10, gamma=0.5 / c.L_F, stochastic=False)
+        exact = PearlEngine().run(quad, x0, tau=1, rounds=10,
+                                  gamma=0.5 / c.L_F, stochastic=False)
+        assert r.total_bytes == 2 * exact.total_bytes
+
+
+class TestSyncStrategies:
+    def test_partial_participation_converges(self, quad, x0):
+        """Random half of the players syncing each round still reaches the
+        equilibrium (deterministic gradients, stale blocks for the rest)."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        eng = PearlEngine(update=SgdUpdate(),
+                          sync=PartialParticipation(fraction=0.5, seed=0))
+        r = eng.run(quad, x0, tau=4, rounds=3000, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 0.02
+
+    def test_partial_participation_moves_fewer_bytes(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        full = PearlEngine().run(quad, x0, tau=4, rounds=300, gamma=gamma,
+                                 stochastic=False)
+        part = PearlEngine(sync=PartialParticipation(fraction=0.5, seed=0)).run(
+            quad, x0, tau=4, rounds=300, gamma=gamma, stochastic=False
+        )
+        assert 0 < part.total_bytes < full.total_bytes
+
+    def test_dropout_converges_and_pays_full_bytes(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        eng = PearlEngine(sync=DropoutSync(p=0.2, seed=1))
+        r = eng.run(quad, x0, tau=4, rounds=2500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 5e-3
+        # unreliable links: transmissions are paid whether or not delivered
+        full = PearlEngine().run(quad, x0, tau=4, rounds=2500, gamma=gamma,
+                                 stochastic=False)
+        assert r.total_bytes == full.total_bytes
+
+    def test_strategy_randomness_does_not_perturb_noise_stream(self, quad, x0):
+        """Switching sync strategy must not change the sampling-noise keys:
+        with fraction=1.0 partial participation IS exact sync, bit-for-bit,
+        even in the stochastic setting."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        key = jax.random.PRNGKey(5)
+        exact = PearlEngine().run(quad, x0, tau=4, rounds=60, gamma=gamma,
+                                  key=key)
+        part = PearlEngine(sync=PartialParticipation(fraction=1.0)).run(
+            quad, x0, tau=4, rounds=60, gamma=gamma, key=key
+        )
+        np.testing.assert_array_equal(np.asarray(exact.x_final),
+                                      np.asarray(part.x_final))
+
+    def test_quantized_downlink_bytes_halved(self, quad, x0):
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 2)
+        full = PearlEngine().run(quad, x0, tau=2, rounds=20, gamma=gamma)
+        comp = PearlEngine(sync=QuantizedSync(jnp.bfloat16)).run(
+            quad, x0, tau=2, rounds=20, gamma=gamma
+        )
+        np.testing.assert_array_equal(comp.bytes_up, full.bytes_up)
+        np.testing.assert_array_equal(comp.bytes_down, full.bytes_down // 2)
+
+
+# ------------------------------------------------------------- accounting
+class TestCommAccounting:
+    def test_exact_sync_bytes_match_section31(self, quad, x0):
+        """up = n*d*bps per round; down = n * (n*d) * bps (joint vector to
+        every player) — the CommunicationModel convention, per round."""
+        r = PearlEngine().run(quad, x0, tau=4, rounds=7, gamma=1e-3)
+        n, d = x0.shape
+        bps = np.dtype(np.asarray(x0).dtype).itemsize
+        assert r.bytes_up.shape == (7,)
+        assert int(r.bytes_up[0]) == n * d * bps
+        assert int(r.bytes_down[0]) == n * n * d * bps
+        assert r.total_bytes == 7 * (n * d * bps + n * n * d * bps)
+
+    def test_comm_report_derives_bytes_per_scalar(self):
+        from repro.train.pearl_trainer import PearlCommReport
+
+        exact = PearlCommReport(n_players=4, param_count=100, tau=2, rounds=3)
+        bf16 = PearlCommReport(n_players=4, param_count=100, tau=2, rounds=3,
+                               sync_dtype=jnp.bfloat16)
+        assert exact.bytes_per_scalar == 4
+        assert bf16.bytes_per_scalar == 2
+        # trainer semantics: uplink quantized (pre-reduction), f32 mean
+        # broadcast back — so bf16 saves the uplink half only
+        assert bf16.downlink_bytes_per_scalar == 4
+        assert bf16.total_bytes == exact.total_bytes * 3 // 4
+        up, down = bf16.per_round_bytes()
+        assert up.shape == (3,)
+        assert int(up.sum() + down.sum()) == bf16.total_bytes
+
+    def test_comm_report_from_sync(self):
+        from repro.train.pearl_trainer import PearlCommReport
+
+        rep = PearlCommReport.from_sync(
+            QuantizedSync(jnp.bfloat16), n_players=2, param_count=10, tau=4,
+            rounds=5,
+        )
+        assert rep.bytes_per_scalar == 2
+
+    def test_trainer_rejects_mask_strategies(self):
+        """The neural trainer cannot express participation masks yet; it must
+        refuse rather than silently train with exact sync."""
+        from repro.train.pearl_trainer import _resolve_trainer_sync
+
+        with pytest.raises(NotImplementedError):
+            _resolve_trainer_sync(PartialParticipation(fraction=0.5), None)
+
+
+# --------------------------------------------------------------- schedules
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        sched = stepsize.gamma_warmup_cosine(1.0, 100, warmup_frac=0.1,
+                                             final_frac=0.1)
+        assert sched.shape == (100,)
+        assert np.argmax(sched) == 9            # peak at the end of warmup
+        assert sched[0] < sched[9]
+        assert sched[-1] == pytest.approx(0.1, rel=1e-6)
+
+    def test_warmup_cosine_as_engine_schedule(self, quad, x0):
+        """The callable form plugs straight into the engine's gamma arg."""
+        c = quad.constants()
+        peak = stepsize.gamma_constant(c, 4)
+        sched = stepsize.gamma_warmup_cosine(peak, warmup_frac=0.05)
+        r = pearl_sgd(quad, x0, tau=4, rounds=2500, gamma=sched,
+                      stochastic=False)
+        assert r.rel_errors[-1] < 0.05
+
+    def test_bad_gamma_shape_raises(self):
+        with pytest.raises(ValueError):
+            as_round_gammas(np.ones(7), 9)
