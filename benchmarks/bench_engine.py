@@ -1,14 +1,24 @@
-"""Engine matrix sweep: update-rule x sync-strategy on the quadratic game.
+"""Engine sweeps: update x sync matrix, and bytes-to-equilibrium by topology.
 
-One row per (update, sync) cell: final relative error after a fixed
-communication budget plus the engine's per-round byte accounting — the
-"handle every scenario" demonstration that each paper variant and each
-beyond-paper communication regime is a constructor argument, not a new
-scan loop.
+Two benchmarks on the quadratic game:
+
+- ``run``: one row per (update, sync) cell — final relative error after a
+  fixed communication budget plus the engine's per-round byte accounting;
+- ``run_topologies``: the topology layer's headline question — how many WIRE
+  BYTES does each communication graph need to reach the equilibrium
+  neighborhood, swept over (star | ring | Erdos-Renyi) x tau. Star pays the
+  server downlink (``n`` blocks to every player); gossip pays per active edge
+  but relays full views and tolerates less coupling, so bytes-to-equilibrium
+  is the honest comparison, with edge-aware per-round accounting from
+  :mod:`repro.core.topology`.
+
+``python -m benchmarks.bench_engine --json BENCH_engine.json`` writes both
+sweeps as structured JSON so future PRs can track bytes-to-equilibrium.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -29,6 +39,8 @@ from repro.core.engine import (
     SgdUpdate,
 )
 from repro.core.games import make_quadratic_game
+from repro.core.metrics import rounds_to_reach
+from repro.core.topology import ErdosRenyi, Ring, Star
 
 
 UPDATES = {
@@ -43,6 +55,12 @@ SYNCS = {
     "bf16": QuantizedSync(jnp.bfloat16),
     "partial": PartialParticipation(fraction=0.5, seed=0),
     "dropout": DropoutSync(p=0.1, seed=0),
+}
+
+TOPOLOGIES = {
+    "star": Star(),
+    "ring": Ring(),
+    "erdos_renyi": ErdosRenyi(p=0.5, seed=2),   # seed chosen connected at n=6
 }
 
 
@@ -73,5 +91,84 @@ def run(tau: int = 4, rounds: int = 800):
     return rows
 
 
+def run_topologies(taus=(1, 4, 16), rounds: int = 4000,
+                   threshold: float = 1e-4):
+    """Bytes-to-equilibrium: star vs ring vs random graph x tau.
+
+    Weak-coupling game (gossip's stability margin shrinks with coupling: the
+    stale inconsistent views act like delays under the antisymmetric
+    coupling). Reports, per (topology, tau): rounds to reach ``threshold``
+    relative error and the cumulative edge-aware wire bytes at that round
+    (None when never reached within the budget).
+    """
+    game = make_quadratic_game(n=6, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+    c = game.constants()
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+
+    rows = []
+    t0 = time.perf_counter()
+    for tname, topo in TOPOLOGIES.items():
+        for tau in taus:
+            gamma = stepsize.gamma_constant(c, tau)
+            r = PearlEngine(topology=topo).run(
+                game, x0, tau=tau, rounds=rounds, gamma=gamma,
+                stochastic=False,
+            )
+            # rel_errors[0] is the pre-communication sentinel, so index
+            # ``hit`` means "after hit rounds" and per_round[:hit] is exactly
+            # the wire traffic spent to get there (hit=0 -> 0 bytes).
+            hit = rounds_to_reach(r.rel_errors, threshold)
+            per_round = r.bytes_up + r.bytes_down
+            bytes_to_eq = int(per_round[:hit].sum()) if hit is not None else None
+            rows.append({
+                "topology": tname,
+                "tau": tau,
+                "rounds_to_eq": hit,
+                "bytes_to_eq": bytes_to_eq,
+                "final_rel_error": float(r.rel_errors[-1]),
+                "bytes_per_round": int(per_round[0]),
+            })
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+
+    def _fmt(row):
+        kb = "-" if row["bytes_to_eq"] is None else f"{row['bytes_to_eq'] / 1e3:.0f}"
+        return (f"{row['topology']}xtau{row['tau']}:"
+                f"R={row['rounds_to_eq']},KB={kb}")
+
+    emit("engine_topology", us, ";".join(_fmt(r) for r in rows))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--tau", type=int, default=4)
+    parser.add_argument("--rounds", type=int, default=800)
+    parser.add_argument("--topology-rounds", type=int, default=4000)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write both sweeps as structured JSON "
+                             "(BENCH_*.json convention for tracking)")
+    args = parser.parse_args()
+
+    matrix = run(tau=args.tau, rounds=args.rounds)
+    topo = run_topologies(rounds=args.topology_rounds)
+    if args.json:
+        payload = {
+            "benchmark": "bench_engine",
+            "matrix": [
+                {"update": u, "sync": s, "rel_error": float(e),
+                 "total_bytes": int(b)} for u, s, e, b in matrix
+            ],
+            "topology": topo,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
 if __name__ == "__main__":
-    run()
+    main()

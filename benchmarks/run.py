@@ -41,6 +41,8 @@ def main() -> None:
             rounds=100 if FAST else 150, n_seeds=2 if FAST else 3)),
         ("engine", lambda: bench_engine.run(
             rounds=400 if FAST else 800)),
+        ("engine_topology", lambda: bench_engine.run_topologies(
+            rounds=2000 if FAST else 4000)),
         ("kernels", bench_kernels.run),
         ("pearl_comm", lambda: bench_pearl_comm.run(
             local_steps=16 if FAST else 24)),

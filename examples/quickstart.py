@@ -3,13 +3,18 @@
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --method extragradient --sync bf16
     PYTHONPATH=src python examples/quickstart.py --method optimistic_gradient --sync partial
+    PYTHONPATH=src python examples/quickstart.py --topology ring
 
 Builds the paper's Section 4.1 quadratic game, runs the chosen local update
-rule under the chosen communication strategy for a few synchronization
-intervals tau, and prints the relative error after a fixed communication
-budget — the paper's headline: more local steps, fewer communications, same
-(or better) accuracy. ``--method/--sync`` expose the engine's pluggable
-update x communication matrix (see README "Engine architecture").
+rule under the chosen communication strategy and topology for a few
+synchronization intervals tau, and prints the relative error after a fixed
+communication budget — the paper's headline: more local steps, fewer
+communications, same (or better) accuracy. ``--method/--sync/--topology``
+expose the engine's pluggable update x compression/participation x topology
+matrix (see README "Engine architecture" and "Topology layer"). Server-free
+topologies use a weak-coupling game: gossip's stale inconsistent views act
+like delays under the antisymmetric coupling, so its stability margin shrinks
+as the coupling grows.
 """
 
 import argparse
@@ -21,24 +26,30 @@ import numpy as np
 from repro.core import stepsize
 from repro.core.engine import PLAYER_UPDATES, SYNC_STRATEGIES, PearlEngine
 from repro.core.games import make_quadratic_game
+from repro.core.topology import TOPOLOGIES
 
 parser = argparse.ArgumentParser(description=__doc__)
 parser.add_argument("--method", choices=sorted(PLAYER_UPDATES), default="sgd",
                     help="local update rule each player runs between syncs")
 parser.add_argument("--sync", choices=sorted(SYNC_STRATEGIES), default="exact",
-                    help="server communication strategy at each round")
+                    help="compression/participation strategy at each round")
+parser.add_argument("--topology", choices=sorted(TOPOLOGIES), default="star",
+                    help="communication graph (star = the paper's server)")
 parser.add_argument("--rounds", type=int, default=2500,
                     help="communication budget (rounds)")
 args = parser.parse_args()
 
-game = make_quadratic_game(n=5, d=10, M=100, batch_size=1)
+topology = TOPOLOGIES[args.topology]()
+L_B = 20.0 if topology.is_server else 1.0
+game = make_quadratic_game(n=5, d=10, M=100, L_B=L_B, batch_size=1)
 consts = game.constants()
 print(f"game: n={game.n} d={game.d} kappa={consts.kappa:.0f} q={consts.q:.3f}")
-print(f"engine: method={args.method} sync={args.sync}")
+print(f"engine: method={args.method} sync={args.sync} topology={args.topology}")
 
 x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
 engine = PearlEngine(update=PLAYER_UPDATES[args.method](),
-                     sync=SYNC_STRATEGIES[args.sync]())
+                     sync=SYNC_STRATEGIES[args.sync](),
+                     topology=topology)
 
 for tau in (1, 4, 20):
     gamma = stepsize.gamma_constant(consts, tau)

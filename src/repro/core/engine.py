@@ -10,10 +10,16 @@ three orthogonal protocols:
 - :class:`PlayerUpdate` — what ONE local step does on a player's own block
   (:class:`SgdUpdate`, :class:`ExtragradientUpdate`,
   :class:`OptimisticGradientUpdate`, :class:`HeavyBallUpdate`);
-- :class:`SyncStrategy` — what the server broadcast looks like each round and
-  which players take part (:class:`ExactSync`, :class:`QuantizedSync`,
-  :class:`PartialParticipation`, :class:`DropoutSync`), plus the bytes each
+- :class:`SyncStrategy` — the wire behaviour of one synchronization:
+  compression (:class:`ExactSync`, :class:`QuantizedSync`) and participation
+  (:class:`PartialParticipation`, :class:`DropoutSync`), plus the bytes each
   synchronization moves in each direction;
+- :class:`~repro.core.topology.Topology` — WHO talks to whom: the default
+  :class:`~repro.core.topology.Star` is the paper's server broadcast (the
+  bit-for-bit legacy path); graph topologies (ring, torus, random, ...)
+  replace it with doubly-stochastic neighbor averaging over per-player views
+  of the joint action, composed orthogonally with the same compression and
+  participation strategies;
 - the step-size *schedule* — a scalar, a per-round array (Thm 3.6), or any
   callable ``rounds -> (rounds,)`` such as
   :func:`repro.core.stepsize.gamma_warmup_cosine`.
@@ -42,6 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.game import VectorGame
+from repro.core.topology import (
+    Star,
+    Topology,
+    direction_itemsizes,
+    gossip_round_bytes,
+    star_round_bytes,
+)
 
 Array = jax.Array
 
@@ -54,11 +67,14 @@ class PearlResult:
     """Trajectory diagnostics recorded at synchronization points.
 
     ``bytes_up`` / ``bytes_down`` are per-round wire bytes derived from the
-    active :class:`SyncStrategy` (no wall clock involved): uplink counts each
-    participating player's block once; downlink counts the joint vector to
-    every participating player — the Section 3.1 convention of
+    active :class:`SyncStrategy` and :class:`~repro.core.topology.Topology`
+    (no wall clock involved). Star: uplink counts each participating player's
+    block once; downlink counts the joint vector to every participating
+    player — the Section 3.1 convention of
     :class:`repro.core.metrics.CommunicationModel`, now per-round and
-    compression-aware.
+    compression-aware. Server-free topologies are edge-aware: every directed
+    active link's message is counted once, in ``bytes_up`` (there is no
+    server downlink), via :func:`repro.core.topology.gossip_round_bytes`.
     """
 
     x_final: Array          # (n, d) final joint action x_{tau R}
@@ -274,16 +290,21 @@ class SumLocalSgdUpdate(JointUpdate):
 # SyncStrategy protocol — what the server broadcast looks like
 # =========================================================================
 class SyncStrategy(abc.ABC):
-    """Server-side communication pattern for one synchronization round.
+    """Wire behaviour of one synchronization round (topology-agnostic).
 
     A strategy controls three things:
-    - ``view(i, x_sync, ctx)`` — the reference snapshot player ``i`` locally
-      optimizes against (its own row is always exact: a player never
-      quantizes its own live block);
-    - ``mask(n, ctx)`` — which players' updated blocks the server receives
-      this round (``None`` = everyone); non-participating players keep their
-      stale block in the next snapshot;
-    - ``round_bytes(participants, n, d, base_bps)`` — per-round wire bytes.
+    - ``view(i, x_sync, ctx)`` — under the :class:`~repro.core.topology.Star`
+      server broadcast, the reference snapshot player ``i`` locally optimizes
+      against (its own row is always exact: a player never quantizes its own
+      live block). Graph topologies do not use ``view``: their references
+      come from neighbor averaging, with ``compress`` applied to the wire —
+      compression composes with any topology instead of being baked in here;
+    - ``mask(n, ctx)`` — which players participate this round (``None`` =
+      everyone); non-participants keep their stale block in the next
+      snapshot, and under gossip their links carry nothing;
+    - ``round_bytes(participants, n, d, base_bps)`` — per-round wire bytes
+      for the star topology, routed through the shared direction-aware
+      helpers in :mod:`repro.core.topology`.
 
     Strategies are frozen hashable dataclasses (randomized ones carry an int
     seed, not a PRNG key, so they can be jit static args); per-round
@@ -293,6 +314,8 @@ class SyncStrategy(abc.ABC):
     """
 
     name: str = "sync"
+    uses_mask: bool = False          # True for participation-drawing strategies
+    bills_full_round: bool = False   # True when lost transmissions are still paid
 
     # ----------------------------------------------------------- round state
     def init_state(self):
@@ -325,16 +348,23 @@ class SyncStrategy(abc.ABC):
 
     def round_bytes(self, participants: np.ndarray, n: int, d: int,
                     base_bps: int) -> tuple[np.ndarray, np.ndarray]:
-        """Per-round (uplink, downlink) byte arrays.
+        """Per-round (uplink, downlink) byte arrays for the star topology.
 
         ``participants`` is the per-round count of players whose blocks the
-        server actually received. Uplink: one ``d``-block per participant at
-        the joint dtype. Downlink: the ``n*d`` joint vector to each
-        participant at the (possibly compressed) wire dtype.
+        server actually received; strategies with ``bills_full_round`` (lossy
+        links) are billed for all ``n`` regardless of delivery. Uplink: one
+        ``d``-block per billed player at the joint dtype. Downlink: the
+        ``n*d`` joint vector to each billed player at the (possibly
+        compressed) wire dtype — the engine compresses the broadcast, so the
+        shared helper is called with ``compressed="down"``.
         """
-        up = participants * d * base_bps
-        down = participants * n * d * self.wire_itemsize(base_bps)
-        return up.astype(np.int64), down.astype(np.int64)
+        billed = np.atleast_1d(np.asarray(participants)).astype(np.int64)
+        if self.bills_full_round:
+            billed = np.full_like(billed, n)
+        up_item, down_item = direction_itemsizes(self, base_bps,
+                                                 compressed="down")
+        return star_round_bytes(billed, n=n, block_scalars=d,
+                                up_itemsize=up_item, down_itemsize=down_item)
 
 
 def resolve_sync(sync: "SyncStrategy | None", sync_dtype) -> "SyncStrategy":
@@ -382,6 +412,7 @@ class _RandomizedSync(SyncStrategy):
     """Shared plumbing for strategies that draw a per-round player mask."""
 
     seed: int
+    uses_mask = True
 
     def init_state(self):
         return jax.random.PRNGKey(self.seed)
@@ -402,6 +433,13 @@ class PartialParticipation(_RandomizedSync):
     seed: int = 0
     name: str = "partial"
 
+    def __post_init__(self):
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(
+                f"PartialParticipation.fraction must be in [0, 1], "
+                f"got {self.fraction}"
+            )
+
     def mask(self, n, ctx):
         return jax.random.uniform(ctx, (n,)) < self.fraction
 
@@ -411,65 +449,84 @@ class DropoutSync(_RandomizedSync):
     """Unreliable links: every player transmits, but each round a player's
     sync is LOST with probability ``p`` (its stale block survives on the
     server). Unlike :class:`PartialParticipation` the bytes are still paid —
-    the accounting charges the full round regardless of delivery."""
+    ``bills_full_round`` makes the accounting charge every transmission
+    (all ``n`` players on star, every active edge under gossip) regardless
+    of delivery, staying integer-typed throughout."""
 
     p: float = 0.1
     seed: int = 0
     name: str = "dropout"
+    bills_full_round = True
+
+    def __post_init__(self):
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"DropoutSync.p must be in [0, 1], got {self.p}")
 
     def mask(self, n, ctx):
         return jax.random.uniform(ctx, (n,)) >= self.p
-
-    def round_bytes(self, participants, n, d, base_bps):
-        full = np.full_like(participants, float(n))
-        return super().round_bytes(full, n, d, base_bps)
 
 
 # =========================================================================
 # The engine
 # =========================================================================
-@partial(jax.jit, static_argnames=("update", "sync", "tau", "stochastic"))
+@partial(jax.jit,
+         static_argnames=("update", "sync", "topology", "tau", "stochastic",
+                          "gossip_steps"))
 def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
-                 update, sync: SyncStrategy, tau: int, stochastic: bool):
+                 update, sync: SyncStrategy, topology: Topology, tau: int,
+                 stochastic: bool, gossip_steps: int = 1):
     """One compiled program: rounds-scan over (local phase -> synchronize).
 
     RNG chain (bit-compatible with the legacy loops): per round
     ``key, sub = split(key)``; per-player keys ``split(sub, n)``; per-step
     keys ``split(player_key, tau)``. Strategy randomness (participation
-    masks) is threaded separately so it never perturbs sampling noise.
+    masks) is threaded separately so it never perturbs sampling noise — and
+    neither does the topology: the gossip path splits keys identically.
+
+    Returns ``(x_final, xs, residuals, participants, links)`` where ``links``
+    is the per-round wire-message count (server messages under star, directed
+    active edges under gossip) feeding the edge-aware byte accounting.
     """
     n = x0.shape[0]
 
+    def tau_local_steps(i, pkey, x_start, x_ref, gamma):
+        """tau local steps for player i against the frozen reference view."""
+        state0 = update.init_state(game, i, x_start, x_ref)
+        keys = jax.random.split(pkey, tau)
+
+        def step(c, k):
+            x_i, st = c
+            x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
+                                  stochastic)
+            return (x_i, st), None
+
+        (x_i, _), _ = jax.lax.scan(step, (x_start, state0), keys)
+        return x_i
+
     if isinstance(update, JointUpdate):
-        def round_body(carry, gamma):
+        def round_body(carry, scan_in):
+            gamma, _ = scan_in
             x, key, s = carry
             # split exactly as the legacy loops did (key, k1, ..., k_m) so
             # stochastic baseline trajectories stay bit-for-bit reproducible
             keys = jax.random.split(key, 1 + update.keys_per_round)
             x_next = update.round(game, x, gamma, keys[1:], stochastic)
             res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
-            return (x_next, keys[0], s), (x_next, res, jnp.asarray(n, jnp.int32))
-    else:
-        def round_body(carry, gamma):
+            full = jnp.asarray(n, jnp.int32)
+            return (x_next, keys[0], s), (x_next, res, full, full)
+
+        init = (x0, key, sync.init_state())
+    elif topology.is_server:
+        def round_body(carry, scan_in):
+            gamma, _ = scan_in
             x_sync, key, s = carry
             key, sub = jax.random.split(key)
             player_keys = jax.random.split(sub, n)
             s, ctx = sync.pre_round(s)
 
             def local(i, pkey):
-                """tau local steps for player i against the frozen view."""
                 x_ref = sync.view(i, x_sync, ctx)
-                state0 = update.init_state(game, i, x_sync[i], x_ref)
-                keys = jax.random.split(pkey, tau)
-
-                def step(c, k):
-                    x_i, st = c
-                    x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
-                                          stochastic)
-                    return (x_i, st), None
-
-                (x_i, _), _ = jax.lax.scan(step, (x_sync[i], state0), keys)
-                return x_i
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, gamma)
 
             x_prop = jax.vmap(local)(jnp.arange(n), player_keys)
             m = sync.mask(n, ctx)
@@ -480,27 +537,102 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                 x_next = jnp.where(m[:, None], x_prop, x_sync)
                 participants = jnp.sum(m).astype(jnp.int32)
             res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
-            return (x_next, key, s), (x_next, res, participants)
+            return (x_next, key, s), (x_next, res, participants, participants)
 
-    init = (x0, key, sync.init_state())
-    (x_final, _, _), (xs, residuals, participants) = jax.lax.scan(
-        round_body, init, gammas
+        init = (x0, key, sync.init_state())
+    else:
+        # Server-free gossip: each player carries a VIEW of the whole joint
+        # action (the decentralized-VI formulation — node i evaluates only
+        # its own operator block but holds a full variable copy). Each round:
+        # tau local steps on the own block against the own view, then one
+        # neighbor-averaging exchange V_i <- sum_j W~_ij wire(V_j) where W~
+        # renormalizes around non-participating links (lost mass goes to the
+        # diagonal, preserving row-stochasticity) and ``wire`` is the sync
+        # strategy's compression. Own blocks are anchored: mixing updates
+        # player i's estimates of OTHERS, never its decision variable.
+        W_stack = jnp.asarray(topology.mixing_stack(n), dtype=x0.dtype)
+        A_stack = jnp.asarray(topology.adjacency_stack(n), dtype=bool)
+        T = W_stack.shape[0]
+        diag = jnp.arange(n)
+
+        def round_body(carry, scan_in):
+            gamma, ridx = scan_in
+            V, x_sync, key, s = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            W = W_stack[ridx % T]
+            A = A_stack[ridx % T]
+
+            def local(i, pkey):
+                return tau_local_steps(i, pkey, x_sync[i], V[i], gamma)
+
+            x_prop = jax.vmap(local)(jnp.arange(n), player_keys)
+            m = sync.mask(n, ctx)
+            if m is None:
+                mf = jnp.ones((n,), dtype=W.dtype)
+                x_used = x_prop
+                participants = jnp.asarray(n, jnp.int32)
+            else:
+                mf = m.astype(W.dtype)
+                x_used = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+
+            pair = mf[:, None] * mf[None, :]
+            link_w = jnp.where(A, W * pair, 0.0)          # active off-diag
+            self_w = 1.0 - jnp.sum(link_w, axis=1)        # lost mass -> diag
+            V_next = V.at[diag, diag].set(x_used)
+            # gossip_steps > 1 trades extra wire sweeps for tighter view
+            # consensus — strongly-coupled games need it for stability at
+            # the Theorem 3.4 step size (see tests/test_topology.py).
+            for _ in range(gossip_steps):
+                wire = sync.compress(V_next).astype(V_next.dtype)
+                V_next = (jnp.einsum("ij,jkd->ikd", link_w, wire)
+                          + self_w[:, None, None] * V_next)
+                V_next = V_next.at[diag, diag].set(x_used)
+            links = gossip_steps * jnp.sum((A & (pair > 0)).astype(jnp.int32))
+            res = jnp.sqrt(jnp.sum(game.operator(x_used) ** 2))
+            return (V_next, x_used, key, s), (x_used, res, participants, links)
+
+        V0 = jnp.broadcast_to(x0[None], (n, *x0.shape))
+        init = (V0, x0, key, sync.init_state())
+
+    gossip = not (isinstance(update, JointUpdate) or topology.is_server)
+    scan_in = (gammas, jnp.arange(gammas.shape[0]))
+    carry, (xs, residuals, participants, links) = jax.lax.scan(
+        round_body, init, scan_in
     )
-    return x_final, xs, residuals, participants
+    x_final = carry[1] if gossip else carry[0]
+    return x_final, xs, residuals, participants, links
 
 
 @dataclasses.dataclass(frozen=True)
 class PearlEngine:
-    """Composable PEARL loop: ``update`` x ``sync`` x step-size schedule.
+    """Composable PEARL loop: ``update`` x ``sync`` x ``topology`` x schedule.
 
     Every algorithm in :mod:`repro.core.pearl` and
     :mod:`repro.core.baselines` is a ~5-line adapter over this class; new
-    variants (compressed sync, partial participation, momentum locals) are
-    constructor arguments, not new scan loops.
+    variants (compressed sync, partial participation, momentum locals,
+    gossip graphs) are constructor arguments, not new scan loops. The default
+    :class:`~repro.core.topology.Star` topology reproduces the PR 1 engine
+    bit-for-bit; graph topologies run the server-free neighbor-averaging
+    path and compose with any (compression x participation) strategy. Joint
+    baselines read fresh iterates mid-round and therefore require the star.
     """
 
     update: PlayerUpdate | JointUpdate = SgdUpdate()
     sync: SyncStrategy = ExactSync()
+    topology: Topology = Star()
+    gossip_steps: int = 1   # mixing sweeps per round on graph topologies
+
+    def _check_topology(self):
+        if self.gossip_steps < 1:
+            raise ValueError(f"gossip_steps must be >= 1, got {self.gossip_steps}")
+        if isinstance(self.update, JointUpdate) and not self.topology.is_server:
+            raise ValueError(
+                f"{type(self.update).__name__} is fully synchronized and "
+                f"needs the Star topology, got {type(self.topology).__name__}"
+            )
 
     def run(
         self,
@@ -534,10 +666,12 @@ class PearlEngine:
             key = jax.random.PRNGKey(0)
         if x_star is None:
             x_star = game.equilibrium()
+        self._check_topology()
         gammas = as_round_gammas(gamma, rounds)
-        x_final, xs, residuals, participants = _engine_scan(
+        x_final, xs, residuals, participants, links = _engine_scan(
             game, x0, gammas, key,
-            update=self.update, sync=self.sync, tau=tau, stochastic=stochastic,
+            update=self.update, sync=self.sync, topology=self.topology,
+            tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
         )
         init_err_sq = jnp.sum((x0 - x_star) ** 2)
         errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init_err_sq
@@ -545,15 +679,29 @@ class PearlEngine:
 
         n, d = x0.shape
         base_bps = int(np.dtype(x0.dtype).itemsize)
-        parts = np.asarray(participants, dtype=np.float64)
+        parts = np.asarray(participants, dtype=np.int64)
         if isinstance(self.update, JointUpdate):
             per_sync_up, per_sync_down = ExactSync().round_bytes(
                 parts, n, d, base_bps
             )
             bytes_up = self.update.syncs_per_round * per_sync_up
             bytes_down = self.update.syncs_per_round * per_sync_down
-        else:
+        elif self.topology.is_server:
             bytes_up, bytes_down = self.sync.round_bytes(parts, n, d, base_bps)
+        else:
+            # Edge-aware: each directed active link carries one view-relay
+            # message (n blocks — general games need multi-hop relay; the
+            # aggregative consensus trainer pays only 1 block per edge, see
+            # PearlCommReport). Lossy strategies are billed for every
+            # scheduled edge whether or not the mask delivered it.
+            msgs = np.asarray(links, dtype=np.int64)
+            if self.sync.bills_full_round:
+                full = self.topology.directed_edge_counts(n)
+                msgs = self.gossip_steps * full[np.arange(rounds) % len(full)]
+            bytes_up, bytes_down = gossip_round_bytes(
+                msgs, payload_blocks=n, block_scalars=d,
+                itemsize=self.sync.wire_itemsize(base_bps),
+            )
 
         return PearlResult(
             x_final=x_final,
@@ -583,10 +731,12 @@ class PearlEngine:
         """
         if key is None:
             key = jax.random.PRNGKey(0)
+        self._check_topology()
         gammas = as_round_gammas(gamma, rounds)
-        _, xs, _, _ = _engine_scan(
+        _, xs, _, _, _ = _engine_scan(
             game, x0, gammas, key,
-            update=self.update, sync=self.sync, tau=tau, stochastic=stochastic,
+            update=self.update, sync=self.sync, topology=self.topology,
+            tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
         )
         return xs
 
@@ -599,6 +749,7 @@ def make_federated_round(
     collect: Callable,
     *,
     unroll: bool = False,
+    broadcast_in_axes=None,
 ) -> Callable:
     """The PEARL round template over arbitrary per-player state pytrees.
 
@@ -611,16 +762,23 @@ def make_federated_round(
     :func:`_engine_scan` uses for dense games, reused by
     :mod:`repro.train.pearl_trainer` for neural players where actions are
     whole parameter pytrees.
+
+    ``broadcast_in_axes=None`` (default) replicates one broadcast to every
+    player — the star server's joint snapshot. ``broadcast_in_axes=0`` maps
+    over a player-stacked broadcast so each player optimizes against its OWN
+    reference (per-player stale views under gossip / partial participation).
     """
 
     def round_fn(stacked_carry, stacked_batches, broadcast):
-        def player(carry_i, batches_i):
+        def player(carry_i, batches_i, broadcast_i):
             def step(c, b):
-                return local_step(c, b, broadcast)
+                return local_step(c, b, broadcast_i)
 
             return jax.lax.scan(step, carry_i, batches_i, unroll=unroll)
 
-        new_carry, metrics = jax.vmap(player)(stacked_carry, stacked_batches)
+        new_carry, metrics = jax.vmap(
+            player, in_axes=(0, 0, broadcast_in_axes)
+        )(stacked_carry, stacked_batches, broadcast)
         return new_carry, collect(new_carry), metrics
 
     return round_fn

@@ -1,0 +1,345 @@
+"""Topology layer: who talks to whom at each synchronization.
+
+PEARL-SGD's Algorithm 1 assumes a *star*: a server receives every player's
+block and rebroadcasts the joint vector. This module factors that assumption
+out of the communication strategies into an explicit :class:`Topology` — a
+mixing-matrix abstraction over the player graph — so the engine's
+synchronization becomes the orthogonal composition
+
+    Topology (who talks to whom)  x  Compression (wire dtype)
+                                  x  Participation (who talks this round).
+
+Server-free topologies replace the broadcast with **neighbor averaging**: the
+doubly-stochastic mixing matrix ``W`` acts on the players' *views* of the
+joint action (``W @ blocks`` along the player axis). Each player ``i`` keeps a
+local estimate ``V_i`` of the whole joint vector, refreshed at every
+synchronization by relaying views over the graph edges,
+
+    V_i  <-  sum_j W_ij V_j     (own block pinned: ``V_i[i] = x_i``),
+
+which is the decentralized-VI / networked Nash-seeking setup: node ``i`` can
+evaluate only its own block of the game operator but holds a full copy of the
+variable. Entry ``j`` of every view performs a consensus iteration anchored at
+its owner, so for any *connected* graph all views contract geometrically onto
+the true joint action and the equilibrium is preserved; on a disconnected
+graph non-neighbor entries stay frozen at their initial values and the
+iterates converge to the wrong point (tests/test_topology.py pins both).
+
+Mixing weights are Metropolis–Hastings (``W_ij = 1/(1 + max(deg_i, deg_j))``
+on edges, diagonal absorbs the rest), which is symmetric and doubly
+stochastic for every undirected graph — no per-topology tuning.
+
+Byte accounting is **edge-aware** and direction-aware, and lives here so the
+dense engine (:class:`repro.core.engine.PearlResult`) and the neural trainer
+(:class:`repro.train.pearl_trainer.PearlCommReport`) derive their uplink /
+downlink itemsizes from one place (:func:`direction_itemsizes`):
+
+- star: each participant uploads one block, downloads the ``n``-block joint
+  vector (:func:`star_round_bytes`);
+- gossip: each active directed edge carries one message of
+  ``payload_blocks`` blocks (:func:`gossip_round_bytes`). General games relay
+  full views (payload ``n`` blocks); aggregative/consensus games — the neural
+  trainer — need only the sender's parameters (payload 1), so a player moves
+  ``deg(i) * d`` scalars per round instead of the star downlink's ``n * d``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+
+import numpy as np
+
+
+# =========================================================================
+# Graph / mixing-matrix utilities
+# =========================================================================
+def metropolis_weights(adjacency: np.ndarray) -> np.ndarray:
+    """Symmetric doubly-stochastic mixing matrix from an undirected graph.
+
+    ``W_ij = 1 / (1 + max(deg_i, deg_j))`` on edges; the diagonal absorbs the
+    remaining mass. Rows and columns sum to 1 for any symmetric adjacency.
+    """
+    A = np.asarray(adjacency, dtype=bool)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"adjacency must be square, got {A.shape}")
+    if not np.array_equal(A, A.T):
+        raise ValueError("adjacency must be symmetric (undirected graph)")
+    A = A & ~np.eye(A.shape[0], dtype=bool)   # no self-loops
+    deg = A.sum(axis=1)
+    W = np.where(A, 1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :])), 0.0)
+    np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+    return W
+
+
+def is_doubly_stochastic(W: np.ndarray, tol: float = 1e-9) -> bool:
+    W = np.asarray(W, dtype=np.float64)
+    return bool(
+        (W >= -tol).all()
+        and np.allclose(W.sum(axis=0), 1.0, atol=tol)
+        and np.allclose(W.sum(axis=1), 1.0, atol=tol)
+    )
+
+
+def is_connected(adjacency: np.ndarray) -> bool:
+    """BFS connectivity of the undirected graph (n = 1 counts as connected)."""
+    A = np.asarray(adjacency, dtype=bool)
+    n = A.shape[0]
+    if n <= 1:
+        return True
+    seen = np.zeros(n, dtype=bool)
+    frontier = np.zeros(n, dtype=bool)
+    seen[0] = frontier[0] = True
+    while frontier.any():
+        frontier = (A[frontier].any(axis=0)) & ~seen
+        seen |= frontier
+    return bool(seen.all())
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """``1 - |lambda_2|`` of a symmetric mixing matrix — the per-round
+    geometric contraction rate of the consensus error (0 when disconnected)."""
+    eigs = np.sort(np.abs(np.linalg.eigvalsh(np.asarray(W, dtype=np.float64))))
+    return float(1.0 - eigs[-2]) if eigs.size > 1 else 1.0
+
+
+# =========================================================================
+# Topology protocol
+# =========================================================================
+class Topology(abc.ABC):
+    """Communication graph over the ``n`` players.
+
+    Implementations are frozen hashable dataclasses (jit static arguments;
+    randomized graphs carry an int seed). ``n`` is supplied at use time so one
+    topology object serves any player count.
+    """
+
+    name: str = "topology"
+    is_server: bool = False   # Star: exact broadcast, the legacy engine path
+
+    @abc.abstractmethod
+    def adjacency(self, n: int) -> np.ndarray:
+        """Boolean ``(n, n)`` symmetric peer adjacency, no self-loops."""
+
+    def mixing_matrix(self, n: int) -> np.ndarray:
+        """Doubly-stochastic ``(n, n)`` gossip weights (Metropolis)."""
+        return metropolis_weights(self.adjacency(n))
+
+    # Time-varying topologies expose a stack of per-round matrices, cycled by
+    # round index; static graphs are the T = 1 special case.
+    def mixing_stack(self, n: int) -> np.ndarray:
+        return self.mixing_matrix(n)[None]
+
+    def adjacency_stack(self, n: int) -> np.ndarray:
+        return self.adjacency(n)[None]
+
+    def degrees(self, n: int) -> np.ndarray:
+        return self.adjacency(n).sum(axis=1).astype(np.int64)
+
+    def directed_edge_counts(self, n: int) -> np.ndarray:
+        """Directed active-link count per stacked graph, shape ``(T,)`` —
+        the number of wire messages a full-participation gossip round moves."""
+        return self.adjacency_stack(n).sum(axis=(1, 2)).astype(np.int64)
+
+    def connected(self, n: int) -> bool:
+        """Connectivity of the union graph (B-connectivity for time-varying)."""
+        return is_connected(self.adjacency_stack(n).any(axis=0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Star(Topology):
+    """Hub-and-spoke server — the paper's Algorithm 1 pattern (the default).
+
+    The engine treats the server as an exact broadcast (the bit-for-bit
+    legacy path), so the peer adjacency is empty; as a mixing matrix the
+    server's exact mean is ``ones / n`` (used by the trainer's consensus
+    reference weighting).
+    """
+
+    name: str = "star"
+    is_server = True
+
+    def adjacency(self, n):
+        return np.zeros((n, n), dtype=bool)
+
+    def mixing_matrix(self, n):
+        return np.full((n, n), 1.0 / n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring(Topology):
+    """Cycle graph: each player exchanges with its two neighbors (deg 2)."""
+
+    name: str = "ring"
+
+    def adjacency(self, n):
+        A = np.zeros((n, n), dtype=bool)
+        if n > 1:
+            idx = np.arange(n)
+            A[idx, (idx + 1) % n] = True
+            A[idx, (idx - 1) % n] = True
+        return A
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus(Topology):
+    """2-D grid with wraparound (deg <= 4). ``rows`` defaults to the largest
+    divisor of ``n`` at most ``sqrt(n)`` (prime ``n`` degenerates to a ring).
+    """
+
+    rows: int | None = None
+    name: str = "torus"
+
+    def _dims(self, n: int) -> tuple[int, int]:
+        if self.rows is not None:
+            if n % self.rows:
+                raise ValueError(f"Torus(rows={self.rows}) does not divide n={n}")
+            return self.rows, n // self.rows
+        r = max(d for d in range(1, int(math.isqrt(n)) + 1) if n % d == 0)
+        return r, n // r
+
+    def adjacency(self, n):
+        rows, cols = self._dims(n)
+        A = np.zeros((n, n), dtype=bool)
+        for i in range(n):
+            r, c = divmod(i, cols)
+            for rr, cc in (((r + 1) % rows, c), ((r - 1) % rows, c),
+                           (r, (c + 1) % cols), (r, (c - 1) % cols)):
+                j = rr * cols + cc
+                if j != i:
+                    A[i, j] = A[j, i] = True
+        return A
+
+
+@dataclasses.dataclass(frozen=True)
+class ErdosRenyi(Topology):
+    """G(n, p) random graph, reproducible from ``seed``. May be disconnected —
+    check :meth:`Topology.connected` before expecting equilibrium."""
+
+    p: float = 0.5
+    seed: int = 0
+    name: str = "erdos_renyi"
+
+    def __post_init__(self):
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"ErdosRenyi.p must be in [0, 1], got {self.p}")
+
+    def adjacency(self, n):
+        rng = np.random.default_rng(self.seed)
+        upper = np.triu(rng.random((n, n)) < self.p, k=1)
+        return upper | upper.T
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplicitGraph(Topology):
+    """Arbitrary undirected edge list — e.g. deliberately disconnected
+    components for the no-equilibrium counterexamples."""
+
+    edges: tuple[tuple[int, int], ...] = ()
+    name: str = "explicit"
+
+    def adjacency(self, n):
+        A = np.zeros((n, n), dtype=bool)
+        for i, j in self.edges:
+            if not (0 <= i < n and 0 <= j < n) or i == j:
+                raise ValueError(f"bad edge ({i}, {j}) for n={n}")
+            A[i, j] = A[j, i] = True
+        return A
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeVarying(Topology):
+    """Cycle through member graphs round-robin (round ``r`` uses member
+    ``r % T``). Convergence needs the *union* graph connected (B-connectivity),
+    not every member."""
+
+    members: tuple[Topology, ...] = ()
+    name: str = "time_varying"
+
+    def __post_init__(self):
+        if not self.members:
+            raise ValueError("TimeVarying needs at least one member topology")
+        for m in self.members:
+            if m.is_server or isinstance(m, TimeVarying):
+                raise ValueError(
+                    "TimeVarying members must be flat graph topologies, got "
+                    f"{type(m).__name__}"
+                )
+
+    def adjacency(self, n):
+        return self.adjacency_stack(n).any(axis=0)
+
+    def mixing_stack(self, n):
+        return np.concatenate([m.mixing_stack(n) for m in self.members])
+
+    def adjacency_stack(self, n):
+        return np.concatenate([m.adjacency_stack(n) for m in self.members])
+
+
+# =========================================================================
+# Shared direction-aware byte accounting
+# =========================================================================
+def direction_itemsizes(sync, base_itemsize: int, *,
+                        compressed: str) -> tuple[int, int]:
+    """(uplink, downlink) bytes per scalar for a sync strategy — THE one
+    place both accounting systems resolve the quantization direction.
+
+    The dense engine's :class:`~repro.core.engine.QuantizedSync` compresses
+    the *broadcast* (players see quantized neighbor blocks, upload exact):
+    ``compressed="down"``. The neural trainer quantizes *pre-reduction*
+    (uplink at the wire dtype, f32 mean broadcast back): ``compressed="up"``.
+    ``sync.wire_itemsize(base_itemsize)`` supplies the wire dtype's size.
+    """
+    wire = int(sync.wire_itemsize(base_itemsize))
+    if compressed == "down":
+        return int(base_itemsize), wire
+    if compressed == "up":
+        return wire, int(base_itemsize)
+    raise ValueError(f"compressed must be 'up' or 'down', got {compressed!r}")
+
+
+def star_round_bytes(participants, *, n: int, block_scalars: int,
+                     up_itemsize: int, down_itemsize: int,
+                     down_blocks: int | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-round (uplink, downlink) bytes for the server topology.
+
+    Each participant uploads its ``block_scalars`` block once and downloads
+    ``down_blocks`` blocks — by default the ``n``-block joint vector (the
+    Section 3.1 convention for general games); the aggregative consensus
+    trainer passes ``down_blocks=1``, since its server rebroadcasts only the
+    mean. ``participants`` may be a scalar or a per-round array; output is
+    int64.
+    """
+    if down_blocks is None:
+        down_blocks = n
+    p = np.atleast_1d(np.asarray(participants)).astype(np.int64)
+    up = p * block_scalars * up_itemsize
+    down = p * down_blocks * block_scalars * down_itemsize
+    return up, down
+
+
+def gossip_round_bytes(messages, *, payload_blocks: int, block_scalars: int,
+                       itemsize: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-round (sent, received=0) bytes for server-free topologies.
+
+    ``messages`` is the directed active-link count per round; each message
+    carries ``payload_blocks`` blocks of ``block_scalars`` scalars at the
+    wire ``itemsize``. Peer exchanges have no server downlink: every wire
+    transfer is counted exactly once, in the first ("sent") component, so
+    ``up + down`` never double-counts an edge.
+    """
+    m = np.atleast_1d(np.asarray(messages)).astype(np.int64)
+    sent = m * payload_blocks * block_scalars * itemsize
+    return sent, np.zeros_like(sent)
+
+
+# ------------------------------------------------------------------ registry
+TOPOLOGIES = {
+    "star": Star,
+    "ring": Ring,
+    "torus": Torus,
+    "erdos_renyi": lambda: ErdosRenyi(p=0.5, seed=2),
+    "ring+torus": lambda: TimeVarying((Ring(), Torus())),
+}

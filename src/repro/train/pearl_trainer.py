@@ -24,6 +24,29 @@ quantization comes from the engine's :class:`~repro.core.engine.SyncStrategy`
 objects, and :class:`PearlCommReport` derives its bytes-per-scalar from the
 active sync dtype instead of hard-coding fp32.
 
+Synchronization is a general **stale-block merge** over the stacked-player
+pytree, so every engine communication regime works for neural players too:
+
+- the server keeps a per-player ``snapshot`` (each player's last transmitted
+  parameters); participants overwrite their slot, non-participants' stale
+  blocks survive — mask strategies (:class:`PartialParticipation`,
+  :class:`DropoutSync`) compose with any topology;
+- each player's proximal reference is a :class:`~repro.core.topology.Topology`
+  mixing row over the snapshot: ``ref_i = sum_j W_ij snapshot_j``. The
+  :class:`~repro.core.topology.Star` server is the ``W = ones/n`` special
+  case (exact across-player mean); a ring/torus/random graph pulls each
+  player toward its neighborhood mean instead — decentralized consensus. The
+  consensus game is *aggregative* (the gradient needs only the reference, not
+  individual opponents), so gossip messages carry one parameter block per
+  edge: a player moves ``deg(i)`` model-sizes per round instead of the star
+  downlink's full mean — the edge-aware accounting in
+  :meth:`PearlCommReport.per_round_bytes`.
+
+Unlike the dense engine (where a non-participating player's round is
+discarded, matching the paper's participation model), neural players always
+keep training locally — the mask gates only the wire: non-participants
+neither upload their block nor receive a fresh reference.
+
 The non-local baseline (SGDA / gradient play, tau = 1) synchronizes every
 step; the paper's claim — same accuracy with tau-fold less communication —
 shows up in the dry-run HLO as a tau-fold drop in pod-axis collective bytes
@@ -47,24 +70,17 @@ from repro.core.engine import (
     make_federated_round,
     resolve_sync,
 )
+from repro.core.topology import (
+    Star,
+    Topology,
+    direction_itemsizes,
+    gossip_round_bytes,
+    star_round_bytes,
+)
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.train.train_step import make_loss_fn
 
 Array = jax.Array
-
-
-def _resolve_trainer_sync(sync: SyncStrategy | None, sync_dtype) -> SyncStrategy:
-    """The neural trainer implements exact and quantized synchronization only:
-    mask-based strategies (partial participation, dropout links) would need
-    the round to merge stale per-player pytrees, which the pod-mapped
-    collective does not express yet (see ROADMAP "Adaptive participation")."""
-    strategy = resolve_sync(sync, sync_dtype)
-    if not isinstance(strategy, (ExactSync, QuantizedSync)):
-        raise NotImplementedError(
-            f"PearlTrainer supports ExactSync/QuantizedSync, got "
-            f"{type(strategy).__name__}"
-        )
-    return strategy
 
 
 def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None = None):
@@ -79,7 +95,13 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None
     to the stale snapshot, absorbed by Theorem 3.4's sigma^2 term (validated
     in tests/test_pearl_trainer.py).
     """
-    strategy = _resolve_trainer_sync(sync, sync_dtype)
+    strategy = resolve_sync(sync, sync_dtype)
+    if strategy.uses_mask:
+        raise ValueError(
+            f"tree_mean is the full-participation star collective; "
+            f"{type(strategy).__name__} draws a participation mask and needs "
+            f"the general stale-block merge round (make_pearl_round)"
+        )
     quantized = isinstance(strategy, QuantizedSync)
 
     def mean(x):
@@ -101,6 +123,17 @@ def stack_players(params_list):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
 
 
+def needs_general_round(strategy: SyncStrategy, topology: Topology) -> bool:
+    """The legacy star round (one replicated mean, everyone participates) is
+    enough iff the topology is the server and the strategy draws no mask."""
+    return (not topology.is_server) or strategy.uses_mask
+
+
+def _per_player(mask, like):
+    """Broadcast a (n,) mask against a stacked leaf (n, ...)."""
+    return mask.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
 def make_pearl_round(
     cfg: ModelConfig,
     optimizer: Optimizer,
@@ -114,28 +147,45 @@ def make_pearl_round(
     unroll: bool = False,
     sync_dtype=None,
     sync: SyncStrategy | None = None,
+    topology: Topology | None = None,
 ) -> Callable:
     """Build one compiled PEARL round on the engine's federated-round template.
 
-    ``pearl_round(stacked_params, stacked_opt, batches, xbar)``:
+    Star topology with full participation (the default) keeps the legacy
+    signature and numerics — ``pearl_round(stacked_params, stacked_opt,
+    batches, xbar)``:
       - stacked_params/opt: player-stacked pytrees, leading dim n (sharded
         over ``pod`` on the production mesh);
       - batches: {"tokens": (n, tau, B_local, S)} — tau local batches per
         player drawn from that player's distribution D_i;
       - xbar: stale across-player mean (pytree, replicated).
-
     Returns (new_params, new_opt, new_xbar, metrics). ``new_xbar`` is the
     synchronization output; in PEARL it is computed once per round.
+
+    Any mask strategy or graph topology compiles the general stale-block
+    merge round instead — ``pearl_round(stacked_params, stacked_opt,
+    batches, refs, snapshot, mask, mix)``:
+      - refs: player-stacked references (each player's own stale
+        neighborhood mean, leading dim n);
+      - snapshot: player-stacked last-transmitted parameters;
+      - mask: (n,) bool — who synchronizes this round (drawn host-side by
+        the strategy so the compiled round stays deterministic);
+      - mix: (n, n) mixing-matrix row weights for this round (host-supplied
+        so time-varying graphs never retrace).
+    Returns (new_params, new_opt, new_refs, new_snapshot, metrics), where
+    participants' snapshot slots take their freshly compressed blocks
+    (stale blocks survive) and their refs re-mix over the merged snapshot.
     """
-    strategy = _resolve_trainer_sync(sync, sync_dtype)
+    strategy = resolve_sync(sync, sync_dtype)
+    topo = topology if topology is not None else Star()
     loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
                            use_kernels=use_kernels, prox_lambda=prox_lambda)
 
-    def local_step(carry, tokens, xbar):
-        """One optimizer step of a single player against the frozen xbar."""
+    def local_step(carry, tokens, ref):
+        """One optimizer step of a single player against its frozen reference."""
         p, o = carry
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            p, {"tokens": tokens}, xbar
+            p, {"tokens": tokens}, ref
         )
         if clip_norm:
             grads = clip_by_global_norm(grads, clip_norm)
@@ -143,19 +193,55 @@ def make_pearl_round(
         p = apply_updates(p, updates)
         return (p, o), metrics
 
+    if not needs_general_round(strategy, topo):
+        round_fn = make_federated_round(
+            local_step,
+            lambda stacked: tree_mean(stacked[0], sync=strategy),
+            unroll=unroll,
+        )
+
+        def pearl_round(stacked_params, stacked_opt, batches, xbar):
+            # --- tau local steps per player, then the only cross-player
+            # (pod-axis) collective: the across-player mean ---
+            (new_p, new_o), new_xbar, metrics = round_fn(
+                (stacked_params, stacked_opt), batches["tokens"], xbar
+            )
+            return new_p, new_o, new_xbar, metrics
+
+        return pearl_round
+
+    # General stale-block merge: per-player references (broadcast_in_axes=0),
+    # the collective replaced by mask-merge + topology mixing.
     round_fn = make_federated_round(
-        local_step,
-        lambda stacked: tree_mean(stacked[0], sync=strategy),
-        unroll=unroll,
+        local_step, lambda stacked: None, unroll=unroll, broadcast_in_axes=0,
     )
 
-    def pearl_round(stacked_params, stacked_opt, batches, xbar):
-        # --- tau local steps per player, then the only cross-player
-        # (pod-axis) collective: the across-player mean ---
-        (new_p, new_o), new_xbar, metrics = round_fn(
-            (stacked_params, stacked_opt), batches["tokens"], xbar
+    def pearl_round(stacked_params, stacked_opt, batches, refs, snapshot,
+                    mask, mix):
+        (new_p, new_o), _, metrics = round_fn(
+            (stacked_params, stacked_opt), batches["tokens"], refs
         )
-        return new_p, new_o, new_xbar, metrics
+        # Participants put their freshly quantized block on the wire; the
+        # stale blocks of everyone else survive in the snapshot.
+        wire = jax.tree.map(
+            lambda p: strategy.compress(p).astype(p.dtype), new_p
+        )
+        new_snapshot = jax.tree.map(
+            lambda w, s: jnp.where(_per_player(mask, w), w, s),
+            wire, snapshot,
+        )
+        # Each participant re-mixes its reference over the merged snapshot
+        # (star: the exact mean row ones/n); non-participants keep their
+        # stale reference — they received nothing this round.
+        mixed = jax.tree.map(
+            lambda s: jnp.einsum("ij,j...->i...", mix.astype(s.dtype), s),
+            new_snapshot,
+        )
+        new_refs = jax.tree.map(
+            lambda mx, r: jnp.where(_per_player(mask, mx), mx, r),
+            mixed, refs,
+        )
+        return new_p, new_o, new_refs, new_snapshot, metrics
 
     return pearl_round
 
@@ -169,11 +255,26 @@ class PearlCommReport:
     compressed sync reports 2. The accounting is direction-aware and follows
     what :func:`tree_mean` actually does: players quantize BEFORE the
     reduction (uplink at the sync dtype) while the server broadcasts the f32
-    mean (downlink at 4). An explicit ``bytes_per_scalar`` overrides both
-    directions (legacy behavior). NOTE the dense engine's
-    :class:`~repro.core.engine.QuantizedSync` compresses the opposite
-    direction (broadcast quantized, uplink exact) — the two systems quantize
-    different wires, and each accounting matches its own system.
+    mean (downlink at 4) — i.e. :func:`repro.core.topology.direction_itemsizes`
+    with ``compressed="up"``, the shared helper through which the dense
+    engine also resolves its (opposite, ``compressed="down"``) asymmetry: the
+    two systems quantize different wires, and each accounting names its
+    direction through the one helper (pinned in tests/test_topology.py). An
+    explicit ``bytes_per_scalar`` overrides both directions (legacy
+    behavior).
+
+    A server-free ``topology`` switches to edge-aware gossip accounting: the
+    consensus game is aggregative, so each active directed edge moves ONE
+    parameter block — ``deg(i) * param_count`` scalars per player per round
+    instead of the star downlink's ``n_players * param_count``.
+
+    Participation-aware billing: ``participants`` (per-round uploads under
+    star) and ``messages`` (per-round directed active links under gossip)
+    override the full-participation defaults — :meth:`PearlTrainer.comm_report`
+    passes the actually-drawn mask history, so a ``PartialParticipation``
+    trainer is billed for what it moved, matching the dense engine's
+    participant-aware :class:`~repro.core.engine.PearlResult` (lossy
+    ``bills_full_round`` strategies keep full billing).
     """
 
     n_players: int
@@ -182,55 +283,79 @@ class PearlCommReport:
     rounds: int
     bytes_per_scalar: int | None = None
     sync_dtype: Any = None
+    topology: Topology | None = None
+    participants: Any = None   # (rounds,) billed uploads; None = everyone
+    messages: Any = None       # (rounds,) billed gossip links; None = all edges
 
     def __post_init__(self):
-        self._explicit_bps = self.bytes_per_scalar is not None
-        if self.bytes_per_scalar is None:
-            self.bytes_per_scalar = (
-                int(np.dtype(self.sync_dtype).itemsize)
-                if self.sync_dtype is not None else 4
-            )
+        explicit = self.bytes_per_scalar is not None
+        if explicit:
+            up = down = int(self.bytes_per_scalar)
+        else:
+            strategy = (QuantizedSync(self.sync_dtype)
+                        if self.sync_dtype is not None else ExactSync())
+            up, down = direction_itemsizes(strategy, 4, compressed="up")
+        self.bytes_per_scalar = up
+        self._down_bps = down
 
     @property
     def downlink_bytes_per_scalar(self) -> int:
         """f32 mean broadcast unless an explicit override was given."""
-        return self.bytes_per_scalar if self._explicit_bps else 4
+        return self._down_bps
 
     @classmethod
     def from_sync(cls, sync: SyncStrategy, *, n_players: int, param_count: int,
-                  tau: int, rounds: int) -> "PearlCommReport":
-        """Report for an engine sync strategy (exact or quantized)."""
+                  tau: int, rounds: int, topology: Topology | None = None,
+                  participants=None, messages=None) -> "PearlCommReport":
+        """Report for an engine sync strategy under a topology."""
         dtype = sync.dtype if isinstance(sync, QuantizedSync) else None
         return cls(n_players=n_players, param_count=param_count, tau=tau,
-                   rounds=rounds, sync_dtype=dtype)
+                   rounds=rounds, sync_dtype=dtype, topology=topology,
+                   participants=participants, messages=messages)
 
     @property
     def sync_bytes_per_round(self) -> int:
-        # each player uploads its block (D_i = param_count) and downloads the
-        # joint/mean vector: per the paper the downlink carries the full
-        # concatenation; the consensus game needs only the mean (same size).
-        up = self.n_players * self.param_count * self.bytes_per_scalar
-        down = self.n_players * self.param_count * self.downlink_bytes_per_scalar
-        return up + down
+        if self.rounds == 0:
+            return 0
+        up, down = self.per_round_bytes()
+        return int(up[0] + down[0])
 
     def per_round_bytes(self) -> tuple[np.ndarray, np.ndarray]:
         """(uplink, downlink) byte arrays of shape ``(rounds,)`` — the same
-        per-round shape :class:`repro.core.engine.PearlResult` records."""
-        up = np.full(
-            (self.rounds,),
-            self.n_players * self.param_count * self.bytes_per_scalar,
-            dtype=np.int64,
+        per-round shape :class:`repro.core.engine.PearlResult` records, via
+        the same :mod:`repro.core.topology` helpers."""
+        topo = self.topology if self.topology is not None else Star()
+        if topo.is_server:
+            # each player uploads its block (D_i = param_count) and downloads
+            # the joint/mean vector: per the paper the downlink carries the
+            # full concatenation; the consensus game needs only the mean
+            # (same size).
+            if self.participants is not None:
+                billed = np.asarray(self.participants)
+            else:
+                billed = np.full((self.rounds,), self.n_players)
+            up, down = star_round_bytes(
+                billed,
+                n=self.n_players, block_scalars=self.param_count,
+                up_itemsize=self.bytes_per_scalar,
+                down_itemsize=self.downlink_bytes_per_scalar,
+                down_blocks=1,   # the server rebroadcasts only the mean
+            )
+            return up, down
+        if self.messages is not None:
+            msgs = np.asarray(self.messages)
+        else:
+            edges = topo.directed_edge_counts(self.n_players)
+            msgs = edges[np.arange(self.rounds) % len(edges)]
+        return gossip_round_bytes(
+            msgs, payload_blocks=1, block_scalars=self.param_count,
+            itemsize=self.bytes_per_scalar,
         )
-        down = np.full(
-            (self.rounds,),
-            self.n_players * self.param_count * self.downlink_bytes_per_scalar,
-            dtype=np.int64,
-        )
-        return up, down
 
     @property
     def total_bytes(self) -> int:
-        return self.rounds * self.sync_bytes_per_round
+        up, down = self.per_round_bytes()
+        return int(up.sum() + down.sum())
 
     def vs_nonlocal(self) -> float:
         """Bytes ratio vs tau=1 for the same number of local steps."""
@@ -238,26 +363,63 @@ class PearlCommReport:
 
 
 class PearlTrainer:
-    """Host-side loop around :func:`make_pearl_round` (small-scale/CPU runs)."""
+    """Host-side loop around :func:`make_pearl_round` (small-scale/CPU runs).
+
+    Star topology with full participation keeps the legacy xbar-carry loop;
+    any mask strategy or graph topology threads the general stale-block
+    state instead: ``snapshot`` (per-player last-transmitted parameters),
+    ``refs`` (per-player stale neighborhood means), a host-drawn per-round
+    participation mask, and the round's mixing matrix (cycled for
+    time-varying graphs). ``xbar`` stays available either way as the uniform
+    across-player mean of the latest snapshot (diagnostics/back-compat).
+    """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,
-                 tau: int, prox_lambda: float, seed: int = 0, **round_kwargs):
+                 tau: int, prox_lambda: float, seed: int = 0,
+                 topology: Topology | None = None, **round_kwargs):
         from repro.models.model import init_params
 
         self.cfg = cfg
         self.tau = tau
         self.n_players = n_players
-        self.sync = _resolve_trainer_sync(round_kwargs.get("sync"),
-                                          round_kwargs.get("sync_dtype"))
+        self.sync = resolve_sync(round_kwargs.get("sync"),
+                                 round_kwargs.get("sync_dtype"))
+        self.topology = topology if topology is not None else Star()
+        self._general = needs_general_round(self.sync, self.topology)
         keys = jax.random.split(jax.random.PRNGKey(seed), n_players)
         params = [init_params(cfg, k) for k in keys]
         self.params = stack_players(params)
         self.opt_state = jax.vmap(optimizer.init)(self.params)
         self.xbar = tree_mean(self.params)
         self._round = jax.jit(make_pearl_round(
-            cfg, optimizer, tau=tau, prox_lambda=prox_lambda, **round_kwargs
+            cfg, optimizer, tau=tau, prox_lambda=prox_lambda,
+            topology=self.topology, **round_kwargs
         ))
+        if self._general:
+            # init acts as round 0's broadcast: everyone's block is known
+            self.snapshot = self.params
+            self._mixes = self.topology.mixing_stack(n_players)
+            self._adjs = self.topology.adjacency_stack(n_players)
+            self.refs = self._mix_refs(0)
+            self._sync_state = self.sync.init_state()
+        # per-round billing records (what the drawn masks actually moved)
+        self._round_participants: list[int] = []
+        self._round_messages: list[int] = []
         self.history: list[dict] = []
+
+    def _mix_refs(self, round_idx: int):
+        mix = jnp.asarray(self._mixes[round_idx % len(self._mixes)])
+        return jax.tree.map(
+            lambda s: jnp.einsum("ij,j...->i...", mix.astype(s.dtype), s),
+            self.snapshot,
+        )
+
+    def _draw_mask(self) -> Array:
+        self._sync_state, ctx = self.sync.pre_round(self._sync_state)
+        m = self.sync.mask(self.n_players, ctx)
+        if m is None:
+            m = jnp.ones((self.n_players,), dtype=bool)
+        return m
 
     def run(self, stream, rounds: int):
         """stream: SyntheticTokenStream with n_players configured."""
@@ -268,10 +430,25 @@ class PearlTrainer:
             batches = np.stack([
                 stream.player_batches(step + t) for t in range(self.tau)
             ], axis=1)  # (n, tau, B, S)
-            self.params, self.opt_state, self.xbar, metrics = self._round(
-                self.params, self.opt_state, {"tokens": jnp.asarray(batches)},
-                self.xbar,
-            )
+            tokens = {"tokens": jnp.asarray(batches)}
+            if self._general:
+                mask = self._draw_mask()
+                m_np = np.asarray(mask)
+                self._round_participants.append(int(m_np.sum()))
+                adj = self._adjs[r % len(self._adjs)]
+                self._round_messages.append(
+                    int((adj & np.outer(m_np, m_np)).sum()))
+                mix = jnp.asarray(self._mixes[r % len(self._mixes)])
+                (self.params, self.opt_state, self.refs, self.snapshot,
+                 metrics) = self._round(
+                    self.params, self.opt_state, tokens, self.refs,
+                    self.snapshot, mask, mix,
+                )
+                self.xbar = tree_mean(self.snapshot)
+            else:
+                self.params, self.opt_state, self.xbar, metrics = self._round(
+                    self.params, self.opt_state, tokens, self.xbar,
+                )
             step += self.tau
             rec = {k: float(jnp.mean(v)) for k, v in metrics.items()}
             rec["round"] = r
@@ -279,15 +456,34 @@ class PearlTrainer:
         return self.history
 
     def comm_report(self, rounds: int | None = None) -> PearlCommReport:
-        """Byte accounting for this trainer's sync strategy over ``rounds``
-        (defaults to the rounds run so far)."""
+        """Byte accounting for this trainer's sync strategy and topology.
+
+        With the default ``rounds=None`` the report bills the rounds actually
+        run, using the participation masks that were drawn — a
+        ``PartialParticipation`` trainer pays only for the blocks/links it
+        moved (lossy ``bills_full_round`` strategies still pay in full). An
+        explicit ``rounds`` produces a prospective full-participation
+        estimate instead (no mask history exists for unrun rounds).
+        """
         from repro.roofline.analysis import count_params
         from repro.models.model import param_shapes
 
+        n_rounds = len(self.history) if rounds is None else rounds
+        participants = messages = None
+        if rounds is None and self._general and not self.sync.bills_full_round:
+            if self.topology.is_server:
+                participants = np.asarray(
+                    self._round_participants[:n_rounds], dtype=np.int64)
+            else:
+                messages = np.asarray(
+                    self._round_messages[:n_rounds], dtype=np.int64)
         return PearlCommReport.from_sync(
             self.sync,
             n_players=self.n_players,
             param_count=count_params(param_shapes(self.cfg)),
             tau=self.tau,
-            rounds=len(self.history) if rounds is None else rounds,
+            rounds=n_rounds,
+            topology=self.topology,
+            participants=participants,
+            messages=messages,
         )

@@ -316,13 +316,18 @@ class TestCommAccounting:
         )
         assert rep.bytes_per_scalar == 2
 
-    def test_trainer_rejects_mask_strategies(self):
-        """The neural trainer cannot express participation masks yet; it must
-        refuse rather than silently train with exact sync."""
-        from repro.train.pearl_trainer import _resolve_trainer_sync
+    def test_trainer_accepts_mask_strategies(self):
+        """Mask strategies and graph topologies now compile the general
+        stale-block merge round (the PR 1 NotImplementedError is gone) —
+        the two-signature dispatch is pinned here, end-to-end training in
+        tests/test_pearl_trainer.py."""
+        from repro.core.topology import Ring, Star
+        from repro.train.pearl_trainer import needs_general_round
 
-        with pytest.raises(NotImplementedError):
-            _resolve_trainer_sync(PartialParticipation(fraction=0.5), None)
+        assert needs_general_round(PartialParticipation(fraction=0.5), Star())
+        assert needs_general_round(ExactSync(), Ring())
+        assert not needs_general_round(ExactSync(), Star())
+        assert not needs_general_round(QuantizedSync(jnp.bfloat16), Star())
 
 
 # --------------------------------------------------------------- schedules

@@ -109,9 +109,126 @@ class TestCompressedSyncTrainer:
         assert jax.tree.leaves(trainer.xbar)[0].dtype == jnp.float32
 
 
+class TestTopologyTrainer:
+    """Graph topologies + mask strategies through the general stale-block
+    merge round — the regimes PR 1's trainer refused."""
+
+    def test_ring_partial_participation_runs_and_loss_falls(self, cfg):
+        """The acceptance criterion: ring topology x partial participation,
+        no NotImplementedError, training progresses."""
+        from repro.core.engine import PartialParticipation
+        from repro.core.topology import Ring
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            topology=Ring(), sync=PartialParticipation(fraction=0.7, seed=0),
+        )
+        hist = trainer.run(_stream(cfg), rounds=5)
+        assert len(hist) == 5
+        assert hist[-1]["lm_loss"] < hist[0]["lm_loss"]
+        assert np.isfinite(hist[-1]["lm_loss"])
+
+    def test_gossip_refs_are_per_player(self, cfg):
+        """Under gossip each player optimizes against its OWN neighborhood
+        mean: refs carry a player axis, unlike the replicated star xbar."""
+        from repro.core.topology import Ring
+
+        trainer = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                               prox_lambda=1e-3, topology=Ring())
+        trainer.run(_stream(cfg), rounds=2)
+        ref_leaf = jax.tree.leaves(trainer.refs)[0]
+        param_leaf = jax.tree.leaves(trainer.params)[0]
+        assert ref_leaf.shape == param_leaf.shape
+        assert ref_leaf.shape[0] == N_PLAYERS
+
+    def test_zero_participation_freezes_snapshot(self, cfg):
+        """fraction=0: nobody syncs, the stale snapshot (and hence xbar)
+        never moves, but local training still advances the players."""
+        from repro.core.engine import PartialParticipation
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            sync=PartialParticipation(fraction=0.0, seed=0),
+        )
+        x0 = jax.tree.leaves(trainer.xbar)[0].copy()
+        p0 = jax.tree.leaves(trainer.params)[0].copy()
+        trainer.run(_stream(cfg), rounds=2)
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(trainer.xbar)[0]), np.asarray(x0))
+        assert float(jnp.max(jnp.abs(
+            jax.tree.leaves(trainer.params)[0] - p0))) > 0.0
+
+    def test_star_full_participation_matches_legacy_path(self, cfg):
+        """PartialParticipation(fraction=1.0) through the general round
+        reaches the same losses as the legacy star fast path (same batches,
+        same init): the stale-block merge generalizes, not perturbs."""
+        from repro.core.engine import PartialParticipation
+
+        legacy = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                              prox_lambda=1e-3, seed=2)
+        hist_a = legacy.run(_stream(cfg), rounds=3)
+        general = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            seed=2, sync=PartialParticipation(fraction=1.0, seed=0),
+        )
+        hist_b = general.run(_stream(cfg), rounds=3)
+        for a, b in zip(hist_a, hist_b):
+            assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-5)
+
+
 class TestCommReport:
     def test_bytes_accounting(self):
         rep = PearlCommReport(n_players=4, param_count=1000, tau=8, rounds=10)
         assert rep.sync_bytes_per_round == 2 * 4 * 1000 * 4
         assert rep.total_bytes == 10 * rep.sync_bytes_per_round
         assert rep.vs_nonlocal() == pytest.approx(1 / 8)
+
+    def test_gossip_report_edge_aware(self):
+        from repro.core.topology import Ring
+
+        rep = PearlCommReport(n_players=4, param_count=1000, tau=8, rounds=10,
+                              topology=Ring())
+        up, down = rep.per_round_bytes()
+        assert (up == 8 * 1000 * 4).all()   # 2n directed edges x one block
+        assert (down == 0).all()
+        assert rep.total_bytes == 10 * 8 * 1000 * 4
+
+    def test_report_bills_recorded_participation(self):
+        """Mask-aware billing: explicit per-round participants/messages
+        override the full-participation defaults."""
+        rep = PearlCommReport(n_players=4, param_count=100, tau=2, rounds=3,
+                              participants=np.array([2, 0, 4]))
+        up, down = rep.per_round_bytes()
+        np.testing.assert_array_equal(up, [2 * 100 * 4, 0, 4 * 100 * 4])
+        np.testing.assert_array_equal(down, [2 * 100 * 4, 0, 4 * 100 * 4])
+        from repro.core.topology import Ring
+
+        g = PearlCommReport(n_players=4, param_count=100, tau=2, rounds=2,
+                            topology=Ring(), messages=np.array([6, 0]))
+        g_up, g_down = g.per_round_bytes()
+        np.testing.assert_array_equal(g_up, [6 * 100 * 4, 0])
+        assert (g_down == 0).all()
+
+    def test_trainer_report_uses_drawn_masks(self, cfg):
+        """A fraction=0 trainer moved nothing — its default report bills 0
+        bytes, while an explicit-rounds report stays the prospective
+        full-participation estimate."""
+        from repro.core.engine import PartialParticipation
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            sync=PartialParticipation(fraction=0.0, seed=0),
+        )
+        trainer.run(_stream(cfg), rounds=2)
+        assert trainer.comm_report().total_bytes == 0
+        prospective = trainer.comm_report(rounds=2)
+        assert prospective.total_bytes > 0
+
+    def test_tree_mean_rejects_mask_strategies(self):
+        """tree_mean is the full-participation collective — a mask strategy
+        must fail loudly, not silently average everyone."""
+        from repro.core.engine import PartialParticipation
+
+        with pytest.raises(ValueError):
+            tree_mean({"w": jnp.ones((2, 3))},
+                      sync=PartialParticipation(fraction=0.5))

@@ -1,0 +1,377 @@
+"""The topology layer: mixing matrices, gossip convergence, edge-aware bytes.
+
+Load-bearing claims pinned here:
+- every graph topology's Metropolis mixing matrix is symmetric doubly
+  stochastic; Star stays the server special case;
+- on the quadratic game a doubly-stochastic ring reaches the SAME equilibrium
+  neighborhood as the star (tolerance-pinned), while a disconnected graph
+  provably does not (views of the other component stay frozen at x0);
+- byte accounting is edge-aware (gossip bills active links x payload, star
+  bills blocks up / joint vector down) and both accounting systems resolve
+  their uplink/downlink itemsizes through the ONE shared helper,
+  :func:`repro.core.topology.direction_itemsizes` — the engine compresses the
+  broadcast, the trainer compresses pre-reduction, and the pinned numbers
+  here keep that asymmetry explicit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.engine import (
+    DropoutSync,
+    ExactSync,
+    JointExtragradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+    SgdUpdate,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.topology import (
+    ErdosRenyi,
+    ExplicitGraph,
+    Ring,
+    Star,
+    TimeVarying,
+    TOPOLOGIES,
+    Topology,
+    Torus,
+    direction_itemsizes,
+    gossip_round_bytes,
+    is_connected,
+    is_doubly_stochastic,
+    metropolis_weights,
+    spectral_gap,
+    star_round_bytes,
+)
+
+
+@pytest.fixture(scope="module")
+def quad():
+    # Weak coupling: gossip's stability margin shrinks with coupling strength
+    # (stale inconsistent views act like delays under the antisymmetric
+    # coupling), so the Theorem 3.4 step size needs L_B small on sparse graphs.
+    return make_quadratic_game(n=4, d=8, M=40, L_B=2.0, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0(quad):
+    return jnp.asarray(
+        np.random.default_rng(7).standard_normal((quad.n, quad.d)),
+        dtype=jnp.float32,
+    )
+
+
+# ------------------------------------------------------------------ matrices
+class TestMixingMatrices:
+    @pytest.mark.parametrize("topo", [
+        Ring(), Torus(), ErdosRenyi(p=0.6, seed=3),
+        ExplicitGraph(edges=((0, 1), (1, 2), (2, 3), (0, 3))),
+    ])
+    @pytest.mark.parametrize("n", [4, 6, 9])
+    def test_doubly_stochastic_and_symmetric(self, topo, n):
+        W = topo.mixing_matrix(n)
+        assert W.shape == (n, n)
+        assert is_doubly_stochastic(W)
+        np.testing.assert_allclose(W, W.T)
+
+    def test_star_is_server_with_mean_mixing(self):
+        s = Star()
+        assert s.is_server
+        np.testing.assert_allclose(s.mixing_matrix(5), np.full((5, 5), 0.2))
+        assert not s.adjacency(5).any()
+
+    def test_ring_degrees(self):
+        assert (Ring().degrees(6) == 2).all()
+        assert Ring().directed_edge_counts(6)[0] == 12
+
+    def test_torus_factors_n(self):
+        A = Torus().adjacency(9)           # 3x3 grid, wraparound
+        assert (A.sum(axis=1) == 4).all()
+        with pytest.raises(ValueError):
+            Torus(rows=4).adjacency(9)
+
+    def test_torus_prime_degenerates_to_ring(self):
+        np.testing.assert_array_equal(Torus().adjacency(5), Ring().adjacency(5))
+
+    def test_erdos_renyi_reproducible(self):
+        a = ErdosRenyi(p=0.5, seed=11).adjacency(8)
+        b = ErdosRenyi(p=0.5, seed=11).adjacency(8)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, ErdosRenyi(p=0.5, seed=12).adjacency(8))
+
+    def test_time_varying_stacks_members(self):
+        tv = TimeVarying((Ring(), Torus()))
+        stack = tv.mixing_stack(6)
+        assert stack.shape == (2, 6, 6)
+        np.testing.assert_allclose(stack[0], Ring().mixing_matrix(6))
+        assert tv.connected(6)
+
+    def test_connectivity_and_gap(self):
+        assert is_connected(Ring().adjacency(7))
+        assert not is_connected(np.zeros((3, 3), dtype=bool))
+        two_cliques = ExplicitGraph(edges=((0, 1), (2, 3)))
+        assert not two_cliques.connected(4)
+        assert spectral_gap(Ring().mixing_matrix(4)) > 0.5
+        assert spectral_gap(np.eye(4)) == 0.0
+
+    def test_registry_instantiates(self):
+        for name, factory in TOPOLOGIES.items():
+            topo = factory()
+            assert isinstance(topo, Topology), name
+
+
+# ---------------------------------------------------------------- validation
+class TestValidation:
+    def test_participation_fraction_bounds(self):
+        with pytest.raises(ValueError):
+            PartialParticipation(fraction=1.5)
+        with pytest.raises(ValueError):
+            PartialParticipation(fraction=-0.1)
+        PartialParticipation(fraction=0.0)   # boundary values are legal
+        PartialParticipation(fraction=1.0)
+
+    def test_dropout_p_bounds(self):
+        with pytest.raises(ValueError):
+            DropoutSync(p=1.01)
+        with pytest.raises(ValueError):
+            DropoutSync(p=-0.5)
+
+    def test_erdos_renyi_p_bounds(self):
+        with pytest.raises(ValueError):
+            ErdosRenyi(p=2.0)
+
+    def test_explicit_graph_bad_edge(self):
+        with pytest.raises(ValueError):
+            ExplicitGraph(edges=((0, 5),)).adjacency(4)
+        with pytest.raises(ValueError):
+            ExplicitGraph(edges=((1, 1),)).adjacency(4)
+
+    def test_time_varying_rejects_star_and_empty(self):
+        with pytest.raises(ValueError):
+            TimeVarying(())
+        with pytest.raises(ValueError):
+            TimeVarying((Star(),))
+
+    def test_joint_updates_require_star(self, quad, x0):
+        eng = PearlEngine(update=JointExtragradientUpdate(), topology=Ring())
+        with pytest.raises(ValueError):
+            eng.run(quad, x0, rounds=2, gamma=1e-3)
+
+    def test_metropolis_rejects_directed(self):
+        A = np.zeros((3, 3), dtype=bool)
+        A[0, 1] = True
+        with pytest.raises(ValueError):
+            metropolis_weights(A)
+
+
+# -------------------------------------------------------- gossip convergence
+class TestGossipConvergence:
+    ROUNDS = 1500
+
+    def test_ring_reaches_star_equilibrium_neighborhood(self, quad, x0):
+        """Connected doubly-stochastic gossip preserves the equilibrium: the
+        anchored view-consensus contracts, so the ring lands in the same
+        neighborhood as the exact server broadcast (tolerance-pinned)."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        star = PearlEngine().run(quad, x0, tau=4, rounds=self.ROUNDS,
+                                 gamma=gamma, stochastic=False)
+        ring = PearlEngine(topology=Ring()).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, stochastic=False)
+        assert star.rel_errors[-1] < 1e-10
+        assert ring.rel_errors[-1] < 1e-10
+        # same equilibrium, not merely both small: final iterates agree
+        np.testing.assert_allclose(np.asarray(ring.x_final),
+                                   np.asarray(star.x_final), atol=1e-4)
+
+    def test_disconnected_graph_provably_misses_equilibrium(self, quad, x0):
+        """Two components never exchange: each player's view of the other
+        component stays frozen at x0, so the iterates converge to the wrong
+        point — the rel error floors far above the connected runs."""
+        two_pairs = ExplicitGraph(edges=((0, 1), (2, 3)))
+        assert not two_pairs.connected(quad.n)
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        r = PearlEngine(topology=two_pairs).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, stochastic=False)
+        assert np.isfinite(r.rel_errors[-1])
+        assert r.rel_errors[-1] > 1e-2
+        # it converged — to the wrong point (stationary, not equilibrium)
+        assert abs(r.rel_errors[-1] - r.rel_errors[-100]) < 1e-3
+
+    def test_time_varying_union_connected_converges(self, quad, x0):
+        """Alternating two disconnected halves whose UNION is connected still
+        reaches the equilibrium (B-connectivity)."""
+        tv = TimeVarying((
+            ExplicitGraph(edges=((0, 1), (2, 3))),
+            ExplicitGraph(edges=((1, 2), (0, 3))),
+        ))
+        assert tv.connected(quad.n)
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        r = PearlEngine(topology=tv).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-8
+
+    def test_gossip_steps_tighten_consensus(self, quad, x0):
+        """Extra mixing sweeps per round can only improve tracking: error
+        after the same rounds is no worse, and the wire bytes scale with the
+        sweep count."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        one = PearlEngine(topology=Ring(), gossip_steps=1).run(
+            quad, x0, tau=4, rounds=400, gamma=gamma, stochastic=False)
+        four = PearlEngine(topology=Ring(), gossip_steps=4).run(
+            quad, x0, tau=4, rounds=400, gamma=gamma, stochastic=False)
+        assert four.rel_errors[-1] <= one.rel_errors[-1] * 1.5
+        assert four.total_bytes == 4 * one.total_bytes
+
+    def test_gossip_strategy_randomness_independent_of_noise(self, quad, x0):
+        """fraction=1.0 partial participation IS exact gossip, bit-for-bit,
+        even in the stochastic setting — topology and participation draw from
+        a key chain separate from the sampling noise."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        key = jax.random.PRNGKey(5)
+        exact = PearlEngine(topology=Ring()).run(
+            quad, x0, tau=4, rounds=60, gamma=gamma, key=key)
+        part = PearlEngine(sync=PartialParticipation(fraction=1.0),
+                           topology=Ring()).run(
+            quad, x0, tau=4, rounds=60, gamma=gamma, key=key)
+        np.testing.assert_array_equal(np.asarray(exact.x_final),
+                                      np.asarray(part.x_final))
+
+    def test_gossip_composes_with_partial_participation(self, quad, x0):
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        r = PearlEngine(sync=PartialParticipation(fraction=0.75, seed=0),
+                        topology=Ring()).run(
+            quad, x0, tau=4, rounds=3000, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 0.05
+
+    def test_gossip_composes_with_quantization(self, quad, x0):
+        """bf16 on every gossip edge: bounded quantization noise, same
+        neighborhood."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        r = PearlEngine(sync=QuantizedSync(jnp.bfloat16), topology=Ring()).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-3
+
+
+# -------------------------------------------------------- edge-aware bytes
+class TestEdgeAwareBytes:
+    def test_ring_bytes_are_edge_aware(self, quad, x0):
+        """Gossip moves (active links) x (n-block view payload) per round —
+        deg(i) messages per player, not a server downlink — and every wire
+        transfer is counted once (down stays 0)."""
+        n, d = x0.shape
+        r = PearlEngine(topology=Ring()).run(quad, x0, tau=2, rounds=5,
+                                             gamma=1e-3)
+        links = 2 * n                        # directed ring edges
+        assert int(r.bytes_up[0]) == links * n * d * 4
+        assert (r.bytes_down == 0).all()
+
+    def test_partial_participation_cuts_gossip_bytes(self, quad, x0):
+        full = PearlEngine(topology=Ring()).run(
+            quad, x0, tau=2, rounds=200, gamma=1e-3)
+        part = PearlEngine(sync=PartialParticipation(fraction=0.5, seed=0),
+                           topology=Ring()).run(
+            quad, x0, tau=2, rounds=200, gamma=1e-3)
+        assert 0 < part.total_bytes < full.total_bytes
+
+    def test_dropout_bills_every_scheduled_edge(self, quad, x0):
+        """Lossy links: transmissions are paid whether delivered or not, and
+        the billing stays integer-typed."""
+        lossy = PearlEngine(sync=DropoutSync(p=0.3, seed=1),
+                            topology=Ring()).run(
+            quad, x0, tau=2, rounds=50, gamma=1e-3)
+        full = PearlEngine(topology=Ring()).run(
+            quad, x0, tau=2, rounds=50, gamma=1e-3)
+        assert lossy.total_bytes == full.total_bytes
+        assert lossy.bytes_up.dtype == np.int64
+
+    def test_dropout_star_billing_integer_typed(self):
+        up, down = DropoutSync(p=0.25).round_bytes(
+            np.array([1, 2, 3]), 4, 8, 4)
+        assert up.dtype == np.int64 and down.dtype == np.int64
+        np.testing.assert_array_equal(up, [4 * 8 * 4] * 3)   # billed full n
+
+    def test_quantized_gossip_halves_wire(self, quad, x0):
+        exact = PearlEngine(topology=Ring()).run(quad, x0, tau=2, rounds=5,
+                                                 gamma=1e-3)
+        comp = PearlEngine(sync=QuantizedSync(jnp.bfloat16),
+                           topology=Ring()).run(quad, x0, tau=2, rounds=5,
+                                                gamma=1e-3)
+        np.testing.assert_array_equal(comp.bytes_up, exact.bytes_up // 2)
+
+
+# --------------------------------------------- shared itemsize helper (pins)
+class TestDirectionItemsizes:
+    """Satellite: the engine-vs-trainer quantization-direction asymmetry is
+    resolved in ONE place. Engine: broadcast compressed (up exact, down
+    wire). Trainer: pre-reduction compressed (up wire, down exact)."""
+
+    def test_engine_direction_pinned(self):
+        assert direction_itemsizes(QuantizedSync(jnp.bfloat16), 4,
+                                   compressed="down") == (4, 2)
+        assert direction_itemsizes(ExactSync(), 4, compressed="down") == (4, 4)
+
+    def test_trainer_direction_pinned(self):
+        assert direction_itemsizes(QuantizedSync(jnp.bfloat16), 4,
+                                   compressed="up") == (2, 4)
+        assert direction_itemsizes(ExactSync(), 4, compressed="up") == (4, 4)
+
+    def test_bad_direction_raises(self):
+        with pytest.raises(ValueError):
+            direction_itemsizes(ExactSync(), 4, compressed="sideways")
+
+    def test_both_systems_pin_through_helper(self):
+        """End-to-end pinned numbers: engine PearlResult (bf16 broadcast)
+        vs trainer PearlCommReport (bf16 pre-reduction) for the same shapes."""
+        from repro.train.pearl_trainer import PearlCommReport
+
+        n, d = 4, 100
+        # engine: star, all participate, bf16 broadcast
+        up, down = QuantizedSync(jnp.bfloat16).round_bytes(
+            np.array([n]), n, d, 4)
+        assert int(up[0]) == n * d * 4            # uplink exact fp32
+        assert int(down[0]) == n * n * d * 2      # joint vector at bf16
+        # trainer: bf16 uplink, fp32 mean downlink (one block per player)
+        rep = PearlCommReport(n_players=n, param_count=d, tau=2, rounds=1,
+                              sync_dtype=jnp.bfloat16)
+        t_up, t_down = rep.per_round_bytes()
+        assert int(t_up[0]) == n * d * 2
+        assert int(t_down[0]) == n * d * 4
+
+    def test_trainer_gossip_report_moves_deg_blocks(self):
+        """Aggregative consensus game: one parameter block per active edge —
+        a ring player moves deg(i)=2 model-sizes per round, independent of n."""
+        from repro.train.pearl_trainer import PearlCommReport
+
+        rep = PearlCommReport(n_players=6, param_count=50, tau=2, rounds=3,
+                              topology=Ring())
+        up, down = rep.per_round_bytes()
+        assert (up == 12 * 50 * 4).all()          # 2n directed edges x block
+        assert (down == 0).all()
+        assert rep.total_bytes == 3 * 12 * 50 * 4
+
+    def test_star_round_bytes_down_blocks(self):
+        up, down = star_round_bytes(np.array([3]), n=4, block_scalars=10,
+                                    up_itemsize=4, down_itemsize=2,
+                                    down_blocks=1)
+        assert int(up[0]) == 3 * 10 * 4
+        assert int(down[0]) == 3 * 10 * 2
+
+    def test_gossip_round_bytes_payload(self):
+        sent, recv = gossip_round_bytes(np.array([8, 0]), payload_blocks=4,
+                                        block_scalars=10, itemsize=2)
+        np.testing.assert_array_equal(sent, [8 * 4 * 10 * 2, 0])
+        assert (recv == 0).all()
+
+
+# ------------------------------------------------------------- star default
+class TestStarDefault:
+    def test_default_engine_is_star(self):
+        assert PearlEngine().topology.is_server
+
+    def test_topologies_are_hashable_static_args(self):
+        for factory in TOPOLOGIES.values():
+            hash(factory())   # frozen dataclasses: usable as jit static args
