@@ -1,0 +1,130 @@
+"""Async PEARL sweep: bytes-and-rounds-to-equilibrium vs the staleness bound.
+
+The headline question for the bounded-staleness engine: how much of the
+paper's tau-fold communication saving survives when players read stale
+broadcasts? For each delay schedule and each staleness bound ``D`` the sweep
+runs :class:`~repro.core.async_engine.AsyncPearlEngine` at matched ``tau``
+and step size against the lockstep engine (the ``D = 0`` row IS the
+lockstep trajectory — pinned bit-for-bit in tests/test_async_engine.py) and
+reports rounds / wire bytes to reach the equilibrium neighborhood plus the
+final relative error. Wire bytes per round are identical across ``D``
+(staleness delays arrival, not transmission), so any cost shows up purely
+as extra rounds.
+
+``python -m benchmarks.bench_async --json BENCH_async.json`` writes the
+sweep as a structured artifact (the BENCH_*.json convention) so future PRs
+can track the staleness-robustness frontier.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    ConstantDelay,
+    StragglerDelay,
+    UniformDelay,
+)
+from repro.core.engine import PearlEngine
+from repro.core.games import make_quadratic_game
+from repro.core.metrics import rounds_to_reach
+
+BOUNDS = (0, 1, 4, 16)
+
+SCHEDULES = {
+    "uniform": lambda: UniformDelay(seed=0),
+    "straggler": lambda: StragglerDelay(fraction=0.25, seed=0),
+    "constant": lambda: ConstantDelay(lag=10**9),   # clipped to D: worst case
+}
+
+
+def run_staleness(tau: int = 4, rounds: int = 3000, threshold: float = 1e-6,
+                  bounds=BOUNDS, schedules=("uniform", "straggler")):
+    """Rounds/bytes-to-equilibrium over D x delay-schedule at matched tau.
+
+    Deterministic gradients isolate the staleness effect from sampling
+    noise; the step size is the Theorem 3.4 rule for the matched tau, shared
+    by every cell so the comparison is pure communication pattern.
+    Weak-coupling game (L_B = 1, like the topology sweep): stale snapshots
+    act like delays under the antisymmetric coupling, so at strong coupling
+    large D destabilizes the Theorem 3.4 step size outright — here the cost
+    shows up as extra rounds instead, which is the trackable quantity.
+    """
+    game = make_quadratic_game(n=6, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+    c = game.constants()
+    gamma = stepsize.gamma_constant(c, tau)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+
+    sync_ref = PearlEngine().run(
+        game, x0, tau=tau, rounds=rounds, gamma=gamma,
+        key=jax.random.PRNGKey(0), stochastic=False,
+    )
+    sync_hit = rounds_to_reach(sync_ref.rel_errors, threshold)
+
+    rows = []
+    t0 = time.perf_counter()
+    for sname in schedules:
+        sched = SCHEDULES[sname]()
+        for D in bounds:
+            r = AsyncPearlEngine(delays=sched, max_staleness=D).run(
+                game, x0, tau=tau, rounds=rounds, gamma=gamma,
+                key=jax.random.PRNGKey(0), stochastic=False,
+            )
+            hit = rounds_to_reach(r.rel_errors, threshold)
+            per_round = r.bytes_up + r.bytes_down
+            rows.append({
+                "schedule": sname,
+                "max_staleness": D,
+                "tau": tau,
+                "rounds_to_eq": hit,
+                "bytes_to_eq": (int(per_round[:hit].sum())
+                                if hit is not None else None),
+                "final_rel_error": float(r.rel_errors[-1]),
+                "mean_staleness": r.mean_staleness,
+                "bytes_per_round": int(per_round[0]),
+                "lockstep_rounds_to_eq": sync_hit,
+            })
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    def _fmt(row):
+        return (f"{row['schedule']}xD{row['max_staleness']}:"
+                f"R={row['rounds_to_eq']},err={row['final_rel_error']:.1e}")
+
+    emit("async_staleness", us, ";".join(_fmt(r) for r in rows))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--tau", type=int, default=4)
+    parser.add_argument("--rounds", type=int, default=3000)
+    parser.add_argument("--threshold", type=float, default=1e-6)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweep as structured JSON "
+                             "(BENCH_async.json convention for tracking)")
+    args = parser.parse_args()
+
+    rows = run_staleness(tau=args.tau, rounds=args.rounds,
+                         threshold=args.threshold)
+    if args.json:
+        payload = {"benchmark": "bench_async", "staleness": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ FAST = os.environ.get("BENCH_FAST", "1") == "1"
 
 def main() -> None:
     from benchmarks import (
+        bench_async,
         bench_counterexample,
         bench_engine,
         bench_heatmap,
@@ -43,6 +44,8 @@ def main() -> None:
             rounds=400 if FAST else 800)),
         ("engine_topology", lambda: bench_engine.run_topologies(
             rounds=2000 if FAST else 4000)),
+        ("async_staleness", lambda: bench_async.run_staleness(
+            rounds=1500 if FAST else 3000)),
         ("kernels", bench_kernels.run),
         ("pearl_comm", lambda: bench_pearl_comm.run(
             local_steps=16 if FAST else 24)),

@@ -4,6 +4,7 @@
     PYTHONPATH=src python examples/quickstart.py --method extragradient --sync bf16
     PYTHONPATH=src python examples/quickstart.py --method optimistic_gradient --sync partial
     PYTHONPATH=src python examples/quickstart.py --topology ring
+    PYTHONPATH=src python examples/quickstart.py --staleness 4 --delay straggler
 
 Builds the paper's Section 4.1 quadratic game, runs the chosen local update
 rule under the chosen communication strategy and topology for a few
@@ -11,10 +12,12 @@ synchronization intervals tau, and prints the relative error after a fixed
 communication budget — the paper's headline: more local steps, fewer
 communications, same (or better) accuracy. ``--method/--sync/--topology``
 expose the engine's pluggable update x compression/participation x topology
-matrix (see README "Engine architecture" and "Topology layer"). Server-free
-topologies use a weak-coupling game: gossip's stale inconsistent views act
-like delays under the antisymmetric coupling, so its stability margin shrinks
-as the coupling grows.
+matrix (see README "Engine architecture" and "Topology layer");
+``--staleness D`` drops the lockstep barrier and runs the bounded-staleness
+async engine under the ``--delay`` schedule (README "Async rounds").
+Server-free topologies and async runs use a weak-coupling game: stale
+inconsistent views act like delays under the antisymmetric coupling, so the
+stability margin shrinks as the coupling grows.
 """
 
 import argparse
@@ -24,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stepsize
+from repro.core.async_engine import DELAY_SCHEDULES, AsyncPearlEngine
 from repro.core.engine import PLAYER_UPDATES, SYNC_STRATEGIES, PearlEngine
 from repro.core.games import make_quadratic_game
 from repro.core.topology import TOPOLOGIES
@@ -35,21 +39,44 @@ parser.add_argument("--sync", choices=sorted(SYNC_STRATEGIES), default="exact",
                     help="compression/participation strategy at each round")
 parser.add_argument("--topology", choices=sorted(TOPOLOGIES), default="star",
                     help="communication graph (star = the paper's server)")
+parser.add_argument("--staleness", type=int, default=0, metavar="D",
+                    help="bounded-staleness async rounds: players read "
+                         "broadcasts up to D rounds old (0 = lockstep)")
+parser.add_argument("--delay", choices=sorted(DELAY_SCHEDULES),
+                    default="uniform",
+                    help="delay schedule for --staleness > 0")
 parser.add_argument("--rounds", type=int, default=2500,
                     help="communication budget (rounds)")
 args = parser.parse_args()
+if args.staleness < 0:
+    parser.error(f"--staleness must be >= 0, got {args.staleness}")
 
 topology = TOPOLOGIES[args.topology]()
-L_B = 20.0 if topology.is_server else 1.0
+L_B = 20.0 if topology.is_server and args.staleness == 0 else 1.0
 game = make_quadratic_game(n=5, d=10, M=100, L_B=L_B, batch_size=1)
 consts = game.constants()
 print(f"game: n={game.n} d={game.d} kappa={consts.kappa:.0f} q={consts.q:.3f}")
-print(f"engine: method={args.method} sync={args.sync} topology={args.topology}")
+print(f"engine: method={args.method} sync={args.sync} "
+      f"topology={args.topology} staleness={args.staleness}"
+      + (f" delay={args.delay}" if args.staleness else ""))
 
 x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
-engine = PearlEngine(update=PLAYER_UPDATES[args.method](),
-                     sync=SYNC_STRATEGIES[args.sync](),
-                     topology=topology)
+if args.staleness > 0:
+    from repro.core.async_engine import ConstantDelay
+
+    # "constant" means pinned AT the bound (the registry default lag=1
+    # would quietly ignore --staleness)
+    delays = (ConstantDelay(lag=args.staleness) if args.delay == "constant"
+              else DELAY_SCHEDULES[args.delay]())
+    engine = AsyncPearlEngine(update=PLAYER_UPDATES[args.method](),
+                              sync=SYNC_STRATEGIES[args.sync](),
+                              topology=topology,
+                              delays=delays,
+                              max_staleness=args.staleness)
+else:
+    engine = PearlEngine(update=PLAYER_UPDATES[args.method](),
+                         sync=SYNC_STRATEGIES[args.sync](),
+                         topology=topology)
 
 for tau in (1, 4, 20):
     gamma = stepsize.gamma_constant(consts, tau)

@@ -6,3 +6,11 @@ cd "$(dirname "$0")/.."
 
 python -m compileall -q src benchmarks examples scripts
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# fast-mode smoke of the async-staleness benchmark artifact path (temp dir:
+# the committed BENCH_async.json is the paper-scale sweep, not this smoke)
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_async \
+  --rounds 200 --threshold 1e-3 --json "$SMOKE_DIR/BENCH_async.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); assert d['staleness'], 'empty async sweep'" \
+  "$SMOKE_DIR/BENCH_async.json"

@@ -1,0 +1,547 @@
+"""Bounded-staleness asynchronous PEARL: rounds without the lockstep barrier.
+
+PEARL-SGD's analysis (and the lockstep :class:`~repro.core.engine.PearlEngine`
+scan) assumes every player arrives at the synchronization barrier together —
+exactly the assumption heterogeneous real-world clients break. This module
+drops the barrier while keeping everything a single compiled program:
+
+- each player still submits its block on time (the server's copy of a
+  player's own block is always that player's latest iterate), but the
+  *broadcast it optimizes against* may be stale: at round ``r`` player ``i``
+  reads the joint snapshot from round ``r - delay[r, i]``, with the
+  per-player integer staleness drawn from a pluggable :class:`DelaySchedule`
+  and clipped to the staleness bound ``D`` (``max_staleness``);
+- the scan carries a ring buffer of the last ``D + 1`` joint snapshots
+  (``(D + 1, n, d)`` under the star; ``(D + 1, n, n, d)`` stacked per-player
+  views under gossip) and the ``(rounds, n)`` staleness table rides the scan
+  inputs, so the whole event schedule jits into one ``lax.scan`` — no host
+  round-trips, no retracing across delay draws;
+- ``D = 0`` collapses the buffer to a single slot and reproduces the
+  lockstep ``_engine_scan`` **bit-for-bit**, including the RNG chain
+  (``key -> (key, sub); sub -> n player keys; player key -> tau step keys``)
+  — tests/test_async_engine.py pins this, anchoring the async subsystem to
+  the PR 1/2 numerics.
+
+Staleness composes with the existing communication axes rather than
+replacing them: compression applies to the (stale) broadcast a player reads,
+participation masks gate whose fresh block lands in the next snapshot, and
+server-free topologies delay the *mixing input* each receiver processes.
+:class:`StaleSync` packages ``(inner strategy, delay schedule, bound)`` as a
+first-class :class:`~repro.core.engine.SyncStrategy` so the delay model
+travels with the strategy object; the lockstep engine rejects it loudly
+instead of silently ignoring the delays.
+
+Wire accounting is unchanged from the lockstep engine (staleness delays
+*arrival*, not transmission), so bytes-to-equilibrium comparisons against
+the synchronous engine are apples-to-apples — ``benchmarks/bench_async.py``
+sweeps the equilibrium neighborhood and wire cost over the staleness bound.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    ExactSync,
+    JointUpdate,
+    PearlResult,
+    PlayerUpdate,
+    SgdUpdate,
+    SyncStrategy,
+    account_round_bytes,
+    as_round_gammas,
+    relative_error_curve,
+    validate_round_args,
+)
+from repro.core.game import VectorGame
+from repro.core.topology import Star, Topology
+
+Array = jax.Array
+
+
+# =========================================================================
+# Delay schedules — per-player integer staleness, drawn host-side
+# =========================================================================
+class DelaySchedule(abc.ABC):
+    """Per-round, per-player broadcast staleness (in rounds).
+
+    Implementations are frozen hashable dataclasses carrying an int seed.
+    :meth:`draw` runs host-side and returns the full ``(rounds, n)`` int
+    table; the engine clips it to ``[0, max_staleness]`` and feeds it to the
+    compiled scan as a traced input, so changing the delay realization never
+    retraces. Entry ``(r, i)`` = how many rounds old the snapshot player
+    ``i`` reads at round ``r`` (0 = the current one, i.e. lockstep).
+    """
+
+    name: str = "delay"
+
+    @abc.abstractmethod
+    def draw(self, rounds: int, n: int, max_staleness: int) -> np.ndarray:
+        """Return an int array of shape ``(rounds, n)`` in [0, max_staleness]."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ZeroDelay(DelaySchedule):
+    """Everyone always reads the freshest snapshot — the lockstep schedule."""
+
+    name: str = "zero"
+
+    def draw(self, rounds, n, max_staleness):
+        del max_staleness
+        return np.zeros((rounds, n), dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantDelay(DelaySchedule):
+    """Deterministic lag: every player is always ``lag`` rounds behind
+    (clipped to the staleness bound). The cleanest knob for studying how the
+    equilibrium neighborhood degrades with staleness."""
+
+    lag: int = 1
+    name: str = "constant"
+
+    def __post_init__(self):
+        if self.lag < 0:
+            raise ValueError(f"ConstantDelay.lag must be >= 0, got {self.lag}")
+
+    def draw(self, rounds, n, max_staleness):
+        return np.full((rounds, n), min(self.lag, max_staleness),
+                       dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformDelay(DelaySchedule):
+    """IID uniform staleness in ``{0, ..., max_staleness}`` per (round,
+    player) — the standard bounded-delay adversary of asynchronous SGD
+    analyses."""
+
+    seed: int = 0
+    name: str = "uniform"
+
+    def draw(self, rounds, n, max_staleness):
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, max_staleness + 1, size=(rounds, n),
+                            dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerDelay(DelaySchedule):
+    """Straggler-heavy: a fixed ``fraction`` of the players (chosen by
+    ``seed``) is always maximally stale, the rest flip between fresh and
+    one-round-late — the bimodal pattern of a cluster with a few slow
+    clients (cf. client heterogeneity in federated minimax settings)."""
+
+    fraction: float = 0.25
+    seed: int = 0
+    name: str = "straggler"
+
+    def __post_init__(self):
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(
+                f"StragglerDelay.fraction must be in [0, 1], "
+                f"got {self.fraction}"
+            )
+
+    def draw(self, rounds, n, max_staleness):
+        rng = np.random.default_rng(self.seed)
+        n_slow = int(math.ceil(self.fraction * n))
+        slow = rng.permutation(n)[:n_slow]
+        delays = rng.integers(0, min(1, max_staleness) + 1,
+                              size=(rounds, n)).astype(np.int32)
+        delays[:, slow] = max_staleness
+        return delays
+
+
+def draw_delay_table(delays: DelaySchedule, rounds: int, n: int,
+                     max_staleness: int, *, start: int = 0) -> np.ndarray:
+    """Validated, clipped ``(rounds, n)`` staleness table starting at round
+    ``start`` — THE one place a schedule's draw is turned into engine input
+    (shared by :class:`AsyncPearlEngine` and the trainer's host loop).
+
+    ``start > 0`` continues the schedule where a previous call left off: the
+    full ``start + rounds`` table is drawn and the prefix discarded, so entry
+    ``(r, i)`` is always *global* round ``start + r``'s delay regardless of
+    how the rounds were batched into calls.
+    """
+    table = np.asarray(delays.draw(start + rounds, n, max_staleness))
+    if table.shape != (start + rounds, n):
+        raise ValueError(
+            f"{type(delays).__name__}.draw returned shape {table.shape}, "
+            f"expected {(start + rounds, n)}"
+        )
+    return np.clip(table[start:], 0, max_staleness).astype(np.int32)
+
+
+# =========================================================================
+# StaleSync — staleness as a first-class SyncStrategy axis
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class StaleSync(SyncStrategy):
+    """Wrap any sync strategy with a bounded-staleness delay model.
+
+    Composes staleness with the existing compression / participation axes:
+    all wire semantics (``view``/``mask``/``compress``/byte accounting)
+    delegate to ``inner``, while the delay schedule and bound travel with
+    the strategy object. Only :class:`AsyncPearlEngine` (which owns the
+    snapshot ring buffer) can honor the delays, so ``requires_async`` makes
+    the lockstep :class:`~repro.core.engine.PearlEngine` reject this wrapper
+    instead of silently running it as its inner strategy.
+    """
+
+    inner: SyncStrategy = dataclasses.field(default_factory=ExactSync)
+    delays: DelaySchedule = dataclasses.field(default_factory=UniformDelay)
+    max_staleness: int = 0
+    name: str = "stale"
+    requires_async = True
+
+    def __post_init__(self):
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"StaleSync.max_staleness must be >= 0, "
+                f"got {self.max_staleness}"
+            )
+        if isinstance(self.inner, StaleSync):
+            raise ValueError("StaleSync cannot wrap another StaleSync")
+
+    # wire semantics delegate wholesale to the inner strategy
+    @property
+    def uses_mask(self):
+        return self.inner.uses_mask
+
+    @property
+    def bills_full_round(self):
+        return self.inner.bills_full_round
+
+    def init_state(self):
+        return self.inner.init_state()
+
+    def pre_round(self, state):
+        return self.inner.pre_round(state)
+
+    def view(self, i, x_sync, ctx):
+        return self.inner.view(i, x_sync, ctx)
+
+    def mask(self, n, ctx):
+        return self.inner.mask(n, ctx)
+
+    def compress(self, x):
+        return self.inner.compress(x)
+
+    def wire_itemsize(self, base_bps):
+        return self.inner.wire_itemsize(base_bps)
+
+    def round_bytes(self, participants, n, d, base_bps):
+        return self.inner.round_bytes(participants, n, d, base_bps)
+
+
+# =========================================================================
+# The bounded-staleness scan
+# =========================================================================
+@partial(jax.jit,
+         static_argnames=("update", "sync", "topology", "tau", "stochastic",
+                          "max_staleness"))
+def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
+                       delays: Array, key: Array, *, update,
+                       sync: SyncStrategy, topology: Topology, tau: int,
+                       stochastic: bool, max_staleness: int):
+    """One compiled program: rounds-scan with a snapshot ring buffer.
+
+    Mirrors the lockstep ``_engine_scan`` op-for-op — same RNG chain, same
+    mask-merge, same residual — with one change: the reference a player
+    optimizes against comes from ``buf[delay[r, i]]`` instead of the current
+    snapshot. ``buf[0]`` always holds the current state, so an all-zero
+    delay table reproduces the lockstep trajectories bit-for-bit (the D = 0
+    pin). The buffer initializes to ``x0`` in every slot: before a player
+    has heard anything, the freshest available snapshot is the init.
+
+    Returns ``(x_final, xs, residuals, participants, links)`` with the exact
+    shapes/meanings of the lockstep scan, so the byte accounting is shared.
+    """
+    n = x0.shape[0]
+    depth = max_staleness + 1
+
+    def tau_local_steps(i, pkey, x_start, x_ref, gamma):
+        state0 = update.init_state(game, i, x_start, x_ref)
+        keys = jax.random.split(pkey, tau)
+
+        def step(c, k):
+            x_i, st = c
+            x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
+                                  stochastic)
+            return (x_i, st), None
+
+        (x_i, _), _ = jax.lax.scan(step, (x_start, state0), keys)
+        return x_i
+
+    if topology.is_server:
+        def round_body(carry, scan_in):
+            gamma, _, delay_row = scan_in
+            buf, x_sync, key, s = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+
+            def local(i, pkey, d_i):
+                # the freshest broadcast this player has RECEIVED is d_i
+                # rounds old; its own block is always live (the player starts
+                # from x_sync[i] and the game contract ignores row i of the
+                # reference), so staleness affects only the opponents' rows.
+                # D = 0 resolves the buffer read at trace time: the one slot
+                # is the current snapshot, and skipping the dynamic gather
+                # keeps the compiled program identical to the lockstep scan
+                # (the gather alone perturbs XLA fusion at the ULP level).
+                x_stale = x_sync if depth == 1 else buf[d_i]
+                x_ref = sync.view(i, x_stale, ctx)
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, gamma)
+
+            x_prop = jax.vmap(local)(jnp.arange(n), player_keys, delay_row)
+            m = sync.mask(n, ctx)
+            if m is None:
+                x_next = x_prop
+                participants = jnp.asarray(n, jnp.int32)
+            else:
+                x_next = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+            buf_next = jnp.concatenate([x_next[None], buf[:-1]])
+            return (buf_next, x_next, key, s), (x_next, res, participants,
+                                                participants)
+
+        buf0 = jnp.broadcast_to(x0[None], (depth, *x0.shape))
+        init = (buf0, x0, key, sync.init_state())
+    else:
+        # Server-free gossip under staleness: a receiver processes the wire
+        # messages from ``delay`` rounds ago — it mixes over the network
+        # state as of its read time, except that senders' own decision
+        # blocks are anchored fresh (a sender's latest submission is what
+        # sits on its outgoing edge buffers; staleness corrupts only the
+        # relayed estimates of OTHERS). Single mixing sweep per round: the
+        # multi-sweep lockstep exchange has no per-receiver delayed
+        # equivalent, so AsyncPearlEngine pins gossip_steps = 1.
+        W_stack = jnp.asarray(topology.mixing_stack(n), dtype=x0.dtype)
+        A_stack = jnp.asarray(topology.adjacency_stack(n), dtype=bool)
+        T = W_stack.shape[0]
+        diag = jnp.arange(n)
+
+        def round_body(carry, scan_in):
+            gamma, ridx, delay_row = scan_in
+            Vbuf, x_sync, key, s = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            W = W_stack[ridx % T]
+            A = A_stack[ridx % T]
+
+            def local(i, pkey, d_i):
+                V_read = Vbuf[0] if depth == 1 else Vbuf[d_i]
+                return tau_local_steps(i, pkey, x_sync[i], V_read[i], gamma)
+
+            x_prop = jax.vmap(local)(jnp.arange(n), player_keys, delay_row)
+            m = sync.mask(n, ctx)
+            if m is None:
+                mf = jnp.ones((n,), dtype=W.dtype)
+                x_used = x_prop
+                participants = jnp.asarray(n, jnp.int32)
+            else:
+                mf = m.astype(W.dtype)
+                x_used = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+
+            pair = mf[:, None] * mf[None, :]
+            link_w = jnp.where(A, W * pair, 0.0)
+            self_w = 1.0 - jnp.sum(link_w, axis=1)
+
+            def mix_receiver(i, d_i):
+                Vd = (Vbuf[0] if depth == 1 else Vbuf[d_i])
+                Vd = Vd.at[diag, diag].set(x_used)
+                wire = sync.compress(Vd).astype(Vd.dtype)
+                v_i = (jnp.einsum("j,jkd->kd", link_w[i], wire)
+                       + self_w[i] * Vd[i])
+                return v_i.at[i].set(x_used[i])
+
+            V_next = jax.vmap(mix_receiver)(jnp.arange(n), delay_row)
+            if m is not None:
+                # lockstep invariant: a masked-out receiver exchanges
+                # nothing and KEEPS its current view (its link row is
+                # zeroed, self weight 1) — it must not time-travel back to
+                # its stale read slot
+                V_cur = Vbuf[0].at[diag, diag].set(x_used)
+                V_next = jnp.where(mf[:, None, None] > 0, V_next, V_cur)
+            links = jnp.sum((A & (pair > 0)).astype(jnp.int32))
+            res = jnp.sqrt(jnp.sum(game.operator(x_used) ** 2))
+            Vbuf_next = jnp.concatenate([V_next[None], Vbuf[:-1]])
+            return (Vbuf_next, x_used, key, s), (x_used, res, participants,
+                                                  links)
+
+        V0 = jnp.broadcast_to(x0[None], (n, *x0.shape))
+        Vbuf0 = jnp.broadcast_to(V0[None], (depth, *V0.shape))
+        init = (Vbuf0, x0, key, sync.init_state())
+
+    scan_in = (gammas, jnp.arange(gammas.shape[0]), delays)
+    carry, (xs, residuals, participants, links) = jax.lax.scan(
+        round_body, init, scan_in
+    )
+    return carry[1], xs, residuals, participants, links
+
+
+# =========================================================================
+# Result type with realized-staleness diagnostics
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class AsyncPearlResult(PearlResult):
+    """:class:`~repro.core.engine.PearlResult` plus the realized staleness
+    table (``(rounds, n)`` ints) the run actually executed."""
+
+    staleness: np.ndarray | None = None
+
+    @property
+    def mean_staleness(self) -> float:
+        return 0.0 if self.staleness is None else float(self.staleness.mean())
+
+    @property
+    def max_realized_staleness(self) -> int:
+        return 0 if self.staleness is None else int(self.staleness.max())
+
+
+# =========================================================================
+# The engine
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class AsyncPearlEngine:
+    """Bounded-staleness PEARL loop: ``update`` x ``sync`` x ``topology`` x
+    ``delay model``, one compiled scan.
+
+    Drop-in alongside :class:`~repro.core.engine.PearlEngine` with the same
+    ``run`` / ``trajectory`` surface. The delay model can be given either
+    directly (``delays`` + ``max_staleness``) or packaged in a
+    :class:`StaleSync` passed as ``sync`` (whose inner strategy then
+    supplies the wire semantics); the two spellings are equivalent, and
+    mixing them — a StaleSync *plus* a non-default engine-level delay model
+    — is ambiguous and rejected. ``max_staleness = 0`` reproduces the
+    lockstep engine bit-for-bit on the star topology.
+
+    Joint baselines read fresh iterates mid-round by definition, so they are
+    rejected; gossip topologies run a single mixing sweep per round (the
+    multi-sweep exchange has no per-receiver delayed equivalent).
+    """
+
+    update: PlayerUpdate = SgdUpdate()
+    sync: SyncStrategy = ExactSync()
+    topology: Topology = Star()
+    delays: DelaySchedule = ZeroDelay()
+    max_staleness: int = 0
+
+    def _resolved(self) -> tuple[SyncStrategy, DelaySchedule, int]:
+        """(wire strategy, delay schedule, bound) after StaleSync unwrap."""
+        if isinstance(self.sync, StaleSync):
+            if self.max_staleness != 0 or self.delays != ZeroDelay():
+                raise ValueError(
+                    "give the delay model either inside StaleSync or via "
+                    "delays/max_staleness, not both"
+                )
+            return self.sync.inner, self.sync.delays, self.sync.max_staleness
+        return self.sync, self.delays, self.max_staleness
+
+    def _check(self) -> tuple[SyncStrategy, DelaySchedule, int]:
+        sync, delays, D = self._resolved()
+        if D < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {D}")
+        if isinstance(self.update, JointUpdate):
+            raise ValueError(
+                f"{type(self.update).__name__} reads fresh iterates "
+                f"mid-round (fully synchronized) — asynchronous bounded "
+                f"staleness does not apply; use the lockstep PearlEngine"
+            )
+        return sync, delays, D
+
+    def _scan(self, game, x0, *, rounds, tau, gamma, key, stochastic):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        sync, delays, D = self._check()
+        validate_round_args(tau, rounds)
+        gammas = as_round_gammas(gamma, rounds)
+        table = draw_delay_table(delays, rounds, x0.shape[0], D)
+        outs = _async_engine_scan(
+            game, x0, gammas, jnp.asarray(table), key,
+            update=self.update, sync=sync, topology=self.topology,
+            tau=tau, stochastic=stochastic, max_staleness=D,
+        )
+        return sync, table, outs
+
+    def run(
+        self,
+        game: VectorGame,
+        x0: Array,
+        *,
+        rounds: int,
+        tau: int = 1,
+        gamma,
+        key: Array | None = None,
+        stochastic: bool = True,
+        x_star: Array | None = None,
+    ) -> AsyncPearlResult:
+        """Run ``rounds`` asynchronous rounds and record diagnostics.
+
+        Same contract as :meth:`repro.core.engine.PearlEngine.run`; the
+        result additionally carries the realized staleness table. Byte
+        accounting is identical to the lockstep engine's — staleness delays
+        arrival, not transmission — so sync-vs-async byte comparisons at
+        matched ``tau`` are direct.
+        """
+        if x_star is None:
+            x_star = game.equilibrium()
+        sync, table, (x_final, xs, residuals, participants, links) = \
+            self._scan(game, x0, rounds=rounds, tau=tau, gamma=gamma,
+                       key=key, stochastic=stochastic)
+        res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
+        n, d = x0.shape
+        bytes_up, bytes_down = account_round_bytes(
+            update=self.update, sync=sync, topology=self.topology,
+            gossip_steps=1, participants=participants, links=links,
+            n=n, d=d, base_bps=int(np.dtype(x0.dtype).itemsize),
+            rounds=rounds,
+        )
+        return AsyncPearlResult(
+            x_final=x_final,
+            rel_errors=relative_error_curve(x0, x_star, xs),
+            residuals=np.concatenate([[float(res0)], np.asarray(residuals)]),
+            tau=tau,
+            rounds=rounds,
+            bytes_up=bytes_up,
+            bytes_down=bytes_down,
+            staleness=table,
+        )
+
+    def trajectory(
+        self,
+        game: VectorGame,
+        x0: Array,
+        *,
+        rounds: int,
+        tau: int = 1,
+        gamma,
+        key: Array | None = None,
+        stochastic: bool = True,
+    ) -> Array:
+        """Raw per-round iterates ``(rounds, n, d)`` — no equilibrium needed."""
+        _, _, (_, xs, _, _, _) = self._scan(
+            game, x0, rounds=rounds, tau=tau, gamma=gamma, key=key,
+            stochastic=stochastic,
+        )
+        return xs
+
+
+# ------------------------------------------------------------------ registry
+DELAY_SCHEDULES = {
+    "zero": ZeroDelay,
+    "constant": ConstantDelay,
+    "uniform": UniformDelay,
+    "straggler": StragglerDelay,
+}

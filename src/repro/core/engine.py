@@ -103,6 +103,84 @@ class PearlResult:
 
 
 # =========================================================================
+# Shared diagnostics / accounting (used by PearlEngine and AsyncPearlEngine)
+# =========================================================================
+def validate_round_args(tau: int, rounds: int) -> None:
+    """Reject degenerate loop bounds before they reach the compiled scan.
+
+    ``tau = 0`` would silently return the iterates unchanged via a zero-length
+    inner scan (and ``rounds = 0`` via a zero-length rounds-scan), which reads
+    like instant convergence in every downstream diagnostic — mirror the
+    eager validation of :func:`repro.core.stepsize.gamma_constant`.
+    """
+    if tau < 1:
+        raise ValueError(f"tau must be >= 1, got {tau}")
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+
+
+def relative_error_curve(x0: Array, x_star: Array, xs: Array) -> np.ndarray:
+    """``(R+1,)`` relative-error trajectory with a guarded denominator.
+
+    Normalizes by ``||x0 - x*||^2``. When the run starts AT the equilibrium
+    (or within float equality of it) that denominator is zero and the naive
+    division produces NaNs; in that case the curve falls back to absolute
+    squared errors — identically zero at the start instead of the usual 1.0
+    sentinel, and still meaningful if the iterates ever leave the equilibrium.
+    """
+    init_err_sq = jnp.sum((x0 - x_star) ** 2)
+    at_equilibrium = not bool(init_err_sq > 0.0)
+    denom = 1.0 if at_equilibrium else init_err_sq
+    errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / denom
+    first = 0.0 if at_equilibrium else 1.0
+    return np.concatenate([[first], np.asarray(errs)])
+
+
+def account_round_bytes(
+    *,
+    update,
+    sync: "SyncStrategy",
+    topology: Topology,
+    gossip_steps: int,
+    participants,
+    links,
+    n: int,
+    d: int,
+    base_bps: int,
+    rounds: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-round (uplink, downlink) byte arrays for one engine run.
+
+    The single place the scan outputs (``participants`` server-message counts,
+    ``links`` directed-edge counts) turn into wire bytes, shared by the
+    lockstep and the bounded-staleness engines — staleness delays *arrival*,
+    it never changes what the wire moved.
+    """
+    parts = np.asarray(participants, dtype=np.int64)
+    if isinstance(update, JointUpdate):
+        per_sync_up, per_sync_down = ExactSync().round_bytes(
+            parts, n, d, base_bps
+        )
+        return (update.syncs_per_round * per_sync_up,
+                update.syncs_per_round * per_sync_down)
+    if topology.is_server:
+        return sync.round_bytes(parts, n, d, base_bps)
+    # Edge-aware: each directed active link carries one view-relay message
+    # (n blocks — general games need multi-hop relay; the aggregative
+    # consensus trainer pays only 1 block per edge, see PearlCommReport).
+    # Lossy strategies are billed for every scheduled edge whether or not
+    # the mask delivered it.
+    msgs = np.asarray(links, dtype=np.int64)
+    if sync.bills_full_round:
+        full = topology.directed_edge_counts(n)
+        msgs = gossip_steps * full[np.arange(rounds) % len(full)]
+    return gossip_round_bytes(
+        msgs, payload_blocks=n, block_scalars=d,
+        itemsize=sync.wire_itemsize(base_bps),
+    )
+
+
+# =========================================================================
 # Schedules
 # =========================================================================
 def as_round_gammas(gamma, rounds: int) -> jnp.ndarray:
@@ -628,11 +706,27 @@ class PearlEngine:
     def _check_topology(self):
         if self.gossip_steps < 1:
             raise ValueError(f"gossip_steps must be >= 1, got {self.gossip_steps}")
-        if isinstance(self.update, JointUpdate) and not self.topology.is_server:
+        if getattr(self.sync, "requires_async", False):
             raise ValueError(
-                f"{type(self.update).__name__} is fully synchronized and "
-                f"needs the Star topology, got {type(self.topology).__name__}"
+                f"{type(self.sync).__name__} models bounded staleness and "
+                f"needs the snapshot ring buffer of AsyncPearlEngine "
+                f"(repro.core.async_engine); the lockstep PearlEngine would "
+                f"silently ignore its delay schedule"
             )
+        if isinstance(self.update, JointUpdate):
+            if not self.topology.is_server:
+                raise ValueError(
+                    f"{type(self.update).__name__} is fully synchronized and "
+                    f"needs the Star topology, got {type(self.topology).__name__}"
+                )
+            if not isinstance(self.sync, ExactSync):
+                raise ValueError(
+                    f"{type(self.update).__name__} owns the whole within-round "
+                    f"computation: the engine never applies "
+                    f"{type(self.sync).__name__}'s pre_round/mask/view, and "
+                    f"billing would silently fall back to ExactSync bytes — "
+                    f"joint baselines support only sync=ExactSync()"
+                )
 
     def run(
         self,
@@ -667,45 +761,26 @@ class PearlEngine:
         if x_star is None:
             x_star = game.equilibrium()
         self._check_topology()
+        validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         x_final, xs, residuals, participants, links = _engine_scan(
             game, x0, gammas, key,
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
         )
-        init_err_sq = jnp.sum((x0 - x_star) ** 2)
-        errs = jnp.sum((xs - x_star[None]) ** 2, axis=(1, 2)) / init_err_sq
         res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
 
         n, d = x0.shape
-        base_bps = int(np.dtype(x0.dtype).itemsize)
-        parts = np.asarray(participants, dtype=np.int64)
-        if isinstance(self.update, JointUpdate):
-            per_sync_up, per_sync_down = ExactSync().round_bytes(
-                parts, n, d, base_bps
-            )
-            bytes_up = self.update.syncs_per_round * per_sync_up
-            bytes_down = self.update.syncs_per_round * per_sync_down
-        elif self.topology.is_server:
-            bytes_up, bytes_down = self.sync.round_bytes(parts, n, d, base_bps)
-        else:
-            # Edge-aware: each directed active link carries one view-relay
-            # message (n blocks — general games need multi-hop relay; the
-            # aggregative consensus trainer pays only 1 block per edge, see
-            # PearlCommReport). Lossy strategies are billed for every
-            # scheduled edge whether or not the mask delivered it.
-            msgs = np.asarray(links, dtype=np.int64)
-            if self.sync.bills_full_round:
-                full = self.topology.directed_edge_counts(n)
-                msgs = self.gossip_steps * full[np.arange(rounds) % len(full)]
-            bytes_up, bytes_down = gossip_round_bytes(
-                msgs, payload_blocks=n, block_scalars=d,
-                itemsize=self.sync.wire_itemsize(base_bps),
-            )
+        bytes_up, bytes_down = account_round_bytes(
+            update=self.update, sync=self.sync, topology=self.topology,
+            gossip_steps=self.gossip_steps, participants=participants,
+            links=links, n=n, d=d,
+            base_bps=int(np.dtype(x0.dtype).itemsize), rounds=rounds,
+        )
 
         return PearlResult(
             x_final=x_final,
-            rel_errors=np.concatenate([[1.0], np.asarray(errs)]),
+            rel_errors=relative_error_curve(x0, x_star, xs),
             residuals=np.concatenate([[float(res0)], np.asarray(residuals)]),
             tau=1 if isinstance(self.update, JointUpdate) else tau,
             rounds=rounds,
@@ -732,6 +807,7 @@ class PearlEngine:
         if key is None:
             key = jax.random.PRNGKey(0)
         self._check_topology()
+        validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         _, xs, _, _, _ = _engine_scan(
             game, x0, gammas, key,

@@ -148,6 +148,7 @@ def make_pearl_round(
     sync_dtype=None,
     sync: SyncStrategy | None = None,
     topology: Topology | None = None,
+    external_refs: bool = False,
 ) -> Callable:
     """Build one compiled PEARL round on the engine's federated-round template.
 
@@ -176,7 +177,19 @@ def make_pearl_round(
     participants' snapshot slots take their freshly compressed blocks
     (stale blocks survive) and their refs re-mix over the merged snapshot.
     """
+    if tau < 1:
+        # a zero-length inner scan would silently return the players
+        # unchanged — same eager validation as the dense engine's
+        # validate_round_args / stepsize.gamma_constant
+        raise ValueError(f"tau must be >= 1, got {tau}")
     strategy = resolve_sync(sync, sync_dtype)
+    if getattr(strategy, "requires_async", False):
+        raise ValueError(
+            f"{type(strategy).__name__} carries a delay model the compiled "
+            f"round cannot honor — construct PearlTrainer with it (or with "
+            f"delays/max_staleness), which unwraps it into the event-shaped "
+            f"host loop"
+        )
     topo = topology if topology is not None else Star()
     loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
                            use_kernels=use_kernels, prox_lambda=prox_lambda)
@@ -193,7 +206,11 @@ def make_pearl_round(
         p = apply_updates(p, updates)
         return (p, o), metrics
 
-    if not needs_general_round(strategy, topo):
+    # ``external_refs`` compiles the stale-block merge round even when the
+    # star fast path would suffice, and skips the in-round reference re-mix:
+    # the async trainer refreshes references host-side from DELAYED
+    # snapshots, so computing fresh ones here would be wasted work.
+    if not external_refs and not needs_general_round(strategy, topo):
         round_fn = make_federated_round(
             local_step,
             lambda stacked: tree_mean(stacked[0], sync=strategy),
@@ -230,6 +247,10 @@ def make_pearl_round(
             lambda w, s: jnp.where(_per_player(mask, w), w, s),
             wire, snapshot,
         )
+        if external_refs:
+            # the host loop refreshes references itself (from delayed
+            # snapshots); return them unchanged
+            return new_p, new_o, refs, new_snapshot, metrics
         # Each participant re-mixes its reference over the merged snapshot
         # (star: the exact mean row ones/n); non-participants keep their
         # stale reference — they received nothing this round.
@@ -372,20 +393,61 @@ class PearlTrainer:
     participation mask, and the round's mixing matrix (cycled for
     time-varying graphs). ``xbar`` stays available either way as the uniform
     across-player mean of the latest snapshot (diagnostics/back-compat).
+
+    **Asynchronous rounds** (``delays`` + ``max_staleness``, or a
+    :class:`~repro.core.async_engine.StaleSync` as ``sync``) run the same
+    event-shaped loop as :class:`~repro.core.async_engine.AsyncPearlEngine`:
+    players always submit on time (their fresh blocks merge into the
+    snapshot at each sync they participate in), but the *reference* a player
+    receives back is the topology mix over the snapshot as it stood
+    ``delay`` rounds ago — merge-on-arrival into the stale-block machinery,
+    with a host-side ring buffer of the last ``max_staleness + 1`` merged
+    snapshots. Per-player round counters (``player_rounds``,
+    ``player_snapshot_round``) record how many syncs each player merged and
+    which round's broadcast it last saw; ``staleness_log`` keeps the
+    realized delay table. ``max_staleness = 0`` with full participation
+    reproduces the lockstep stale-block round.
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,
                  tau: int, prox_lambda: float, seed: int = 0,
-                 topology: Topology | None = None, **round_kwargs):
+                 topology: Topology | None = None, delays=None,
+                 max_staleness: int = 0, **round_kwargs):
+        from repro.core.async_engine import StaleSync
         from repro.models.model import init_params
 
         self.cfg = cfg
         self.tau = tau
         self.n_players = n_players
+        sync_arg = round_kwargs.get("sync")
+        if isinstance(sync_arg, StaleSync):
+            # the StaleSync spelling: the delay model travels with the
+            # strategy; the inner strategy supplies the wire semantics
+            if delays is not None or max_staleness != 0:
+                raise ValueError(
+                    "give the delay model either inside StaleSync or via "
+                    "delays/max_staleness, not both"
+                )
+            delays = sync_arg.delays
+            max_staleness = sync_arg.max_staleness
+            round_kwargs["sync"] = sync_arg.inner
+        if max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {max_staleness}")
+        if max_staleness > 0 and delays is None:
+            raise ValueError(
+                "max_staleness > 0 needs a delays= DelaySchedule (or a "
+                "StaleSync sync) — without one the trainer would silently "
+                "run lockstep"
+            )
+        self.delays = delays
+        self.max_staleness = int(max_staleness)
+        self._async = delays is not None
         self.sync = resolve_sync(round_kwargs.get("sync"),
                                  round_kwargs.get("sync_dtype"))
         self.topology = topology if topology is not None else Star()
-        self._general = needs_general_round(self.sync, self.topology)
+        self._general = (needs_general_round(self.sync, self.topology)
+                         or self._async)
         keys = jax.random.split(jax.random.PRNGKey(seed), n_players)
         params = [init_params(cfg, k) for k in keys]
         self.params = stack_players(params)
@@ -393,7 +455,7 @@ class PearlTrainer:
         self.xbar = tree_mean(self.params)
         self._round = jax.jit(make_pearl_round(
             cfg, optimizer, tau=tau, prox_lambda=prox_lambda,
-            topology=self.topology, **round_kwargs
+            topology=self.topology, external_refs=self._async, **round_kwargs
         ))
         if self._general:
             # init acts as round 0's broadcast: everyone's block is known
@@ -402,6 +464,15 @@ class PearlTrainer:
             self._adjs = self.topology.adjacency_stack(n_players)
             self.refs = self._mix_refs(0)
             self._sync_state = self.sync.init_state()
+        if self._async:
+            # ring buffer of merged snapshots, newest first: index =
+            # staleness in rounds (slot 0 is the current snapshot)
+            self._snap_hist = [self.snapshot]
+            self.player_rounds = np.zeros(n_players, dtype=np.int64)
+            self.player_snapshot_round = np.full(n_players, -1,
+                                                 dtype=np.int64)
+            self.staleness_log: list[np.ndarray] = []
+        self._global_round = 0
         # per-round billing records (what the drawn masks actually moved)
         self._round_participants: list[int] = []
         self._round_messages: list[int] = []
@@ -421,10 +492,68 @@ class PearlTrainer:
             m = jnp.ones((self.n_players,), dtype=bool)
         return m
 
+    def _refresh_stale_refs(self, delay_row: np.ndarray, round_idx: int,
+                            arrived_mask: np.ndarray):
+        """Merge-on-arrival reference refresh over DELAYED snapshots.
+
+        Each arriving player ``i`` receives
+        ``mix_row_i @ snapshot_history[delay_row[i]]`` — the broadcast as it
+        stood ``delay_row[i]`` rounds ago (clipped to the history actually
+        recorded); everyone else keeps its old reference. Arrivals are
+        grouped by delay and only their mix ROWS are computed against that
+        group's snapshot (at most one mixed row per arriving player, none
+        for the rest), then rows are gathered back into player order.
+        Returns ``(new_refs, effective_delays)`` — the latter is the
+        history-clipped staleness each player actually realized.
+        """
+        mix = jnp.asarray(self._mixes[round_idx % len(self._mixes)])
+        effective = np.minimum(np.asarray(delay_row, dtype=np.int64),
+                               len(self._snap_hist) - 1)
+        groups: dict[int, list[int]] = {}
+        stay = []
+        for i in range(self.n_players):
+            if arrived_mask[i]:
+                groups.setdefault(int(effective[i]), []).append(i)
+            else:
+                stay.append(i)
+        order = np.empty(self.n_players, dtype=np.int64)
+        pieces, pos = [], 0
+        for k, idx in sorted(groups.items()):
+            rows = jnp.asarray(np.asarray(idx))
+            pieces.append(jax.tree.map(
+                lambda s: jnp.einsum("ij,j...->i...",
+                                     mix[rows].astype(s.dtype), s),
+                self._snap_hist[k],
+            ))
+            order[idx] = pos + np.arange(len(idx))
+            pos += len(idx)
+        if stay:
+            keep = jnp.asarray(np.asarray(stay))
+            pieces.append(jax.tree.map(lambda r: r[keep], self.refs))
+            order[stay] = pos + np.arange(len(stay))
+        perm = jnp.asarray(order)
+        new_refs = jax.tree.map(
+            lambda *ls: jnp.concatenate(ls, axis=0)[perm], *pieces)
+        return new_refs, effective
+
     def run(self, stream, rounds: int):
         """stream: SyntheticTokenStream with n_players configured."""
         import numpy as np
 
+        if rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {rounds}")
+        delay_table = None
+        if self._async:
+            from repro.core.async_engine import draw_delay_table
+
+            # start at the persistent global round so a second run() call
+            # continues the schedule instead of replaying it from round 0;
+            # one extra row because the refs built at the END of local round
+            # r are consumed in global round g+1 and so carry ITS delay
+            delay_table = draw_delay_table(
+                self.delays, rounds + 1, self.n_players, self.max_staleness,
+                start=self._global_round,
+            )
         step = 0
         for r in range(rounds):
             batches = np.stack([
@@ -432,18 +561,41 @@ class PearlTrainer:
             ], axis=1)  # (n, tau, B, S)
             tokens = {"tokens": jnp.asarray(batches)}
             if self._general:
+                g = self._global_round
                 mask = self._draw_mask()
                 m_np = np.asarray(mask)
                 self._round_participants.append(int(m_np.sum()))
-                adj = self._adjs[r % len(self._adjs)]
+                adj = self._adjs[g % len(self._adjs)]
                 self._round_messages.append(
                     int((adj & np.outer(m_np, m_np)).sum()))
-                mix = jnp.asarray(self._mixes[r % len(self._mixes)])
-                (self.params, self.opt_state, self.refs, self.snapshot,
+                mix = jnp.asarray(self._mixes[g % len(self._mixes)])
+                (self.params, self.opt_state, new_refs, self.snapshot,
                  metrics) = self._round(
                     self.params, self.opt_state, tokens, self.refs,
                     self.snapshot, mask, mix,
                 )
+                if self._async:
+                    # merge-on-arrival: uploads landed on time (the snapshot
+                    # merge above), but the broadcast each participant takes
+                    # home — consumed in the NEXT round — is next_row[i]
+                    # rounds stale. staleness_log[r] records the delays the
+                    # refs consumed DURING round r carried (the engine's
+                    # result.staleness convention).
+                    next_row = delay_table[r + 1]
+                    self._snap_hist.insert(0, self.snapshot)
+                    del self._snap_hist[self.max_staleness + 1:]
+                    self.refs, effective = self._refresh_stale_refs(
+                        next_row, g, m_np)
+                    self.player_rounds += m_np.astype(np.int64)
+                    # g - effective = the round whose merged snapshot the
+                    # arriving player sees (-1 = still only the init)
+                    arrived = g - effective
+                    self.player_snapshot_round = np.where(
+                        m_np, np.maximum(self.player_snapshot_round, arrived),
+                        self.player_snapshot_round)
+                    self.staleness_log.append(delay_table[r])
+                else:
+                    self.refs = new_refs
                 self.xbar = tree_mean(self.snapshot)
             else:
                 self.params, self.opt_state, self.xbar, metrics = self._round(
@@ -453,6 +605,7 @@ class PearlTrainer:
             rec = {k: float(jnp.mean(v)) for k, v in metrics.items()}
             rec["round"] = r
             self.history.append(rec)
+            self._global_round += 1
         return self.history
 
     def comm_report(self, rounds: int | None = None) -> PearlCommReport:

@@ -1,0 +1,304 @@
+"""Bounded-staleness async PEARL: the D = 0 pin, degradation, composition.
+
+The load-bearing test is the bit-for-bit equivalence of the async scan at
+staleness bound D = 0 against the lockstep engine on the star topology —
+across sync strategies and both oracle modes — which anchors the new
+subsystem to the PR 1/2 numerics. Around it: the equilibrium neighborhood
+degrades monotonically as D grows, staleness composes with compression /
+participation / gossip, and the delay schedules honor their contracts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.async_engine import (
+    DELAY_SCHEDULES,
+    AsyncPearlEngine,
+    AsyncPearlResult,
+    ConstantDelay,
+    StaleSync,
+    StragglerDelay,
+    UniformDelay,
+    ZeroDelay,
+)
+from repro.core.engine import (
+    ExtragradientUpdate,
+    JointExtragradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.topology import Ring
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def weak():
+    """Weak coupling: staleness costs rounds instead of destabilizing."""
+    return make_quadratic_game(n=6, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0(quad):
+    return jnp.asarray(
+        np.random.default_rng(7).standard_normal((quad.n, quad.d)),
+        dtype=jnp.float32,
+    )
+
+
+@pytest.fixture(scope="module")
+def x0w(weak):
+    return jnp.asarray(
+        np.random.default_rng(0).standard_normal((weak.n, weak.d)),
+        dtype=jnp.float32,
+    )
+
+
+# ------------------------------------------------------------- the D=0 pin
+class TestLockstepEquivalence:
+    ROUNDS = 50
+
+    @pytest.mark.parametrize("sync", [
+        None,
+        QuantizedSync(jnp.bfloat16),
+        PartialParticipation(fraction=0.5, seed=0),
+    ], ids=["exact", "bf16", "partial"])
+    @pytest.mark.parametrize("stochastic", [False, True])
+    def test_star_d0_bit_for_bit(self, quad, x0, sync, stochastic):
+        """D = 0 reproduces the lockstep engine bit-for-bit on the star,
+        for every sync strategy and both oracle modes — including the RNG
+        chain and the byte accounting."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        key = jax.random.PRNGKey(0)
+        kw = {} if sync is None else {"sync": sync}
+        r_sync = PearlEngine(**kw).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, key=key,
+            stochastic=stochastic,
+        )
+        r_async = AsyncPearlEngine(**kw).run(
+            quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, key=key,
+            stochastic=stochastic,
+        )
+        np.testing.assert_array_equal(np.asarray(r_async.x_final),
+                                      np.asarray(r_sync.x_final))
+        np.testing.assert_array_equal(r_async.rel_errors, r_sync.rel_errors)
+        np.testing.assert_array_equal(r_async.bytes_up, r_sync.bytes_up)
+        np.testing.assert_array_equal(r_async.bytes_down, r_sync.bytes_down)
+
+    @pytest.mark.parametrize("sync", [
+        None,
+        PartialParticipation(fraction=0.5, seed=0),
+    ], ids=["exact", "partial"])
+    def test_ring_d0_bit_for_bit(self, weak, x0w, sync):
+        """The server-free path at D = 0 matches the lockstep gossip scan
+        (single mixing sweep, the lockstep default) — including under a
+        participation mask, which pins the masked-receiver invariant:
+        a non-participant keeps its current view."""
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        kw = {"topology": Ring()} if sync is None else {"topology": Ring(),
+                                                        "sync": sync}
+        r_sync = PearlEngine(**kw).run(
+            weak, x0w, tau=4, rounds=60, gamma=gamma, stochastic=False)
+        r_async = AsyncPearlEngine(**kw).run(
+            weak, x0w, tau=4, rounds=60, gamma=gamma, stochastic=False)
+        np.testing.assert_array_equal(np.asarray(r_async.x_final),
+                                      np.asarray(r_sync.x_final))
+        np.testing.assert_array_equal(r_async.bytes_up, r_sync.bytes_up)
+
+    def test_zero_bound_ignores_schedule(self, quad, x0):
+        """max_staleness = 0 clips every schedule to the lockstep table."""
+        gamma = stepsize.gamma_constant(quad.constants(), 2)
+        runs = [
+            AsyncPearlEngine(delays=sched, max_staleness=0).run(
+                quad, x0, tau=2, rounds=20, gamma=gamma,
+                key=jax.random.PRNGKey(1))
+            for sched in (ZeroDelay(), UniformDelay(seed=9),
+                          StragglerDelay(fraction=0.5, seed=9))
+        ]
+        for r in runs[1:]:
+            np.testing.assert_array_equal(np.asarray(r.x_final),
+                                          np.asarray(runs[0].x_final))
+
+    def test_stale_sync_spelling_equivalent(self, quad, x0):
+        """StaleSync(inner, schedule, D) == the (delays, max_staleness)
+        constructor spelling, and carries the wire semantics of its inner
+        strategy (bf16 halves the downlink)."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        key = jax.random.PRNGKey(2)
+        sched = UniformDelay(seed=3)
+        a = AsyncPearlEngine(sync=QuantizedSync(jnp.bfloat16),
+                             delays=sched, max_staleness=4).run(
+            quad, x0, tau=4, rounds=30, gamma=gamma, key=key)
+        b = AsyncPearlEngine(sync=StaleSync(QuantizedSync(jnp.bfloat16),
+                                            sched, max_staleness=4)).run(
+            quad, x0, tau=4, rounds=30, gamma=gamma, key=key)
+        np.testing.assert_array_equal(np.asarray(a.x_final),
+                                      np.asarray(b.x_final))
+        exact = AsyncPearlEngine(delays=sched, max_staleness=4).run(
+            quad, x0, tau=4, rounds=30, gamma=gamma, key=key)
+        np.testing.assert_array_equal(b.bytes_down, exact.bytes_down // 2)
+
+
+# ---------------------------------------------------------- staleness cost
+class TestStalenessDegradation:
+    def test_monotone_degradation_with_bound(self, weak, x0w):
+        """At matched tau/gamma/rounds the equilibrium neighborhood degrades
+        monotonically as the (deterministic, worst-case) staleness bound
+        grows — bounded delay costs rounds, it must not help."""
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        errs = []
+        for D in (0, 2, 8):
+            r = AsyncPearlEngine(delays=ConstantDelay(lag=D),
+                                 max_staleness=D).run(
+                weak, x0w, tau=4, rounds=60, gamma=gamma, stochastic=False)
+            errs.append(r.rel_errors[-1])
+        assert errs[0] < errs[1] < errs[2]
+
+    def test_bytes_invariant_in_staleness(self, weak, x0w):
+        """Staleness delays arrival, not transmission: per-round wire bytes
+        are identical across D — the cost is purely extra rounds."""
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        runs = [
+            AsyncPearlEngine(delays=ConstantDelay(lag=D), max_staleness=D).run(
+                weak, x0w, tau=4, rounds=30, gamma=gamma, stochastic=False)
+            for D in (0, 8)
+        ]
+        np.testing.assert_array_equal(runs[0].bytes_up, runs[1].bytes_up)
+        np.testing.assert_array_equal(runs[0].bytes_down, runs[1].bytes_down)
+
+    def test_staleness_diagnostics_recorded(self, weak, x0w):
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        r = AsyncPearlEngine(delays=UniformDelay(seed=0), max_staleness=4).run(
+            weak, x0w, tau=4, rounds=40, gamma=gamma, stochastic=False)
+        assert isinstance(r, AsyncPearlResult)
+        assert r.staleness.shape == (40, weak.n)
+        assert 0 < r.mean_staleness <= 4
+        assert r.max_realized_staleness <= 4
+
+
+# ------------------------------------------------------------- composition
+class TestComposition:
+    """Staleness x {compression, participation, gossip} all converge."""
+
+    @pytest.mark.parametrize("kw, tol", [
+        ({"sync": QuantizedSync(jnp.bfloat16)}, 1e-4),
+        ({"sync": PartialParticipation(fraction=0.5, seed=0)}, 1e-6),
+        ({"topology": Ring()}, 1e-4),
+        ({"sync": PartialParticipation(fraction=0.5, seed=0),
+          "topology": Ring()}, 1e-4),
+    ], ids=["bf16", "partial", "ring", "partial-x-ring"])
+    def test_staleness_composes(self, weak, x0w, kw, tol):
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        r = AsyncPearlEngine(delays=UniformDelay(seed=0), max_staleness=4,
+                             **kw).run(
+            weak, x0w, tau=4, rounds=500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < tol
+
+    def test_stale_extragradient_update(self, weak, x0w):
+        """The update-rule axis stays orthogonal: local EG under staleness."""
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        r = AsyncPearlEngine(update=ExtragradientUpdate(),
+                             delays=UniformDelay(seed=1),
+                             max_staleness=2).run(
+            weak, x0w, tau=4, rounds=500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-6
+
+
+# -------------------------------------------------------------- validation
+class TestValidation:
+    def test_joint_update_rejected(self, quad, x0):
+        eng = AsyncPearlEngine(update=JointExtragradientUpdate())
+        with pytest.raises(ValueError, match="fully synchronized"):
+            eng.run(quad, x0, rounds=5, gamma=1e-3)
+
+    def test_lockstep_engine_rejects_stale_sync(self, quad, x0):
+        """PearlEngine cannot honor a delay schedule — it must refuse the
+        wrapper instead of silently running the inner strategy."""
+        eng = PearlEngine(sync=StaleSync(max_staleness=4))
+        with pytest.raises(ValueError, match="AsyncPearlEngine"):
+            eng.run(quad, x0, rounds=5, gamma=1e-3)
+
+    def test_negative_bound_rejected(self):
+        with pytest.raises(ValueError, match="max_staleness"):
+            StaleSync(max_staleness=-1)
+
+    def test_nested_stale_sync_rejected(self):
+        with pytest.raises(ValueError, match="cannot wrap"):
+            StaleSync(inner=StaleSync())
+
+    def test_double_delay_spelling_rejected(self, quad, x0):
+        """A StaleSync AND a non-default engine-level delay model is
+        ambiguous — rejected instead of silently preferring one."""
+        eng = AsyncPearlEngine(sync=StaleSync(max_staleness=4),
+                               delays=ConstantDelay(lag=2), max_staleness=2)
+        with pytest.raises(ValueError, match="not both"):
+            eng.run(quad, x0, tau=2, rounds=5, gamma=1e-3)
+
+    def test_bad_schedule_params_rejected(self):
+        with pytest.raises(ValueError):
+            ConstantDelay(lag=-1)
+        with pytest.raises(ValueError):
+            StragglerDelay(fraction=1.5)
+
+    def test_tau_and_rounds_validated(self, quad, x0):
+        eng = AsyncPearlEngine()
+        with pytest.raises(ValueError, match="tau"):
+            eng.run(quad, x0, tau=0, rounds=5, gamma=1e-3)
+        with pytest.raises(ValueError, match="rounds"):
+            eng.trajectory(quad, x0, tau=2, rounds=0, gamma=1e-3)
+
+
+# ---------------------------------------------------------- delay schedules
+class TestDelaySchedules:
+    @pytest.mark.parametrize("name", sorted(DELAY_SCHEDULES))
+    def test_schedule_contract(self, name):
+        """Every registered schedule: right shape, int dtype, within bound,
+        reproducible from its seed."""
+        sched = DELAY_SCHEDULES[name]()
+        a = sched.draw(20, 6, 5)
+        b = sched.draw(20, 6, 5)
+        assert a.shape == (20, 6)
+        assert np.issubdtype(a.dtype, np.integer)
+        assert a.min() >= 0 and a.max() <= 5
+        np.testing.assert_array_equal(a, b)
+
+    def test_straggler_is_heavy_tailed(self):
+        """The straggler subset sits at the bound; the rest stay near 0."""
+        table = StragglerDelay(fraction=0.25, seed=0).draw(50, 8, 6)
+        always_max = (table == 6).all(axis=0)
+        assert always_max.sum() == 2      # ceil(0.25 * 8)
+        assert table[:, ~always_max].max() <= 1
+
+    def test_constant_clips_to_bound(self):
+        table = ConstantDelay(lag=100).draw(10, 4, 3)
+        assert (table == 3).all()
+
+    def test_draw_delay_table_continues_from_start(self):
+        """Batching rounds into multiple calls realizes the SAME schedule
+        as one long call: entry (r, i) is always global round r's delay."""
+        from repro.core.async_engine import draw_delay_table
+
+        sched = UniformDelay(seed=5)
+        full = draw_delay_table(sched, 12, 4, 3)
+        head = draw_delay_table(sched, 5, 4, 3)
+        tail = draw_delay_table(sched, 7, 4, 3, start=5)
+        np.testing.assert_array_equal(np.concatenate([head, tail]), full)
+
+    def test_draw_delay_table_validates_shape(self):
+        from repro.core.async_engine import DelaySchedule, draw_delay_table
+
+        class Bad(DelaySchedule):
+            def draw(self, rounds, n, max_staleness):
+                return np.zeros((n, rounds), dtype=np.int32)   # transposed
+
+        with pytest.raises(ValueError, match="shape"):
+            draw_delay_table(Bad(), 7, 3, 2)

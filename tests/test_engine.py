@@ -330,6 +330,69 @@ class TestCommAccounting:
         assert not needs_general_round(QuantizedSync(jnp.bfloat16), Star())
 
 
+# ------------------------------------------------------- bugfix regressions
+class TestEngineValidation:
+    """Regressions for the silent-failure sweep: loud errors instead of
+    silently-wrong numbers."""
+
+    def test_joint_update_rejects_non_exact_sync(self, quad, x0):
+        """A JointUpdate never consults the sync strategy (no pre_round /
+        mask / view) yet used to accept any strategy and bill ExactSync
+        bytes — now a loud error."""
+        for sync in (QuantizedSync(jnp.bfloat16),
+                     PartialParticipation(fraction=0.5, seed=0),
+                     DropoutSync(p=0.1, seed=0)):
+            eng = PearlEngine(update=JointExtragradientUpdate(), sync=sync)
+            with pytest.raises(ValueError, match="ExactSync"):
+                eng.run(quad, x0, rounds=5, gamma=1e-3)
+
+    def test_joint_update_with_exact_sync_still_runs(self, quad, x0):
+        r = PearlEngine(update=JointExtragradientUpdate()).run(
+            quad, x0, rounds=5, gamma=1e-3)
+        assert np.isfinite(r.rel_errors).all()
+
+    def test_rel_errors_finite_when_started_at_equilibrium(self, quad):
+        """||x0 - x*||^2 = 0 used to NaN the whole rel_errors curve; the
+        guarded denominator falls back to absolute squared errors (0 at the
+        start, finite throughout)."""
+        x_star = quad.equilibrium()
+        r = PearlEngine().run(quad, x_star, tau=2, rounds=10, gamma=1e-3,
+                              stochastic=False)
+        assert np.isfinite(r.rel_errors).all()
+        assert r.rel_errors[0] == 0.0
+        # deterministic gradients from the equilibrium: F(x*) = 0, so the
+        # iterates never move and the curve stays identically zero
+        np.testing.assert_allclose(r.rel_errors, 0.0, atol=1e-12)
+
+    def test_rel_errors_normalized_away_from_equilibrium(self, quad, x0):
+        r = PearlEngine().run(quad, x0, tau=2, rounds=10, gamma=1e-3,
+                              stochastic=False)
+        assert r.rel_errors[0] == 1.0
+
+    @pytest.mark.parametrize("bad", [{"tau": 0}, {"tau": -3}])
+    def test_tau_validated(self, quad, x0, bad):
+        """tau = 0 used to silently return the iterates unchanged via a
+        zero-length inner scan."""
+        with pytest.raises(ValueError, match="tau"):
+            PearlEngine().run(quad, x0, rounds=5, gamma=1e-3, **bad)
+        with pytest.raises(ValueError, match="tau"):
+            PearlEngine().trajectory(quad, x0, rounds=5, gamma=1e-3, **bad)
+
+    def test_rounds_validated(self, quad, x0):
+        with pytest.raises(ValueError, match="rounds"):
+            PearlEngine().run(quad, x0, tau=2, rounds=0, gamma=1e-3)
+
+    def test_make_pearl_round_validates_tau(self):
+        """The neural-trainer round mirrors the engine's tau check."""
+        from repro.configs import get_config
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import make_pearl_round
+
+        cfg = get_config("smollm-360m").smoke_variant()
+        with pytest.raises(ValueError, match="tau"):
+            make_pearl_round(cfg, sgd(1e-2), tau=0, prox_lambda=1e-3)
+
+
 # --------------------------------------------------------------- schedules
 class TestSchedules:
     def test_warmup_cosine_shape(self):

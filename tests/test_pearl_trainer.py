@@ -176,6 +176,108 @@ class TestTopologyTrainer:
             assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-5)
 
 
+class TestAsyncTrainer:
+    """Bounded-staleness rounds for neural players: the event-shaped host
+    loop (merge-on-arrival into the stale-block snapshot machinery)."""
+
+    def test_async_d0_matches_lockstep_general_round(self, cfg):
+        """ZeroDelay with bound 0: the async loop's host-side ref refresh
+        reproduces the lockstep stale-block round's losses."""
+        from repro.core.async_engine import ZeroDelay
+        from repro.core.engine import PartialParticipation
+
+        lockstep = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            seed=2, sync=PartialParticipation(fraction=1.0, seed=0),
+        )
+        hist_a = lockstep.run(_stream(cfg), rounds=3)
+        asynchronous = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            seed=2, sync=PartialParticipation(fraction=1.0, seed=0),
+            delays=ZeroDelay(), max_staleness=0,
+        )
+        hist_b = asynchronous.run(_stream(cfg), rounds=3)
+        for a, b in zip(hist_a, hist_b):
+            assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-5)
+
+    def test_async_staleness_trains_and_counts_rounds(self, cfg):
+        """Uniform staleness with a participation mask: training advances,
+        and the per-player round counters record what actually arrived."""
+        from repro.core.async_engine import StaleSync, UniformDelay
+        from repro.core.engine import PartialParticipation
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            sync=StaleSync(PartialParticipation(fraction=0.7, seed=0),
+                           UniformDelay(seed=1), max_staleness=2),
+        )
+        hist = trainer.run(_stream(cfg), rounds=5)
+        assert hist[-1]["lm_loss"] < hist[0]["lm_loss"]
+        assert np.isfinite(hist[-1]["lm_loss"])
+        # counters: each player merged as many syncs as rounds it drew
+        assert trainer.player_rounds.sum() == sum(trainer._round_participants)
+        assert (trainer.player_rounds <= 5).all()
+        # staleness log covers every round, within the bound
+        assert len(trainer.staleness_log) == 5
+        assert max(int(row.max()) for row in trainer.staleness_log) <= 2
+        # arrival bookkeeping: merged players record which round's snapshot
+        # they last saw (-1 = still only the init), bounded by the rounds run
+        merged = trainer.player_rounds > 0
+        assert (trainer.player_snapshot_round[merged] >= -1).all()
+        assert trainer.player_snapshot_round.max() >= 0
+        assert trainer.player_snapshot_round.max() < 5
+
+    def test_async_star_exact_forces_general_machinery(self, cfg):
+        """Star + ExactSync is the legacy fast path — unless staleness is
+        requested, which needs per-player refs and the snapshot history."""
+        from repro.core.async_engine import ConstantDelay
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            delays=ConstantDelay(lag=1), max_staleness=1,
+        )
+        hist = trainer.run(_stream(cfg), rounds=4)
+        assert hist[-1]["lm_loss"] < hist[0]["lm_loss"]
+        assert len(trainer._snap_hist) <= 2     # bound + 1 snapshots kept
+        ref_leaf = jax.tree.leaves(trainer.refs)[0]
+        assert ref_leaf.shape[0] == N_PLAYERS   # per-player references
+
+    def test_trainer_rejects_bad_bounds(self, cfg):
+        from repro.core.async_engine import ZeroDelay
+
+        with pytest.raises(ValueError, match="max_staleness"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                         prox_lambda=1e-3, delays=ZeroDelay(),
+                         max_staleness=-1)
+        trainer = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                               prox_lambda=1e-3)
+        with pytest.raises(ValueError, match="rounds"):
+            trainer.run(_stream(cfg), rounds=0)
+
+    def test_trainer_rejects_ambiguous_or_incomplete_delay_model(self, cfg):
+        """A bound without a schedule would silently run lockstep; a
+        StaleSync plus an explicit schedule is ambiguous — both are loud."""
+        from repro.core.async_engine import ConstantDelay, StaleSync
+
+        with pytest.raises(ValueError, match="delays"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                         prox_lambda=1e-3, max_staleness=3)
+        with pytest.raises(ValueError, match="not both"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                         prox_lambda=1e-3, sync=StaleSync(max_staleness=4),
+                         delays=ConstantDelay(lag=2), max_staleness=2)
+
+    def test_make_pearl_round_rejects_stale_sync(self, cfg):
+        """The compiled round cannot honor a delay model — only the trainer
+        host loop can; the silent-no-op path is closed."""
+        from repro.core.async_engine import StaleSync
+        from repro.train.pearl_trainer import make_pearl_round
+
+        with pytest.raises(ValueError, match="delay model"):
+            make_pearl_round(cfg, sgd(5e-2), tau=2, prox_lambda=1e-3,
+                             sync=StaleSync(max_staleness=2))
+
+
 class TestCommReport:
     def test_bytes_accounting(self):
         rep = PearlCommReport(n_players=4, param_count=1000, tau=8, rounds=10)
