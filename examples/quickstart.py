@@ -5,6 +5,8 @@
     PYTHONPATH=src python examples/quickstart.py --method optimistic_gradient --sync partial
     PYTHONPATH=src python examples/quickstart.py --topology ring
     PYTHONPATH=src python examples/quickstart.py --staleness 4 --delay straggler
+    PYTHONPATH=src python examples/quickstart.py --staleness 16 --delay straggler --policy delay_adaptive
+    PYTHONPATH=src python examples/quickstart.py --topology ring --policy spectral
 
 Builds the paper's Section 4.1 quadratic game, runs the chosen local update
 rule under the chosen communication strategy and topology for a few
@@ -14,7 +16,10 @@ communications, same (or better) accuracy. ``--method/--sync/--topology``
 expose the engine's pluggable update x compression/participation x topology
 matrix (see README "Engine architecture" and "Topology layer");
 ``--staleness D`` drops the lockstep barrier and runs the bounded-staleness
-async engine under the ``--delay`` schedule (README "Async rounds").
+async engine under the ``--delay`` schedule (README "Async rounds");
+``--policy`` swaps the Theorem 3.4 step-size rule for a context-aware one
+(README "Step-size policies" — ``delay_adaptive`` needs ``--staleness``,
+``spectral`` a server-free ``--topology``; the engine rejects mismatches).
 Server-free topologies and async runs use a weak-coupling game: stale
 inconsistent views act like delays under the antisymmetric coupling, so the
 stability margin shrinks as the coupling grows.
@@ -30,6 +35,7 @@ from repro.core import stepsize
 from repro.core.async_engine import DELAY_SCHEDULES, AsyncPearlEngine
 from repro.core.engine import PLAYER_UPDATES, SYNC_STRATEGIES, PearlEngine
 from repro.core.games import make_quadratic_game
+from repro.core.stepsize import STEPSIZE_POLICIES
 from repro.core.topology import TOPOLOGIES
 
 parser = argparse.ArgumentParser(description=__doc__)
@@ -45,6 +51,11 @@ parser.add_argument("--staleness", type=int, default=0, metavar="D",
 parser.add_argument("--delay", choices=sorted(DELAY_SCHEDULES),
                     default="uniform",
                     help="delay schedule for --staleness > 0")
+parser.add_argument("--policy", choices=sorted(STEPSIZE_POLICIES),
+                    default="theorem34",
+                    help="step-size policy (theorem34 = the paper's fixed "
+                         "rule; delay_adaptive needs --staleness; spectral "
+                         "needs a server-free --topology)")
 parser.add_argument("--rounds", type=int, default=2500,
                     help="communication budget (rounds)")
 args = parser.parse_args()
@@ -58,7 +69,8 @@ consts = game.constants()
 print(f"game: n={game.n} d={game.d} kappa={consts.kappa:.0f} q={consts.q:.3f}")
 print(f"engine: method={args.method} sync={args.sync} "
       f"topology={args.topology} staleness={args.staleness}"
-      + (f" delay={args.delay}" if args.staleness else ""))
+      + (f" delay={args.delay}" if args.staleness else "")
+      + (f" policy={args.policy}" if args.policy != "theorem34" else ""))
 
 x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
 if args.staleness > 0:
@@ -72,11 +84,13 @@ if args.staleness > 0:
                               sync=SYNC_STRATEGIES[args.sync](),
                               topology=topology,
                               delays=delays,
-                              max_staleness=args.staleness)
+                              max_staleness=args.staleness,
+                              policy=args.policy)
 else:
     engine = PearlEngine(update=PLAYER_UPDATES[args.method](),
                          sync=SYNC_STRATEGIES[args.sync](),
-                         topology=topology)
+                         topology=topology,
+                         policy=args.policy)
 
 for tau in (1, 4, 20):
     gamma = stepsize.gamma_constant(consts, tau)

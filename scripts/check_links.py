@@ -1,0 +1,119 @@
+"""Markdown link-and-anchor checker for the repo's documentation.
+
+Scans the given markdown files (default: README.md, EXPERIMENTS.md,
+CHANGES.md, ROADMAP.md and everything under docs/) for inline links
+``[text](target)`` and reference definitions ``[label]: target`` and fails
+loudly when
+
+- a relative file target does not exist (resolved against the linking
+  file's directory),
+- an anchored target (``path#heading`` or ``#heading``) names a heading
+  that does not exist in the target file (GitHub slugification: lowercase,
+  spaces to dashes, punctuation stripped, duplicate slugs suffixed -1, -2,
+  ...),
+
+while external schemes (http/https/mailto) are recorded but not fetched —
+CI must not depend on the network. Exits non-zero iff any link is broken
+(the count is printed, not used as the status — 256 broken links must not
+wrap to a green exit), so ``python scripts/check_links.py`` composes with
+``set -e`` in scripts/ci.sh.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DEFAULT_FILES = ["README.md", "EXPERIMENTS.md", "CHANGES.md", "ROADMAP.md"]
+
+# [text](target) — skips images' leading ! lazily (images use the same
+# resolution rules) and tolerates titles: [t](path "title")
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+(\S+)", re.M)
+HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$", re.M)
+CODE_FENCE = re.compile(r"```.*?```", re.S)
+INLINE_CODE = re.compile(r"`[^`\n]*`")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading (ASCII-ish approximation that is
+    exact for this repo's headings)."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading)          # strip code spans
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)    # link text only
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)  # drop punctuation
+    return h.replace(" ", "-")
+
+
+def slugs_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE.sub("", f.read())
+    seen: dict[str, int] = {}
+    out = set()
+    for m in HEADING.finditer(text):
+        s = github_slug(m.group(2))
+        n = seen.get(s, 0)
+        seen[s] = n + 1
+        out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
+
+def targets_in(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    text = CODE_FENCE.sub("", text)
+    text = INLINE_CODE.sub("", text)
+    return INLINE.findall(text) + REFDEF.findall(text)
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(path)
+    for target in targets_in(path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        rel = os.path.relpath(path, ROOT)
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else os.path.normpath(
+            os.path.join(base, target))
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: broken link -> {target or '#' + frag}")
+            continue
+        if frag is not None:
+            if not dest.endswith((".md", ".markdown")):
+                continue   # anchors into non-markdown are out of scope
+            if github_slug(frag) not in slugs_of(dest):
+                errors.append(
+                    f"{rel}: missing anchor -> "
+                    f"{os.path.relpath(dest, ROOT)}#{frag}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [os.path.join(ROOT, f) for f in (argv or DEFAULT_FILES)]
+    docs = os.path.join(ROOT, "docs")
+    if not argv and os.path.isdir(docs):
+        for dirpath, _, names in sorted(os.walk(docs)):
+            files += sorted(
+                os.path.join(dirpath, f) for f in names if f.endswith(".md")
+            )
+    errors = []
+    checked = 0
+    for f in files:
+        if not os.path.exists(f):
+            continue
+        checked += 1
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"BROKEN: {e}", file=sys.stderr)
+    print(f"checked {checked} files, {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -6,11 +6,21 @@ cd "$(dirname "$0")/.."
 
 python -m compileall -q src benchmarks examples scripts
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# docs stay honest: the EXPERIMENTS.md tables must be exactly what the
+# committed BENCH_*.json artifacts render to, and every markdown link /
+# anchor in README / EXPERIMENTS / docs/ must resolve
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/render_experiments.py --check
+python scripts/check_links.py
+
 # fast-mode smoke of the async-staleness benchmark artifact path (temp dir:
 # the committed BENCH_async.json is the paper-scale sweep, not this smoke)
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_async \
-  --rounds 200 --threshold 1e-3 --json "$SMOKE_DIR/BENCH_async.json"
-python -c "import json, sys; d = json.load(open(sys.argv[1])); assert d['staleness'], 'empty async sweep'" \
+  --rounds 200 --threshold 1e-3 --policy-rounds 200 \
+  --json "$SMOKE_DIR/BENCH_async.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['staleness'], 'empty async sweep'; \
+assert d['policy_rescue'], 'empty policy sweep'" \
   "$SMOKE_DIR/BENCH_async.json"

@@ -1,7 +1,22 @@
-"""Render the Dry-run and Roofline tables of EXPERIMENTS.md from the dry-run
-JSON records (idempotent: replaces content between the AUTO markers).
+"""Regenerate the EXPERIMENTS.md benchmark tables from the committed
+``BENCH_*.json`` artifacts, so the documented numbers cannot silently drift
+from the benchmark data (scripts/ci.sh renders and then requires
+``git diff --exit-code EXPERIMENTS.md``).
 
-    PYTHONPATH=src python scripts/render_experiments.py
+Idempotent: replaces the content between each pair of AUTO markers
+
+    <!-- AUTO-BENCH-STALENESS-BEGIN --> ... <!-- AUTO-BENCH-STALENESS-END -->
+    <!-- AUTO-BENCH-POLICY-BEGIN -->    ... <!-- AUTO-BENCH-POLICY-END -->
+    <!-- AUTO-BENCH-GOSSIP-BEGIN -->    ... <!-- AUTO-BENCH-GOSSIP-END -->
+
+and leaves the surrounding prose alone. Missing artifacts render an explicit
+"(artifact missing)" stub rather than stale numbers.
+
+    PYTHONPATH=src python scripts/render_experiments.py [--check]
+
+``--check`` exits non-zero if rendering would change EXPERIMENTS.md (for CI
+without relying on git state). This replaced the seed's dead dry-run-table
+renderer (its ``experiments/dryrun_*.json`` inputs never shipped).
 """
 
 from __future__ import annotations
@@ -9,109 +24,132 @@ from __future__ import annotations
 import json
 import os
 import re
+import sys
 
-ROOT = os.path.join(os.path.dirname(__file__), "..")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 MD = os.path.join(ROOT, "EXPERIMENTS.md")
-SINGLE = os.path.join(ROOT, "experiments", "dryrun_singlepod.json")
-MULTI = os.path.join(ROOT, "experiments", "dryrun_multipod.json")
-
-BEGIN = "<!-- AUTO-DRYRUN-BEGIN -->"
-END = "<!-- AUTO-DRYRUN-END -->"
+ASYNC = os.path.join(ROOT, "BENCH_async.json")
+ENGINE = os.path.join(ROOT, "BENCH_engine.json")
 
 
 def _load(path):
     if not os.path.exists(path):
-        return []
+        return None
     with open(path) as f:
         return json.load(f)
 
 
-def _fmt_bytes(b):
-    if b >= 1e9:
-        return f"{b / 1e9:.2f}G"
+def _kb(b):
+    if b is None:
+        return "—"
     if b >= 1e6:
-        return f"{b / 1e6:.1f}M"
-    return f"{b / 1e3:.0f}K"
+        return f"{b / 1e6:.2f} MB"
+    return f"{b / 1e3:.1f} KB"
 
 
-def render() -> str:
-    single = _load(SINGLE)
-    multi = _load(MULTI)
-    lines = []
+def _err(row):
+    if row.get("diverged"):
+        return "**diverges**"
+    return f"{row['final_rel_error']:.1e}"
 
-    lines.append("### Dry-run summary (compile proof, both meshes)\n")
-    ok_s = [r for r in single if "error" not in r]
-    ok_m = [r for r in multi if "error" not in r]
-    lines.append(f"- single-pod 16x16 (256 chips): **{len(ok_s)}/{len(single)}"
-                 "** combos lowered + compiled")
-    lines.append(f"- multi-pod 2x16x16 (512 chips): **{len(ok_m)}/{len(multi)}"
-                 "** combos lowered + compiled")
-    for r in single + multi:
-        if "error" in r:
-            lines.append(f"  - FAIL {r['arch']}/{r['shape']}/{r['mesh']}: "
-                         f"{r['error'][:120]}")
-    lines.append("")
 
-    lines.append("### Multi-pod lowering proof (2x16x16, per-combo)\n")
-    lines.append("| arch | shape | kind | peak mem/dev | collective ops | "
-                 "compile s |")
-    lines.append("|---|---|---|---|---|---|")
-    for r in ok_m:
+def _rounds(row):
+    return "—" if row["rounds_to_eq"] is None else str(row["rounds_to_eq"])
+
+
+def render_staleness(data) -> str:
+    if data is None:
+        return "*(BENCH_async.json artifact missing — run the benchmark)*"
+    lines = [
+        "| schedule | D | rounds-to-eq | bytes-to-eq | mean staleness |",
+        "|---|---|---|---|---|",
+    ]
+    seen_lockstep = False
+    for r in data["staleness"]:
+        if r["max_staleness"] == 0:
+            # every schedule's D=0 row IS the lockstep run (the bit-for-bit
+            # pin), so render it once instead of once per schedule
+            if seen_lockstep:
+                continue
+            seen_lockstep = True
+            sched = "(lockstep)"
+        else:
+            sched = r["schedule"]
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
-            f"{_fmt_bytes(r['peak_memory_bytes'])} | {r['collective_ops']} | "
-            f"{r['compile_s']} |")
-    lines.append("")
-
-    lines.append("### Roofline table — single-pod 16x16, trip-count-corrected "
-                 "(Section Roofline)\n")
-    lines.append("All terms in seconds per step, per-chip convention "
-                 "(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI). "
-                 "`useful` = MODEL_FLOPS / HLO_FLOPs.\n")
-    lines.append("| arch | shape | compute s | memory s | collective s | "
-                 "bottleneck | useful | peak mem/dev | what would move the "
-                 "dominant term |")
-    lines.append("|---|---|---|---|---|---|---|---|---|")
-    suggestions = {
-        ("memory", "train"): "flash/fused attention keeps S^2 scores in VMEM; "
-                             "bf16 master-grad copies",
-        ("memory", "prefill"): "flash attention kernel (kernels/) removes "
-                               "S^2 HBM traffic",
-        ("memory", "decode"): "KV-cache layout/quantization; batch more "
-                              "requests per chip",
-        ("collective", "train"): "shard or replicate to kill activation "
-                                 "all-reduces; overlap grad reduce",
-        ("collective", "prefill"): "reduce tensor-parallel span; all-to-all "
-                                   "scheduling for MoE",
-        ("collective", "decode"): "replicate small weights; duplicate KV "
-                                  "heads per chip",
-        ("compute", "train"): "remat policy (drop cheap ops only); MXU-"
-                              "aligned tiles",
-        ("compute", "prefill"): "MXU-aligned flash tiles",
-        ("compute", "decode"): "speculative/multi-token decode",
-    }
-    for r in ok_s:
-        mode = ("train" if r["shape"] == "train_4k"
-                else "prefill" if r["shape"] == "prefill_32k" else "decode")
-        sug = suggestions.get((r["bottleneck"], mode), "")
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
-            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
-            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
-            f"{_fmt_bytes(r['peak_memory_bytes'])} | {sug} |")
-    lines.append("")
+            f"| {sched} | {r['max_staleness']} | {_rounds(r)} | "
+            f"{_kb(r['bytes_to_eq'])} | {r['mean_staleness']:.2f} |")
     return "\n".join(lines)
 
 
-def main():
-    block = render()
+def render_policy(data) -> str:
+    if data is None or "policy_rescue" not in data:
+        return "*(BENCH_async.json policy_rescue sweep missing — run the " \
+               "benchmark)*"
+    lines = [
+        "| policy | D | rounds-to-eq | final rel. error |",
+        "|---|---|---|---|",
+    ]
+    for r in data["policy_rescue"]:
+        lines.append(
+            f"| {r['policy']} | {r['max_staleness']} | {_rounds(r)} | "
+            f"{_err(r)} |")
+    return "\n".join(lines)
+
+
+def render_gossip(data) -> str:
+    if data is None or "gossip_policy" not in data:
+        return "*(BENCH_engine.json gossip_policy sweep missing — run the " \
+               "benchmark)*"
+    lines = [
+        "| update | policy | gossip_steps | rounds-to-eq | bytes-to-eq | "
+        "final rel. error |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in data["gossip_policy"]:
+        lines.append(
+            f"| {r['update']} | {r['policy']} | {r['gossip_steps']} | "
+            f"{_rounds(r)} | {_kb(r['bytes_to_eq'])} | {_err(r)} |")
+    return "\n".join(lines)
+
+
+SECTIONS = {
+    "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
+    "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
+    "AUTO-BENCH-GOSSIP": lambda: render_gossip(_load(ENGINE)),
+}
+
+
+def render(text: str) -> str:
+    for tag, make in SECTIONS.items():
+        begin, end = f"<!-- {tag}-BEGIN -->", f"<!-- {tag}-END -->"
+        if begin not in text or end not in text:
+            raise SystemExit(
+                f"EXPERIMENTS.md is missing the {begin} / {end} markers — "
+                f"the rendered tables have nowhere to go")
+        pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end), re.S)
+        text = pattern.sub(begin + "\n" + make() + "\n" + end, text)
+    return text
+
+
+def main() -> None:
+    check = "--check" in sys.argv[1:]
     with open(MD) as f:
-        text = f.read()
-    pattern = re.compile(re.escape(BEGIN) + ".*?" + re.escape(END), re.S)
-    new = pattern.sub(BEGIN + "\n" + block + "\n" + END, text)
-    with open(MD, "w") as f:
-        f.write(new)
-    print(f"rendered {MD}")
+        old = f.read()
+    new = render(old)
+    if check:
+        if new != old:
+            print("EXPERIMENTS.md is out of date with the BENCH_*.json "
+                  "artifacts; run scripts/render_experiments.py",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print("EXPERIMENTS.md is in sync with the BENCH artifacts")
+        return
+    if new != old:
+        with open(MD, "w") as f:
+            f.write(new)
+        print(f"rendered {MD}")
+    else:
+        print(f"{MD} already up to date")
 
 
 if __name__ == "__main__":

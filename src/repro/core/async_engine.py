@@ -35,6 +35,33 @@ Wire accounting is unchanged from the lockstep engine (staleness delays
 *arrival*, not transmission), so bytes-to-equilibrium comparisons against
 the synchronous engine are apples-to-apples — ``benchmarks/bench_async.py``
 sweeps the equilibrium neighborhood and wire cost over the staleness bound.
+
+Staleness indexing conventions (shared with the trainer's host loop — the
+fine print behind every counter in this subsystem; see docs/ARCHITECTURE.md
+for how the axes compose):
+
+- **Delay table**: entry ``(r, i)`` is how many ROUNDS old the broadcast
+  player ``i`` reads at round ``r`` — 0 means the current snapshot
+  (lockstep), and entries are clipped to ``[0, max_staleness]`` by
+  :func:`draw_delay_table`, THE one place schedule draws become engine
+  input.
+- **Ring buffer**: slot index == staleness in rounds; ``buf[0]`` is always
+  the current snapshot and the buffer holds ``max_staleness + 1`` slots,
+  every slot initialized to ``x0`` (before a player has heard anything,
+  the freshest available snapshot is the init).
+- **Uploads are never late** in this model: the server's copy of a
+  player's own block is always that player's latest submission — staleness
+  corrupts only the opponents' rows a player reads (sender-side staleness
+  is an open ROADMAP item).
+- **Diagnostics**: ``AsyncPearlResult.staleness`` (and the trainer's
+  ``staleness_log[r]``) record the delays the references consumed DURING
+  round ``r`` carried; the trainer's per-player counters additionally
+  history-clip (a player cannot read further back than rounds that exist)
+  and age by +1 for each round a player sits out.
+- **Step-size policies** see the same drawn row: the ``delay_adaptive``
+  policy's per-player gammas use exactly the delays this table realized,
+  so slowing is applied to the players whose reads are stale, not to an
+  average.
 """
 
 from __future__ import annotations
@@ -49,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (
+    DecentralizedExtragradientUpdate,
     ExactSync,
     JointUpdate,
     PearlResult,
@@ -57,10 +85,18 @@ from repro.core.engine import (
     SyncStrategy,
     account_round_bytes,
     as_round_gammas,
+    build_round_context,
     relative_error_curve,
     validate_round_args,
 )
 from repro.core.game import VectorGame
+from repro.core.stepsize import (
+    RoundContext,
+    StepsizePolicy,
+    Theorem34Policy,
+    resolve_policy,
+    validate_policy_context,
+)
 from repro.core.topology import Star, Topology
 
 Array = jax.Array
@@ -246,11 +282,13 @@ class StaleSync(SyncStrategy):
 # =========================================================================
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
-                          "max_staleness"))
+                          "max_staleness", "policy", "ss_ctx"))
 def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                        delays: Array, key: Array, *, update,
                        sync: SyncStrategy, topology: Topology, tau: int,
-                       stochastic: bool, max_staleness: int):
+                       stochastic: bool, max_staleness: int,
+                       policy: StepsizePolicy = Theorem34Policy(),
+                       ss_ctx: RoundContext | None = None):
     """One compiled program: rounds-scan with a snapshot ring buffer.
 
     Mirrors the lockstep ``_engine_scan`` op-for-op — same RNG chain, same
@@ -261,11 +299,30 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
     pin). The buffer initializes to ``x0`` in every slot: before a player
     has heard anything, the freshest available snapshot is the init.
 
+    ``policy`` sees the round's DRAWN delay row (``ss_ctx.with_delays``), so
+    a delay-adaptive policy slows exactly the players whose reads are stale
+    this round. The identity policy (and any policy at ``max_staleness = 0``
+    that resolves to it) keeps the compiled program bit-for-bit the
+    policy-free one — same trace-time collapse as the buffer read.
+
     Returns ``(x_final, xs, residuals, participants, links)`` with the exact
     shapes/meanings of the lockstep scan, so the byte accounting is shared.
     """
     n = x0.shape[0]
     depth = max_staleness + 1
+    if ss_ctx is None:
+        ss_ctx = RoundContext(tau=tau, max_staleness=max_staleness)
+
+    def vmap_players(local_fn, player_keys, delay_row, gamma):
+        """vmap ``local_fn(i, pkey, d_i, gamma_i)`` over players; per-player
+        gammas enter the vmap only when the policy emits an ``(n,)`` row
+        (trace-time branch, keeping the scalar path bit-for-bit legacy)."""
+        g_row = policy.round_gammas(gamma, ss_ctx.with_delays(delay_row))
+        if jnp.ndim(g_row) == 0:
+            return jax.vmap(lambda i, k, d: local_fn(i, k, d, g_row))(
+                jnp.arange(n), player_keys, delay_row)
+        return jax.vmap(local_fn)(jnp.arange(n), player_keys, delay_row,
+                                  g_row)
 
     def tau_local_steps(i, pkey, x_start, x_ref, gamma):
         state0 = update.init_state(game, i, x_start, x_ref)
@@ -288,7 +345,7 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
             player_keys = jax.random.split(sub, n)
             s, ctx = sync.pre_round(s)
 
-            def local(i, pkey, d_i):
+            def local(i, pkey, d_i, g_i):
                 # the freshest broadcast this player has RECEIVED is d_i
                 # rounds old; its own block is always live (the player starts
                 # from x_sync[i] and the game contract ignores row i of the
@@ -299,9 +356,9 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                 # (the gather alone perturbs XLA fusion at the ULP level).
                 x_stale = x_sync if depth == 1 else buf[d_i]
                 x_ref = sync.view(i, x_stale, ctx)
-                return tau_local_steps(i, pkey, x_sync[i], x_ref, gamma)
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
 
-            x_prop = jax.vmap(local)(jnp.arange(n), player_keys, delay_row)
+            x_prop = vmap_players(local, player_keys, delay_row, gamma)
             m = sync.mask(n, ctx)
             if m is None:
                 x_next = x_prop
@@ -339,11 +396,11 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
             W = W_stack[ridx % T]
             A = A_stack[ridx % T]
 
-            def local(i, pkey, d_i):
+            def local(i, pkey, d_i, g_i):
                 V_read = Vbuf[0] if depth == 1 else Vbuf[d_i]
-                return tau_local_steps(i, pkey, x_sync[i], V_read[i], gamma)
+                return tau_local_steps(i, pkey, x_sync[i], V_read[i], g_i)
 
-            x_prop = jax.vmap(local)(jnp.arange(n), player_keys, delay_row)
+            x_prop = vmap_players(local, player_keys, delay_row, gamma)
             m = sync.mask(n, ctx)
             if m is None:
                 mf = jnp.ones((n,), dtype=W.dtype)
@@ -437,6 +494,10 @@ class AsyncPearlEngine:
     topology: Topology = Star()
     delays: DelaySchedule = ZeroDelay()
     max_staleness: int = 0
+    policy: StepsizePolicy | str | None = None   # None = Theorem34Policy()
+
+    def _resolved_policy(self) -> StepsizePolicy:
+        return resolve_policy(self.policy)
 
     def _resolved(self) -> tuple[SyncStrategy, DelaySchedule, int]:
         """(wire strategy, delay schedule, bound) after StaleSync unwrap."""
@@ -459,6 +520,19 @@ class AsyncPearlEngine:
                 f"mid-round (fully synchronized) — asynchronous bounded "
                 f"staleness does not apply; use the lockstep PearlEngine"
             )
+        if isinstance(self.update, DecentralizedExtragradientUpdate):
+            raise ValueError(
+                f"{type(self.update).__name__} interleaves a mixing sweep "
+                f"between its extragradient phases, and the mid-round sweep "
+                f"has no per-receiver delayed equivalent (the same reason "
+                f"AsyncPearlEngine pins gossip_steps = 1) — use the "
+                f"lockstep PearlEngine on a graph topology"
+            )
+        validate_policy_context(
+            self._resolved_policy(), server=self.topology.is_server,
+            staleness_available=True, staleness_remedy="",
+            topology_name=type(self.topology).__name__,
+        )
         return sync, delays, D
 
     def _scan(self, game, x0, *, rounds, tau, gamma, key, stochastic):
@@ -468,10 +542,18 @@ class AsyncPearlEngine:
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         table = draw_delay_table(delays, rounds, x0.shape[0], D)
+        policy = self._resolved_policy()
+        # the context is a STATIC jit argument with game-derived floats; the
+        # identity policy ignores it, so skip it to keep the scan's jit
+        # cache shared across game instances of the same shape
+        ss_ctx = (None if isinstance(policy, Theorem34Policy) else
+                  build_round_context(game, self.topology, tau=tau,
+                                      max_staleness=D))
         outs = _async_engine_scan(
             game, x0, gammas, jnp.asarray(table), key,
             update=self.update, sync=sync, topology=self.topology,
             tau=tau, stochastic=stochastic, max_staleness=D,
+            policy=policy, ss_ctx=ss_ctx,
         )
         return sync, table, outs
 

@@ -22,18 +22,45 @@ three orthogonal protocols:
   participation strategies;
 - the step-size *schedule* — a scalar, a per-round array (Thm 3.6), or any
   callable ``rounds -> (rounds,)`` such as
-  :func:`repro.core.stepsize.gamma_warmup_cosine`.
+  :func:`repro.core.stepsize.gamma_warmup_cosine`;
+- the step-size *policy* — :class:`~repro.core.stepsize.StepsizePolicy` maps
+  the round context (tau, per-player staleness, spectral gap, coupling) to
+  the per-player gammas the scan actually uses; the default
+  :class:`~repro.core.stepsize.Theorem34Policy` is the identity (the
+  schedule's value, bit-for-bit the policy-free program), and policies whose
+  required context an engine cannot supply are rejected loudly at ``run()``
+  (see docs/ARCHITECTURE.md for the full matrix).
 
 Fully-communicating baselines (joint extragradient, Local SGD on the summed
 objective) do not fit the per-player template — their step reads the OTHER
 players' fresh iterates mid-round — so they plug in as :class:`JointUpdate`
 rules that own the whole within-round computation while the engine keeps
 rounds, diagnostics, and communication accounting.
+:class:`DecentralizedExtragradientUpdate` is the server-free analogue: a
+two-phase round (extrapolate, mix, correct, mix) the gossip scan owns.
 
-The engine reproduces the legacy ``pearl_sgd`` / ``pearl_eg`` trajectories
-bit-for-bit (tests/test_engine.py pins this): the RNG chain is
-``key -> (key, sub); sub -> n player keys; player key -> tau step keys`` and
-each update rule consumes its step key exactly as the legacy loop did.
+Math conventions shared by both engines (the fine print that makes the
+bit-for-bit pins meaningful — see also docs/THEORY.md):
+
+- **RNG chain**: per round ``key -> (key, sub)``; per-player keys
+  ``split(sub, n)``; per-step keys ``split(player_key, tau)``. Each update
+  rule consumes its step key exactly as the legacy loops did, which is why
+  the engine reproduces the legacy ``pearl_sgd`` / ``pearl_eg`` trajectories
+  bit-for-bit (tests/test_engine.py pins this). Strategy randomness
+  (participation masks) and topology never touch this chain.
+- **Reference-snapshot ownership**: under the star, the ENGINE owns the
+  joint snapshot ``x_sync`` — a player's reference is
+  ``sync.view(i, x_sync)`` with its own row always live; under gossip each
+  PLAYER owns a full per-player view ``V_i`` of the joint action, refreshed
+  by anchored neighbor averaging (own diagonal pinned to the live block
+  before and after every sweep).
+- **Within-round freezing**: the reference a player optimizes against is
+  frozen for all ``tau`` local steps of a round (the paper's Algorithm 1
+  semantics); only synchronization refreshes it.
+- **Byte-accounting direction**: the engine compresses the BROADCAST
+  (upload exact, download at the wire dtype, ``compressed="down"``), the
+  neural trainer compresses PRE-REDUCTION (``compressed="up"``) — both
+  resolve through :func:`repro.core.topology.direction_itemsizes`.
 """
 
 from __future__ import annotations
@@ -48,11 +75,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.game import VectorGame
+from repro.core.stepsize import (
+    RoundContext,
+    StepsizePolicy,
+    Theorem34Policy,
+    resolve_policy,
+    validate_policy_context,
+)
 from repro.core.topology import (
     Star,
     Topology,
     direction_itemsizes,
     gossip_round_bytes,
+    spectral_gap,
     star_round_bytes,
 )
 
@@ -173,7 +208,8 @@ def account_round_bytes(
     msgs = np.asarray(links, dtype=np.int64)
     if sync.bills_full_round:
         full = topology.directed_edge_counts(n)
-        msgs = gossip_steps * full[np.arange(rounds) % len(full)]
+        sweeps = gossip_steps * getattr(update, "mixes_per_round", 1)
+        msgs = sweeps * full[np.arange(rounds) % len(full)]
     return gossip_round_bytes(
         msgs, payload_blocks=n, block_scalars=d,
         itemsize=sync.wire_itemsize(base_bps),
@@ -199,6 +235,30 @@ def as_round_gammas(gamma, rounds: int) -> jnp.ndarray:
     if g.shape != (rounds,):
         raise ValueError(f"gamma must be scalar or shape ({rounds},), got {g.shape}")
     return g
+
+
+def build_round_context(game: VectorGame, topology: Topology, *, tau: int,
+                        max_staleness: int = 0) -> RoundContext:
+    """Static :class:`~repro.core.stepsize.RoundContext` for one engine run.
+
+    The one place the engines assemble what a step-size policy may condition
+    on: the coupling estimate is the game's ratio ``L_F / L_max`` of joint
+    to per-player smoothness (1.0 — an uncoupled game, no correction — when
+    the game publishes no constants); the spectral gap is ``1 - |lambda_2|``
+    of the topology's Metropolis matrix (1.0 for the server broadcast;
+    time-varying graphs use their union graph's matrix, an optimistic
+    single-graph surrogate). ``delay_row`` is left ``None`` — the scans
+    splice in the per-round staleness row where one exists.
+    """
+    try:
+        c = game.constants()
+        coupling = float(c.L_F / c.L_max) if c.L_max > 0 else 1.0
+    except NotImplementedError:
+        coupling = 1.0
+    gap = (1.0 if topology.is_server
+           else float(spectral_gap(topology.mixing_matrix(game.n))))
+    return RoundContext(tau=tau, max_staleness=max_staleness,
+                        spectral_gap=gap, coupling=coupling)
 
 
 # =========================================================================
@@ -295,6 +355,52 @@ class HeavyBallUpdate(PlayerUpdate):
         g = _grad(game, i, x_i, x_ref, key, stochastic)
         v = self.beta * state + g
         return x_i - gamma * v, v
+
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedExtragradientUpdate(PlayerUpdate):
+    """Round-level extragradient over the gossip views (server-free only).
+
+    Plain gossip PEARL pays for stability with extra mixing sweeps: the
+    per-player views lag consensus, the lag acts like staleness under
+    antisymmetric coupling, and at strong coupling the Theorem 3.4 step size
+    diverges unless ``gossip_steps`` is cranked up (the PR 2 bytes-for-margin
+    tradeoff). This update removes the tradeoff with the extragradient
+    mechanism instead of more averaging — each round runs TWO phases with a
+    mixing sweep interleaved between them:
+
+    1. *extrapolation*: ``tau`` local gradient steps from ``x_i`` against the
+       own view ``V_i`` produce the half-point ``x_half_i``;
+    2. one anchored mixing sweep relays the half-points — ``V_half`` is each
+       player's view of the extrapolated joint action;
+    3. *correction*: ``tau`` local gradient steps RESTARTED from ``x_i``
+       against ``V_half_i`` produce ``x_next_i``;
+    4. a second anchored sweep mixes the new iterates into the carried views.
+
+    With ``tau = 1`` and a complete graph this is exactly the joint
+    extragradient (:class:`JointExtragradientUpdate`) evaluated blockwise —
+    the correction gradient sees the opponents' half-steps, which is what
+    kills the antisymmetric-coupling rotation. ``gossip_steps = 1`` then
+    suffices at strong coupling (tests/test_stepsize_policies.py pins the
+    configuration where plain gossip diverges and this converges; the
+    BENCH_engine.json sweep tracks the byte cost: 2 sweeps/round vs the
+    ``gossip_steps >= 4`` plain gossip needs for the same margin).
+
+    Only meaningful where views exist: the engine rejects it on the star
+    (use :class:`JointExtragradientUpdate` — the server broadcast IS exact
+    mixing), under participation masks (a half-point relayed to nobody has
+    no extragradient semantics), and in the bounded-staleness engine (the
+    mid-round sweep has no per-receiver delayed equivalent).
+    """
+
+    name: str = "decentralized_extragradient"
+    mixes_per_round: int = dataclasses.field(default=2, init=False, repr=False)
+
+    def step(self, game, i, x_i, x_ref, gamma, key, state, stochastic):
+        # the local phases are plain gradient steps; the extragradient
+        # structure lives at the round level (the engine's two-phase body)
+        g = _grad(game, i, x_i, x_ref, key, stochastic)
+        return x_i - gamma * g, state
 
 
 # =========================================================================
@@ -549,10 +655,12 @@ class DropoutSync(_RandomizedSync):
 # =========================================================================
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
-                          "gossip_steps"))
+                          "gossip_steps", "policy", "ss_ctx"))
 def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                  update, sync: SyncStrategy, topology: Topology, tau: int,
-                 stochastic: bool, gossip_steps: int = 1):
+                 stochastic: bool, gossip_steps: int = 1,
+                 policy: StepsizePolicy = Theorem34Policy(),
+                 ss_ctx: RoundContext | None = None):
     """One compiled program: rounds-scan over (local phase -> synchronize).
 
     RNG chain (bit-compatible with the legacy loops): per round
@@ -561,11 +669,31 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
     masks) is threaded separately so it never perturbs sampling noise — and
     neither does the topology: the gossip path splits keys identically.
 
+    ``policy`` maps the round's scheduled gamma + the static ``ss_ctx`` to
+    the step sizes the players actually use. The identity policy returns
+    the scheduled gamma object itself, so the scalar path below compiles
+    the LITERAL policy-free program (per-player gammas only enter the vmap
+    when a policy emits an ``(n,)`` row — resolved at trace time).
+
     Returns ``(x_final, xs, residuals, participants, links)`` where ``links``
     is the per-round wire-message count (server messages under star, directed
     active edges under gossip) feeding the edge-aware byte accounting.
     """
     n = x0.shape[0]
+    if ss_ctx is None:
+        ss_ctx = RoundContext(tau=tau)
+
+    def vmap_players(local_fn, player_keys, gamma):
+        """vmap ``local_fn(i, pkey, gamma_i)`` over players, threading
+        per-player gammas only when the policy emits an ``(n,)`` row. The
+        branch resolves at trace time: a scalar-emitting policy (identity in
+        particular) stays CLOSED OVER like the legacy loop did, so the
+        compiled program is bit-for-bit the policy-free one."""
+        g_row = policy.round_gammas(gamma, ss_ctx)
+        if jnp.ndim(g_row) == 0:
+            return jax.vmap(lambda i, k: local_fn(i, k, g_row))(
+                jnp.arange(n), player_keys)
+        return jax.vmap(local_fn)(jnp.arange(n), player_keys, g_row)
 
     def tau_local_steps(i, pkey, x_start, x_ref, gamma):
         """tau local steps for player i against the frozen reference view."""
@@ -602,11 +730,11 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
             player_keys = jax.random.split(sub, n)
             s, ctx = sync.pre_round(s)
 
-            def local(i, pkey):
+            def local(i, pkey, g_i):
                 x_ref = sync.view(i, x_sync, ctx)
-                return tau_local_steps(i, pkey, x_sync[i], x_ref, gamma)
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
 
-            x_prop = jax.vmap(local)(jnp.arange(n), player_keys)
+            x_prop = vmap_players(local, player_keys, gamma)
             m = sync.mask(n, ctx)
             if m is None:
                 x_next = x_prop
@@ -633,44 +761,94 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
         T = W_stack.shape[0]
         diag = jnp.arange(n)
 
-        def round_body(carry, scan_in):
-            gamma, ridx = scan_in
-            V, x_sync, key, s = carry
-            key, sub = jax.random.split(key)
-            player_keys = jax.random.split(sub, n)
-            s, ctx = sync.pre_round(s)
-            W = W_stack[ridx % T]
-            A = A_stack[ridx % T]
+        def mix_views(V_in, x_anchor, link_w, self_w):
+            """``gossip_steps`` anchored consensus sweeps over the views.
 
-            def local(i, pkey):
-                return tau_local_steps(i, pkey, x_sync[i], V[i], gamma)
-
-            x_prop = jax.vmap(local)(jnp.arange(n), player_keys)
-            m = sync.mask(n, ctx)
-            if m is None:
-                mf = jnp.ones((n,), dtype=W.dtype)
-                x_used = x_prop
-                participants = jnp.asarray(n, jnp.int32)
-            else:
-                mf = m.astype(W.dtype)
-                x_used = jnp.where(m[:, None], x_prop, x_sync)
-                participants = jnp.sum(m).astype(jnp.int32)
-
-            pair = mf[:, None] * mf[None, :]
-            link_w = jnp.where(A, W * pair, 0.0)          # active off-diag
-            self_w = 1.0 - jnp.sum(link_w, axis=1)        # lost mass -> diag
-            V_next = V.at[diag, diag].set(x_used)
-            # gossip_steps > 1 trades extra wire sweeps for tighter view
-            # consensus — strongly-coupled games need it for stability at
-            # the Theorem 3.4 step size (see tests/test_topology.py).
+            Own blocks are anchored before AND after every sweep: mixing
+            refreshes player i's estimates of OTHERS, never its decision
+            variable."""
+            V_m = V_in.at[diag, diag].set(x_anchor)
             for _ in range(gossip_steps):
-                wire = sync.compress(V_next).astype(V_next.dtype)
-                V_next = (jnp.einsum("ij,jkd->ikd", link_w, wire)
-                          + self_w[:, None, None] * V_next)
-                V_next = V_next.at[diag, diag].set(x_used)
-            links = gossip_steps * jnp.sum((A & (pair > 0)).astype(jnp.int32))
-            res = jnp.sqrt(jnp.sum(game.operator(x_used) ** 2))
-            return (V_next, x_used, key, s), (x_used, res, participants, links)
+                wire = sync.compress(V_m).astype(V_m.dtype)
+                V_m = (jnp.einsum("ij,jkd->ikd", link_w, wire)
+                       + self_w[:, None, None] * V_m)
+                V_m = V_m.at[diag, diag].set(x_anchor)
+            return V_m
+
+        if isinstance(update, DecentralizedExtragradientUpdate):
+            # Two-phase extragradient round: extrapolate -> mix -> correct
+            # -> mix. Full participation only (checked upstream), so the
+            # link weights are the plain Metropolis rows.
+            def round_body(carry, scan_in):
+                gamma, ridx = scan_in
+                V, x_sync, key, s = carry
+                key, sub = jax.random.split(key)
+                phase_keys = jax.random.split(sub, 2)
+                half_keys = jax.random.split(phase_keys[0], n)
+                full_keys = jax.random.split(phase_keys[1], n)
+                s, ctx = sync.pre_round(s)
+                del ctx   # mask strategies are rejected for this update
+                W = W_stack[ridx % T]
+                A = A_stack[ridx % T]
+                link_w = jnp.where(A, W, 0.0)
+                self_w = 1.0 - jnp.sum(link_w, axis=1)
+
+                def half(i, pkey, g_i):
+                    return tau_local_steps(i, pkey, x_sync[i], V[i], g_i)
+
+                x_half = vmap_players(half, half_keys, gamma)
+                V_half = mix_views(V, x_half, link_w, self_w)
+
+                def correct(i, pkey, g_i):
+                    # extragradient restart: the correction phase re-runs
+                    # from x_i, not from the half-point, against the
+                    # extrapolated neighborhood view
+                    return tau_local_steps(i, pkey, x_sync[i], V_half[i], g_i)
+
+                x_next = vmap_players(correct, full_keys, gamma)
+                V_next = mix_views(V_half, x_next, link_w, self_w)
+                participants = jnp.asarray(n, jnp.int32)
+                links = (2 * gossip_steps
+                         * jnp.sum(A.astype(jnp.int32)))
+                res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+                return (V_next, x_next, key, s), (x_next, res, participants,
+                                                  links)
+        else:
+            def round_body(carry, scan_in):
+                gamma, ridx = scan_in
+                V, x_sync, key, s = carry
+                key, sub = jax.random.split(key)
+                player_keys = jax.random.split(sub, n)
+                s, ctx = sync.pre_round(s)
+                W = W_stack[ridx % T]
+                A = A_stack[ridx % T]
+
+                def local(i, pkey, g_i):
+                    return tau_local_steps(i, pkey, x_sync[i], V[i], g_i)
+
+                x_prop = vmap_players(local, player_keys, gamma)
+                m = sync.mask(n, ctx)
+                if m is None:
+                    mf = jnp.ones((n,), dtype=W.dtype)
+                    x_used = x_prop
+                    participants = jnp.asarray(n, jnp.int32)
+                else:
+                    mf = m.astype(W.dtype)
+                    x_used = jnp.where(m[:, None], x_prop, x_sync)
+                    participants = jnp.sum(m).astype(jnp.int32)
+
+                pair = mf[:, None] * mf[None, :]
+                link_w = jnp.where(A, W * pair, 0.0)      # active off-diag
+                self_w = 1.0 - jnp.sum(link_w, axis=1)    # lost mass -> diag
+                # gossip_steps > 1 trades extra wire sweeps for tighter view
+                # consensus — strongly-coupled games need it for stability at
+                # the Theorem 3.4 step size (see tests/test_topology.py).
+                V_next = mix_views(V, x_used, link_w, self_w)
+                links = gossip_steps * jnp.sum(
+                    (A & (pair > 0)).astype(jnp.int32))
+                res = jnp.sqrt(jnp.sum(game.operator(x_used) ** 2))
+                return (V_next, x_used, key, s), (x_used, res, participants,
+                                                  links)
 
         V0 = jnp.broadcast_to(x0[None], (n, *x0.shape))
         init = (V0, x0, key, sync.init_state())
@@ -702,6 +880,22 @@ class PearlEngine:
     sync: SyncStrategy = ExactSync()
     topology: Topology = Star()
     gossip_steps: int = 1   # mixing sweeps per round on graph topologies
+    policy: StepsizePolicy | str | None = None   # None = Theorem34Policy()
+
+    def _resolved_policy(self) -> StepsizePolicy:
+        return resolve_policy(self.policy)
+
+    def _context_for(self, policy: StepsizePolicy, game: VectorGame,
+                     tau: int) -> RoundContext | None:
+        """Round context for the scan — ``None`` for the identity policy.
+
+        The context is a STATIC jit argument carrying game-derived floats
+        (coupling, spectral gap), so building it for the identity policy —
+        which ignores it — would needlessly retrace the scan for every
+        distinct game instance of the same shape."""
+        if isinstance(policy, Theorem34Policy):
+            return None
+        return build_round_context(game, self.topology, tau=tau)
 
     def _check_topology(self):
         if self.gossip_steps < 1:
@@ -713,7 +907,37 @@ class PearlEngine:
                 f"(repro.core.async_engine); the lockstep PearlEngine would "
                 f"silently ignore its delay schedule"
             )
+        policy = self._resolved_policy()
+        validate_policy_context(
+            policy, server=self.topology.is_server,
+            staleness_available=False,
+            staleness_remedy="use AsyncPearlEngine",
+            topology_name=type(self.topology).__name__,
+        )
+        if isinstance(self.update, DecentralizedExtragradientUpdate):
+            if self.topology.is_server:
+                raise ValueError(
+                    f"{type(self.update).__name__} interleaves mixing sweeps "
+                    f"with the extragradient phases and the server broadcast "
+                    f"has no views to mix — on the Star topology use "
+                    f"JointExtragradientUpdate (exact mixing every sync)"
+                )
+            if self.sync.uses_mask:
+                raise ValueError(
+                    f"{type(self.update).__name__} relays every player's "
+                    f"half-point mid-round; a participation mask "
+                    f"({type(self.sync).__name__}) would drop half-points "
+                    f"with no extragradient semantics — full participation "
+                    f"only"
+                )
         if isinstance(self.update, JointUpdate):
+            if not isinstance(policy, Theorem34Policy):
+                raise ValueError(
+                    f"{type(self.update).__name__} owns the whole "
+                    f"within-round computation on the joint action — "
+                    f"per-player step-size policies do not apply; joint "
+                    f"baselines support only the theorem34 policy"
+                )
             if not self.topology.is_server:
                 raise ValueError(
                     f"{type(self.update).__name__} is fully synchronized and "
@@ -763,10 +987,12 @@ class PearlEngine:
         self._check_topology()
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
+        policy = self._resolved_policy()
         x_final, xs, residuals, participants, links = _engine_scan(
             game, x0, gammas, key,
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
+            policy=policy, ss_ctx=self._context_for(policy, game, tau),
         )
         res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
 
@@ -809,10 +1035,12 @@ class PearlEngine:
         self._check_topology()
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
+        policy = self._resolved_policy()
         _, xs, _, _, _ = _engine_scan(
             game, x0, gammas, key,
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
+            policy=policy, ss_ctx=self._context_for(policy, game, tau),
         )
         return xs
 
@@ -866,6 +1094,7 @@ PLAYER_UPDATES: dict[str, Callable[[], PlayerUpdate]] = {
     "extragradient": ExtragradientUpdate,
     "optimistic_gradient": OptimisticGradientUpdate,
     "heavy_ball": HeavyBallUpdate,
+    "decentralized_eg": DecentralizedExtragradientUpdate,  # server-free only
 }
 
 SYNC_STRATEGIES: dict[str, Callable[[], SyncStrategy]] = {

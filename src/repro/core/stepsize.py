@@ -16,11 +16,27 @@ Beyond-paper round schedules consumed by the engine (any callable
   the standard large-batch training schedule transplanted to communication
   rounds (the paper keeps gamma constant within a round, so scheduling at
   round granularity preserves the Thm 3.6 analysis structure).
+
+Step-size POLICIES (:class:`StepsizePolicy`) are the second, orthogonal
+layer: a round *schedule* fixes gamma as a function of the round index
+alone, while a policy maps the full round context — ``tau``, the per-player
+realized staleness, the topology's spectral gap, a coupling estimate — to
+**per-player** step sizes inside the compiled scan. The Theorem 3.4 rule is
+the identity policy (:class:`Theorem34Policy`, the default everywhere, which
+by construction leaves every compiled program bit-for-bit unchanged);
+:class:`DelayAdaptivePolicy` applies the asynchronous-SGD-style
+``gamma ~ 1/(tau + delay)`` correction per player from the drawn staleness
+table; :class:`SpectralPolicy` converts a gossip graph's mixing time into an
+effective staleness and applies the same correction. Engines reject a policy
+whose required context they cannot supply (see docs/ARCHITECTURE.md).
 """
 
 from __future__ import annotations
 
+import abc
+import dataclasses
 import math
+from typing import Any
 
 import numpy as np
 
@@ -138,3 +154,250 @@ def gamma_warmup_cosine(
         return np.where(p < warmup, ramp, cos)
 
     return build(rounds) if rounds is not None else build
+
+
+# =========================================================================
+# Step-size policies — per-player gammas from the round context
+# =========================================================================
+def gamma_delay_adaptive(c: GameConstants, tau: int, delay) -> np.ndarray:
+    """Delay-corrected Theorem 3.4 step size ``gamma(tau) * tau/(tau + D)``.
+
+    The Theorem 3.4 rule budgets the drift a player accumulates over ``tau``
+    local steps against a snapshot that is 0 rounds old. A snapshot that is
+    ``D`` rounds old makes the effective drift horizon ``tau + D`` local-step
+    equivalents, so the asynchronous-SGD-style correction rescales the
+    constant rule by ``tau / (tau + D)`` — i.e. ``gamma ~ 1/(tau + D)`` up to
+    the theorem's own constants. Monotone (strictly) non-increasing in BOTH
+    ``tau`` and ``D`` (pinned by a hypothesis property test), and exactly
+    :func:`gamma_constant` at ``D = 0``.
+
+    ``delay`` may be a scalar or an array (per-player delays -> per-player
+    gammas).
+    """
+    d = np.asarray(delay, dtype=np.float64)
+    if (d < 0).any():
+        raise ValueError(f"delay must be >= 0, got {delay}")
+    return gamma_constant(c, tau) * tau / (tau + d)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundContext:
+    """Everything a :class:`StepsizePolicy` may condition on, for one round.
+
+    ``tau``, ``max_staleness``, ``spectral_gap`` and ``coupling`` are static
+    Python numbers (known at trace time — policies may branch on them in
+    Python, which is how trace-time identities like the D = 0 collapse are
+    implemented). ``delay_row`` is the per-player realized staleness for the
+    round: a traced ``(n,)`` int array inside the async engine's scan, a host
+    numpy array in the trainer's event loop, or ``None`` when the engine has
+    no staleness axis (the lockstep engine).
+
+    ``spectral_gap`` is ``1 - |lambda_2|`` of the topology's Metropolis
+    mixing matrix (1.0 for the exact server broadcast); ``coupling`` is the
+    game's dimensionless coupling ratio ``L_F / L_max`` (= ``1/q``) — how
+    much larger the joint operator's Lipschitz constant is than any single
+    player's smoothness, 1.0 for an uncoupled game and 1.0 again as the
+    neutral fallback when the game publishes no constants.
+    """
+
+    tau: int
+    max_staleness: int = 0
+    spectral_gap: float = 1.0
+    coupling: float = 1.0
+    delay_row: Any = None
+
+    def with_delays(self, delay_row) -> "RoundContext":
+        return dataclasses.replace(self, delay_row=delay_row)
+
+
+class StepsizePolicy(abc.ABC):
+    """Per-round, per-player step-size selection from the round context.
+
+    Implementations are frozen hashable dataclasses so they ride through
+    ``jax.jit`` as static arguments. :meth:`round_gammas` is called inside
+    the compiled rounds-scan with the round's base gamma (the active
+    schedule's value) and a :class:`RoundContext`; it returns either a
+    scalar (uniform across players — returning ``gamma`` unchanged keeps the
+    compiled program literally identical to the policy-free engine) or an
+    ``(n,)`` array of per-player step sizes.
+
+    ``requires_staleness`` / ``requires_gossip`` declare the context a
+    policy cannot do without; engines that cannot supply it reject the
+    policy loudly at ``run()`` instead of silently feeding defaults (the
+    lockstep engine has no staleness table; the star broadcast has no
+    mixing spectrum).
+    """
+
+    name: str = "policy"
+    requires_staleness: bool = False
+    requires_gossip: bool = False
+
+    @abc.abstractmethod
+    def round_gammas(self, gamma, ctx: RoundContext):
+        """Scalar or ``(n,)`` per-player step sizes for this round."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Theorem34Policy(StepsizePolicy):
+    """The paper's rule, unchanged: every player uses the round's scheduled
+    gamma. The identity policy — the engine's compiled program with this
+    policy is bit-for-bit the policy-free program (the default everywhere).
+    """
+
+    name: str = "theorem34"
+
+    def round_gammas(self, gamma, ctx):
+        del ctx
+        return gamma
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayAdaptivePolicy(StepsizePolicy):
+    """``gamma_i = gamma * tau / (tau + strength * delay_i)`` per player.
+
+    The :func:`gamma_delay_adaptive` correction applied inside the scan with
+    each player's *drawn* staleness for the round, so a fresh reader keeps
+    the full Theorem 3.4 step while a ``D``-stale reader is slowed by
+    ``tau/(tau + D)`` — restoring the stability margin that fixed-gamma
+    bounded staleness consumes at strong coupling (the BENCH_async.json
+    headline: the diverging D = 16 strong-coupling cell converges under this
+    policy). At ``max_staleness = 0`` the policy resolves to the identity AT
+    TRACE TIME — same trick as the async engine's D = 0 buffer-read collapse
+    — so it reproduces :class:`Theorem34Policy` bit-for-bit on the star.
+
+    ``strength`` scales the correction (1.0 = the plain ``1/(tau + D)``
+    rule; larger values over-damp stale readers).
+    """
+
+    strength: float = 1.0
+    name: str = "delay_adaptive"
+    requires_staleness = True
+
+    def __post_init__(self):
+        if self.strength <= 0.0:
+            raise ValueError(
+                f"DelayAdaptivePolicy.strength must be > 0, "
+                f"got {self.strength}"
+            )
+
+    def round_gammas(self, gamma, ctx):
+        if ctx.max_staleness == 0 or ctx.delay_row is None:
+            return gamma           # trace-time identity: the D = 0 pin
+        d = ctx.delay_row.astype(np.float32)   # jnp (traced) or host numpy
+        return gamma * ctx.tau / (ctx.tau + self.strength * d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralPolicy(StepsizePolicy):
+    """Gossip-aware margin from the mixing matrix's second eigenvalue.
+
+    A gossip exchange does not deliver consensus — the per-player views
+    carry a consensus error that contracts by ``|lambda_2|`` per sweep, so
+    the views lag the true joint action by roughly the mixing time
+    ``lag = |lambda_2| / (1 - |lambda_2|) = (1 - gap) / gap`` rounds
+    (``gap`` is :func:`repro.core.topology.spectral_gap`). Every local round
+    injects a fresh round's worth (``tau`` local steps) of opponent motion
+    into that lag, and under antisymmetric coupling the lagged views act
+    exactly like broadcast staleness (the PR 2 observation that gossip's
+    stability margin shrinks with coupling strength). The margin deficit
+    therefore scales with the EXCESS coupling ratio
+    ``C = max(coupling - 1, 0)`` (``coupling = L_F / L_max``; an uncoupled
+    game has no deficit), and the policy divides it out of the step size:
+
+        gamma_eff = gamma / (1 + strength * C * lag).
+
+    Uniform across players (the Metropolis spectrum is a global property);
+    resolves to the identity at trace time on a fully-mixing graph
+    (``lag = 0``) or an uncoupled game (``C = 0``). The default
+    ``strength = 2.0`` is calibrated on the ring quadratic sweep
+    (BENCH_engine.json): at the coupling where the fixed Theorem 3.4 step
+    diverges for every ``gossip_steps`` tried, this policy restores
+    convergence at ``gossip_steps = 1``. Requires a server-free topology —
+    the star's exact broadcast has no consensus lag, so engines reject the
+    combination loudly.
+    """
+
+    strength: float = 2.0
+    name: str = "spectral"
+    requires_gossip = True
+
+    def __post_init__(self):
+        if self.strength <= 0.0:
+            raise ValueError(
+                f"SpectralPolicy.strength must be > 0, got {self.strength}"
+            )
+
+    def margin_factor(self, ctx: RoundContext) -> float:
+        """The static ``1 / (1 + strength * C * lag)`` step-size multiplier."""
+        if ctx.spectral_gap <= 0.0:
+            raise ValueError(
+                "SpectralPolicy needs a connected topology "
+                "(spectral gap 0 means the views never reach consensus)"
+            )
+        lag = (1.0 - ctx.spectral_gap) / ctx.spectral_gap
+        C = max(ctx.coupling - 1.0, 0.0)
+        return 1.0 / (1.0 + self.strength * C * lag)
+
+    def round_gammas(self, gamma, ctx):
+        f = self.margin_factor(ctx)
+        if f == 1.0:
+            return gamma           # trace-time identity
+        return gamma * f
+
+
+def resolve_policy(policy: "StepsizePolicy | str | None") -> StepsizePolicy:
+    """Normalize the ``policy`` argument used across engines/trainer: an
+    instance wins, a registry name constructs one, ``None`` means the
+    identity :class:`Theorem34Policy`."""
+    if policy is None:
+        return Theorem34Policy()
+    if isinstance(policy, str):
+        try:
+            return STEPSIZE_POLICIES[policy]()
+        except KeyError:
+            raise ValueError(
+                f"unknown step-size policy {policy!r}; "
+                f"known: {sorted(STEPSIZE_POLICIES)}"
+            ) from None
+    if not isinstance(policy, StepsizePolicy):
+        raise TypeError(
+            f"policy must be a StepsizePolicy, registry name, or None, "
+            f"got {type(policy).__name__}"
+        )
+    return policy
+
+
+def validate_policy_context(policy: StepsizePolicy, *, server: bool,
+                            staleness_available: bool,
+                            staleness_remedy: str,
+                            topology_name: str = "Star") -> None:
+    """Reject a policy whose required round context the caller cannot supply.
+
+    THE one place the requires_staleness / requires_gossip contracts are
+    enforced — shared by both engines, the trainer, and the compiled trainer
+    round, so the rejection semantics (and wording) cannot drift between
+    them. ``staleness_remedy`` names the caller-specific fix (which engine
+    or constructor argument supplies the staleness counters).
+    """
+    if policy.requires_staleness and not staleness_available:
+        raise ValueError(
+            f"{type(policy).__name__} conditions on per-player staleness "
+            f"and this engine/round has no staleness counters to feed it — "
+            f"it would silently run at delay 0 (i.e. as theorem34); "
+            f"{staleness_remedy}"
+        )
+    if policy.requires_gossip and server:
+        raise ValueError(
+            f"{type(policy).__name__} conditions on the mixing matrix's "
+            f"spectral gap and the {topology_name} server broadcast has no "
+            f"consensus lag to correct for — use a server-free topology "
+            f"(or the theorem34 policy)"
+        )
+
+
+# ------------------------------------------------------------------ registry
+STEPSIZE_POLICIES = {
+    "theorem34": Theorem34Policy,
+    "delay_adaptive": DelayAdaptivePolicy,
+    "spectral": SpectralPolicy,
+}

@@ -27,7 +27,17 @@ iterates converge to the wrong point (tests/test_topology.py pins both).
 
 Mixing weights are Metropolis–Hastings (``W_ij = 1/(1 + max(deg_i, deg_j))``
 on edges, diagonal absorbs the rest), which is symmetric and doubly
-stochastic for every undirected graph — no per-topology tuning.
+stochastic for every undirected graph — no per-topology tuning. The
+matrix's second eigenvalue is the graph's consensus speed:
+:func:`spectral_gap` returns ``1 - |lambda_2|``, the per-sweep geometric
+contraction of the consensus error, and ``(1 - gap)/gap`` is the mixing
+time the views lag behind the true joint action — the quantity the
+``spectral`` step-size policy (:class:`repro.core.stepsize.SpectralPolicy`)
+converts into an effective staleness. Anchored relaying (own diagonal
+pinned) contracts by the norm of ``W``'s principal submatrices, which is
+*slower* than ``|lambda_2|`` on sparse graphs — the reason gossip's
+stability margin shrinks faster with coupling than the bare spectrum
+suggests (docs/THEORY.md spells this out).
 
 Byte accounting is **edge-aware** and direction-aware, and lives here so the
 dense engine (:class:`repro.core.engine.PearlResult`) and the neural trainer

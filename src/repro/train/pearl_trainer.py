@@ -70,11 +70,19 @@ from repro.core.engine import (
     make_federated_round,
     resolve_sync,
 )
+from repro.core.stepsize import (
+    RoundContext,
+    StepsizePolicy,
+    Theorem34Policy,
+    resolve_policy,
+    validate_policy_context,
+)
 from repro.core.topology import (
     Star,
     Topology,
     direction_itemsizes,
     gossip_round_bytes,
+    spectral_gap,
     star_round_bytes,
 )
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
@@ -149,6 +157,7 @@ def make_pearl_round(
     sync: SyncStrategy | None = None,
     topology: Topology | None = None,
     external_refs: bool = False,
+    policy: StepsizePolicy | str | None = None,
 ) -> Callable:
     """Build one compiled PEARL round on the engine's federated-round template.
 
@@ -176,6 +185,17 @@ def make_pearl_round(
     Returns (new_params, new_opt, new_refs, new_snapshot, metrics), where
     participants' snapshot slots take their freshly compressed blocks
     (stale blocks survive) and their refs re-mix over the merged snapshot.
+
+    A non-identity ``policy`` (:class:`~repro.core.stepsize.StepsizePolicy`)
+    appends one argument to the general round — ``gamma_scale``, an ``(n,)``
+    per-player step-size multiplier the HOST computes each round from the
+    policy and the realized staleness counters (the policies are relative
+    corrections to the base rate, which here lives inside the optimizer, so
+    the round applies them as multipliers on the optimizer's update). Only
+    the general round supports it: a policy that conditions on staleness
+    needs the async host loop's counters, and the spectral policy needs a
+    graph topology — both imply the general round; mismatches are rejected
+    here so the compiled round can never silently ignore a policy.
     """
     if tau < 1:
         # a zero-length inner scan would silently return the players
@@ -191,11 +211,23 @@ def make_pearl_round(
             f"host loop"
         )
     topo = topology if topology is not None else Star()
+    policy = resolve_policy(policy)
+    scaled = not isinstance(policy, Theorem34Policy)
+    if scaled:
+        validate_policy_context(
+            policy, server=topo.is_server,
+            staleness_available=external_refs,
+            staleness_remedy="construct PearlTrainer with delays/"
+                             "max_staleness (the event-shaped host loop "
+                             "supplies the counters)",
+            topology_name=type(topo).__name__,
+        )
     loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
                            use_kernels=use_kernels, prox_lambda=prox_lambda)
 
-    def local_step(carry, tokens, ref):
+    def local_step(carry, tokens, bcast):
         """One optimizer step of a single player against its frozen reference."""
+        ref, scale = bcast if scaled else (bcast, None)
         p, o = carry
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             p, {"tokens": tokens}, ref
@@ -203,8 +235,21 @@ def make_pearl_round(
         if clip_norm:
             grads = clip_by_global_norm(grads, clip_norm)
         updates, o = optimizer.update(grads, o, p)
+        if scaled:
+            # the policy's per-player multiplier on the optimizer's update —
+            # the step-size correction relative to the base learning rate
+            updates = jax.tree.map(lambda u: scale * u, updates)
         p = apply_updates(p, updates)
         return (p, o), metrics
+
+    if scaled and not external_refs and not needs_general_round(strategy, topo):
+        raise ValueError(
+            f"{type(policy).__name__} needs the general stale-block round "
+            f"(per-player references carry the per-player scale); the "
+            f"star/full-participation fast path has no player axis to "
+            f"thread it through — pass external_refs=True, a mask "
+            f"strategy, or a graph topology"
+        )
 
     # ``external_refs`` compiles the stale-block merge round even when the
     # star fast path would suffice, and skips the in-round reference re-mix:
@@ -234,9 +279,15 @@ def make_pearl_round(
     )
 
     def pearl_round(stacked_params, stacked_opt, batches, refs, snapshot,
-                    mask, mix):
+                    mask, mix, gamma_scale=None):
+        if scaled and gamma_scale is None:
+            raise ValueError(
+                f"this round was compiled with {type(policy).__name__}: "
+                f"pass the (n,) per-player gamma_scale the host computed"
+            )
+        bcast = (refs, gamma_scale) if scaled else refs
         (new_p, new_o), _, metrics = round_fn(
-            (stacked_params, stacked_opt), batches["tokens"], refs
+            (stacked_params, stacked_opt), batches["tokens"], bcast
         )
         # Participants put their freshly quantized block on the wire; the
         # stale blocks of everyone else survive in the snapshot.
@@ -407,12 +458,25 @@ class PearlTrainer:
     which round's broadcast it last saw; ``staleness_log`` keeps the
     realized delay table. ``max_staleness = 0`` with full participation
     reproduces the lockstep stale-block round.
+
+    A **step-size policy** (``policy=`` — name or
+    :class:`~repro.core.stepsize.StepsizePolicy`) scales each player's
+    optimizer update per round: the host computes the ``(n,)`` multiplier
+    row from the policy and the *actual* per-player reference-staleness
+    counters (``_ref_delays`` — the history-clipped delay each player's
+    current reference realized, aging +1 per round sat out), then feeds it
+    to the compiled round. ``delay_adaptive`` requires the async loop
+    (those counters), ``spectral`` requires a graph topology (and a
+    caller-supplied ``coupling`` estimate — the neural consensus game has
+    no closed-form constants); mismatches raise at construction.
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,
                  tau: int, prox_lambda: float, seed: int = 0,
                  topology: Topology | None = None, delays=None,
-                 max_staleness: int = 0, **round_kwargs):
+                 max_staleness: int = 0,
+                 policy: StepsizePolicy | str | None = None,
+                 coupling: float = 1.0, **round_kwargs):
         from repro.core.async_engine import StaleSync
         from repro.models.model import init_params
 
@@ -448,6 +512,34 @@ class PearlTrainer:
         self.topology = topology if topology is not None else Star()
         self._general = (needs_general_round(self.sync, self.topology)
                          or self._async)
+        self.policy = resolve_policy(policy)
+        self._policy_active = not isinstance(self.policy, Theorem34Policy)
+        if self._policy_active:
+            validate_policy_context(
+                self.policy, server=self.topology.is_server,
+                staleness_available=self._async,
+                staleness_remedy="construct the trainer with delays/"
+                                 "max_staleness (or a StaleSync)",
+                topology_name=type(self.topology).__name__,
+            )
+            if self.policy.requires_gossip and float(coupling) <= 1.0:
+                raise ValueError(
+                    f"{type(self.policy).__name__} scales with the excess "
+                    f"coupling ratio and the neural consensus game has no "
+                    f"closed-form constants — pass coupling > 1.0 (an "
+                    f"L_F/L_max estimate); at the default 1.0 the policy "
+                    f"would silently run as theorem34"
+                )
+        gap = (1.0 if self.topology.is_server
+               else float(spectral_gap(self.topology.mixing_matrix(n_players))))
+        # the neural consensus game publishes no closed-form constants, so
+        # the coupling ratio L_F/L_max is caller-supplied (1.0 = uncoupled)
+        self._ss_ctx = RoundContext(tau=tau, max_staleness=self.max_staleness,
+                                    spectral_gap=gap, coupling=float(coupling))
+        # staleness (in rounds) carried by each player's CURRENT reference —
+        # the "actual counters" a delay-adaptive policy conditions on (the
+        # history-clipped realized delay, aging +1 while a player sits out)
+        self._ref_delays = np.zeros(n_players, dtype=np.int64)
         keys = jax.random.split(jax.random.PRNGKey(seed), n_players)
         params = [init_params(cfg, k) for k in keys]
         self.params = stack_players(params)
@@ -455,7 +547,8 @@ class PearlTrainer:
         self.xbar = tree_mean(self.params)
         self._round = jax.jit(make_pearl_round(
             cfg, optimizer, tau=tau, prox_lambda=prox_lambda,
-            topology=self.topology, external_refs=self._async, **round_kwargs
+            topology=self.topology, external_refs=self._async,
+            policy=self.policy, **round_kwargs
         ))
         if self._general:
             # init acts as round 0's broadcast: everyone's block is known
@@ -569,11 +662,20 @@ class PearlTrainer:
                 self._round_messages.append(
                     int((adj & np.outer(m_np, m_np)).sum()))
                 mix = jnp.asarray(self._mixes[g % len(self._mixes)])
+                round_args = (self.params, self.opt_state, tokens, self.refs,
+                              self.snapshot, mask, mix)
+                if self._policy_active:
+                    # per-player multiplier from the staleness the refs being
+                    # consumed THIS round actually carry (host counters)
+                    scale = self.policy.round_gammas(
+                        1.0, self._ss_ctx.with_delays(self._ref_delays))
+                    scale_row = jnp.full((self.n_players,), scale,
+                                         dtype=jnp.float32) \
+                        if np.ndim(scale) == 0 else \
+                        jnp.asarray(scale, dtype=jnp.float32)
+                    round_args = round_args + (scale_row,)
                 (self.params, self.opt_state, new_refs, self.snapshot,
-                 metrics) = self._round(
-                    self.params, self.opt_state, tokens, self.refs,
-                    self.snapshot, mask, mix,
-                )
+                 metrics) = self._round(*round_args)
                 if self._async:
                     # merge-on-arrival: uploads landed on time (the snapshot
                     # merge above), but the broadcast each participant takes
@@ -586,6 +688,10 @@ class PearlTrainer:
                     del self._snap_hist[self.max_staleness + 1:]
                     self.refs, effective = self._refresh_stale_refs(
                         next_row, g, m_np)
+                    # arrivals' new refs carry their realized delay; a
+                    # non-participant's reference just aged one round
+                    self._ref_delays = np.where(m_np, effective,
+                                                self._ref_delays + 1)
                     self.player_rounds += m_np.astype(np.int64)
                     # g - effective = the round whose merged snapshot the
                     # arriving player sees (-1 = still only the init)
@@ -596,6 +702,10 @@ class PearlTrainer:
                     self.staleness_log.append(delay_table[r])
                 else:
                     self.refs = new_refs
+                    # lockstep general round: participants re-mixed fresh
+                    # references (staleness 0); everyone else aged by one
+                    self._ref_delays = np.where(m_np, 0,
+                                                self._ref_delays + 1)
                 self.xbar = tree_mean(self.snapshot)
             else:
                 self.params, self.opt_state, self.xbar, metrics = self._round(

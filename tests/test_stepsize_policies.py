@@ -1,0 +1,380 @@
+"""Step-size policies: identity pins, monotonicity, loud mismatches, DEG.
+
+The load-bearing tests are the trace-time identity pins — ``theorem34``
+compiles the literal policy-free program, and ``delay_adaptive`` at D = 0
+reproduces it bit-for-bit on the star — which anchor the policy layer to
+the PR 1-3 numerics. Around them: the hypothesis property that the
+delay-corrected Theorem 3.4 rule is monotone non-increasing in BOTH tau and
+the delay, the strong-coupling rescue (the BENCH_async.json headline in
+small), the decentralized-extragradient stability margin on the ring, and
+every policy/engine mismatch rejecting loudly instead of silently running
+with defaults.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    StragglerDelay,
+    UniformDelay,
+)
+from repro.core.engine import (
+    DecentralizedExtragradientUpdate,
+    JointExtragradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    build_round_context,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.metrics import rounds_to_reach
+from repro.core.stepsize import (
+    STEPSIZE_POLICIES,
+    DelayAdaptivePolicy,
+    RoundContext,
+    SpectralPolicy,
+    Theorem34Policy,
+    gamma_delay_adaptive,
+    resolve_policy,
+)
+from repro.core.topology import Ring
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def weak():
+    return make_quadratic_game(n=6, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def strong():
+    """Strong coupling: bounded staleness at the fixed Theorem 3.4 step size
+    diverges outright (the regime the delay-adaptive policy rescues)."""
+    return make_quadratic_game(n=6, d=10, M=40, L_B=5.0, batch_size=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ring_strong():
+    """Strong coupling for the ring: plain gossip diverges at every
+    gossip_steps tried (the regime spectral/DEG rescue)."""
+    return make_quadratic_game(n=6, d=10, M=40, L_B=2.5, batch_size=1, seed=0)
+
+
+def _x0(game, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------- identity pins
+class TestIdentityPins:
+    @pytest.mark.parametrize("stochastic", [False, True])
+    def test_theorem34_is_the_policy_free_program(self, quad, stochastic):
+        """policy='theorem34' compiles the literal policy-free engine —
+        bit-for-bit, including bytes."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        x0 = _x0(quad)
+        key = jax.random.PRNGKey(0)
+        a = PearlEngine().run(quad, x0, tau=4, rounds=40, gamma=gamma,
+                              key=key, stochastic=stochastic)
+        b = PearlEngine(policy="theorem34").run(
+            quad, x0, tau=4, rounds=40, gamma=gamma, key=key,
+            stochastic=stochastic)
+        np.testing.assert_array_equal(np.asarray(a.x_final),
+                                      np.asarray(b.x_final))
+        np.testing.assert_array_equal(a.rel_errors, b.rel_errors)
+        np.testing.assert_array_equal(a.bytes_up, b.bytes_up)
+
+    @pytest.mark.parametrize("stochastic", [False, True])
+    def test_delay_adaptive_d0_bit_for_bit_star(self, quad, stochastic):
+        """delay_adaptive at D = 0 reduces to theorem34 AT TRACE TIME: the
+        async engine with a zero staleness bound reproduces the lockstep
+        engine bit-for-bit on the star, policy and all."""
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        x0 = _x0(quad)
+        key = jax.random.PRNGKey(1)
+        lockstep = PearlEngine().run(quad, x0, tau=4, rounds=40, gamma=gamma,
+                                     key=key, stochastic=stochastic)
+        adaptive = AsyncPearlEngine(delays=UniformDelay(seed=3),
+                                    max_staleness=0,
+                                    policy="delay_adaptive").run(
+            quad, x0, tau=4, rounds=40, gamma=gamma, key=key,
+            stochastic=stochastic)
+        np.testing.assert_array_equal(np.asarray(adaptive.x_final),
+                                      np.asarray(lockstep.x_final))
+        np.testing.assert_array_equal(adaptive.rel_errors,
+                                      lockstep.rel_errors)
+
+    def test_gossip_theorem34_is_policy_free(self, weak):
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        x0 = _x0(weak)
+        a = PearlEngine(topology=Ring()).run(
+            weak, x0, tau=4, rounds=30, gamma=gamma, stochastic=False)
+        b = PearlEngine(topology=Ring(), policy=Theorem34Policy()).run(
+            weak, x0, tau=4, rounds=30, gamma=gamma, stochastic=False)
+        np.testing.assert_array_equal(np.asarray(a.x_final),
+                                      np.asarray(b.x_final))
+
+    def test_identity_policy_shares_jit_cache_across_games(self):
+        """The default engine must NOT retrace per game instance: the round
+        context (static, game-derived floats) is only built for policies
+        that read it."""
+        from repro.core.engine import _engine_scan
+
+        g1 = make_quadratic_game(n=3, d=6, M=10, L_B=1.0, batch_size=1,
+                                 seed=11)
+        g2 = make_quadratic_game(n=3, d=6, M=10, L_B=2.0, batch_size=1,
+                                 seed=12)
+        kw = dict(tau=2, rounds=5, gamma=1e-3, stochastic=False)
+        PearlEngine().run(g1, _x0(g1, seed=1), **kw)
+        size_after_first = _engine_scan._cache_size()
+        PearlEngine().run(g2, _x0(g2, seed=2), **kw)
+        assert _engine_scan._cache_size() == size_after_first
+
+    def test_spectral_identity_when_uncoupled_or_fully_mixing(self):
+        """C = 0 (uncoupled) or lag = 0 (exact mixing) resolves to the
+        identity at trace time."""
+        pol = SpectralPolicy()
+        uncoupled = RoundContext(tau=4, spectral_gap=0.5, coupling=1.0)
+        mixing = RoundContext(tau=4, spectral_gap=1.0, coupling=7.0)
+        sentinel = object()
+        assert pol.round_gammas(sentinel, uncoupled) is sentinel
+        assert pol.round_gammas(sentinel, mixing) is sentinel
+
+
+# ----------------------------------------------------------- monotonicity
+class TestMonotonicity:
+    def test_reduces_to_gamma_constant_at_zero_delay(self, quad):
+        c = quad.constants()
+        for tau in (1, 2, 8):
+            assert gamma_delay_adaptive(c, tau, 0) == pytest.approx(
+                stepsize.gamma_constant(c, tau))
+
+    def test_per_player_row_monotone_in_delay(self, quad):
+        c = quad.constants()
+        row = gamma_delay_adaptive(c, 4, np.array([0, 1, 4, 16]))
+        assert (np.diff(row) < 0).all()
+
+    def test_policy_row_matches_helper(self, quad):
+        """The in-scan policy applies exactly the documented correction."""
+        c = quad.constants()
+        gamma = stepsize.gamma_constant(c, 4)
+        delays = np.array([0, 2, 5, 16], dtype=np.int32)
+        ctx = RoundContext(tau=4, max_staleness=16, delay_row=delays)
+        row = np.asarray(DelayAdaptivePolicy().round_gammas(gamma, ctx))
+        np.testing.assert_allclose(row, gamma_delay_adaptive(c, 4, delays),
+                                   rtol=1e-6)
+
+
+class TestMonotonicityProperty:
+    """Hypothesis property: gamma_delay_adaptive is monotone non-increasing
+    in BOTH tau and D (the shape Theorem 3.4's stability argument needs)."""
+
+    def test_monotone_in_tau_and_delay(self, quad):
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        c = quad.constants()
+
+        @settings(max_examples=200, deadline=None)
+        @given(tau=st.integers(min_value=1, max_value=256),
+               delay=st.floats(min_value=0.0, max_value=1e3),
+               dtau=st.integers(min_value=1, max_value=64),
+               ddelay=st.floats(min_value=0.0, max_value=1e3))
+        def prop(tau, delay, dtau, ddelay):
+            g = gamma_delay_adaptive(c, tau, delay)
+            assert gamma_delay_adaptive(c, tau + dtau, delay) <= g + 1e-18
+            assert gamma_delay_adaptive(c, tau, delay + ddelay) <= g + 1e-18
+
+        prop()
+
+
+# ------------------------------------------------------ the rescue (small)
+class TestStrongCouplingRescue:
+    """BENCH_async.json / BENCH_engine.json headlines, shrunk to test size."""
+
+    def test_delay_adaptive_rescues_straggler_d16(self, strong):
+        gamma = stepsize.gamma_constant(strong.constants(), 4)
+        x0 = _x0(strong)
+        kw = dict(tau=4, rounds=800, gamma=gamma, key=jax.random.PRNGKey(0),
+                  stochastic=False)
+        sched = StragglerDelay(fraction=0.25, seed=0)
+        fixed = AsyncPearlEngine(delays=sched, max_staleness=16).run(
+            strong, x0, **kw)
+        adaptive = AsyncPearlEngine(delays=sched, max_staleness=16,
+                                    policy="delay_adaptive").run(
+            strong, x0, **kw)
+        f = float(fixed.rel_errors[-1])
+        assert not np.isfinite(f) or f > 1e3        # fixed diverges
+        assert float(adaptive.rel_errors[-1]) < 0.5  # adaptive contracts
+
+    def test_spectral_rescues_ring_at_gossip_steps_1(self, ring_strong):
+        gamma = stepsize.gamma_constant(ring_strong.constants(), 4)
+        x0 = _x0(ring_strong)
+        kw = dict(tau=4, rounds=1000, gamma=gamma, stochastic=False)
+        fixed = PearlEngine(topology=Ring()).run(ring_strong, x0, **kw)
+        more_sweeps = PearlEngine(topology=Ring(), gossip_steps=4).run(
+            ring_strong, x0, **kw)
+        spectral = PearlEngine(topology=Ring(), policy="spectral").run(
+            ring_strong, x0, **kw)
+        for diverging in (fixed, more_sweeps):
+            f = float(diverging.rel_errors[-1])
+            assert not np.isfinite(f) or f > 1e3
+        assert float(spectral.rel_errors[-1]) < 0.1
+
+    def test_deg_converges_where_plain_gossip_cannot(self, ring_strong):
+        """DEG x spectral at gossip_steps = 1 converges markedly faster than
+        sgd x spectral (the correction phase sees the extrapolated views),
+        while DEG x theorem34 confirms the policy is still needed."""
+        gamma = stepsize.gamma_constant(ring_strong.constants(), 4)
+        x0 = _x0(ring_strong)
+        kw = dict(tau=4, rounds=1000, gamma=gamma, stochastic=False)
+        deg_fixed = PearlEngine(update=DecentralizedExtragradientUpdate(),
+                                topology=Ring()).run(ring_strong, x0, **kw)
+        f = float(deg_fixed.rel_errors[-1])
+        assert not np.isfinite(f) or f > 1e3
+        deg = PearlEngine(update=DecentralizedExtragradientUpdate(),
+                          topology=Ring(), policy="spectral").run(
+            ring_strong, x0, **kw)
+        sgd = PearlEngine(topology=Ring(), policy="spectral").run(
+            ring_strong, x0, **kw)
+        assert float(deg.rel_errors[-1]) < 1e-2
+        assert float(deg.rel_errors[-1]) < float(sgd.rel_errors[-1])
+
+
+# ------------------------------------------------- decentralized EG basics
+class TestDecentralizedExtragradient:
+    def test_converges_on_weak_coupling_ring(self, weak):
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        r = PearlEngine(update=DecentralizedExtragradientUpdate(),
+                        topology=Ring()).run(
+            weak, _x0(weak), tau=4, rounds=400, gamma=gamma,
+            stochastic=False)
+        assert rounds_to_reach(r.rel_errors, 1e-6) is not None
+
+    def test_bills_two_sweeps_per_round(self, weak):
+        """DEG moves exactly twice the wire of a gossip_steps = 1 round."""
+        gamma = stepsize.gamma_constant(weak.constants(), 4)
+        kw = dict(tau=4, rounds=5, gamma=gamma, stochastic=False)
+        deg = PearlEngine(update=DecentralizedExtragradientUpdate(),
+                          topology=Ring()).run(weak, _x0(weak), **kw)
+        sgd = PearlEngine(topology=Ring()).run(weak, _x0(weak), **kw)
+        np.testing.assert_array_equal(deg.bytes_up, 2 * sgd.bytes_up)
+
+
+# -------------------------------------------------------------- validation
+class TestValidation:
+    def test_lockstep_engine_rejects_delay_adaptive(self, quad):
+        eng = PearlEngine(policy="delay_adaptive")
+        with pytest.raises(ValueError, match="AsyncPearlEngine"):
+            eng.run(quad, _x0(quad), rounds=5, gamma=1e-3)
+
+    def test_star_rejects_spectral(self, quad):
+        with pytest.raises(ValueError, match="server-free"):
+            PearlEngine(policy="spectral").run(
+                quad, _x0(quad), rounds=5, gamma=1e-3)
+        with pytest.raises(ValueError, match="server-free"):
+            AsyncPearlEngine(policy="spectral").run(
+                quad, _x0(quad), rounds=5, gamma=1e-3)
+
+    def test_joint_update_rejects_non_identity_policy(self, quad):
+        eng = PearlEngine(update=JointExtragradientUpdate(),
+                          policy=SpectralPolicy(), topology=Ring())
+        with pytest.raises(ValueError, match="theorem34"):
+            eng.run(quad, _x0(quad), rounds=5, gamma=1e-3)
+
+    def test_deg_rejected_on_star_and_under_masks_and_async(self, quad):
+        with pytest.raises(ValueError, match="JointExtragradientUpdate"):
+            PearlEngine(update=DecentralizedExtragradientUpdate()).run(
+                quad, _x0(quad), rounds=5, gamma=1e-3)
+        with pytest.raises(ValueError, match="full participation"):
+            PearlEngine(update=DecentralizedExtragradientUpdate(),
+                        topology=Ring(),
+                        sync=PartialParticipation(fraction=0.5, seed=0)).run(
+                quad, _x0(quad), rounds=5, gamma=1e-3)
+        with pytest.raises(ValueError, match="delayed equivalent"):
+            AsyncPearlEngine(update=DecentralizedExtragradientUpdate(),
+                             topology=Ring()).run(
+                quad, _x0(quad), rounds=5, gamma=1e-3)
+
+    def test_unknown_policy_name_rejected(self):
+        with pytest.raises(ValueError, match="unknown step-size policy"):
+            resolve_policy("nope")
+
+    def test_bad_strengths_rejected(self):
+        with pytest.raises(ValueError, match="strength"):
+            DelayAdaptivePolicy(strength=0.0)
+        with pytest.raises(ValueError, match="strength"):
+            SpectralPolicy(strength=-1.0)
+
+    def test_registry_round_trips(self):
+        for name, ctor in STEPSIZE_POLICIES.items():
+            assert resolve_policy(name) == ctor()
+        assert resolve_policy(None) == Theorem34Policy()
+
+    def test_trainer_round_rejects_mismatches(self):
+        """make_pearl_round refuses policies the compiled round cannot
+        honor (no staleness counters / no mixing spectrum)."""
+        from repro.configs import get_config
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import make_pearl_round
+
+        cfg = get_config("smollm-360m").smoke_variant()
+        with pytest.raises(ValueError, match="staleness"):
+            make_pearl_round(cfg, sgd(1e-2), tau=2, prox_lambda=0.1,
+                             policy="delay_adaptive")
+        with pytest.raises(ValueError, match="spectral gap"):
+            make_pearl_round(cfg, sgd(1e-2), tau=2, prox_lambda=0.1,
+                             policy="spectral")
+
+    def test_trainer_spectral_requires_coupling_estimate(self):
+        """spectral with the default coupling=1.0 would silently be the
+        identity — the trainer demands an explicit L_F/L_max estimate."""
+        from repro.configs import get_config
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        cfg = get_config("smollm-360m").smoke_variant()
+        with pytest.raises(ValueError, match="coupling"):
+            PearlTrainer(cfg, sgd(1e-2), n_players=3, tau=2,
+                         prox_lambda=0.1, topology=Ring(),
+                         policy="spectral")
+
+
+# ------------------------------------------------------------ context glue
+class TestRoundContext:
+    def test_build_round_context_star_and_ring(self, weak):
+        star_ctx = build_round_context(weak, __import__(
+            "repro.core.topology", fromlist=["Star"]).Star(), tau=4)
+        assert star_ctx.spectral_gap == 1.0
+        c = weak.constants()
+        assert star_ctx.coupling == pytest.approx(c.L_F / c.L_max)
+        ring_ctx = build_round_context(weak, Ring(), tau=4,
+                                       max_staleness=3)
+        assert 0.0 < ring_ctx.spectral_gap < 1.0
+        assert ring_ctx.max_staleness == 3
+        assert ring_ctx.delay_row is None
+        row = np.arange(weak.n)
+        assert ring_ctx.with_delays(row).delay_row is row
+
+    def test_constantless_game_gets_neutral_coupling(self):
+        from repro.core.game import VectorGame
+        from repro.core.topology import Star
+
+        class Bare(VectorGame):
+            n, d = 2, 3
+
+            def player_grad(self, i, x_i, x_ref):
+                return x_i
+
+        ctx = build_round_context(Bare(), Star(), tau=2)
+        assert ctx.coupling == 1.0
