@@ -91,15 +91,18 @@ def run_staleness(tau: int = 4, rounds: int = 3000, threshold: float = 1e-6,
                 key=jax.random.PRNGKey(0), stochastic=False,
             )
             hit = rounds_to_reach(r.rel_errors, threshold)
+            final = float(r.rel_errors[-1])
             per_round = r.bytes_up + r.bytes_down
             rows.append({
                 "schedule": sname,
                 "max_staleness": D,
                 "tau": tau,
+                "rounds": rounds,   # the budget, for budget-aware drift checks
                 "rounds_to_eq": hit,
                 "bytes_to_eq": (int(per_round[:hit].sum())
                                 if hit is not None else None),
-                "final_rel_error": float(r.rel_errors[-1]),
+                "final_rel_error": final,
+                "diverged": bool(not np.isfinite(final) or final > 1e3),
                 "mean_staleness": r.mean_staleness,
                 "bytes_per_round": int(per_round[0]),
                 "lockstep_rounds_to_eq": sync_hit,
@@ -161,6 +164,7 @@ def run_policy_rescue(tau: int = 4, rounds: int = 2500,
                 "policy": pname,
                 "max_staleness": D,
                 "tau": tau,
+                "rounds": rounds,
                 "rounds_to_eq": hit,
                 "bytes_to_eq": (int(per_round[:hit].sum())
                                 if hit is not None else None),

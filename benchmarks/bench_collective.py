@@ -1,0 +1,202 @@
+"""Wire-bytes sweep for the sharded collective layer (BENCH_collective.json).
+
+Two sweeps over the explicit shard_map lowering of repro.core.collective,
+run on a fake multi-device mesh (CI: ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``):
+
+- ``run_wire``: lower each collective (trainer star mean / engine star
+  gather / ring Metropolis sweep) x (exact f32 | bf16) and read the wire
+  DIRECTLY off the compiled HLO — operand dtypes and per-participant operand
+  bytes of every cross-player collective. The bf16 rows must show 2-byte
+  operands and half the f32 bytes; this is the claim the byte accounting
+  used to assert on faith (the PR 1 negative result: the host lowering's
+  compiled wire stayed f32).
+- ``run_parity``: the same game under host vs mesh lowering — final
+  relative errors must agree (exactly-ish in f32, bounded quantization
+  noise in bf16), so the explicit wire changes the program, not the
+  trajectory.
+
+Skips gracefully (empty sweeps, a note on stdout) when only one device is
+available — the artifact is produced by the multi-device CI job.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import collective, stepsize
+from repro.core.engine import ExactSync, PearlEngine, QuantizedSync
+from repro.core.games import make_quadratic_game
+from repro.core.topology import Ring
+
+N, D = 8, 4096     # 8 players so the fake CI mesh is fully populated
+
+SYNCS = {
+    "exact": ExactSync(),
+    "bf16": QuantizedSync(jnp.bfloat16),
+}
+
+
+def _mesh_or_none():
+    try:
+        return collective.player_mesh(N)
+    except ValueError:
+        return None
+
+
+def _wire_row(name: str, sname: str, hlo: str) -> dict:
+    report = collective.wire_dtype_report(hlo)
+    collective.assert_wire_dtype(hlo, compressed=(sname == "bf16"))
+    return {
+        "collective": name,
+        "sync": sname,
+        "wire_dtypes": sorted({o.operand_dtype for o in report}),
+        "wire_ops": sorted({o.op for o in report}),
+        "wire_bytes_per_round": int(sum(o.operand_bytes for o in report)),
+        "compressed_wire": bool(collective.compressed_wire_ops(hlo)),
+    }
+
+
+def run_wire():
+    """Operand dtype + bytes of each compiled collective, per sync strategy.
+
+    ``wire_bytes_per_round`` sums the per-participant operand bytes of every
+    cross-player collective in the lowering — the quantity that must halve
+    when the wire is bf16 (exact 2x: same shapes, half the itemsize).
+    """
+    mesh = _mesh_or_none()
+    if mesh is None:
+        emit("collective_wire", 0.0, "skipped: single-device (set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+        return []
+    x = jnp.zeros((N, D), jnp.float32)
+    V = jnp.zeros((N, N, D), jnp.float32)
+    W = jnp.asarray(Ring().mixing_matrix(N), jnp.float32)
+    A = Ring().adjacency(N)
+    link_w = jnp.where(jnp.asarray(A), W, 0.0)
+    self_w = 1.0 - jnp.sum(link_w, axis=1)
+    offsets = collective.circulant_offsets(A)
+
+    rows = []
+    t0 = time.perf_counter()
+    for sname, sync in SYNCS.items():
+        lowerings = {
+            "tree_mean": lambda s=sync: jax.jit(
+                lambda t: collective.sharded_tree_mean(t, mesh=mesh, sync=s)
+            ).lower({"w": x}),
+            "star_gather": lambda s=sync: jax.jit(
+                lambda t: collective.sharded_joint_wire(t, mesh=mesh, sync=s)
+            ).lower(x),
+            "ring_permute": lambda s=sync: jax.jit(
+                lambda v, lw, sw: collective.sharded_mix_sweep(
+                    v, lw, sw, mesh=mesh, sync=s, offsets=offsets)
+            ).lower(V, link_w, self_w),
+            "gather_relay": lambda s=sync: jax.jit(
+                lambda v, lw, sw: collective.sharded_mix_sweep(
+                    v, lw, sw, mesh=mesh, sync=s, offsets=None)
+            ).lower(V, link_w, self_w),
+        }
+        for name, lower in lowerings.items():
+            hlo = lower().compile().as_text()
+            rows.append(_wire_row(name, sname, hlo))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    # the headline: per collective, bf16 wire bytes must be exactly half f32
+    by_name = {}
+    for r in rows:
+        by_name.setdefault(r["collective"], {})[r["sync"]] = r
+    for name, cells in by_name.items():
+        f32b = cells["exact"]["wire_bytes_per_round"]
+        bf16b = cells["bf16"]["wire_bytes_per_round"]
+        assert bf16b * 2 == f32b, (name, bf16b, f32b)
+
+    derived = ";".join(
+        f"{r['collective']}x{r['sync']}:"
+        f"{'+'.join(r['wire_dtypes'])},B={r['wire_bytes_per_round']}"
+        for r in rows
+    )
+    emit("collective_wire", us, derived)
+    return rows
+
+
+def run_parity(tau: int = 4, rounds: int = 400):
+    """Host vs mesh lowering on the same game: the wire must not move the
+    trajectory beyond (f32) fusion-level or (bf16) quantization-level noise.
+    """
+    mesh = _mesh_or_none()
+    if mesh is None:
+        emit("collective_parity", 0.0, "skipped: single-device")
+        return []
+    game = make_quadratic_game(n=N, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+    c = game.constants()
+    gamma = stepsize.gamma_constant(c, tau)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+
+    cells = [
+        ("star", "exact", {}, {}),
+        ("star", "bf16", {"sync": QuantizedSync(jnp.bfloat16)}, {}),
+        ("ring", "exact", {"topology": Ring()}, {}),
+        ("ring", "bf16", {"sync": QuantizedSync(jnp.bfloat16),
+                          "topology": Ring()}, {}),
+    ]
+    rows = []
+    t0 = time.perf_counter()
+    for tname, sname, kwargs, _ in cells:
+        host = PearlEngine(**kwargs).run(
+            game, x0, tau=tau, rounds=rounds, gamma=gamma, stochastic=False)
+        mesh_r = PearlEngine(mesh=mesh, **kwargs).run(
+            game, x0, tau=tau, rounds=rounds, gamma=gamma, stochastic=False)
+        drift = float(np.abs(np.asarray(host.x_final)
+                             - np.asarray(mesh_r.x_final)).max())
+        rows.append({
+            "topology": tname,
+            "sync": sname,
+            "rounds": rounds,
+            "host_rel_error": float(host.rel_errors[-1]),
+            "mesh_rel_error": float(mesh_r.rel_errors[-1]),
+            "max_final_drift": drift,
+        })
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+
+    derived = ";".join(
+        f"{r['topology']}x{r['sync']}:drift={r['max_final_drift']:.1e}"
+        for r in rows
+    )
+    emit("collective_parity", us, derived)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--rounds", type=int, default=400)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweeps as structured JSON "
+                             "(BENCH_collective.json convention)")
+    args = parser.parse_args()
+
+    wire = run_wire()
+    parity = run_parity(rounds=args.rounds)
+    if args.json:
+        payload = {
+            "benchmark": "bench_collective",
+            "wire": wire,
+            "parity": parity,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -126,14 +126,17 @@ def run_topologies(taus=(1, 4, 16), rounds: int = 4000,
             # ``hit`` means "after hit rounds" and per_round[:hit] is exactly
             # the wire traffic spent to get there (hit=0 -> 0 bytes).
             hit = rounds_to_reach(r.rel_errors, threshold)
+            final = float(r.rel_errors[-1])
             per_round = r.bytes_up + r.bytes_down
             bytes_to_eq = int(per_round[:hit].sum()) if hit is not None else None
             rows.append({
                 "topology": tname,
                 "tau": tau,
+                "rounds": rounds,   # the budget, for budget-aware drift checks
                 "rounds_to_eq": hit,
                 "bytes_to_eq": bytes_to_eq,
-                "final_rel_error": float(r.rel_errors[-1]),
+                "final_rel_error": final,
+                "diverged": bool(not np.isfinite(final) or final > 1e3),
                 "bytes_per_round": int(per_round[0]),
             })
     us = (time.perf_counter() - t0) * 1e6 / len(rows)
@@ -198,6 +201,7 @@ def run_gossip_policies(tau: int = 4, rounds: int = 4000,
             "policy": pname,
             "gossip_steps": gs,
             "tau": tau,
+            "rounds": rounds,
             "rounds_to_eq": hit,
             "bytes_to_eq": (int(per_round[:hit].sum())
                             if hit is not None else None),

@@ -16,6 +16,7 @@ FAST = os.environ.get("BENCH_FAST", "1") == "1"
 def main() -> None:
     from benchmarks import (
         bench_async,
+        bench_collective,
         bench_counterexample,
         bench_engine,
         bench_heatmap,
@@ -49,6 +50,11 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("pearl_comm", lambda: bench_pearl_comm.run(
             local_steps=16 if FAST else 24)),
+        # emits a skip row on single-device runs; the CI multi-device job
+        # (fake 8-device mesh) exercises the real sweep
+        ("collective_wire", bench_collective.run_wire),
+        ("collective_parity", lambda: bench_collective.run_parity(
+            rounds=100 if FAST else 400)),
         ("roofline", bench_roofline.run),
     ]
     failures = []

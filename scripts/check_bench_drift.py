@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Compare a smoke-scale benchmark artifact against the committed one.
+
+The bench-smoke CI job used to re-run near-paper-scale sweeps on every push
+and never looked at the result — expensive and useless. Now it runs true
+smoke scale and this script checks the smoke output has not *drifted* from
+the committed ``BENCH_*.json``:
+
+- **byte fields are exact**: per-round byte accounting is pure arithmetic
+  over (strategy, topology, shapes) — any difference is a real accounting
+  regression, regardless of how few rounds the smoke ran;
+- **rounds-to-equilibrium within tolerance**: the sweeps are deterministic,
+  but platform-level float differences can wiggle a threshold crossing by a
+  few rounds. A smoke row that never reached equilibrium inside its reduced
+  budget is skipped UNLESS the committed run also never reached it at a
+  larger budget (then "smoke reached, committed did not" is drift: a
+  diverging cell started converging or vice versa);
+- **divergence is one-sided**: a cell that diverges at smoke scale must
+  also diverge in the committed run (a stable cell newly blowing up is
+  drift). The converse is NOT checked — the ``diverged`` sentinel
+  (final error > 1e3) is budget-dependent, and a slowly diverging cell
+  legitimately has not crossed it inside the reduced smoke budget.
+
+Usage: check_bench_drift.py SMOKE.json COMMITTED.json [--tol 0.1]
+Exits 1 on drift, with one line per violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# benchmark name -> list sections: {section: (key_fields, exact_fields)}.
+# ``rounds_to_eq`` and ``diverged`` are handled structurally (see below);
+# fields absent from a row are ignored, so one spec serves all artifacts.
+SPECS = {
+    "bench_engine": {
+        "matrix": (("update", "sync"), ()),
+        "topology": (("topology", "tau"), ("bytes_per_round",)),
+        "gossip_policy": (("update", "policy", "gossip_steps"),
+                          ("bytes_per_round",)),
+    },
+    "bench_async": {
+        "staleness": (("schedule", "max_staleness"), ("bytes_per_round",)),
+        "policy_rescue": (("schedule", "policy", "max_staleness"), ()),
+    },
+    "bench_collective": {
+        "wire": (("collective", "sync"),
+                 ("wire_bytes_per_round", "wire_dtypes", "compressed_wire")),
+        "parity": (("topology", "sync"), ()),
+    },
+}
+
+
+def _key(row, fields):
+    return tuple(row.get(f) for f in fields)
+
+
+def compare(smoke: dict, committed: dict, tol: float) -> list[str]:
+    name = committed.get("benchmark")
+    if smoke.get("benchmark") != name:
+        return [f"benchmark name mismatch: smoke={smoke.get('benchmark')!r} "
+                f"committed={name!r}"]
+    spec = SPECS.get(name)
+    if spec is None:
+        return [f"no drift spec for benchmark {name!r} — add one to "
+                f"scripts/check_bench_drift.py"]
+    errors = []
+    for section, (key_fields, exact_fields) in spec.items():
+        srows = {_key(r, key_fields): r for r in smoke.get(section, [])}
+        crows = {_key(r, key_fields): r for r in committed.get(section, [])}
+        if not srows:
+            errors.append(f"{name}.{section}: smoke artifact has no rows")
+            continue
+        for key, crow in crows.items():
+            srow = srows.get(key)
+            if srow is None:
+                errors.append(f"{name}.{section}{key}: row missing from "
+                              f"smoke artifact")
+                continue
+            for f in exact_fields:
+                if f in crow and srow.get(f) != crow[f]:
+                    errors.append(
+                        f"{name}.{section}{key}.{f}: smoke={srow.get(f)!r} "
+                        f"!= committed={crow[f]!r}")
+            if srow.get("diverged") and not crow.get("diverged", False) \
+                    and "diverged" in crow:
+                errors.append(
+                    f"{name}.{section}{key}: smoke run diverged but the "
+                    f"committed run did not")
+            if "rounds_to_eq" in crow:
+                c_hit, s_hit = crow["rounds_to_eq"], srow.get("rounds_to_eq")
+                if c_hit is None:
+                    if s_hit is not None:
+                        errors.append(
+                            f"{name}.{section}{key}.rounds_to_eq: smoke "
+                            f"reached equilibrium at {s_hit} but the "
+                            f"committed run never did")
+                elif s_hit is not None:
+                    # both reached: deterministic sweeps, small platform tol
+                    if abs(s_hit - c_hit) > max(1, tol * c_hit):
+                        errors.append(
+                            f"{name}.{section}{key}.rounds_to_eq: smoke="
+                            f"{s_hit} committed={c_hit} (tol {tol:.0%})")
+                # smoke budget may simply be too small to reach c_hit: only
+                # flag when the smoke budget provably covered it
+                elif "rounds" in srow and srow["rounds"] >= c_hit:
+                    errors.append(
+                        f"{name}.{section}{key}.rounds_to_eq: committed "
+                        f"reached at {c_hit} <= smoke budget "
+                        f"{srow['rounds']} but smoke never reached")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("smoke", help="freshly produced smoke-scale artifact")
+    ap.add_argument("committed", help="committed BENCH_*.json to check "
+                                      "against")
+    ap.add_argument("--tol", type=float, default=0.1,
+                    help="relative tolerance on rounds-to-equilibrium "
+                         "(default 0.1)")
+    args = ap.parse_args()
+    with open(args.smoke) as f:
+        smoke = json.load(f)
+    with open(args.committed) as f:
+        committed = json.load(f)
+    errors = compare(smoke, committed, args.tol)
+    for e in errors:
+        print(f"DRIFT: {e}", file=sys.stderr)
+    if errors:
+        raise SystemExit(1)
+    print(f"{args.smoke} is consistent with {args.committed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/render_experiments.py --check
 python scripts/check_links.py
 
-# fast-mode smoke of the async-staleness benchmark artifact path (temp dir:
-# the committed BENCH_async.json is the paper-scale sweep, not this smoke)
+# multi-device section: the sharding/collective tests on a fake 8-device
+# mesh, including the HLO wire-dtype assertions (they skip on one device, so
+# running them WITHOUT this flag would silently drop the acceptance pin)
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q tests/test_collective.py tests/test_sharding.py
+
+# fast-mode smokes of every --json benchmark artifact path (temp dir: the
+# committed BENCH_*.json are the paper-scale sweeps, not these smokes)
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_async \
@@ -24,3 +31,25 @@ python -c "import json, sys; d = json.load(open(sys.argv[1])); \
 assert d['staleness'], 'empty async sweep'; \
 assert d['policy_rescue'], 'empty policy sweep'" \
   "$SMOKE_DIR/BENCH_async.json"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_engine \
+  --rounds 100 --topology-rounds 200 --policy-rounds 100 \
+  --json "$SMOKE_DIR/BENCH_engine.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['matrix'], 'empty engine matrix'; \
+assert d['topology'], 'empty topology sweep'; \
+assert d['gossip_policy'], 'empty gossip policy sweep'" \
+  "$SMOKE_DIR/BENCH_engine.json"
+
+# the collective wire sweep needs the fake mesh; its in-benchmark asserts
+# re-verify the 2-byte wire and the exact bf16-vs-f32 byte halving
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.bench_collective --rounds 100 \
+  --json "$SMOKE_DIR/BENCH_collective.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['wire'], 'empty wire sweep (no fake mesh?)'; \
+assert d['parity'], 'empty parity sweep'; \
+assert all(r['compressed_wire'] for r in d['wire'] if r['sync'] == 'bf16'), \
+'bf16 wire not compressed in compiled HLO'" \
+  "$SMOKE_DIR/BENCH_collective.json"

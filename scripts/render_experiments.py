@@ -30,6 +30,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 MD = os.path.join(ROOT, "EXPERIMENTS.md")
 ASYNC = os.path.join(ROOT, "BENCH_async.json")
 ENGINE = os.path.join(ROOT, "BENCH_engine.json")
+COLLECTIVE = os.path.join(ROOT, "BENCH_collective.json")
 
 
 def _load(path):
@@ -112,10 +113,46 @@ def render_gossip(data) -> str:
     return "\n".join(lines)
 
 
+def render_wire(data) -> str:
+    if data is None or not data.get("wire"):
+        return "*(BENCH_collective.json wire sweep missing — run the " \
+               "benchmark under XLA_FLAGS="\
+               "--xla_force_host_platform_device_count=8)*"
+    lines = [
+        "| collective | sync | HLO ops | operand dtypes | wire bytes/round |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["wire"]:
+        lines.append(
+            f"| {r['collective']} | {r['sync']} | "
+            f"{', '.join(r['wire_ops'])} | "
+            f"{', '.join(r['wire_dtypes'])} | "
+            f"{r['wire_bytes_per_round']} |")
+    return "\n".join(lines)
+
+
+def render_wire_parity(data) -> str:
+    if data is None or not data.get("parity"):
+        return "*(BENCH_collective.json parity sweep missing — run the " \
+               "benchmark)*"
+    lines = [
+        "| topology | sync | host rel. error | mesh rel. error | "
+        "max final drift |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["parity"]:
+        lines.append(
+            f"| {r['topology']} | {r['sync']} | {r['host_rel_error']:.1e} | "
+            f"{r['mesh_rel_error']:.1e} | {r['max_final_drift']:.1e} |")
+    return "\n".join(lines)
+
+
 SECTIONS = {
     "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
     "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
     "AUTO-BENCH-GOSSIP": lambda: render_gossip(_load(ENGINE)),
+    "AUTO-BENCH-WIRE": lambda: render_wire(_load(COLLECTIVE)),
+    "AUTO-BENCH-WIRE-PARITY": lambda: render_wire_parity(_load(COLLECTIVE)),
 }
 
 

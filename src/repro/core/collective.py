@@ -1,0 +1,430 @@
+"""Sharded collectives: an explicit, HLO-verifiable wire dtype for PEARL sync.
+
+The engine and trainer *bill* a compressed synchronization at 2 bytes per
+scalar (``QuantizedSync(jnp.bfloat16)``), but billing is accounting fiction
+unless the compiled program actually moves 2-byte buffers across the player
+axis. The host-path lowering cannot guarantee that: XLA owns the reduction,
+and two independent compiler passes re-widen the wire —
+
+- **reduction reassociation**: ``mean(convert_bf16(x))`` is rewritten so the
+  convert feeds an f32 accumulator (the ``launch/perf.py`` negative result
+  recorded in PR 1);
+- **float normalization**: backends without native bf16 collectives (the CPU
+  build that runs CI, via ``--xla_force_host_platform_device_count``) legalize
+  *every* bf16 collective — even pure data movement like ``all-gather`` and
+  ``collective-permute`` — by hoisting a ``convert`` above the op, so the
+  on-wire buffer is f32 again. An ``optimization_barrier`` does not help:
+  legalization is not an optimization pass.
+
+This module lowers the synchronization explicitly under
+:func:`~jax.experimental.shard_map.shard_map` on a dedicated *player* mesh
+axis, and defeats both passes by shipping the quantized payload as its **bit
+pattern**: ``bitcast(astype(x, bf16), uint16)``. Integer buffers are never
+float-normalized and carry no accumulator to reassociate around, so the
+compiled HLO provably contains a cross-player collective with a 2-byte
+operand — asserted by :func:`wire_dtype_report` on the dry-run HLO text, not
+trusted from byte accounting (tests/test_collective.py; the CI multi-device
+job runs them on a fake 8-device mesh).
+
+Three collectives cover the engine's and trainer's communication regimes:
+
+- :func:`sharded_tree_mean` — the star mean over player-stacked pytrees (the
+  trainer's ``tree_mean``): quantize → all-gather bits → dequantize → local
+  mean. Gathering and then reducing locally (instead of ``psum``) is what
+  keeps the wire honest: an all-reduce owns its accumulator and is legalized
+  to f32 on CPU, while the gather moves exactly the wire representation and
+  leaves the f32 reduction *after* the wire. It also makes the ``ExactSync``
+  path **bit-for-bit** with the host ``jnp.mean``: every device reduces the
+  same gathered buffer in the same order.
+- :func:`sharded_joint_wire` — the engine's star broadcast: each player's
+  block crosses the wire once at the wire dtype; every player gets the joint
+  snapshot back (own row restored exact by the caller, preserving
+  ``QuantizedSync.view`` semantics).
+- :func:`sharded_mix_sweep` — one Metropolis gossip sweep. Circulant graphs
+  with one player per device (ring, and any topology whose adjacency depends
+  only on ``(j - i) mod n``) lower each neighbor offset to a
+  ``collective_permute`` of the wire bits — a player receives ``deg(i)``
+  view relays per sweep, matching the edge-aware byte accounting; general /
+  time-varying graphs fall back to the all-gather relay with the mixing row
+  applied locally.
+
+**Pin discipline**: nothing here touches the no-mesh path. ``mesh=None``
+callers branch at trace time and compile the identical legacy program
+(tests pin that the host ``tree_mean`` lowering contains no collectives at
+all); the sharded path is a new program, compared against the host path by
+value (exact in f32, bounded quantization noise in bf16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.6 re-exports shard_map at the top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # the pinned 0.4.x toolchain
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+Array = jax.Array
+
+#: Default mesh-axis name for the per-player dimension. Production multi-pod
+#: launches map players onto the ``pod`` axis instead (one player per pod);
+#: every entry point takes ``axis_name`` so both spellings work.
+PLAYER_AXIS = "players"
+
+# Wire-size -> integer container for the bit-pattern trick. Sub-byte dtypes
+# would need packing; the strategies in repro.core.engine are all >= 1 byte.
+_BITS_CONTAINER = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+# =========================================================================
+# Mesh construction / validation
+# =========================================================================
+def player_mesh(n_players: int, *, axis_name: str = PLAYER_AXIS,
+                devices=None) -> Mesh:
+    """A 1-D mesh over the player axis, sized to the available devices.
+
+    Uses the largest divisor of ``n_players`` that fits the device count, so
+    every device holds the same number of player blocks (``shard_map``
+    requires even sharding). Raises when only the trivial 1-device "mesh"
+    would fit a multi-player run — a collective layer with no wire would make
+    every HLO-level claim vacuous; CI and local development get real fake
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    if n_players < 1:
+        raise ValueError(f"n_players must be >= 1, got {n_players}")
+    devs = list(jax.devices() if devices is None else devices)
+    size = max(k for k in range(1, min(n_players, len(devs)) + 1)
+               if n_players % k == 0)
+    if size == 1 and n_players > 1:
+        raise ValueError(
+            f"cannot build a multi-device player mesh for n_players="
+            f"{n_players} from {len(devs)} device(s): no divisor of "
+            f"{n_players} >= 2 fits. Run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI "
+            f"multi-device job's fake mesh) or on a real multi-device "
+            f"backend."
+        )
+    return Mesh(np.array(devs[:size]), (axis_name,))
+
+
+def _axis_size(mesh: Mesh, axis_name: str) -> int:
+    if axis_name not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no axis {axis_name!r}; pass the "
+            f"axis carrying the player dimension (axis_name=...)"
+        )
+    return mesh.shape[axis_name]
+
+
+def _validate_players(n: int, mesh: Mesh, axis_name: str) -> None:
+    size = _axis_size(mesh, axis_name)
+    if n % size:
+        raise ValueError(
+            f"player dimension {n} does not divide evenly over mesh axis "
+            f"{axis_name!r} of size {size}; use player_mesh(n) to size the "
+            f"mesh to a divisor"
+        )
+
+
+# =========================================================================
+# Wire representation: the bit-pattern trick
+# =========================================================================
+def wire_spec(sync) -> "WireSpec | None":
+    """The on-wire integer container for a sync strategy's compression.
+
+    ``None`` means the strategy transmits at the carrier dtype (f32) and no
+    bitcast is needed. Quantized strategies ship ``astype(wire_dtype)``
+    reinterpreted as ``uint<8*itemsize>`` so no backend pass can re-widen the
+    buffer (see module docstring).
+    """
+    wire_itemsize = int(sync.wire_itemsize(4))
+    if wire_itemsize >= 4:
+        return None
+    dtype = getattr(sync, "dtype", None)
+    if dtype is None:
+        raise ValueError(
+            f"{type(sync).__name__} reports a {wire_itemsize}-byte wire but "
+            f"carries no wire dtype to quantize to"
+        )
+    if np.dtype(dtype).itemsize not in _BITS_CONTAINER:
+        raise ValueError(f"unsupported wire itemsize for dtype {dtype}")
+    return WireSpec(dtype=dtype,
+                    container=_BITS_CONTAINER[np.dtype(dtype).itemsize])
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    dtype: Any        # quantization dtype (e.g. bfloat16)
+    container: Any    # integer container shipped on the wire (e.g. uint16)
+
+    def encode(self, x: Array) -> Array:
+        return jax.lax.bitcast_convert_type(x.astype(self.dtype),
+                                            self.container)
+
+    def decode(self, bits: Array, carrier_dtype) -> Array:
+        return jax.lax.bitcast_convert_type(bits, self.dtype).astype(
+            carrier_dtype)
+
+
+def _reject_mask(sync, what: str) -> None:
+    if sync.uses_mask:
+        raise ValueError(
+            f"{what} is a full-participation collective; "
+            f"{type(sync).__name__} draws a participation mask and needs the "
+            f"host-side stale-block merge round"
+        )
+
+
+# =========================================================================
+# Star collectives
+# =========================================================================
+def sharded_tree_mean(stacked, *, mesh: Mesh, sync=None, sync_dtype=None,
+                      axis_name: str = PLAYER_AXIS, inner_specs=None):
+    """Across-player mean of a player-stacked pytree with an explicit wire.
+
+    The mesh-lowered counterpart of :func:`repro.train.pearl_trainer.tree_mean`
+    (which dispatches here when given a mesh). Each leaf ``(n, ...)`` is
+    sharded over ``axis_name``; inside ``shard_map`` every device encodes its
+    local player blocks at the wire dtype, all-gathers the *bits*, decodes,
+    and reduces locally in f32. ``inner_specs`` optionally gives the per-leaf
+    :class:`~jax.sharding.PartitionSpec` of the non-player dims (the
+    production launcher passes its tensor-parallel specs so the gather
+    crosses only the player/pod axis); default replicated.
+    """
+    from repro.core.engine import resolve_sync
+
+    strategy = resolve_sync(sync, sync_dtype)
+    _reject_mask(strategy, "sharded_tree_mean")
+    wire = wire_spec(strategy)
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        return stacked
+    n = leaves[0].shape[0]
+    _validate_players(n, mesh, axis_name)
+
+    def body(tree):
+        def mean(xl):
+            if wire is None:
+                allv = jax.lax.all_gather(xl, axis_name, axis=0, tiled=True)
+                return jnp.mean(allv, axis=0, dtype=jnp.float32)
+            bits = jax.lax.all_gather(wire.encode(xl), axis_name, axis=0,
+                                      tiled=True)
+            vals = wire.decode(bits, jnp.float32)
+            return jnp.mean(vals, axis=0).astype(jnp.float32)
+
+        return jax.tree.map(mean, tree)
+
+    if inner_specs is None:
+        in_specs = jax.tree.map(lambda _: P(axis_name), stacked)
+        out_specs = jax.tree.map(lambda _: P(), stacked)
+    else:
+        in_specs = jax.tree.map(lambda s: P(axis_name, *s), inner_specs)
+        out_specs = jax.tree.map(lambda s: P(*s), inner_specs)
+    return _shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                      out_specs=out_specs, check_rep=False)(stacked)
+
+
+def sharded_joint_wire(x: Array, *, mesh: Mesh, sync,
+                       axis_name: str = PLAYER_AXIS) -> Array:
+    """The engine's star broadcast: gather every player's block over the wire.
+
+    ``x`` is the joint action ``(n, d)``. Each player's block crosses the
+    player axis once at the strategy's wire dtype; the result is the joint
+    snapshot as every player *receives* it (quantization round-trip applied,
+    replicated). Callers restore own-row exactness on top — a player never
+    quantizes its own live block (``QuantizedSync.view`` semantics).
+    """
+    _reject_mask(sync, "sharded_joint_wire")
+    wire = wire_spec(sync)
+    _validate_players(x.shape[0], mesh, axis_name)
+
+    def body(xl):
+        if wire is None:
+            return jax.lax.all_gather(xl, axis_name, axis=0, tiled=True)
+        bits = jax.lax.all_gather(wire.encode(xl), axis_name, axis=0,
+                                  tiled=True)
+        return wire.decode(bits, x.dtype)
+
+    return _shard_map(body, mesh=mesh, in_specs=(P(axis_name),),
+                      out_specs=P(), check_rep=False)(x)
+
+
+# =========================================================================
+# Gossip: Metropolis mixing over mesh neighbors
+# =========================================================================
+def circulant_offsets(adjacency: np.ndarray) -> tuple[int, ...] | None:
+    """Nonzero offsets of a circulant adjacency, or None if not circulant.
+
+    ``A`` is circulant when ``A[i, j]`` depends only on ``(j - i) mod n`` —
+    the ring (offsets ±1) and any rotation-invariant graph. Circulant graphs
+    lower each offset to one ``collective_permute`` over the mesh, so a
+    player receives exactly ``deg`` neighbor messages per sweep.
+    """
+    A = np.asarray(adjacency, dtype=bool)
+    n = A.shape[0]
+    if n == 0:
+        return ()
+    base = A[0]
+    for i in range(1, n):
+        if not np.array_equal(A[i], np.roll(base, i)):
+            return None
+    return tuple(int(o) for o in np.flatnonzero(base))
+
+
+def sharded_mix_sweep(V: Array, link_w: Array, self_w: Array, *, mesh: Mesh,
+                      sync, axis_name: str = PLAYER_AXIS,
+                      offsets: tuple[int, ...] | None = None) -> Array:
+    """One Metropolis sweep ``V_i <- sum_j W~_ij wire(V_j) +
+    self_w_i V_i`` with the relay crossing the mesh at the wire dtype.
+
+    ``V`` is the stacked per-player views ``(n, n, d)``; ``link_w`` the
+    (possibly participation-masked) off-diagonal mixing weights; ``self_w``
+    the renormalized diagonal. Diagonal anchoring stays with the caller (the
+    engine pins own blocks before and after every sweep, same as the host
+    path).
+
+    With ``offsets`` (a static circulant decomposition from
+    :func:`circulant_offsets`, one player per device) each offset is one
+    ``collective_permute`` of the encoded view — ``deg`` messages per player
+    per sweep, the quantity :func:`repro.core.topology.gossip_round_bytes`
+    bills. Otherwise every device all-gathers the encoded views and applies
+    its mixing rows locally (full relay; same wire dtype guarantee).
+    """
+    wire = wire_spec(sync)
+    n = V.shape[0]
+    _validate_players(n, mesh, axis_name)
+    per_dev = n // _axis_size(mesh, axis_name)
+    carrier = V.dtype
+
+    def encode(x):
+        if wire is None:
+            return x
+        return wire.encode(x)
+
+    def decode(bits):
+        if wire is None:
+            return bits
+        return wire.decode(bits, carrier)
+
+    if offsets is not None and per_dev == 1 and _axis_size(
+            mesh, axis_name) == n:
+        # Receiver i's in-neighbor at offset o is player (i + o) mod n
+        # (adjacency row A[i, i+o]), so source s ships its view to
+        # destination (s - o) mod n. Written direction-correct, this also
+        # handles directed circulants, not just the symmetric graphs the
+        # Metropolis topologies produce.
+        perms = {o: [(s, (s - o) % n) for s in range(n)] for o in offsets}
+
+        def body(V_l, lw_l, sw_l):
+            # V_l: (1, n, d); lw_l: (1, n); sw_l: (1,)
+            me = jax.lax.axis_index(axis_name)
+            acc = sw_l[:, None, None] * V_l
+            payload = encode(V_l)
+            for o in offsets:
+                recv = decode(jax.lax.ppermute(payload, axis_name, perms[o]))
+                src = (me + o) % n    # who this device received from
+                w = jax.lax.dynamic_index_in_dim(lw_l[0], src, keepdims=False)
+                acc = acc + w * recv
+            return acc
+
+        return _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+            out_specs=P(axis_name), check_rep=False,
+        )(V, link_w, self_w)
+
+    def body(V_l, lw_l, sw_l):
+        # V_l: (k, n, d); lw_l: (k, n); sw_l: (k,)
+        allv = decode(jax.lax.all_gather(encode(V_l), axis_name, axis=0,
+                                         tiled=True))
+        mixed = jnp.einsum("kj,jnd->knd", lw_l.astype(carrier), allv)
+        return mixed + sw_l[:, None, None] * V_l
+
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(axis_name), check_rep=False,
+    )(V, link_w, self_w)
+
+
+# =========================================================================
+# HLO-level wire verification
+# =========================================================================
+_COLLECTIVE_OPERAND_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(\s*(\w+)\[([0-9,]*)\]"
+)
+
+#: dtypes whose presence as a collective operand proves a <= 2-byte wire.
+COMPRESSED_WIRE_DTYPES = frozenset(
+    {"bf16", "f16", "u16", "s16", "u8", "s8", "pred"})
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WireOp:
+    op: str            # HLO collective op name
+    operand_dtype: str  # first operand's element type, as spelled in HLO
+    operand_bytes: int  # first operand's buffer size (per participant)
+
+
+def wire_dtype_report(hlo_text: str) -> list[WireOp]:
+    """Every collective in optimized HLO text with its operand dtype.
+
+    This is the assertion surface for the explicit-wire claim: the dry-run
+    HLO of a quantized sharded sync must contain a cross-player collective
+    whose *operand* is a 2-byte type, and the exact-sync lowering must not.
+    Reads the operand (what goes on the wire), not the result — an all-gather
+    result is just the concatenation of operands, but an all-reduce result
+    hides the accumulator dtype the wire actually used.
+    """
+    ops = []
+    for m in _COLLECTIVE_OPERAND_RE.finditer(hlo_text):
+        op, dtype, dims = m.group(1), m.group(2), m.group(3)
+        count = 1
+        if dims:
+            for d in dims.split(","):
+                count *= int(d)
+        ops.append(WireOp(op=op, operand_dtype=dtype,
+                          operand_bytes=count * _DTYPE_BYTES.get(dtype, 0)))
+    return ops
+
+
+def compressed_wire_ops(hlo_text: str) -> list[WireOp]:
+    """The collectives whose operand proves a compressed (< 4-byte) wire."""
+    return [o for o in wire_dtype_report(hlo_text)
+            if o.operand_dtype in COMPRESSED_WIRE_DTYPES]
+
+
+def assert_wire_dtype(hlo_text: str, *, compressed: bool) -> list[WireOp]:
+    """Raise unless the HLO's collectives match the claimed wire.
+
+    ``compressed=True`` demands at least one collective with a <= 2-byte
+    operand; ``compressed=False`` demands that *no* collective carries one
+    (the f32 path must not accidentally quantize). Returns the report for
+    logging. Used by tests and by ``benchmarks.bench_collective``.
+    """
+    report = wire_dtype_report(hlo_text)
+    small = [o for o in report if o.operand_dtype in COMPRESSED_WIRE_DTYPES]
+    if compressed and not small:
+        raise AssertionError(
+            f"expected a compressed-wire collective in the HLO, found only: "
+            f"{report or 'no collectives at all'}"
+        )
+    if not compressed and small:
+        raise AssertionError(
+            f"exact-sync lowering unexpectedly moved compressed buffers: "
+            f"{small}"
+        )
+    return report

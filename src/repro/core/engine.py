@@ -655,12 +655,14 @@ class DropoutSync(_RandomizedSync):
 # =========================================================================
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
-                          "gossip_steps", "policy", "ss_ctx"))
+                          "gossip_steps", "policy", "ss_ctx", "mesh",
+                          "mesh_axis"))
 def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                  update, sync: SyncStrategy, topology: Topology, tau: int,
                  stochastic: bool, gossip_steps: int = 1,
                  policy: StepsizePolicy = Theorem34Policy(),
-                 ss_ctx: RoundContext | None = None):
+                 ss_ctx: RoundContext | None = None,
+                 mesh=None, mesh_axis: str = "players"):
     """One compiled program: rounds-scan over (local phase -> synchronize).
 
     RNG chain (bit-compatible with the legacy loops): per round
@@ -675,10 +677,19 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
     the LITERAL policy-free program (per-player gammas only enter the vmap
     when a policy emits an ``(n,)`` row — resolved at trace time).
 
+    A ``mesh`` (with the player dimension on ``mesh_axis``) lowers the
+    synchronization exchange through :mod:`repro.core.collective` so the
+    wire dtype provably survives to the compiled collective (star: the
+    joint-snapshot gather; gossip: every Metropolis relay). ``mesh=None``
+    branches at trace time and compiles the identical legacy program — the
+    bit-for-bit pin discipline.
+
     Returns ``(x_final, xs, residuals, participants, links)`` where ``links``
     is the per-round wire-message count (server messages under star, directed
     active edges under gossip) feeding the edge-aware byte accounting.
     """
+    from repro.core import collective
+
     n = x0.shape[0]
     if ss_ctx is None:
         ss_ctx = RoundContext(tau=tau)
@@ -730,8 +741,19 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
             player_keys = jax.random.split(sub, n)
             s, ctx = sync.pre_round(s)
 
+            if mesh is not None:
+                # Explicit wire: every block crosses the player axis once at
+                # the strategy's wire dtype (bit-pattern collective); each
+                # player restores its own row exact on top — the
+                # QuantizedSync.view semantics, now HLO-verifiable.
+                x_wire = collective.sharded_joint_wire(
+                    x_sync, mesh=mesh, sync=sync, axis_name=mesh_axis)
+
             def local(i, pkey, g_i):
-                x_ref = sync.view(i, x_sync, ctx)
+                if mesh is None:
+                    x_ref = sync.view(i, x_sync, ctx)
+                else:
+                    x_ref = x_wire.at[i].set(x_sync[i])
                 return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
 
             x_prop = vmap_players(local, player_keys, gamma)
@@ -760,6 +782,11 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
         A_stack = jnp.asarray(topology.adjacency_stack(n), dtype=bool)
         T = W_stack.shape[0]
         diag = jnp.arange(n)
+        # Static circulant decomposition for the mesh-lowered relay: one
+        # collective_permute per neighbor offset (ring/rotation-invariant
+        # graphs, single static member); otherwise the all-gather relay.
+        mesh_offsets = (collective.circulant_offsets(topology.adjacency(n))
+                        if mesh is not None and T == 1 else None)
 
         def mix_views(V_in, x_anchor, link_w, self_w):
             """``gossip_steps`` anchored consensus sweeps over the views.
@@ -769,9 +796,14 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
             variable."""
             V_m = V_in.at[diag, diag].set(x_anchor)
             for _ in range(gossip_steps):
-                wire = sync.compress(V_m).astype(V_m.dtype)
-                V_m = (jnp.einsum("ij,jkd->ikd", link_w, wire)
-                       + self_w[:, None, None] * V_m)
+                if mesh is None:
+                    wire = sync.compress(V_m).astype(V_m.dtype)
+                    V_m = (jnp.einsum("ij,jkd->ikd", link_w, wire)
+                           + self_w[:, None, None] * V_m)
+                else:
+                    V_m = collective.sharded_mix_sweep(
+                        V_m, link_w, self_w, mesh=mesh, sync=sync,
+                        axis_name=mesh_axis, offsets=mesh_offsets)
                 V_m = V_m.at[diag, diag].set(x_anchor)
             return V_m
 
@@ -874,6 +906,17 @@ class PearlEngine:
     bit-for-bit; graph topologies run the server-free neighbor-averaging
     path and compose with any (compression x participation) strategy. Joint
     baselines read fresh iterates mid-round and therefore require the star.
+
+    A ``mesh`` (1-D over ``mesh_axis``, see
+    :func:`repro.core.collective.player_mesh`) lowers every synchronization
+    exchange to explicit shard_map collectives whose operand dtype IS the
+    sync strategy's wire dtype — the compressed wire provably survives
+    compilation instead of being billed on faith. Full-participation
+    strategies only: a participation mask is host-loop semantics (who moved
+    nothing must be billed nothing), so ``mesh`` x mask strategies are
+    rejected rather than compiling a full exchange the accounting would
+    contradict. ``mesh=None`` (default) compiles the identical legacy
+    program.
     """
 
     update: PlayerUpdate | JointUpdate = SgdUpdate()
@@ -881,6 +924,8 @@ class PearlEngine:
     topology: Topology = Star()
     gossip_steps: int = 1   # mixing sweeps per round on graph topologies
     policy: StepsizePolicy | str | None = None   # None = Theorem34Policy()
+    mesh: Any = None        # jax.sharding.Mesh with the player axis, or None
+    mesh_axis: str = "players"
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
@@ -914,6 +959,24 @@ class PearlEngine:
             staleness_remedy="use AsyncPearlEngine",
             topology_name=type(self.topology).__name__,
         )
+        if self.mesh is not None:
+            if isinstance(self.update, JointUpdate):
+                raise ValueError(
+                    f"{type(self.update).__name__} owns the whole "
+                    f"within-round computation on the replicated joint "
+                    f"action — there is no per-player exchange for the mesh "
+                    f"collective layer to lower; run joint baselines "
+                    f"without a mesh"
+                )
+            if self.sync.uses_mask:
+                raise ValueError(
+                    f"mesh lowering covers full-participation "
+                    f"synchronization; {type(self.sync).__name__} draws a "
+                    f"per-round participation mask, and compiling a full "
+                    f"wire exchange the mask-aware byte accounting "
+                    f"contradicts would make the billing dishonest — use "
+                    f"the host path (mesh=None) for masked regimes"
+                )
         if isinstance(self.update, DecentralizedExtragradientUpdate):
             if self.topology.is_server:
                 raise ValueError(
@@ -993,6 +1056,7 @@ class PearlEngine:
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
             policy=policy, ss_ctx=self._context_for(policy, game, tau),
+            mesh=self.mesh, mesh_axis=self.mesh_axis,
         )
         res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
 
@@ -1041,6 +1105,7 @@ class PearlEngine:
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
             policy=policy, ss_ctx=self._context_for(policy, game, tau),
+            mesh=self.mesh, mesh_axis=self.mesh_axis,
         )
         return xs
 

@@ -160,8 +160,16 @@ def build_decode_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
 def build_pearl_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
                         window: int = 0, tau: int = 8, n_players: int = 2,
                         prox_lambda: float = 1e-4, unroll: bool = False,
-                        sync_dtype=None):
-    """One PEARL round: players on the pod axis, tau local steps, one sync."""
+                        sync_dtype=None, sharded_sync: bool = False):
+    """One PEARL round: players on the pod axis, tau local steps, one sync.
+
+    ``sharded_sync`` lowers the synchronization through the explicit
+    shard_map collective over the mesh's ``pod`` axis
+    (:mod:`repro.core.collective`) instead of leaving the cross-pod mean to
+    GSPMD — with a ``sync_dtype`` the compiled pod-axis collective's operand
+    is the 2-byte wire representation (the claim ``launch/perf.py`` measures
+    on the dry-run HLO). The default keeps the legacy GSPMD lowering.
+    """
     from repro.train.pearl_trainer import make_pearl_round, tree_mean
 
     msize = model_axis_size(mesh)
@@ -185,9 +193,20 @@ def build_pearl_lowered(cfg: ModelConfig, shape: InputShape, mesh, *,
         (n_players, tau, b_local, shape.seq_len), jnp.int32)}
     bspec = {"tokens": P("pod", None, "data", None)}
 
+    mesh_kwargs = {}
+    if sharded_sync:
+        if "pod" not in mesh.axis_names:
+            raise ValueError(
+                f"sharded_sync needs the multi-pod mesh (players live on the "
+                f"pod axis), got axes {mesh.axis_names}"
+            )
+        # the stacked player dim is unsharded over data/model, so the
+        # collective's inner specs are the per-player xbar specs
+        mesh_kwargs = dict(mesh=mesh, mesh_axis="pod",
+                           mesh_inner_specs=xspecs)
     rnd = make_pearl_round(cfg, opt, tau=tau, prox_lambda=prox_lambda,
                            window=window, unroll=unroll,
-                           sync_dtype=sync_dtype)
+                           sync_dtype=sync_dtype, **mesh_kwargs)
     jitted = jax.jit(
         rnd,
         in_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs),

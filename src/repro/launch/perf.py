@@ -165,27 +165,44 @@ def run_memory_variant(arch: str, shape_name: str, *, label: str,
 
 
 def run_pearl_variant(arch: str, shape_name: str, *, label: str,
-                      hypothesis: str, tau: int, sync_dtype=None) -> dict:
+                      hypothesis: str, tau: int, sync_dtype=None,
+                      sharded_sync: bool = False) -> dict:
     """PEARL pod-collective accounting: lower a round, parse pod-axis bytes.
 
     Costs inside the tau-step local scan are per-HLO-visit; the pod-axis
     collective (the sync) sits OUTSIDE the scan, so its bytes are exact. We
     report pod-collective bytes PER LOCAL STEP — the metric PEARL divides by
     tau (paper Theorem 3.4's communication saving, measured on compiled HLO).
+
+    ``sharded_sync`` routes the sync through the explicit shard_map
+    collective layer (repro.core.collective); the record then also carries
+    the POD-AXIS collectives' operand dtypes, the direct evidence that a
+    ``sync_dtype`` wire survived compilation (``wire_dtypes`` / a
+    ``compressed_wire`` flag). Only pod-spanning lines are inspected: a
+    model's within-pod data/model collectives may legitimately carry bf16
+    activations, and counting them would fake the cross-pod claim.
     """
     from repro.configs import get_config, get_shape
+    from repro.core.collective import compressed_wire_ops, wire_dtype_report
     from repro.launch.builders import build_pearl_lowered
     from repro.launch.mesh import make_production_mesh
-    from repro.roofline.analysis import ICI_BW, parse_collectives
+    from repro.roofline.analysis import (
+        ICI_BW,
+        parse_collectives,
+        pod_collective_lines,
+    )
 
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=True)
     t0 = time.time()
     lowered, _ = build_pearl_lowered(cfg, shape, mesh, window=0, tau=tau,
-                                     sync_dtype=sync_dtype)
+                                     sync_dtype=sync_dtype,
+                                     sharded_sync=sharded_sync)
     compiled = lowered.compile()
-    coll = parse_collectives(compiled.as_text(), chips_per_pod=256)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, chips_per_pod=256)
+    pod_hlo = pod_collective_lines(hlo, chips_per_pod=256)
     return {
         "label": label, "hypothesis": hypothesis, "arch": arch,
         "shape": shape_name, "tau": tau,
@@ -193,6 +210,10 @@ def run_pearl_variant(arch: str, shape_name: str, *, label: str,
         "pod_collective_bytes_per_local_step": coll.pod_bytes / tau,
         "pod_collective_s_per_local_step": coll.pod_bytes / tau / ICI_BW,
         "collective_by_op": coll.bytes_by_op,
+        "sharded_sync": sharded_sync,
+        "wire_dtypes": sorted({o.operand_dtype for o in
+                               wire_dtype_report(pod_hlo)}),
+        "compressed_wire": bool(compressed_wire_ops(pod_hlo)),
         "wall_s": round(time.time() - t0, 1),
     }
 
@@ -312,11 +333,21 @@ def pair_pearl():
         a, s, label="pearl(tau=8)+bf16 sync",
         hypothesis="compressed broadcast (paper future work): quantizing the "
                    "sync operands should halve wire bytes again -> 16x vs "
-                   "tau=1 fp32. MEASURED: unchanged — XLA CPU reassociates "
-                   "the convert around its f32 reduce; needs explicit "
-                   "shard_map psum on TPU. Convergence side validated in "
-                   "tests (plateau unchanged).",
+                   "tau=1 fp32. MEASURED: unchanged on this GSPMD lowering — "
+                   "XLA reassociates the convert around its f32 reduce "
+                   "(and the CPU build float-normalizes bf16 collectives). "
+                   "The honest negative result that motivated the explicit "
+                   "collective layer; see the sharded variant below.",
         tau=8, sync_dtype=jnp.bfloat16))
+    out.append(run_pearl_variant(
+        a, s, label="pearl(tau=8)+bf16 shard_map",
+        hypothesis="explicit wire (repro.core.collective): ship the sync as "
+                   "its bf16 bit pattern under shard_map so neither "
+                   "reassociation nor float normalization can re-widen it — "
+                   "the pod-axis collective operand must be 2-byte in the "
+                   "compiled HLO (wire_dtypes/compressed_wire record it) "
+                   "and pod bytes/local step halve vs the f32 sync.",
+        tau=8, sync_dtype=jnp.bfloat16, sharded_sync=True))
     return out
 
 

@@ -108,6 +108,24 @@ def parse_collectives(hlo_text: str, *, chips_per_pod: int = 256) -> CollectiveS
     )
 
 
+def pod_collective_lines(hlo_text: str, *, chips_per_pod: int = 256) -> str:
+    """The HLO lines whose collective replica groups span pod boundaries.
+
+    For feeding cross-pod-only views into per-line analyses (e.g.
+    ``repro.core.collective.wire_dtype_report``): a model's data/model-axis
+    collectives may legitimately carry bf16 activations, so wire-dtype
+    claims about the PEARL sync must be made on the pod-axis lines only.
+    """
+    keep = []
+    for line in hlo_text.splitlines():
+        if not _COLLECTIVE_RE.search(line):
+            continue
+        span = _group_span(line)
+        if span and span > chips_per_pod:
+            keep.append(line)
+    return "\n".join(keep)
+
+
 def _group_span(line: str) -> int | None:
     """Max replica-group span (min..max device-id distance within a group).
 

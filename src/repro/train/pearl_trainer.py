@@ -91,7 +91,9 @@ from repro.train.train_step import make_loss_fn
 Array = jax.Array
 
 
-def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None = None):
+def tree_mean(stacked, axis: int = 0, sync_dtype=None,
+              sync: SyncStrategy | None = None, *, mesh=None,
+              mesh_axis: str = "players", mesh_inner_specs=None):
     """Across-player parameter mean — the PEARL synchronization collective.
 
     The wire representation is delegated to the engine's sync strategy:
@@ -102,6 +104,19 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None
     by tau x (32/bits). Convergence-wise this adds bounded quantization noise
     to the stale snapshot, absorbed by Theorem 3.4's sigma^2 term (validated
     in tests/test_pearl_trainer.py).
+
+    With ``mesh=None`` (the host path) the quantized wire is an *intent*,
+    not a property of the compiled program: XLA reassociates the convert
+    around its f32 reduction accumulator, so the compiled cross-pod wire
+    stays f32 (the Section Perf negative result, PR 1–4). Passing a ``mesh``
+    (player dimension on ``mesh_axis``, e.g.
+    :func:`repro.core.collective.player_mesh` or the production mesh with
+    ``mesh_axis="pod"``) dispatches to
+    :func:`repro.core.collective.sharded_tree_mean`, which lowers the sync
+    to an explicit shard_map collective over the wire *bit pattern* — the
+    compressed representation provably survives to the HLO wire (asserted
+    in tests/test_collective.py). The no-mesh branch resolves at trace time
+    and compiles the identical legacy program.
     """
     strategy = resolve_sync(sync, sync_dtype)
     if strategy.uses_mask:
@@ -110,16 +125,27 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None, sync: SyncStrategy | None
             f"{type(strategy).__name__} draws a participation mask and needs "
             f"the general stale-block merge round (make_pearl_round)"
         )
+    if mesh is not None:
+        from repro.core.collective import sharded_tree_mean
+
+        if axis != 0:
+            raise ValueError(
+                f"the mesh-lowered collective shards the leading player "
+                f"axis; got axis={axis}"
+            )
+        return sharded_tree_mean(stacked, mesh=mesh, sync=strategy,
+                                 axis_name=mesh_axis,
+                                 inner_specs=mesh_inner_specs)
     quantized = isinstance(strategy, QuantizedSync)
 
     def mean(x):
         if quantized:
-            # Quantize then reduce. NOTE (Section Perf, recorded negative
-            # result): the XLA CPU build reassociates the convert around its
-            # f32 reduction accumulator, so the compiled cross-pod wire stays
-            # f32 in the dry-run HLO; forcing bf16 on the wire needs an
-            # explicit shard_map psum over a bf16 buffer on real TPU
-            # backends. The convergence semantics (bounded quantization
+            # Quantize then reduce. NOTE: on this host path XLA reassociates
+            # the convert around its f32 reduction accumulator, so the
+            # compiled cross-pod wire stays f32 in the dry-run HLO — pass
+            # mesh= to lower the collective explicitly and keep the bf16
+            # wire (repro.core.collective; Section Perf records both
+            # measurements). The convergence semantics (bounded quantization
             # noise) hold either way and are what the tests validate.
             return jnp.mean(strategy.compress(x), axis=axis).astype(jnp.float32)
         return jnp.mean(x, axis=axis, dtype=jnp.float32)
@@ -158,6 +184,9 @@ def make_pearl_round(
     topology: Topology | None = None,
     external_refs: bool = False,
     policy: StepsizePolicy | str | None = None,
+    mesh=None,
+    mesh_axis: str = "players",
+    mesh_inner_specs=None,
 ) -> Callable:
     """Build one compiled PEARL round on the engine's federated-round template.
 
@@ -196,6 +225,19 @@ def make_pearl_round(
     needs the async host loop's counters, and the spectral policy needs a
     graph topology — both imply the general round; mismatches are rejected
     here so the compiled round can never silently ignore a policy.
+
+    A ``mesh`` (player dimension on ``mesh_axis`` — ``"pod"`` on the
+    production multi-pod mesh, where player = pod) lowers the star fast
+    path's synchronization through the explicit shard_map collective
+    (:func:`repro.core.collective.sharded_tree_mean`), so a
+    ``QuantizedSync`` wire provably stays compressed in the compiled HLO.
+    ``mesh_inner_specs`` optionally carries the per-leaf PartitionSpecs of
+    the non-player dims (the launcher's tensor-parallel layout) so the
+    collective crosses only the player axis. Only the star
+    full-participation fast path is mesh-lowered: the general stale-block
+    merge is host-loop semantics (host-drawn masks, host-refreshed stale
+    references), so ``mesh`` x {mask strategy, graph topology,
+    external_refs} is rejected rather than silently ignored.
     """
     if tau < 1:
         # a zero-length inner scan would silently return the players
@@ -251,6 +293,17 @@ def make_pearl_round(
             f"strategy, or a graph topology"
         )
 
+    if mesh is not None and (external_refs
+                             or needs_general_round(strategy, topo)):
+        raise ValueError(
+            f"mesh lowering covers the star full-participation fast path; "
+            f"the general stale-block merge (topology="
+            f"{type(topo).__name__}, sync={type(strategy).__name__}, "
+            f"external_refs={external_refs}) is host-loop semantics — run "
+            f"it with mesh=None, or use the dense engine's mesh-lowered "
+            f"gossip (PearlEngine(mesh=...)) for graph topologies"
+        )
+
     # ``external_refs`` compiles the stale-block merge round even when the
     # star fast path would suffice, and skips the in-round reference re-mix:
     # the async trainer refreshes references host-side from DELAYED
@@ -258,7 +311,9 @@ def make_pearl_round(
     if not external_refs and not needs_general_round(strategy, topo):
         round_fn = make_federated_round(
             local_step,
-            lambda stacked: tree_mean(stacked[0], sync=strategy),
+            lambda stacked: tree_mean(stacked[0], sync=strategy, mesh=mesh,
+                                      mesh_axis=mesh_axis,
+                                      mesh_inner_specs=mesh_inner_specs),
             unroll=unroll,
         )
 
@@ -469,6 +524,12 @@ class PearlTrainer:
     (those counters), ``spectral`` requires a graph topology (and a
     caller-supplied ``coupling`` estimate — the neural consensus game has
     no closed-form constants); mismatches raise at construction.
+
+    A ``mesh=`` keyword (forwarded to :func:`make_pearl_round`) lowers the
+    star fast path's sync collective under shard_map with an explicit wire
+    dtype — see :mod:`repro.core.collective`. It composes with
+    ``sync_dtype``/``QuantizedSync`` but not with masks, graphs, or the
+    async loop (those are host-loop semantics; construction raises).
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,

@@ -1,0 +1,380 @@
+"""Sharded-collective tests: the explicit wire, verified at the HLO level.
+
+The multi-device cases need a fake mesh — the CI ``multi-device`` job (and
+``scripts/ci.sh``) runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on a single device
+they skip. The HLO-text parsing tests run everywhere.
+
+What is pinned here, per the acceptance criteria:
+
+- the dry-run HLO of the sharded *quantized* sync contains a cross-player
+  collective with a 2-byte operand (the bf16 payload shipped as u16 bits),
+  while the exact-sync lowering moves only f32 and the legacy no-mesh
+  lowering contains no collectives at all;
+- the mesh-lowered star collective matches the host ``tree_mean`` EXACTLY
+  in f32 (same gathered buffer, same reduction order on every device) and
+  within bounded quantization noise in bf16;
+- engine trajectories under mesh lowering track the host path (star and
+  ring gossip, f32 and bf16);
+- every invalid composition (masks, joint updates, non-dividing player
+  counts, general trainer rounds) is rejected loudly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collective
+from repro.core.engine import (
+    ExactSync,
+    JointExtragradientUpdate,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+)
+from repro.core.games import make_quadratic_game
+from repro.core import stepsize
+from repro.core.topology import ErdosRenyi, Ring
+from repro.train.pearl_trainer import tree_mean
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device (fake) mesh: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+N = 6   # players; divisible meshes exist for 2, 3, 6 devices
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if jax.device_count() < 2:
+        pytest.skip("single device")
+    return collective.player_mesh(N)
+
+
+@pytest.fixture(scope="module")
+def game_setup():
+    game = make_quadratic_game(n=N, d=10, M=40, L_B=1.0, batch_size=1,
+                               seed=0)
+    gamma = stepsize.gamma_constant(game.constants(), 4)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((N, 10)), jnp.float32)
+    return game, gamma, x0
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((N, 8, 3)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((N, 5)), jnp.float32),
+    }
+
+
+# =========================================================================
+# HLO parsing (single-device safe)
+# =========================================================================
+class TestWireReport:
+    HLO = """
+  %all-gather.1 = u16[8,16]{1,0} all-gather(u16[1,16]{1,0} %fusion.1)
+  %all-reduce.2 = f32[1,16]{1,0} all-reduce(f32[1,16]{1,0} %param.2)
+  %collective-permute.1 = bf16[4]{0} collective-permute(bf16[4]{0} %p)
+"""
+
+    def test_operand_dtypes_and_bytes(self):
+        ops = collective.wire_dtype_report(self.HLO)
+        assert [(o.op, o.operand_dtype) for o in ops] == [
+            ("all-gather", "u16"),
+            ("all-reduce", "f32"),
+            ("collective-permute", "bf16"),
+        ]
+        assert ops[0].operand_bytes == 16 * 2
+        assert ops[1].operand_bytes == 16 * 4
+
+    def test_compressed_filter_and_asserts(self):
+        small = collective.compressed_wire_ops(self.HLO)
+        assert {o.op for o in small} == {"all-gather", "collective-permute"}
+        collective.assert_wire_dtype(self.HLO, compressed=True)
+        with pytest.raises(AssertionError, match="compressed"):
+            collective.assert_wire_dtype(self.HLO, compressed=False)
+        f32_only = "\n".join(l for l in self.HLO.splitlines() if "f32" in l)
+        collective.assert_wire_dtype(f32_only, compressed=False)
+        with pytest.raises(AssertionError, match="expected"):
+            collective.assert_wire_dtype(f32_only, compressed=True)
+
+    def test_legacy_host_tree_mean_has_no_collectives(self):
+        """The no-mesh path must compile collective-free: the pin that
+        mesh=None left the legacy program untouched."""
+        t = _tree()
+        for kwargs in ({}, {"sync_dtype": jnp.bfloat16}):
+            hlo = jax.jit(
+                lambda x, kw=kwargs: tree_mean(x, **kw)
+            ).lower(t).compile().as_text()
+            assert collective.wire_dtype_report(hlo) == []
+
+
+# =========================================================================
+# Mesh construction
+# =========================================================================
+class TestPlayerMesh:
+    @multi_device
+    def test_sizes_to_largest_divisor(self):
+        m = collective.player_mesh(N)
+        assert N % m.shape[collective.PLAYER_AXIS] == 0
+        assert m.shape[collective.PLAYER_AXIS] > 1
+
+    @multi_device
+    def test_prime_player_count_beyond_devices_raises(self):
+        prime = 1009   # no divisor >= 2 fits any plausible fake mesh
+        with pytest.raises(ValueError, match="XLA_FLAGS"):
+            collective.player_mesh(prime)
+
+    def test_rejects_degenerate_counts(self):
+        with pytest.raises(ValueError, match="n_players"):
+            collective.player_mesh(0)
+
+    @multi_device
+    def test_uneven_player_dim_rejected(self, mesh):
+        size = mesh.shape[collective.PLAYER_AXIS]
+        bad = jnp.zeros((size + 1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="divide"):
+            collective.sharded_tree_mean({"w": bad}, mesh=mesh)
+
+
+# =========================================================================
+# The star collective: exact f32, bounded bf16, explicit wire dtype
+# =========================================================================
+@multi_device
+class TestShardedTreeMean:
+    def test_f32_bitwise_matches_host(self, mesh):
+        t = _tree()
+        host = tree_mean(t)
+        shard = tree_mean(t, mesh=mesh)
+        for k in t:
+            np.testing.assert_array_equal(np.asarray(host[k]),
+                                          np.asarray(shard[k]))
+
+    def test_bf16_within_quantization_noise(self, mesh):
+        t = _tree()
+        host = tree_mean(t)  # exact mean, the ground truth
+        shard = tree_mean(t, sync_dtype=jnp.bfloat16, mesh=mesh)
+        host_q = tree_mean(t, sync_dtype=jnp.bfloat16)
+        eps = 2.0 ** -8   # bf16 relative step
+        for k in t:
+            scale = float(np.abs(np.asarray(t[k])).max())
+            # vs the exact mean: bounded by the quantization step
+            assert float(np.abs(np.asarray(host[k])
+                                - np.asarray(shard[k])).max()) <= eps * scale
+            # vs the host quantized mean: only accumulation-order noise left
+            assert float(np.abs(np.asarray(host_q[k])
+                                - np.asarray(shard[k])).max()) <= eps * scale
+
+    def test_quantized_wire_is_two_byte_in_hlo(self, mesh):
+        t = _tree()
+        hlo = jax.jit(
+            lambda x: tree_mean(x, sync_dtype=jnp.bfloat16, mesh=mesh)
+        ).lower(t).compile().as_text()
+        report = collective.assert_wire_dtype(hlo, compressed=True)
+        assert any(o.operand_dtype in ("u16", "bf16") for o in report)
+
+    def test_exact_wire_stays_f32_in_hlo(self, mesh):
+        t = _tree()
+        hlo = jax.jit(
+            lambda x: tree_mean(x, mesh=mesh)
+        ).lower(t).compile().as_text()
+        report = collective.assert_wire_dtype(hlo, compressed=False)
+        assert report, "the mesh lowering must move an explicit collective"
+        assert {o.operand_dtype for o in report} == {"f32"}
+
+    def test_sync_changes_only_the_wire_dtype(self, mesh):
+        """The satellite pin: QuantizedSync x shard_map changes the HLO
+        collective dtype; the f32 path does not."""
+        t = _tree()
+
+        def dtypes(**kw):
+            hlo = jax.jit(
+                lambda x: tree_mean(x, mesh=mesh, **kw)
+            ).lower(t).compile().as_text()
+            return {o.operand_dtype
+                    for o in collective.wire_dtype_report(hlo)}
+
+        assert dtypes() == {"f32"}
+        assert dtypes(sync_dtype=jnp.bfloat16) == {"u16"}
+
+    def test_mask_strategies_rejected(self, mesh):
+        with pytest.raises(ValueError, match="full-participation"):
+            collective.sharded_tree_mean(
+                _tree(), mesh=mesh, sync=PartialParticipation(fraction=0.5))
+
+    def test_non_leading_axis_rejected(self, mesh):
+        with pytest.raises(ValueError, match="axis"):
+            tree_mean(_tree(), axis=1, mesh=mesh)
+
+
+# =========================================================================
+# Engine lowering: star and gossip, trajectories and wire
+# =========================================================================
+@multi_device
+class TestEngineMesh:
+    def test_star_f32_tracks_host(self, game_setup, mesh):
+        game, gamma, x0 = game_setup
+        host = PearlEngine().run(game, x0, tau=4, rounds=60, gamma=gamma,
+                                 stochastic=False)
+        shard = PearlEngine(mesh=mesh).run(game, x0, tau=4, rounds=60,
+                                           gamma=gamma, stochastic=False)
+        # same values through the wire; only fusion-level (ULP) drift allowed
+        np.testing.assert_allclose(np.asarray(shard.x_final),
+                                   np.asarray(host.x_final),
+                                   rtol=0, atol=1e-6)
+        assert shard.rel_errors[-1] == pytest.approx(host.rel_errors[-1],
+                                                     rel=1e-3, abs=1e-9)
+
+    def test_star_bf16_bounded_quantization_noise(self, game_setup, mesh):
+        game, gamma, x0 = game_setup
+        sync = QuantizedSync(jnp.bfloat16)
+        host = PearlEngine(sync=sync).run(game, x0, tau=4, rounds=60,
+                                          gamma=gamma, stochastic=False)
+        shard = PearlEngine(sync=sync, mesh=mesh).run(
+            game, x0, tau=4, rounds=60, gamma=gamma, stochastic=False)
+        np.testing.assert_allclose(np.asarray(shard.x_final),
+                                   np.asarray(host.x_final),
+                                   rtol=0, atol=5e-3)
+        # both reach the same equilibrium neighborhood
+        assert shard.rel_errors[-1] < 1e-4
+
+    def test_ring_gossip_tracks_host(self, game_setup, mesh):
+        game, gamma, x0 = game_setup
+        for sync, atol in ((ExactSync(), 1e-6),
+                           (QuantizedSync(jnp.bfloat16), 5e-3)):
+            host = PearlEngine(topology=Ring(), sync=sync).run(
+                game, x0, tau=4, rounds=60, gamma=gamma, stochastic=False)
+            shard = PearlEngine(topology=Ring(), sync=sync, mesh=mesh).run(
+                game, x0, tau=4, rounds=60, gamma=gamma, stochastic=False)
+            np.testing.assert_allclose(np.asarray(shard.x_final),
+                                       np.asarray(host.x_final),
+                                       rtol=0, atol=atol)
+
+    def test_byte_accounting_identical_across_lowerings(self, game_setup,
+                                                        mesh):
+        """The mesh changes the program, never the bill: per-round bytes
+        must match the host run exactly."""
+        game, gamma, x0 = game_setup
+        sync = QuantizedSync(jnp.bfloat16)
+        host = PearlEngine(sync=sync).run(game, x0, tau=4, rounds=10,
+                                          gamma=gamma, stochastic=False)
+        shard = PearlEngine(sync=sync, mesh=mesh).run(
+            game, x0, tau=4, rounds=10, gamma=gamma, stochastic=False)
+        np.testing.assert_array_equal(host.bytes_up, shard.bytes_up)
+        np.testing.assert_array_equal(host.bytes_down, shard.bytes_down)
+
+    def test_ring_lowers_to_collective_permute(self, mesh, game_setup):
+        """Circulant graphs relay per neighbor edge, and the bf16 relay
+        crosses as 2-byte bits."""
+        if mesh.shape[collective.PLAYER_AXIS] != N:
+            pytest.skip("permute lowering needs one player per device")
+        V = jnp.zeros((N, N, 4), jnp.float32)
+        ring = Ring()
+        W = jnp.asarray(ring.mixing_matrix(N), jnp.float32)
+        link_w = jnp.where(jnp.asarray(ring.adjacency(N)), W, 0.0)
+        self_w = 1.0 - jnp.sum(link_w, axis=1)
+        offsets = collective.circulant_offsets(ring.adjacency(N))
+        assert offsets == (1, N - 1)
+        hlo = jax.jit(
+            lambda v, lw, sw: collective.sharded_mix_sweep(
+                v, lw, sw, mesh=mesh, sync=QuantizedSync(jnp.bfloat16),
+                offsets=offsets)
+        ).lower(V, link_w, self_w).compile().as_text()
+        report = collective.assert_wire_dtype(hlo, compressed=True)
+        assert any(o.op == "collective-permute"
+                   and o.operand_dtype in ("u16", "bf16") for o in report)
+
+    def test_directed_circulant_permute_matches_dense_mix(self, mesh):
+        """The permute lowering is direction-correct: receiver i takes
+        V_{i+o} at weight link_w[i, i+o], so even a DIRECTED circulant
+        (offsets not closed under negation) matches the dense einsum."""
+        if mesh.shape[collective.PLAYER_AXIS] != N:
+            pytest.skip("permute lowering needs one player per device")
+        rng = np.random.default_rng(0)
+        V = jnp.asarray(rng.standard_normal((N, N, 4)), jnp.float32)
+        A = np.zeros((N, N), dtype=bool)
+        A[np.arange(N), (np.arange(N) + 1) % N] = True   # directed cycle
+        offsets = collective.circulant_offsets(A)
+        assert offsets == (1,)
+        link_w = jnp.asarray(np.where(A, 0.4, 0.0), jnp.float32)
+        self_w = 1.0 - jnp.sum(link_w, axis=1)
+        out = collective.sharded_mix_sweep(
+            V, link_w, self_w, mesh=mesh, sync=ExactSync(), offsets=offsets)
+        ref = (jnp.einsum("ij,jkd->ikd", link_w, V)
+               + self_w[:, None, None] * V)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=0, atol=1e-6)
+
+    def test_erdos_renyi_falls_back_to_gather_relay(self, game_setup, mesh):
+        """Non-circulant graphs take the all-gather relay and still
+        converge to the host trajectory."""
+        game, gamma, x0 = game_setup
+        topo = ErdosRenyi(p=0.5, seed=2)
+        assert collective.circulant_offsets(topo.adjacency(N)) is None
+        host = PearlEngine(topology=topo).run(
+            game, x0, tau=4, rounds=40, gamma=gamma, stochastic=False)
+        shard = PearlEngine(topology=topo, mesh=mesh).run(
+            game, x0, tau=4, rounds=40, gamma=gamma, stochastic=False)
+        np.testing.assert_allclose(np.asarray(shard.x_final),
+                                   np.asarray(host.x_final),
+                                   rtol=0, atol=1e-6)
+
+    def test_mesh_rejects_masks_and_joint_updates(self, mesh):
+        with pytest.raises(ValueError, match="mask"):
+            PearlEngine(sync=PartialParticipation(fraction=0.5),
+                        mesh=mesh)._check_topology()
+        with pytest.raises(ValueError, match="joint"):
+            PearlEngine(update=JointExtragradientUpdate(),
+                        mesh=mesh)._check_topology()
+
+
+# =========================================================================
+# Trainer lowering
+# =========================================================================
+@multi_device
+class TestTrainerMesh:
+    @pytest.fixture(scope="class")
+    def cfg(self):
+        from repro.configs import get_config
+
+        return get_config("smollm-360m").smoke_variant()
+
+    def _stream(self, cfg, n_players):
+        from repro.data.synthetic import DataConfig, SyntheticTokenStream
+
+        return SyntheticTokenStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, batch_size=2,
+            n_players=n_players, seed=0,
+        ))
+
+    def test_star_round_matches_host_losses(self, cfg, mesh):
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        host = PearlTrainer(cfg, sgd(5e-2), n_players=N, tau=2,
+                            prox_lambda=1e-3, seed=2,
+                            sync_dtype=jnp.bfloat16)
+        h = host.run(self._stream(cfg, N), rounds=3)
+        mesht = PearlTrainer(cfg, sgd(5e-2), n_players=N, tau=2,
+                             prox_lambda=1e-3, seed=2,
+                             sync_dtype=jnp.bfloat16, mesh=mesh)
+        m = mesht.run(self._stream(cfg, N), rounds=3)
+        for a, b in zip(h, m):
+            assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-4)
+
+    def test_general_round_with_mesh_rejected(self, cfg, mesh):
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        with pytest.raises(ValueError, match="host-loop"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N, tau=2,
+                         prox_lambda=1e-3, topology=Ring(), mesh=mesh)
+        with pytest.raises(ValueError, match="host-loop"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N, tau=2,
+                         prox_lambda=1e-3, mesh=mesh,
+                         sync=PartialParticipation(fraction=0.5))
