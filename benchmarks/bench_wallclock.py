@@ -1,0 +1,291 @@
+"""Seconds-per-round for the PEARL wire matrix (BENCH_wallclock.json).
+
+Every prior artifact in this repo measures *bytes* — the paper's
+communication currency — and takes it on faith that fewer wire bytes buy
+wall-clock time. This benchmark measures the seconds: the full compiled
+engine scan (tau local steps + the sharded synchronization exchange) on
+the fake 8-device mesh, for every sync strategy x engine mode cell:
+
+- sync: exact f32 | bf16 | int8+EF | int4+EF (the sub-bf16 rows ship a
+  single u8 payload per player block — 4 scale bytes + quantized lanes);
+- engine: lockstep | async D=1 | async D=4 (uniform bounded staleness,
+  device-resident snapshot ring buffer) | overlap (double-buffered wire,
+  declared ConstantDelay(1)).
+
+Each cell reports median/p90 seconds-per-round over timed repeats (after
+a compile warmup), rounds-to-equilibrium from a convergence run, and the
+two headline products: ``bytes_to_eq`` AND ``sec_to_eq``. Two guard
+sections make the rows trustworthy rather than decorative:
+
+- ``parity``: the async mesh engine at D=0 must equal the lockstep mesh
+  engine BITWISE per sync strategy (the ring buffer adds no arithmetic);
+- ``wire``: the compiled lockstep scan's cross-device collectives must
+  carry exactly {u8} operands for int8/int4 (dry-run HLO, no timing).
+
+Seconds are machine-local (pinned via :mod:`repro.launch.env`:
+XLA fake-device flags, tcmalloc preload when available, silenced C++
+logging) — the drift checker treats byte fields as exact and seconds as
+schema-only. Skips gracefully on a single-device host.
+"""
+
+from __future__ import annotations
+
+# Pin the process environment BEFORE jax is imported anywhere (the
+# backend reads XLA_FLAGS once; LD_PRELOAD needs a re-exec). Safe and
+# idempotent: sentinel-guarded, stdlib-only import.
+if __name__ == "__main__":  # pragma: no cover - exercised by CI smoke
+    from repro.launch.env import ensure_wallclock_env
+
+    ensure_wallclock_env()
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import collective, stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    ConstantDelay,
+    UniformDelay,
+    ZeroDelay,
+)
+from repro.core.engine import (
+    ExactSync,
+    Int4Sync,
+    Int8Sync,
+    PearlEngine,
+    QuantizedSync,
+    _engine_scan,
+)
+from repro.core.games import make_quadratic_game
+
+N, DIM = 8, 256        # 8 players fill the fake CI mesh; even DIM for int4
+TAU = 4
+EQ_THRESHOLD = 1e-3    # rel error below this counts as "at equilibrium"
+
+SYNCS = {
+    "exact": ExactSync(),
+    "bf16": QuantizedSync(jnp.bfloat16),
+    "int8": Int8Sync(),
+    "int4": Int4Sync(),
+}
+
+# async rows use the delayed-adversary schedule; overlap is the declared
+# ConstantDelay(1) the engine insists on (overlap IS one round of lag)
+ENGINES = {
+    "lockstep": lambda sync, mesh: PearlEngine(sync=sync, mesh=mesh),
+    "async_d1": lambda sync, mesh: AsyncPearlEngine(
+        sync=sync, mesh=mesh, delays=UniformDelay(seed=0), max_staleness=1),
+    "async_d4": lambda sync, mesh: AsyncPearlEngine(
+        sync=sync, mesh=mesh, delays=UniformDelay(seed=0), max_staleness=4),
+    "overlap": lambda sync, mesh: AsyncPearlEngine(
+        sync=sync, mesh=mesh, delays=ConstantDelay(1), max_staleness=1,
+        overlap=True),
+}
+
+MAX_STALENESS = {"lockstep": 0, "async_d1": 1, "async_d4": 4, "overlap": 1}
+
+
+def _mesh_or_none():
+    try:
+        return collective.player_mesh(N)
+    except ValueError:
+        return None
+
+
+def _problem():
+    """Game + a step size stable for EVERY cell of the matrix.
+
+    Staleness shrinks the stable step-size region (the bounded-delay
+    penalty of Thm staleness analyses): the lockstep-safe
+    ``gamma_constant`` diverges under D = 4 on this game, so the whole
+    matrix runs at 0.4x — one shared gamma keeps rounds-to-eq
+    comparisons about the WIRE and the STALENESS, not about tuning.
+    """
+    game = make_quadratic_game(n=N, d=DIM, M=40, L_B=1.0, batch_size=1,
+                               seed=0)
+    gamma = 0.4 * stepsize.gamma_constant(game.constants(), TAU)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((N, DIM)),
+        dtype=jnp.float32,
+    )
+    return game, gamma, x0
+
+
+def _rounds_to_eq(rel_errors: np.ndarray) -> int | None:
+    """First round index at or below EQ_THRESHOLD, None if never reached."""
+    hits = np.nonzero(np.asarray(rel_errors) <= EQ_THRESHOLD)[0]
+    return int(hits[0]) if hits.size else None
+
+
+def run_matrix(*, rounds: int, timed_rounds: int, warmup: int, repeats: int):
+    """The headline sweep: seconds + bytes per cell of sync x engine."""
+    mesh = _mesh_or_none()
+    if mesh is None:
+        emit("wallclock_matrix", 0.0, "skipped: single-device (set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+        return []
+    game, gamma, x0 = _problem()
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    for sname, sync in SYNCS.items():
+        for ename, build in ENGINES.items():
+            engine = build(sync, mesh)
+            # convergence run: rounds-to-eq and the per-round byte ledger
+            conv = engine.run(game, x0, tau=TAU, rounds=rounds, gamma=gamma,
+                              key=key, stochastic=False)
+            r_eq = _rounds_to_eq(conv.rel_errors)
+            per_round = conv.bytes_up + conv.bytes_down
+            bytes_to_eq = (int(per_round[:r_eq].sum())
+                           if r_eq is not None else None)
+
+            # timed repeats on a short scan (fresh jit cache entry for the
+            # new rounds count, burned by the warmup calls)
+            for _ in range(warmup):
+                engine.run(game, x0, tau=TAU, rounds=timed_rounds,
+                           gamma=gamma, key=key, stochastic=False)
+            secs = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                engine.run(game, x0, tau=TAU, rounds=timed_rounds,
+                           gamma=gamma, key=key, stochastic=False)
+                secs.append((time.perf_counter() - t0) / timed_rounds)
+            med = float(np.median(secs))
+            p90 = float(np.percentile(secs, 90))
+
+            rows.append({
+                "sync": sname,
+                "engine": ename,
+                "max_staleness": MAX_STALENESS[ename],
+                "rounds": rounds,
+                "bytes_per_round": int(per_round[0]),
+                "rounds_to_eq": r_eq,
+                "bytes_to_eq": bytes_to_eq,
+                "rel_error_final": float(conv.rel_errors[-1]),
+                "sec_per_round_median": med,
+                "sec_per_round_p90": p90,
+                "sec_to_eq": (med * r_eq) if r_eq is not None else None,
+            })
+            emit(f"wallclock_{sname}_{ename}", med * 1e6,
+                 f"r_eq={r_eq},B/rnd={int(per_round[0])}")
+    return rows
+
+
+def run_d0_parity(*, rounds: int = 40):
+    """The ring buffer must be free: async mesh at D=0 == lockstep mesh,
+    bit for bit, for every sync strategy (including the EF residual path).
+    """
+    mesh = _mesh_or_none()
+    if mesh is None:
+        emit("wallclock_d0_parity", 0.0, "skipped: single-device")
+        return []
+    game, gamma, x0 = _problem()
+    key = jax.random.PRNGKey(0)
+
+    rows = []
+    t0 = time.perf_counter()
+    for sname, sync in SYNCS.items():
+        lock = PearlEngine(sync=sync, mesh=mesh).run(
+            game, x0, tau=TAU, rounds=rounds, gamma=gamma, key=key,
+            stochastic=False)
+        d0 = AsyncPearlEngine(sync=sync, mesh=mesh, delays=ZeroDelay(),
+                              max_staleness=0).run(
+            game, x0, tau=TAU, rounds=rounds, gamma=gamma, key=key,
+            stochastic=False)
+        bitwise = bool(np.array_equal(np.asarray(lock.x_final),
+                                      np.asarray(d0.x_final)))
+        assert bitwise, f"async D=0 drifted from lockstep under {sname}"
+        rows.append({"sync": sname, "rounds": rounds,
+                     "d0_bitwise_equal": bitwise})
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("wallclock_d0_parity", us,
+         ";".join(f"{r['sync']}:bitwise" for r in rows))
+    return rows
+
+
+def run_wire_assertions(*, rounds: int = 4):
+    """Dry-run HLO of the compiled lockstep scan: the cross-device
+    collectives must carry u8 operands (and nothing wider) for int8/int4.
+    """
+    mesh = _mesh_or_none()
+    if mesh is None:
+        emit("wallclock_wire", 0.0, "skipped: single-device")
+        return []
+    game, gamma, x0 = _problem()
+    gammas = jnp.full((rounds,), jnp.float32(gamma))
+    key = jax.random.PRNGKey(0)
+
+    expected = {"exact": None, "bf16": {"u16"},
+                "int8": {"u8"}, "int4": {"u8"}}
+    rows = []
+    t0 = time.perf_counter()
+    for sname, sync in SYNCS.items():
+        engine = PearlEngine(sync=sync, mesh=mesh)
+        hlo = _engine_scan.lower(
+            game, x0, gammas, key, update=engine.update, sync=sync,
+            topology=engine.topology, tau=TAU, stochastic=False,
+            mesh=mesh, mesh_axis=engine.mesh_axis,
+        ).compile().as_text()
+        collective.assert_wire_dtype(hlo, compressed=(sname != "exact"))
+        compressed = sorted(
+            {o.operand_dtype for o in collective.compressed_wire_ops(hlo)})
+        want = expected[sname]
+        if want is not None:
+            assert set(compressed) == want, (sname, compressed)
+        rows.append({
+            "sync": sname,
+            "wire_dtypes": sorted({o.operand_dtype
+                                   for o in collective.wire_dtype_report(hlo)}),
+            "compressed_wire_dtypes": compressed,
+        })
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("wallclock_wire", us,
+         ";".join(f"{r['sync']}:{'+'.join(r['compressed_wire_dtypes']) or 'none'}"
+                  for r in rows))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--rounds", type=int, default=150,
+                        help="convergence-run length (rounds-to-eq window)")
+    parser.add_argument("--timed-rounds", type=int, default=10,
+                        help="scan length of each timed repeat")
+    parser.add_argument("--warmup", type=int, default=1)
+    parser.add_argument("--repeats", type=int, default=5)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweeps as structured JSON "
+                             "(BENCH_wallclock.json convention)")
+    args = parser.parse_args(argv)
+
+    wire = run_wire_assertions()
+    parity = run_d0_parity()
+    rows = run_matrix(rounds=args.rounds, timed_rounds=args.timed_rounds,
+                      warmup=args.warmup, repeats=args.repeats)
+    if args.json:
+        from repro.launch.env import find_tcmalloc
+        payload = {
+            "benchmark": "bench_wallclock",
+            "device_count": jax.device_count(),
+            "eq_threshold": EQ_THRESHOLD,
+            "timing": {"warmup": args.warmup, "repeats": args.repeats,
+                       "timed_rounds": args.timed_rounds,
+                       "tcmalloc": find_tcmalloc() is not None},
+            "rows": rows,
+            "parity": parity,
+            "wire": wire,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

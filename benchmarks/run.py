@@ -14,6 +14,20 @@ FAST = os.environ.get("BENCH_FAST", "1") == "1"
 
 
 def main() -> None:
+    import sys
+
+    if "--wallclock" in sys.argv:
+        # Seconds-mode: pin the process env (re-exec once) BEFORE any jax
+        # import, then hand the remaining flags to bench_wallclock.
+        from repro.launch.env import ensure_wallclock_env
+
+        ensure_wallclock_env()
+        from benchmarks import bench_wallclock
+
+        argv = [a for a in sys.argv[1:] if a != "--wallclock"]
+        print("name,us_per_call,derived")
+        bench_wallclock.main(argv)
+        return
     from benchmarks import (
         bench_async,
         bench_collective,

@@ -50,7 +50,47 @@ SPECS = {
                  ("wire_bytes_per_round", "wire_dtypes", "compressed_wire")),
         "parity": (("topology", "sync"), ()),
     },
+    # seconds are machine-local and EXCLUDED from drift on purpose (the
+    # committed artifact's timings describe the machine that produced it);
+    # they are schema-checked instead — see _check_wallclock_row.
+    "bench_wallclock": {
+        "rows": (("sync", "engine"), ("bytes_per_round", "max_staleness")),
+        "parity": (("sync",), ("d0_bitwise_equal",)),
+        "wire": (("sync",), ("wire_dtypes", "compressed_wire_dtypes")),
+    },
 }
+
+#: seconds fields every wallclock row must carry with a positive value
+_WALLCLOCK_SECONDS = ("sec_per_round_median", "sec_per_round_p90")
+
+
+def _check_wallclock_row(prefix: str, row: dict) -> list[str]:
+    """Schema (not drift) checks on one wallclock matrix row.
+
+    Timings must exist and be positive — a zero or missing median means the
+    timed loop did not run, which no amount of machine variance explains.
+    Byte totals must be self-consistent: full-participation star rounds move
+    a constant wire, so ``bytes_to_eq`` is exactly per-round bytes times the
+    threshold-crossing round.
+    """
+    errors = []
+    for f in _WALLCLOCK_SECONDS:
+        v = row.get(f)
+        if not (isinstance(v, (int, float)) and v > 0):
+            errors.append(f"{prefix}.{f}: expected a positive number, "
+                          f"got {v!r}")
+    r_eq = row.get("rounds_to_eq")
+    if r_eq is not None:
+        v = row.get("sec_to_eq")
+        if not (isinstance(v, (int, float)) and v > 0):
+            errors.append(f"{prefix}.sec_to_eq: expected a positive number "
+                          f"(rounds_to_eq={r_eq}), got {v!r}")
+        expect = row.get("bytes_per_round", 0) * r_eq
+        if row.get("bytes_to_eq") != expect:
+            errors.append(
+                f"{prefix}.bytes_to_eq: {row.get('bytes_to_eq')!r} != "
+                f"bytes_per_round * rounds_to_eq = {expect}")
+    return errors
 
 
 def _key(row, fields):
@@ -73,6 +113,11 @@ def compare(smoke: dict, committed: dict, tol: float) -> list[str]:
         if not srows:
             errors.append(f"{name}.{section}: smoke artifact has no rows")
             continue
+        if name == "bench_wallclock" and section == "rows":
+            for origin, rows in (("smoke", srows), ("committed", crows)):
+                for key, row in rows.items():
+                    errors.extend(_check_wallclock_row(
+                        f"{name}.{section}{key}[{origin}]", row))
         for key, crow in crows.items():
             srow = srows.get(key)
             if srow is None:

@@ -18,7 +18,8 @@ python scripts/check_links.py
 # running them WITHOUT this flag would silently drop the acceptance pin)
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m pytest -x -q tests/test_collective.py tests/test_sharding.py
+  python -m pytest -x -q tests/test_collective.py tests/test_sharding.py \
+  tests/test_lowbit_sync.py tests/test_async_mesh.py
 
 # fast-mode smokes of every --json benchmark artifact path (temp dir: the
 # committed BENCH_*.json are the paper-scale sweeps, not these smokes)
@@ -53,3 +54,24 @@ assert d['parity'], 'empty parity sweep'; \
 assert all(r['compressed_wire'] for r in d['wire'] if r['sync'] == 'bf16'), \
 'bf16 wire not compressed in compiled HLO'" \
   "$SMOKE_DIR/BENCH_collective.json"
+
+# wall-clock smoke on the same fake mesh: seconds are machine-local noise
+# at CI scale, but the matrix must be non-empty, the async D=0 path must
+# stay bit-for-bit on lockstep, and the int8/int4 collectives must carry
+# u8 operands in the compiled HLO (the drift check re-pins the byte fields
+# against the committed artifact and schema-checks the seconds)
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.bench_wallclock \
+  --rounds 100 --timed-rounds 4 --warmup 1 --repeats 2 \
+  --json "$SMOKE_DIR/BENCH_wallclock.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['rows'], 'empty wall-clock matrix'; \
+assert all(r['d0_bitwise_equal'] for r in d['parity']), \
+'async D=0 drifted from lockstep'; \
+assert all(w['compressed_wire_dtypes'] == ['u8'] \
+for w in d['wire'] if w['sync'] in ('int8', 'int4')), \
+'low-bit wire not u8 in compiled HLO'" \
+  "$SMOKE_DIR/BENCH_wallclock.json"
+python scripts/check_bench_drift.py \
+  "$SMOKE_DIR/BENCH_wallclock.json" BENCH_wallclock.json

@@ -31,6 +31,7 @@ MD = os.path.join(ROOT, "EXPERIMENTS.md")
 ASYNC = os.path.join(ROOT, "BENCH_async.json")
 ENGINE = os.path.join(ROOT, "BENCH_engine.json")
 COLLECTIVE = os.path.join(ROOT, "BENCH_collective.json")
+WALLCLOCK = os.path.join(ROOT, "BENCH_wallclock.json")
 
 
 def _load(path):
@@ -147,12 +148,47 @@ def render_wire_parity(data) -> str:
     return "\n".join(lines)
 
 
+def _sec(v):
+    if v is None:
+        return "—"
+    return f"{v * 1e3:.1f} ms" if v < 1.0 else f"{v:.2f} s"
+
+
+def render_wallclock(data) -> str:
+    if data is None or not data.get("rows"):
+        return "*(BENCH_wallclock.json artifact missing — run " \
+               "`python -m benchmarks.run --wallclock --json " \
+               "BENCH_wallclock.json` on a multi-device host)*"
+    lines = [
+        "| sync | engine | D | bytes/round | rounds-to-eq | bytes-to-eq | "
+        "sec/round (med) | sec/round (p90) | sec-to-eq |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in data["rows"]:
+        lines.append(
+            f"| {r['sync']} | {r['engine']} | {r['max_staleness']} | "
+            f"{_kb(r['bytes_per_round'])} | {_rounds(r)} | "
+            f"{_kb(r['bytes_to_eq'])} | {_sec(r['sec_per_round_median'])} | "
+            f"{_sec(r['sec_per_round_p90'])} | {_sec(r['sec_to_eq'])} |")
+    timing = data.get("timing", {})
+    lines.append(
+        f"\n*Timed over {timing.get('repeats', '?')} repeats of "
+        f"{timing.get('timed_rounds', '?')} rounds each "
+        f"({data.get('device_count', '?')} devices, "
+        f"tcmalloc={'yes' if timing.get('tcmalloc') else 'no'}); "
+        f"equilibrium threshold {data.get('eq_threshold', '?')} on the "
+        f"relative error. Seconds are machine-local: the drift checker "
+        f"pins the byte columns exactly and only schema-checks timings.*")
+    return "\n".join(lines)
+
+
 SECTIONS = {
     "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
     "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
     "AUTO-BENCH-GOSSIP": lambda: render_gossip(_load(ENGINE)),
     "AUTO-BENCH-WIRE": lambda: render_wire(_load(COLLECTIVE)),
     "AUTO-BENCH-WIRE-PARITY": lambda: render_wire_parity(_load(COLLECTIVE)),
+    "AUTO-BENCH-WALLCLOCK": lambda: render_wallclock(_load(WALLCLOCK)),
 }
 
 

@@ -255,11 +255,31 @@ class StaleSync(SyncStrategy):
     def bills_full_round(self):
         return self.inner.bills_full_round
 
+    @property
+    def has_wire_state(self):
+        return self.inner.has_wire_state
+
+    @property
+    def wire_overhead_bytes_per_block(self):
+        return self.inner.wire_overhead_bytes_per_block
+
     def init_state(self):
         return self.inner.init_state()
 
     def pre_round(self, state):
         return self.inner.pre_round(state)
+
+    def init_wire_state(self, x):
+        return self.inner.init_wire_state(x)
+
+    def pre_wire(self, x, state):
+        return self.inner.pre_wire(x, state)
+
+    def post_wire(self, t, state):
+        return self.inner.post_wire(t, state)
+
+    def roundtrip(self, x):
+        return self.inner.roundtrip(x)
 
     def view(self, i, x_sync, ctx):
         return self.inner.view(i, x_sync, ctx)
@@ -282,13 +302,17 @@ class StaleSync(SyncStrategy):
 # =========================================================================
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
-                          "max_staleness", "policy", "ss_ctx"))
+                          "max_staleness", "gossip_steps", "policy", "ss_ctx",
+                          "mesh", "mesh_axis", "overlap"))
 def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                        delays: Array, key: Array, *, update,
                        sync: SyncStrategy, topology: Topology, tau: int,
                        stochastic: bool, max_staleness: int,
+                       gossip_steps: int = 1,
                        policy: StepsizePolicy = Theorem34Policy(),
-                       ss_ctx: RoundContext | None = None):
+                       ss_ctx: RoundContext | None = None,
+                       mesh=None, mesh_axis: str = "players",
+                       overlap: bool = False):
     """One compiled program: rounds-scan with a snapshot ring buffer.
 
     Mirrors the lockstep ``_engine_scan`` op-for-op — same RNG chain, same
@@ -299,15 +323,43 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
     pin). The buffer initializes to ``x0`` in every slot: before a player
     has heard anything, the freshest available snapshot is the init.
 
+    Three trace-time star cases:
+
+    - **legacy host** (``mesh=None``, stateless sync): the raw-snapshot
+      buffer with ``view`` applied at READ time — byte-identical code to
+      PR 4, preserving every existing bit-for-bit pin;
+    - **wire-buffered** (a ``mesh``, or an error-feedback sync): the buffer
+      holds the *post-wire broadcasts* (what receivers actually decoded)
+      instead of raw snapshots — device-resident carry state, so the whole
+      bounded-staleness round lowers under ``shard_map`` and with error
+      feedback the ONE transmit tensor per round has a well-defined
+      residual. At ``D = 0`` the buffer carry disappears at trace time and
+      the program is the lockstep mesh scan;
+    - **overlap** (``overlap=True``): double-buffered wire — the carry holds
+      round ``t-1``'s gathered broadcast; round ``t`` issues its gather with
+      NO data dependence on this round's local steps, so XLA is free to
+      overlap the collective with the tau-step compute. Semantically this IS
+      ``ConstantDelay(1)`` (validated by the engine), measured by
+      ``benchmarks/bench_wallclock.py``.
+
     ``policy`` sees the round's DRAWN delay row (``ss_ctx.with_delays``), so
     a delay-adaptive policy slows exactly the players whose reads are stale
     this round. The identity policy (and any policy at ``max_staleness = 0``
     that resolves to it) keeps the compiled program bit-for-bit the
     policy-free one — same trace-time collapse as the buffer read.
 
+    Gossip: ``gossip_steps`` Metropolis sweeps per round. At ``D = 0`` all
+    receivers read the same current views, so the sweeps run once globally —
+    the lockstep ``mix_views`` code verbatim, bit-for-bit for ANY sweep
+    count. At ``D > 0`` each receiver simulates the full-network sweeps
+    locally on its delayed snapshot and keeps its own row (a receiver that
+    processes late relays processes ALL of that round's relays late).
+
     Returns ``(x_final, xs, residuals, participants, links)`` with the exact
     shapes/meanings of the lockstep scan, so the byte accounting is shared.
     """
+    from repro.core import collective
+
     n = x0.shape[0]
     depth = max_staleness + 1
     if ss_ctx is None:
@@ -337,7 +389,95 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
         (x_i, _), _ = jax.lax.scan(step, (x_start, state0), keys)
         return x_i
 
-    if topology.is_server:
+    use_wire = sync.has_wire_state or mesh is not None
+
+    def star_wire(x_sync, ws):
+        """(decoded broadcast, next wire state): what every receiver sees
+        this round. The ONE place the transmit tensor is formed, shared by
+        the wire-buffered and overlap cases."""
+        t = sync.pre_wire(x_sync, ws) if sync.has_wire_state else x_sync
+        if mesh is None:
+            x_wire = sync.roundtrip(t)
+        else:
+            x_wire = collective.sharded_joint_wire(
+                t, mesh=mesh, sync=sync, axis_name=mesh_axis)
+        if sync.has_wire_state:
+            ws = sync.post_wire(t, ws)
+        return x_wire, ws
+
+    if topology.is_server and overlap:
+        def round_body(carry, scan_in):
+            gamma, _, delay_row = scan_in
+            g_prev, x_sync, key, s, ws = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            del ctx   # masks are rejected for the overlap path
+            # this round's gather depends only on x_sync (last round's
+            # result), never on this round's locals — XLA can ship it while
+            # the tau steps below run; the locals read LAST round's wire
+            g_cur, ws = star_wire(x_sync, ws)
+
+            def local(i, pkey, d_i, g_i):
+                del d_i   # structurally ConstantDelay(1)
+                x_ref = g_prev.at[i].set(x_sync[i])
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
+
+            x_next = vmap_players(local, player_keys, delay_row, gamma)
+            participants = jnp.asarray(n, jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+            return (g_cur, x_next, key, s, ws), (x_next, res, participants,
+                                                 participants)
+
+        init = (sync.roundtrip(x0), x0, key, sync.init_state(),
+                sync.init_wire_state(x0))
+    elif topology.is_server and use_wire:
+        def round_body(carry, scan_in):
+            gamma, _, delay_row = scan_in
+            if depth == 1:
+                x_sync, key, s, ws = carry
+            else:
+                buf, x_sync, key, s, ws = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            x_wire, ws = star_wire(x_sync, ws)
+            if depth > 1:
+                # full[k] = the broadcast from k rounds ago (k = 0: this
+                # round's); the carry keeps the trailing depth-1 slots
+                full = jnp.concatenate([x_wire[None], buf])
+
+            def local(i, pkey, d_i, g_i):
+                # D = 0 collapses the buffer read at trace time: the program
+                # is exactly the lockstep mesh scan (the pin the mesh path
+                # is held to — tests/test_async_mesh.py)
+                x_stale = x_wire if depth == 1 else full[d_i]
+                x_ref = x_stale.at[i].set(x_sync[i])
+                return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
+
+            x_prop = vmap_players(local, player_keys, delay_row, gamma)
+            m = sync.mask(n, ctx)
+            if m is None:
+                x_next = x_prop
+                participants = jnp.asarray(n, jnp.int32)
+            else:
+                x_next = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
+            out = (x_next, res, participants, participants)
+            if depth == 1:
+                return (x_next, key, s, ws), out
+            return (full[:-1], x_next, key, s, ws), out
+
+        ws0 = sync.init_wire_state(x0)
+        if depth == 1:
+            init = (x0, key, sync.init_state(), ws0)
+        else:
+            # slots hold what a receiver would have DECODED before round 0
+            buf0 = jnp.broadcast_to(sync.roundtrip(x0)[None],
+                                    (depth - 1, *x0.shape))
+            init = (buf0, x0, key, sync.init_state(), ws0)
+    elif topology.is_server:
         def round_body(carry, scan_in):
             gamma, _, delay_row = scan_in
             buf, x_sync, key, s = carry
@@ -379,9 +519,10 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
         # state as of its read time, except that senders' own decision
         # blocks are anchored fresh (a sender's latest submission is what
         # sits on its outgoing edge buffers; staleness corrupts only the
-        # relayed estimates of OTHERS). Single mixing sweep per round: the
-        # multi-sweep lockstep exchange has no per-receiver delayed
-        # equivalent, so AsyncPearlEngine pins gossip_steps = 1.
+        # relayed estimates of OTHERS). Multi-sweep rounds follow the same
+        # rule: a late receiver runs ALL of the round's gossip_steps sweeps
+        # on its delayed network state (billing scales with the sweep count
+        # either way — the wire moved the messages on time).
         W_stack = jnp.asarray(topology.mixing_stack(n), dtype=x0.dtype)
         A_stack = jnp.asarray(topology.adjacency_stack(n), dtype=bool)
         T = W_stack.shape[0]
@@ -415,15 +556,38 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
             link_w = jnp.where(A, W * pair, 0.0)
             self_w = 1.0 - jnp.sum(link_w, axis=1)
 
-            def mix_receiver(i, d_i):
-                Vd = (Vbuf[0] if depth == 1 else Vbuf[d_i])
-                Vd = Vd.at[diag, diag].set(x_used)
-                wire = sync.compress(Vd).astype(Vd.dtype)
-                v_i = (jnp.einsum("j,jkd->kd", link_w[i], wire)
-                       + self_w[i] * Vd[i])
-                return v_i.at[i].set(x_used[i])
+            def global_sweeps(V_m):
+                """``gossip_steps`` anchored full-network Metropolis sweeps
+                — the lockstep ``mix_views`` body, op-for-op."""
+                V_m = V_m.at[diag, diag].set(x_used)
+                for _ in range(gossip_steps):
+                    wire = sync.compress(V_m).astype(V_m.dtype)
+                    V_m = (jnp.einsum("ij,jkd->ikd", link_w, wire)
+                           + self_w[:, None, None] * V_m)
+                    V_m = V_m.at[diag, diag].set(x_used)
+                return V_m
 
-            V_next = jax.vmap(mix_receiver)(jnp.arange(n), delay_row)
+            def mix_receiver(i, d_i):
+                Vd = Vbuf[d_i]
+                if gossip_steps == 1:
+                    # single-row form, byte-identical to the PR 4 code path
+                    Vd = Vd.at[diag, diag].set(x_used)
+                    wire = sync.compress(Vd).astype(Vd.dtype)
+                    v_i = (jnp.einsum("j,jkd->kd", link_w[i], wire)
+                           + self_w[i] * Vd[i])
+                    return v_i.at[i].set(x_used[i])
+                # multi-sweep: a receiver that processes late relays
+                # processes ALL of this round's sweeps on its delayed
+                # network state, then keeps its own refreshed row
+                return global_sweeps(Vd)[i]
+
+            if depth == 1:
+                # every receiver reads the same current views: run the
+                # sweeps once globally — the lockstep mix_views program,
+                # bit-for-bit for ANY gossip_steps
+                V_next = global_sweeps(Vbuf[0])
+            else:
+                V_next = jax.vmap(mix_receiver)(jnp.arange(n), delay_row)
             if m is not None:
                 # lockstep invariant: a masked-out receiver exchanges
                 # nothing and KEEPS its current view (its link row is
@@ -431,7 +595,7 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                 # its stale read slot
                 V_cur = Vbuf[0].at[diag, diag].set(x_used)
                 V_next = jnp.where(mf[:, None, None] > 0, V_next, V_cur)
-            links = jnp.sum((A & (pair > 0)).astype(jnp.int32))
+            links = gossip_steps * jnp.sum((A & (pair > 0)).astype(jnp.int32))
             res = jnp.sqrt(jnp.sum(game.operator(x_used) ** 2))
             Vbuf_next = jnp.concatenate([V_next[None], Vbuf[:-1]])
             return (Vbuf_next, x_used, key, s), (x_used, res, participants,
@@ -445,7 +609,10 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
     carry, (xs, residuals, participants, links) = jax.lax.scan(
         round_body, init, scan_in
     )
-    return carry[1], xs, residuals, participants, links
+    # the wire-buffered star case at D = 0 has no leading buffer component
+    x_index = 0 if (topology.is_server and use_wire and not overlap
+                    and depth == 1) else 1
+    return carry[x_index], xs, residuals, participants, links
 
 
 # =========================================================================
@@ -484,9 +651,13 @@ class AsyncPearlEngine:
     — is ambiguous and rejected. ``max_staleness = 0`` reproduces the
     lockstep engine bit-for-bit on the star topology.
 
-    Joint baselines read fresh iterates mid-round by definition, so they are
-    rejected; gossip topologies run a single mixing sweep per round (the
-    multi-sweep exchange has no per-receiver delayed equivalent).
+    Joint baselines read fresh iterates mid-round by definition, so they
+    are rejected. Gossip rounds run ``gossip_steps`` Metropolis sweeps (a
+    late receiver simulates all of a round's sweeps on its delayed network
+    state). A ``mesh`` lowers the star exchange — including the snapshot
+    ring buffer, which rides the scan carry device-resident — through
+    :mod:`repro.core.collective`; ``overlap=True`` additionally
+    double-buffers the wire so the collective ships during the local steps.
     """
 
     update: PlayerUpdate = SgdUpdate()
@@ -494,7 +665,16 @@ class AsyncPearlEngine:
     topology: Topology = Star()
     delays: DelaySchedule = ZeroDelay()
     max_staleness: int = 0
+    gossip_steps: int = 1
     policy: StepsizePolicy | str | None = None   # None = Theorem34Policy()
+    mesh: object = None     # jax.sharding.Mesh with the player axis, or None
+    mesh_axis: str = "players"
+    #: double-buffer the star wire: this round's gather ships while the tau
+    #: local steps run against LAST round's broadcast. Requires a mesh (the
+    #: point is overlapping a real collective) and an explicitly declared
+    #: ConstantDelay(1)/max_staleness=1 delay model — overlap IS one round
+    #: of staleness, and the engine refuses to hide that.
+    overlap: bool = False
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
@@ -514,6 +694,52 @@ class AsyncPearlEngine:
         sync, delays, D = self._resolved()
         if D < 0:
             raise ValueError(f"max_staleness must be >= 0, got {D}")
+        if self.gossip_steps < 1:
+            raise ValueError(
+                f"gossip_steps must be >= 1, got {self.gossip_steps}")
+        if sync.has_wire_state and not self.topology.is_server:
+            raise ValueError(
+                f"{type(sync).__name__} carries an error-feedback residual "
+                f"for the ONE transmit tensor of the star broadcast; gossip "
+                f"relays per-edge views with no single wire tensor to bank "
+                f"a residual against — use error_feedback=False or the Star "
+                f"topology"
+            )
+        if self.mesh is not None:
+            if not self.topology.is_server:
+                raise ValueError(
+                    "the device-resident async mesh path covers the star "
+                    "broadcast (one ring buffer of joint snapshots); gossip "
+                    "staleness is per-receiver view state with no sharded "
+                    "lowering yet — run graph topologies on the host path "
+                    "(mesh=None)"
+                )
+            if sync.uses_mask:
+                raise ValueError(
+                    f"mesh lowering covers full-participation "
+                    f"synchronization; {type(sync).__name__} draws a "
+                    f"per-round participation mask — use the host path "
+                    f"(mesh=None) for masked regimes"
+                )
+        if self.overlap:
+            if self.mesh is None:
+                raise ValueError(
+                    "overlap=True double-buffers the sharded wire collective "
+                    "so XLA can ship it during the local steps; without a "
+                    "mesh there is no collective to overlap — pass mesh="
+                    "player_mesh(n) (or drop overlap)"
+                )
+            if not self.topology.is_server:
+                raise ValueError("overlap=True is a star-broadcast "
+                                 "optimization; gossip is not supported")
+            if D != 1 or delays != ConstantDelay(1):
+                raise ValueError(
+                    "overlap=True makes every player read LAST round's "
+                    "broadcast — exactly ConstantDelay(1) staleness. "
+                    "Declare it: delays=ConstantDelay(1), max_staleness=1. "
+                    "The engine refuses to overlap while claiming lockstep "
+                    "freshness."
+                )
         if isinstance(self.update, JointUpdate):
             raise ValueError(
                 f"{type(self.update).__name__} reads fresh iterates "
@@ -523,9 +749,8 @@ class AsyncPearlEngine:
         if isinstance(self.update, DecentralizedExtragradientUpdate):
             raise ValueError(
                 f"{type(self.update).__name__} interleaves a mixing sweep "
-                f"between its extragradient phases, and the mid-round sweep "
-                f"has no per-receiver delayed equivalent (the same reason "
-                f"AsyncPearlEngine pins gossip_steps = 1) — use the "
+                f"between its extragradient phases, and that MID-ROUND "
+                f"sweep has no per-receiver delayed equivalent — use the "
                 f"lockstep PearlEngine on a graph topology"
             )
         validate_policy_context(
@@ -553,7 +778,8 @@ class AsyncPearlEngine:
             game, x0, gammas, jnp.asarray(table), key,
             update=self.update, sync=sync, topology=self.topology,
             tau=tau, stochastic=stochastic, max_staleness=D,
-            policy=policy, ss_ctx=ss_ctx,
+            gossip_steps=self.gossip_steps, policy=policy, ss_ctx=ss_ctx,
+            mesh=self.mesh, mesh_axis=self.mesh_axis, overlap=self.overlap,
         )
         return sync, table, outs
 
@@ -586,9 +812,9 @@ class AsyncPearlEngine:
         n, d = x0.shape
         bytes_up, bytes_down = account_round_bytes(
             update=self.update, sync=sync, topology=self.topology,
-            gossip_steps=1, participants=participants, links=links,
-            n=n, d=d, base_bps=int(np.dtype(x0.dtype).itemsize),
-            rounds=rounds,
+            gossip_steps=self.gossip_steps, participants=participants,
+            links=links, n=n, d=d,
+            base_bps=int(np.dtype(x0.dtype).itemsize), rounds=rounds,
         )
         return AsyncPearlResult(
             x_final=x_final,

@@ -58,6 +58,7 @@ value (exact in f32, bounded quantization noise in bf16).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Any
 
@@ -78,8 +79,9 @@ Array = jax.Array
 #: every entry point takes ``axis_name`` so both spellings work.
 PLAYER_AXIS = "players"
 
-# Wire-size -> integer container for the bit-pattern trick. Sub-byte dtypes
-# would need packing; the strategies in repro.core.engine are all >= 1 byte.
+# Wire-size -> integer container for the bit-pattern trick on float-quantized
+# strategies. Sub-byte strategies (int8/int4 with per-block scales) bypass
+# this table: they own their u8 payload layout via wire_encode/wire_decode.
 _BITS_CONTAINER = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
 
 
@@ -136,14 +138,23 @@ def _validate_players(n: int, mesh: Mesh, axis_name: str) -> None:
 # =========================================================================
 # Wire representation: the bit-pattern trick
 # =========================================================================
-def wire_spec(sync) -> "WireSpec | None":
-    """The on-wire integer container for a sync strategy's compression.
+def wire_spec(sync) -> "WireSpec | LowBitCodec | None":
+    """The on-wire codec for a sync strategy's compression.
 
     ``None`` means the strategy transmits at the carrier dtype (f32) and no
-    bitcast is needed. Quantized strategies ship ``astype(wire_dtype)``
+    bitcast is needed. Float-quantized strategies ship ``astype(wire_dtype)``
     reinterpreted as ``uint<8*itemsize>`` so no backend pass can re-widen the
-    buffer (see module docstring).
+    buffer (see module docstring) — unless the backend natively moves that
+    dtype across collectives (:func:`native_collective_dtype`, TPU bf16), in
+    which case the bitcast round-trip is skipped and the HLO operand-dtype
+    assertion stays the gate. Sub-byte strategies (``Int8Sync``/``Int4Sync``)
+    own their wire layout: :class:`LowBitCodec` delegates to the strategy's
+    ``wire_encode``/``wire_decode``, which emit ONE u8 payload per block with
+    the f32 scale bitcast into its leading bytes — so the dry-run HLO of a
+    low-bit sync shows a single u8 collective operand, no f32 side channel.
     """
+    if hasattr(sync, "wire_encode"):
+        return LowBitCodec(sync)
     wire_itemsize = int(sync.wire_itemsize(4))
     if wire_itemsize >= 4:
         return None
@@ -155,6 +166,8 @@ def wire_spec(sync) -> "WireSpec | None":
         )
     if np.dtype(dtype).itemsize not in _BITS_CONTAINER:
         raise ValueError(f"unsupported wire itemsize for dtype {dtype}")
+    if native_collective_dtype(jnp.dtype(dtype).name):
+        return WireSpec(dtype=dtype, container=None)
     return WireSpec(dtype=dtype,
                     container=_BITS_CONTAINER[np.dtype(dtype).itemsize])
 
@@ -162,15 +175,73 @@ def wire_spec(sync) -> "WireSpec | None":
 @dataclasses.dataclass(frozen=True)
 class WireSpec:
     dtype: Any        # quantization dtype (e.g. bfloat16)
-    container: Any    # integer container shipped on the wire (e.g. uint16)
+    container: Any    # integer container on the wire (uint16); None = native
 
     def encode(self, x: Array) -> Array:
+        if self.container is None:
+            return x.astype(self.dtype)
         return jax.lax.bitcast_convert_type(x.astype(self.dtype),
                                             self.container)
 
     def decode(self, bits: Array, carrier_dtype) -> Array:
+        if self.container is None:
+            return bits.astype(carrier_dtype)
         return jax.lax.bitcast_convert_type(bits, self.dtype).astype(
             carrier_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowBitCodec:
+    """Adapter giving a low-bit sync strategy the WireSpec encode/decode
+    surface. The strategy owns the payload layout (scale bytes + packed
+    lanes); values produced by ``decode(encode(x))`` are bit-identical to the
+    strategy's host-path ``roundtrip(x)`` — the mesh/host parity contract."""
+
+    sync: Any
+
+    def encode(self, x: Array) -> Array:
+        return self.sync.wire_encode(x)
+
+    def decode(self, payload: Array, carrier_dtype) -> Array:
+        return self.sync.wire_decode(payload, carrier_dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _native_collective_dtype(platform: str, dtype_name: str) -> bool:
+    """Whether ``platform`` moves ``dtype_name`` collectives natively.
+
+    Probes by compiling a tiny two-device shard_map all-gather and reading
+    the optimized HLO's collective *operand* dtype — the same assertion
+    surface every other wire claim uses, so the fallback can never silently
+    re-widen: if legalization hoists a convert above the gather (CPU float
+    normalization), the operand reads f32 and the probe says False.
+    """
+    del platform   # cache key only; jax.devices() already reflects it
+    devs = jax.devices()
+    if len(devs) < 2:
+        return False   # no wire to probe; the bitcast path is always correct
+    probe_mesh = Mesh(np.array(devs[:2]), (PLAYER_AXIS,))
+
+    def gather(x):
+        return jax.lax.all_gather(x, PLAYER_AXIS, axis=0, tiled=True)
+
+    fn = _shard_map(gather, mesh=probe_mesh, in_specs=(P(PLAYER_AXIS),),
+                    out_specs=P(), check_rep=False)
+    x = jax.ShapeDtypeStruct((2, 8), jnp.dtype(dtype_name))
+    hlo = jax.jit(fn).lower(x).compile().as_text()
+    return any(o.op == "all-gather" and o.operand_dtype == _HLO_DTYPE_NAMES.get(
+        dtype_name, dtype_name) for o in wire_dtype_report(hlo))
+
+
+def native_collective_dtype(dtype_name: str) -> bool:
+    """Public probe: True iff the current backend's compiled all-gather keeps
+    a ``dtype_name`` operand on the wire (TPU bf16; False on the CPU build,
+    whose float normalization legalizes every sub-f32 float collective)."""
+    return _native_collective_dtype(jax.default_backend(), dtype_name)
+
+
+#: numpy dtype name -> HLO element-type spelling, for the probe's assertion.
+_HLO_DTYPE_NAMES = {"bfloat16": "bf16", "float16": "f16", "float32": "f32"}
 
 
 def _reject_mask(sync, what: str) -> None:

@@ -210,10 +210,15 @@ def account_round_bytes(
         full = topology.directed_edge_counts(n)
         sweeps = gossip_steps * getattr(update, "mixes_per_round", 1)
         msgs = sweeps * full[np.arange(rounds) % len(full)]
-    return gossip_round_bytes(
+    sent, recv = gossip_round_bytes(
         msgs, payload_blocks=n, block_scalars=d,
         itemsize=sync.wire_itemsize(base_bps),
     )
+    # low-bit payloads ship one f32 scale per relayed block on top of lanes
+    overhead = getattr(sync, "wire_overhead_bytes_per_block", 0)
+    if overhead:
+        sent = sent + msgs * n * overhead
+    return sent, recv
 
 
 # =========================================================================
@@ -471,6 +476,69 @@ class SumLocalSgdUpdate(JointUpdate):
 
 
 # =========================================================================
+# Blockwise low-bit quantization (int8 / int4 with per-block scales)
+# =========================================================================
+#: f32 scale factor shipped per player block alongside a low-bit payload.
+SCALE_BYTES = 4
+
+
+def _block_scale(x: Array, qmax: float) -> Array:
+    """Per-block symmetric quantization scale over the last axis.
+
+    One f32 scale per ``d``-vector (player block, or per-(view, block) for
+    gossip view tensors), floored at ``tiny`` so an all-zero block dequantizes
+    to exact zeros instead of NaNs.
+    """
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    return jnp.maximum(s, jnp.finfo(jnp.float32).tiny).astype(jnp.float32)
+
+
+def int8_quantize(x: Array) -> tuple[Array, Array]:
+    """``(q, scale)``: symmetric int8 lanes in [-127, 127] + per-block scale."""
+    s = _block_scale(x, 127.0)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def int4_quantize(x: Array) -> tuple[Array, Array]:
+    """``(q, scale)``: symmetric 4-bit lanes in [-7, 7] (stored int8) +
+    per-block scale. Two lanes pack into one byte via :func:`int4_pack`."""
+    s = _block_scale(x, 7.0)
+    q = jnp.clip(jnp.round(x / s), -7, 7).astype(jnp.int8)
+    return q, s
+
+
+def lowbit_dequantize(q: Array, scale: Array, dtype) -> Array:
+    """Dequantize int lanes with their per-block scale back to ``dtype``."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int4_pack(q: Array) -> Array:
+    """Pack int4 lanes (int8 values in [-8, 7], last axis EVEN) into bytes.
+
+    Offset-binary nibbles: lane + 8 in [0, 15]; even lanes take the low
+    nibble, odd lanes the high nibble. Bitwise-invertible
+    (:func:`int4_unpack`), which tests/test_lowbit_sync.py pins.
+    """
+    if q.shape[-1] % 2:
+        raise ValueError(
+            f"int4 packing needs an even last axis (two lanes per byte), "
+            f"got shape {q.shape}; pad the block or use Int8Sync"
+        )
+    u = (q.astype(jnp.int32) + 8).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return lo | (hi << 4)
+
+
+def int4_unpack(packed: Array) -> Array:
+    """Inverse of :func:`int4_pack`: bytes back to interleaved int4 lanes."""
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    q = jnp.stack([lo, hi], axis=-1)
+    return q.reshape(*packed.shape[:-1], 2 * packed.shape[-1]).astype(jnp.int8)
+
+
+# =========================================================================
 # SyncStrategy protocol — what the server broadcast looks like
 # =========================================================================
 class SyncStrategy(abc.ABC):
@@ -500,6 +568,10 @@ class SyncStrategy(abc.ABC):
     name: str = "sync"
     uses_mask: bool = False          # True for participation-drawing strategies
     bills_full_round: bool = False   # True when lost transmissions are still paid
+    has_wire_state: bool = False     # True when the wire carries state (EF)
+    #: extra wire bytes per transmitted d-block beyond the per-scalar
+    #: itemsize (the f32 scale a low-bit payload ships per block)
+    wire_overhead_bytes_per_block: int = 0
 
     # ----------------------------------------------------------- round state
     def init_state(self):
@@ -508,6 +580,33 @@ class SyncStrategy(abc.ABC):
     def pre_round(self, state):
         """Advance per-round strategy state; returns ``(state, ctx)``."""
         return state, ()
+
+    # ----------------------------------------------------- wire round state
+    # Strategies with ``has_wire_state`` (error feedback) thread a residual
+    # through the engines' star broadcast: each round the TRANSMIT tensor is
+    # ``pre_wire(x, state)`` (iterates plus carried residual), receivers see
+    # its wire round-trip, and ``post_wire`` banks what the wire dropped.
+    # Stateless strategies keep the legacy ``view`` path bit-for-bit.
+    def init_wire_state(self, x: Array):
+        """Wire-state pytree carried by the rounds-scan (default: none)."""
+        del x
+        return ()
+
+    def pre_wire(self, x: Array, state) -> Array:
+        """The tensor actually transmitted this round."""
+        del state
+        return x
+
+    def post_wire(self, t: Array, state):
+        """Next wire state, given this round's transmit tensor."""
+        del t
+        return state
+
+    def roundtrip(self, x: Array) -> Array:
+        """What receivers decode from ``x`` after the wire (identity for an
+        exact wire). Deterministic, so the host path and the mesh-lowered
+        collective produce identical values from the same transmit tensor."""
+        return x
 
     # ------------------------------------------------------------- semantics
     def view(self, i: Array, x_sync: Array, ctx) -> Array:
@@ -590,6 +689,151 @@ class QuantizedSync(SyncStrategy):
     def wire_itemsize(self, base_bps):
         del base_bps
         return int(np.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class _LowBitSync(SyncStrategy):
+    """Shared plumbing for the sub-bf16 wire: per-player-block scale factors
+    plus an optional error-feedback residual.
+
+    Low-bit symmetric quantization is *biased* (round-to-nearest on a coarse
+    grid), and under PEARL's repeated broadcast the bias compounds: the
+    iterates stall in a neighborhood set by the grid resolution instead of
+    contracting to the equilibrium (int4's 16 levels make this visible —
+    tests/test_lowbit_sync.py records the boundary). ``error_feedback=True``
+    (default) carries the standard fix in sync-strategy wire state: the
+    residual ``e`` of what the wire dropped is added back before the next
+    quantization, ``t = x + e``, ``e' = t - Q(t)``, so the *time-averaged*
+    transmitted signal is unbiased and the quantized trajectory reaches the
+    exact-sync fixed point (docs/THEORY.md sketches the argument).
+
+    Wire layout (what :mod:`repro.core.collective` ships per player block):
+    the f32 scale bitcast to 4 bytes, then the quantized lanes — ONE u8
+    payload per block, so the dry-run HLO of a low-bit sharded sync shows a
+    single u8 collective operand (no side-channel f32 gather to re-widen).
+    Accounting matches: ``wire_itemsize`` bills the lanes,
+    ``wire_overhead_bytes_per_block`` the scale.
+
+    Error feedback is defined for the star broadcast, where ONE wire tensor
+    per round has a well-defined residual; gossip relays per-edge views and
+    the trainer's pre-reduction compression never sees engine state, so both
+    reject ``error_feedback=True`` loudly (stateless low-bit composes fine).
+    """
+
+    error_feedback: bool = True
+    wire_overhead_bytes_per_block = SCALE_BYTES
+
+    # subclasses set: name, _qmax/_quantize, wire_itemsize
+    def _quantize(self, x):
+        raise NotImplementedError
+
+    @property
+    def has_wire_state(self):
+        return self.error_feedback
+
+    def init_wire_state(self, x):
+        return jnp.zeros_like(x) if self.error_feedback else ()
+
+    def pre_wire(self, x, state):
+        return x + state if self.error_feedback else x
+
+    def post_wire(self, t, state):
+        if not self.error_feedback:
+            return state
+        return t - self.roundtrip(t)
+
+    def roundtrip(self, x):
+        q, s = self._quantize(x)
+        return lowbit_dequantize(q, s, x.dtype)
+
+    def view(self, i, x_sync, ctx):
+        # stateless path only: the engines route error feedback through
+        # pre_wire/post_wire and never call view for has_wire_state syncs
+        return self.roundtrip(x_sync).at[i].set(x_sync[i])
+
+    def compress(self, x):
+        return self.roundtrip(x)
+
+    # ------------------------------------------------------------- the wire
+    # Consumed by repro.core.collective: encode to the u8 payload that
+    # crosses the mesh axis, decode back after the gather/permute.
+    def wire_encode(self, x: Array) -> Array:
+        q, s = self._quantize(x)
+        scale_bytes = jax.lax.bitcast_convert_type(s, jnp.uint8).reshape(
+            *s.shape[:-1], SCALE_BYTES)
+        return jnp.concatenate([scale_bytes, self._pack(q)], axis=-1)
+
+    def wire_decode(self, payload: Array, dtype) -> Array:
+        scale_bytes = payload[..., :SCALE_BYTES]
+        s = jax.lax.bitcast_convert_type(
+            scale_bytes.reshape(*scale_bytes.shape[:-1], 1, SCALE_BYTES),
+            jnp.float32,
+        ).reshape(*scale_bytes.shape[:-1], 1)
+        return lowbit_dequantize(self._unpack(payload[..., SCALE_BYTES:]),
+                                 s, dtype)
+
+    def _pack(self, q):
+        return jax.lax.bitcast_convert_type(q, jnp.uint8)
+
+    def _unpack(self, payload):
+        return jax.lax.bitcast_convert_type(payload, jnp.int8)
+
+    def round_bytes(self, participants, n, d, base_bps):
+        up, down = super().round_bytes(participants, n, d, base_bps)
+        billed = np.atleast_1d(np.asarray(participants)).astype(np.int64)
+        # the engine compresses the broadcast: each billed player downloads
+        # n blocks, each carrying its f32 scale on top of the lane payload
+        return up, down + billed * n * self.wire_overhead_bytes_per_block
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Sync(_LowBitSync):
+    """1-byte wire: symmetric int8 lanes + per-player-block f32 scale, with
+    error feedback by default. Halves the bf16 wire again; the residual keeps
+    the broadcast unbiased so the trajectory still reaches the exact-sync
+    fixed point."""
+
+    name: str = "int8"
+
+    def _quantize(self, x):
+        return int8_quantize(x)
+
+    def wire_itemsize(self, base_bps):
+        del base_bps
+        return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Int4Sync(_LowBitSync):
+    """Half-byte wire: two 4-bit lanes per byte + per-player-block f32 scale.
+
+    Requires an even block dimension ``d`` (two lanes per byte; no silent
+    padding, so billing at 0.5 B/scalar stays exact). Without error feedback
+    the 16-level grid visibly stalls the trajectory — the honest boundary
+    tests/test_lowbit_sync.py records; with the residual it converges.
+    """
+
+    name: str = "int4"
+
+    def _quantize(self, x):
+        # reject odd blocks on the HOST path too, not just when int4_pack
+        # hits the mesh wire — the two lowerings must agree on what runs
+        if x.shape[-1] % 2:
+            raise ValueError(
+                f"int4 sync needs an even last axis (two lanes per byte), "
+                f"got shape {x.shape}; pad the block or use Int8Sync"
+            )
+        return int4_quantize(x)
+
+    def _pack(self, q):
+        return int4_pack(q)
+
+    def _unpack(self, payload):
+        return int4_unpack(payload)
+
+    def wire_itemsize(self, base_bps):
+        del base_bps
+        return 0.5
 
 
 class _RandomizedSync(SyncStrategy):
@@ -736,12 +980,25 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
     elif topology.is_server:
         def round_body(carry, scan_in):
             gamma, _ = scan_in
-            x_sync, key, s = carry
+            x_sync, key, s, ws = carry
             key, sub = jax.random.split(key)
             player_keys = jax.random.split(sub, n)
             s, ctx = sync.pre_round(s)
 
-            if mesh is not None:
+            if sync.has_wire_state:
+                # Error feedback: ONE transmit tensor per round — the
+                # iterates plus the carried residual. Receivers decode its
+                # deterministic wire round-trip (host) or the bit-pattern
+                # collective's output (mesh; identical values, asserted in
+                # tests), and the residual banks what the wire dropped.
+                t = sync.pre_wire(x_sync, ws)
+                if mesh is None:
+                    x_wire = sync.roundtrip(t)
+                else:
+                    x_wire = collective.sharded_joint_wire(
+                        t, mesh=mesh, sync=sync, axis_name=mesh_axis)
+                ws = sync.post_wire(t, ws)
+            elif mesh is not None:
                 # Explicit wire: every block crosses the player axis once at
                 # the strategy's wire dtype (bit-pattern collective); each
                 # player restores its own row exact on top — the
@@ -750,7 +1007,7 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                     x_sync, mesh=mesh, sync=sync, axis_name=mesh_axis)
 
             def local(i, pkey, g_i):
-                if mesh is None:
+                if mesh is None and not sync.has_wire_state:
                     x_ref = sync.view(i, x_sync, ctx)
                 else:
                     x_ref = x_wire.at[i].set(x_sync[i])
@@ -765,9 +1022,12 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                 x_next = jnp.where(m[:, None], x_prop, x_sync)
                 participants = jnp.sum(m).astype(jnp.int32)
             res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
-            return (x_next, key, s), (x_next, res, participants, participants)
+            return (x_next, key, s, ws), (x_next, res, participants,
+                                          participants)
 
-        init = (x0, key, sync.init_state())
+        # legacy strategies carry an empty wire-state pytree: zero ops, so
+        # the compiled program (and every bit-for-bit pin) is unchanged
+        init = (x0, key, sync.init_state(), sync.init_wire_state(x0))
     else:
         # Server-free gossip: each player carries a VIEW of the whole joint
         # action (the decentralized-VI formulation — node i evaluates only
@@ -977,6 +1237,15 @@ class PearlEngine:
                     f"contradicts would make the billing dishonest — use "
                     f"the host path (mesh=None) for masked regimes"
                 )
+        if self.sync.has_wire_state and not self.topology.is_server:
+            raise ValueError(
+                f"{type(self.sync).__name__} carries an error-feedback "
+                f"residual for the ONE transmit tensor of the star "
+                f"broadcast; gossip relays per-edge views with no single "
+                f"wire tensor to bank a residual against — use "
+                f"error_feedback=False (stateless low-bit compression "
+                f"composes with any topology) or the Star topology"
+            )
         if isinstance(self.update, DecentralizedExtragradientUpdate):
             if self.topology.is_server:
                 raise ValueError(
@@ -1165,6 +1434,8 @@ PLAYER_UPDATES: dict[str, Callable[[], PlayerUpdate]] = {
 SYNC_STRATEGIES: dict[str, Callable[[], SyncStrategy]] = {
     "exact": ExactSync,
     "bf16": lambda: QuantizedSync(jnp.bfloat16),
+    "int8": Int8Sync,
+    "int4": Int4Sync,
     "partial": PartialParticipation,
     "dropout": DropoutSync,
 }

@@ -291,7 +291,7 @@ class TimeVarying(Topology):
 # Shared direction-aware byte accounting
 # =========================================================================
 def direction_itemsizes(sync, base_itemsize: int, *,
-                        compressed: str) -> tuple[int, int]:
+                        compressed: str) -> tuple[int | float, int | float]:
     """(uplink, downlink) bytes per scalar for a sync strategy — THE one
     place both accounting systems resolve the quantization direction.
 
@@ -299,9 +299,14 @@ def direction_itemsizes(sync, base_itemsize: int, *,
     the *broadcast* (players see quantized neighbor blocks, upload exact):
     ``compressed="down"``. The neural trainer quantizes *pre-reduction*
     (uplink at the wire dtype, f32 mean broadcast back): ``compressed="up"``.
-    ``sync.wire_itemsize(base_itemsize)`` supplies the wire dtype's size.
+    ``sync.wire_itemsize(base_itemsize)`` supplies the wire dtype's size —
+    fractional for sub-byte wires (int4 packs two lanes per byte, 0.5 B per
+    scalar); the byte totals below stay exact integers because sub-byte
+    strategies require an even block dimension.
     """
-    wire = int(sync.wire_itemsize(base_itemsize))
+    wire = float(sync.wire_itemsize(base_itemsize))
+    if wire == int(wire):
+        wire = int(wire)
     if compressed == "down":
         return int(base_itemsize), wire
     if compressed == "up":
@@ -325,13 +330,15 @@ def star_round_bytes(participants, *, n: int, block_scalars: int,
     if down_blocks is None:
         down_blocks = n
     p = np.atleast_1d(np.asarray(participants)).astype(np.int64)
-    up = p * block_scalars * up_itemsize
-    down = p * down_blocks * block_scalars * down_itemsize
+    # float math + rint keeps sub-byte itemsizes exact (even block dims only)
+    up = np.rint(p * float(block_scalars) * up_itemsize).astype(np.int64)
+    down = np.rint(p * float(down_blocks * block_scalars)
+                   * down_itemsize).astype(np.int64)
     return up, down
 
 
 def gossip_round_bytes(messages, *, payload_blocks: int, block_scalars: int,
-                       itemsize: int) -> tuple[np.ndarray, np.ndarray]:
+                       itemsize: float) -> tuple[np.ndarray, np.ndarray]:
     """Per-round (sent, received=0) bytes for server-free topologies.
 
     ``messages`` is the directed active-link count per round; each message
@@ -341,7 +348,8 @@ def gossip_round_bytes(messages, *, payload_blocks: int, block_scalars: int,
     ``up + down`` never double-counts an edge.
     """
     m = np.atleast_1d(np.asarray(messages)).astype(np.int64)
-    sent = m * payload_blocks * block_scalars * itemsize
+    sent = np.rint(m * float(payload_blocks * block_scalars)
+                   * itemsize).astype(np.int64)
     return sent, np.zeros_like(sent)
 
 

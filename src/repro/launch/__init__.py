@@ -1,5 +1,16 @@
 """Launchers: production mesh, dry-run, perf hillclimb, training CLI."""
 
+from repro.launch.env import (
+    ensure_wallclock_env,
+    find_tcmalloc,
+    wallclock_env,
+)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 
-__all__ = ["make_production_mesh", "make_debug_mesh"]
+__all__ = [
+    "make_production_mesh",
+    "make_debug_mesh",
+    "wallclock_env",
+    "ensure_wallclock_env",
+    "find_tcmalloc",
+]

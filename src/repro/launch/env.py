@@ -1,0 +1,104 @@
+"""Process-environment bootstrap for wall-clock measurement.
+
+Seconds are only comparable when the process environment is pinned. Two
+env knobs move CPU wall-clock enough to swamp a wire-compression win, and
+BOTH must be set before ``import jax`` (the backend reads them once at
+client init):
+
+- ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the fake
+  N-device mesh every sharded collective in this repo lowers against
+  (without it the CPU backend exposes one device and
+  :func:`repro.core.collective.player_mesh` refuses the trivial mesh);
+- ``TF_CPP_MIN_LOG_LEVEL=4`` — the XLA runtime's C++ logging writes to
+  stderr on the timed path; silence it.
+
+Two more are allocator hygiene, applied when available and harmless when
+not:
+
+- ``LD_PRELOAD=<libtcmalloc>`` — glibc malloc's arena contention skews
+  multi-threaded XLA CPU timings; tcmalloc is preloaded IF the library
+  exists on this machine (it cannot be installed from here, and a dangling
+  LD_PRELOAD would print a loader warning into every timing run);
+- ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` — raised so tcmalloc's
+  large-allocation reports never land in the timed window.
+
+``LD_PRELOAD`` and ``XLA_FLAGS`` cannot take effect in an
+already-running process, so :func:`ensure_wallclock_env` re-execs the
+interpreter ONCE (sentinel-guarded) with the pinned environment — call it
+at the very top of a benchmark ``__main__``, before any jax-importing
+module. :func:`wallclock_env` is the pure helper that just computes the
+mapping, for callers (CI shells) that export it themselves.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import sys
+
+#: sentinel env var marking a process already re-exec'd with the pinned env
+_SENTINEL = "REPRO_WALLCLOCK_ENV"
+
+#: where distro tcmalloc builds land (gperftools package names vary)
+_TCMALLOC_GLOBS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so*",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so*",
+    "/usr/lib/*/libtcmalloc*.so*",
+    "/usr/lib64/libtcmalloc*.so*",
+)
+
+
+def find_tcmalloc() -> str | None:
+    """Path to a tcmalloc shared library on this machine, or None."""
+    for pattern in _TCMALLOC_GLOBS:
+        hits = sorted(glob.glob(pattern))
+        if hits:
+            return hits[0]
+    return None
+
+
+def wallclock_env(device_count: int = 8) -> dict[str, str]:
+    """The pinned environment for a wall-clock benchmark process.
+
+    Returns only the variables that need SETTING (an existing
+    ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS`` is
+    preserved rather than overridden, so CI's exported mesh size wins).
+    """
+    env: dict[str, str] = {}
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flag = f"--xla_force_host_platform_device_count={device_count}"
+        env["XLA_FLAGS"] = f"{flags} {flag}".strip()
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL",
+                   os.environ.get("TF_CPP_MIN_LOG_LEVEL", "4"))
+    env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+    tcmalloc = find_tcmalloc()
+    if tcmalloc is not None and "tcmalloc" not in os.environ.get(
+            "LD_PRELOAD", ""):
+        preload = os.environ.get("LD_PRELOAD", "")
+        env["LD_PRELOAD"] = f"{preload}:{tcmalloc}".strip(":")
+    return env
+
+
+def ensure_wallclock_env(device_count: int = 8) -> bool:
+    """Pin the wall-clock environment, re-exec'ing the interpreter once.
+
+    Call FIRST in a benchmark ``__main__``, before importing jax (directly
+    or transitively). If the environment is already pinned (sentinel set,
+    e.g. by a previous re-exec or by CI exporting it), returns False and
+    the caller proceeds. Otherwise sets the env and replaces the process
+    via ``os.execv`` — the re-exec'd process starts this module again with
+    ``LD_PRELOAD``/``XLA_FLAGS`` active from the loader on.
+    """
+    if os.environ.get(_SENTINEL) == "1":
+        return False
+    os.environ.update(wallclock_env(device_count))
+    os.environ[_SENTINEL] = "1"
+    # re-exec'ing ``python -m pkg.mod`` lands in ``python path/to/mod.py``,
+    # whose sys.path[0] is the module's DIRECTORY — carry the current
+    # process's resolved import path across the exec so package-relative
+    # imports (benchmarks.*, repro.*) keep resolving.
+    os.environ["PYTHONPATH"] = os.pathsep.join(
+        p or os.getcwd() for p in sys.path)
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+    raise AssertionError("unreachable: execv does not return")

@@ -125,6 +125,15 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None,
             f"{type(strategy).__name__} draws a participation mask and needs "
             f"the general stale-block merge round (make_pearl_round)"
         )
+    if hasattr(strategy, "wire_encode"):
+        raise ValueError(
+            f"{type(strategy).__name__} is a sub-bf16 engine wire (per-block "
+            f"scales + error-feedback state); the trainer's pre-reduction "
+            f"compression and PearlCommReport do not thread the scale "
+            f"overhead or the residual — use the dense engines "
+            f"(PearlEngine/AsyncPearlEngine) for low-bit sync, or "
+            f"QuantizedSync for the trainer"
+        )
     if mesh is not None:
         from repro.core.collective import sharded_tree_mean
 

@@ -1,0 +1,218 @@
+"""Device-resident async mesh tests: ring buffer, overlap, multi-sweep.
+
+The multi-device cases run under the CI ``multi-device`` job's fake mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and skip on a
+single device. What is pinned, per the acceptance criteria:
+
+- the async engine's device-resident snapshot ring buffer is FREE at
+  ``D = 0``: bit-for-bit equal to the lockstep mesh engine for every sync
+  strategy (exact, bf16, int8+EF, int4+EF) — no extra arithmetic, no
+  reordered reductions;
+- ``overlap=True`` (double-buffered wire) computes exactly the host
+  async engine's declared ``ConstantDelay(1)`` program, up to the known
+  mesh-vs-host fusion drift;
+- async gossip with ``gossip_steps > 1`` at ``D = 0`` reproduces the
+  lockstep multi-sweep engine bitwise, bytes included;
+- the overlap rejection matrix: no mesh, gossip topology, or an
+  undeclared delay model all fail loudly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collective, stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    ConstantDelay,
+    UniformDelay,
+    ZeroDelay,
+)
+from repro.core.engine import (
+    ExactSync,
+    Int4Sync,
+    Int8Sync,
+    PearlEngine,
+    QuantizedSync,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.topology import Ring
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device (fake) mesh: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+N = 6
+
+SYNCS = {
+    "exact": ExactSync(),
+    "bf16": QuantizedSync(jnp.bfloat16),
+    "int8": Int8Sync(),
+    "int4": Int4Sync(),
+}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if jax.device_count() < 2:
+        pytest.skip("single device")
+    return collective.player_mesh(N)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    game = make_quadratic_game(n=N, d=10, M=40, L_B=1.0, batch_size=1,
+                               seed=0)
+    # 0.4x the lockstep-safe step: staleness shrinks the stable region,
+    # and one shared gamma keeps every engine in it
+    gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((N, 10)), jnp.float32)
+    return game, gamma, x0
+
+
+def _run(engine, setup, rounds=40):
+    game, gamma, x0 = setup
+    return engine.run(game, x0, tau=4, rounds=rounds, gamma=gamma,
+                      key=jax.random.PRNGKey(0), stochastic=False)
+
+
+# =========================================================================
+# D = 0: the ring buffer must be free
+# =========================================================================
+@multi_device
+class TestD0Parity:
+    @pytest.mark.parametrize("sname", list(SYNCS), ids=list(SYNCS))
+    def test_d0_bitwise_equals_lockstep_mesh(self, setup, mesh, sname):
+        sync = SYNCS[sname]
+        lock = _run(PearlEngine(sync=sync, mesh=mesh), setup)
+        d0 = _run(AsyncPearlEngine(sync=sync, mesh=mesh, delays=ZeroDelay(),
+                                   max_staleness=0), setup)
+        np.testing.assert_array_equal(np.asarray(lock.x_final),
+                                      np.asarray(d0.x_final))
+        np.testing.assert_array_equal(lock.rel_errors, d0.rel_errors)
+
+    def test_d0_bytes_equal_lockstep(self, setup, mesh):
+        lock = _run(PearlEngine(sync=Int8Sync(), mesh=mesh), setup,
+                    rounds=10)
+        d0 = _run(AsyncPearlEngine(sync=Int8Sync(), mesh=mesh,
+                                   delays=ZeroDelay(), max_staleness=0),
+                  setup, rounds=10)
+        np.testing.assert_array_equal(lock.bytes_up, d0.bytes_up)
+        np.testing.assert_array_equal(lock.bytes_down, d0.bytes_down)
+
+
+# =========================================================================
+# Staleness on the mesh: D > 0 rides the device-resident buffer
+# =========================================================================
+@multi_device
+class TestStaleMesh:
+    @pytest.mark.parametrize("sname,atol",
+                             [("exact", 1e-6), ("int8", 5e-3)],
+                             ids=["exact", "int8"])
+    def test_mesh_tracks_host_async(self, setup, mesh, sname, atol):
+        """Same delay table, host buffer vs device ring buffer: fusion
+        drift only in f32; quantization-level flips bound the int8 gap."""
+        sync = SYNCS[sname]
+        kw = dict(sync=sync, delays=UniformDelay(seed=0), max_staleness=2)
+        host = _run(AsyncPearlEngine(**kw), setup)
+        shard = _run(AsyncPearlEngine(mesh=mesh, **kw), setup)
+        assert shard.rel_errors[-1] == pytest.approx(
+            host.rel_errors[-1], rel=0.5, abs=1e-9)
+        if sname == "exact":
+            np.testing.assert_allclose(np.asarray(shard.x_final),
+                                       np.asarray(host.x_final),
+                                       rtol=0, atol=atol)
+
+    def test_staleness_recorded_identically(self, setup, mesh):
+        kw = dict(delays=UniformDelay(seed=0), max_staleness=3)
+        host = _run(AsyncPearlEngine(**kw), setup, rounds=12)
+        shard = _run(AsyncPearlEngine(mesh=mesh, **kw), setup, rounds=12)
+        np.testing.assert_array_equal(host.staleness, shard.staleness)
+
+
+# =========================================================================
+# Overlap: the double-buffered wire IS ConstantDelay(1)
+# =========================================================================
+@multi_device
+class TestOverlap:
+    def test_overlap_is_declared_constant_delay_one(self, setup, mesh):
+        over = _run(AsyncPearlEngine(mesh=mesh, delays=ConstantDelay(1),
+                                     max_staleness=1, overlap=True), setup)
+        host = _run(AsyncPearlEngine(delays=ConstantDelay(1),
+                                     max_staleness=1), setup)
+        # identical semantics, mesh-vs-host fusion drift only
+        np.testing.assert_allclose(np.asarray(over.x_final),
+                                   np.asarray(host.x_final),
+                                   rtol=0, atol=1e-6)
+
+    @pytest.mark.parametrize("sname", ["int8", "int4"])
+    def test_overlap_composes_with_lowbit_ef(self, setup, mesh, sname):
+        over = _run(AsyncPearlEngine(sync=SYNCS[sname], mesh=mesh,
+                                     delays=ConstantDelay(1),
+                                     max_staleness=1, overlap=True),
+                    setup, rounds=120)
+        assert float(over.rel_errors[-1]) < 1e-4
+
+    def test_overlap_requires_mesh(self):
+        with pytest.raises(ValueError, match="mesh"):
+            AsyncPearlEngine(delays=ConstantDelay(1), max_staleness=1,
+                             overlap=True)._check()
+
+    def test_overlap_rejects_gossip(self, mesh):
+        with pytest.raises(ValueError, match="star"):
+            AsyncPearlEngine(topology=Ring(), mesh=mesh,
+                             delays=ConstantDelay(1), max_staleness=1,
+                             overlap=True)._check()
+
+    def test_overlap_rejects_undeclared_staleness(self, mesh):
+        # overlap IS one round of staleness; claiming lockstep freshness
+        # (or any other delay model) must fail loudly
+        with pytest.raises(ValueError, match="ConstantDelay"):
+            AsyncPearlEngine(mesh=mesh, overlap=True)._check()
+        with pytest.raises(ValueError, match="ConstantDelay"):
+            AsyncPearlEngine(mesh=mesh, delays=UniformDelay(seed=0),
+                             max_staleness=1, overlap=True)._check()
+        with pytest.raises(ValueError, match="ConstantDelay"):
+            AsyncPearlEngine(mesh=mesh, delays=ConstantDelay(2),
+                             max_staleness=2, overlap=True)._check()
+
+    def test_async_mesh_rejects_gossip_and_masks(self, mesh):
+        from repro.core.engine import PartialParticipation
+        with pytest.raises(ValueError, match="host path"):
+            AsyncPearlEngine(topology=Ring(), mesh=mesh)._check()
+        with pytest.raises(ValueError, match="mask"):
+            AsyncPearlEngine(sync=PartialParticipation(fraction=0.5),
+                             mesh=mesh)._check()
+
+
+# =========================================================================
+# Async gossip multi-sweep (host path; mesh x gossip is rejected above)
+# =========================================================================
+class TestAsyncGossipMultiSweep:
+    def test_d0_bitwise_equals_lockstep_multisweep(self, setup):
+        game, gamma, x0 = setup
+        lock = _run(PearlEngine(topology=Ring(), gossip_steps=2), setup)
+        d0 = _run(AsyncPearlEngine(topology=Ring(), gossip_steps=2,
+                                   delays=ZeroDelay(), max_staleness=0),
+                  setup)
+        np.testing.assert_array_equal(np.asarray(lock.x_final),
+                                      np.asarray(d0.x_final))
+        np.testing.assert_array_equal(lock.bytes_up, d0.bytes_up)
+        np.testing.assert_array_equal(lock.bytes_down, d0.bytes_down)
+
+    def test_multisweep_tightens_consensus_under_staleness(self, setup):
+        one = _run(AsyncPearlEngine(topology=Ring(), gossip_steps=1,
+                                    delays=UniformDelay(seed=0),
+                                    max_staleness=2), setup, rounds=120)
+        two = _run(AsyncPearlEngine(topology=Ring(), gossip_steps=2,
+                                    delays=UniformDelay(seed=0),
+                                    max_staleness=2), setup, rounds=120)
+        assert float(two.rel_errors[-1]) < float(one.rel_errors[-1])
+
+    def test_gossip_steps_validated(self):
+        with pytest.raises(ValueError, match="gossip_steps"):
+            AsyncPearlEngine(topology=Ring(), gossip_steps=0)._check()

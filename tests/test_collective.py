@@ -28,6 +28,8 @@ import pytest
 from repro.core import collective
 from repro.core.engine import (
     ExactSync,
+    Int4Sync,
+    Int8Sync,
     JointExtragradientUpdate,
     PartialParticipation,
     PearlEngine,
@@ -210,6 +212,69 @@ class TestShardedTreeMean:
     def test_non_leading_axis_rejected(self, mesh):
         with pytest.raises(ValueError, match="axis"):
             tree_mean(_tree(), axis=1, mesh=mesh)
+
+
+# =========================================================================
+# Low-bit wire: the single-u8-payload codec through the collectives
+# =========================================================================
+class TestLowBitSpec:
+    def test_lowbit_syncs_get_the_codec(self):
+        for sync in (Int8Sync(), Int4Sync(), Int8Sync(error_feedback=False)):
+            spec = collective.wire_spec(sync)
+            assert isinstance(spec, collective.LowBitCodec)
+
+    def test_codec_encode_decode_matches_strategy(self):
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal((N, 16)), jnp.float32)
+        for sync in (Int8Sync(), Int4Sync()):
+            spec = collective.wire_spec(sync)
+            payload = spec.encode(x)
+            assert payload.dtype == jnp.uint8
+            np.testing.assert_array_equal(
+                np.asarray(spec.decode(payload, x.dtype)),
+                np.asarray(sync.roundtrip(x)))
+
+    def test_cpu_has_no_native_bf16_collective(self):
+        # the CPU backend float-normalizes bf16 collective buffers (the PR 1
+        # negative result) — the probe must say so, keeping the bit-pattern
+        # container in play; single-device hosts trivially have no wire
+        assert collective.native_collective_dtype("bfloat16") is False
+
+
+@multi_device
+class TestLowBitWire:
+    def test_star_wire_flips_f32_to_u8(self, mesh):
+        """The satellite pin, one tier lower than bf16: Int8/Int4Sync x
+        shard_map move a SINGLE u8 collective operand — scales ride inside
+        the payload, no f32 side channel for a compiler pass to re-widen."""
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal((N, 16)), jnp.float32)
+
+        def dtypes(sync):
+            hlo = jax.jit(
+                lambda t: collective.sharded_joint_wire(t, mesh=mesh,
+                                                        sync=sync)
+            ).lower(x).compile().as_text()
+            collective.assert_wire_dtype(
+                hlo, compressed=not isinstance(sync, ExactSync))
+            return {o.operand_dtype
+                    for o in collective.wire_dtype_report(hlo)}
+
+        assert dtypes(ExactSync()) == {"f32"}
+        assert dtypes(Int8Sync()) == {"u8"}
+        assert dtypes(Int4Sync()) == {"u8"}
+
+    def test_wire_roundtrip_matches_host_bitwise(self, mesh):
+        """The mesh wire IS the quantizer: gather-decode must equal the
+        host ``roundtrip`` exactly, so host/mesh trajectory comparisons
+        are about fusion order, never about the codec."""
+        x = jnp.asarray(
+            np.random.default_rng(2).standard_normal((N, 16)) * 5,
+            jnp.float32)
+        for sync in (Int8Sync(), Int4Sync()):
+            out = collective.sharded_joint_wire(x, mesh=mesh, sync=sync)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(sync.roundtrip(x)))
 
 
 # =========================================================================
