@@ -1,0 +1,199 @@
+"""Million-player scaling sweep: the O(d) mean-field wire vs the O(n d) joint.
+
+The headline claim of the `JointView` refactor: with an aggregative game the
+server never has to broadcast the joint action. A
+:class:`~repro.core.engine.MeanFieldView` ships each player ``moments * d``
+scalars per round — *independent of n* — and carries O(d) reference state,
+so the same engine that runs n = 100 runs n = 10^6 on a laptop. Three
+sections:
+
+- ``mean_field``: n from 10^2 to 10^6 at fixed d. Per-player downlink bytes
+  and per-player reference-state bytes must be FLAT in n (asserted in the
+  sweep itself, re-asserted by CI against the committed artifact, and pinned
+  exactly by ``scripts/check_bench_drift.py``).
+- ``exact``: the legacy full-broadcast star at small n — per-player downlink
+  grows linearly in n (n blocks of d scalars each), which is exactly why the
+  exact path stops scaling.
+- ``gap``: what the O(d) summary costs in accuracy. The self-corrected view
+  (exact leave-one-out identity) matches the exact engine's iterate to float
+  reduction order at every overlapping n, while the uncorrected
+  (infinitesimal-player) view converges to the mean-field equilibrium whose
+  distance to the true equilibrium shrinks as O(1/(n-1)) — both the
+  closed-form gap and the converged-run gap are recorded per n and must
+  decrease monotonically.
+
+``python -m benchmarks.bench_scaling --json BENCH_scaling.json`` writes the
+structured artifact; ``scripts/render_experiments.py`` renders it into
+EXPERIMENTS.md (AUTO-BENCH-SCALING).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import stepsize
+from repro.core.engine import MeanFieldView, PearlEngine
+from repro.core.games import make_mean_field_game
+from repro.core.metrics import rounds_to_reach
+
+MF_NS = (100, 1000, 10_000, 100_000, 1_000_000)
+EXACT_NS = (100, 316, 1000)
+D = 8
+TAU = 4
+
+
+def _run(game, view, rounds, *, record_trajectory=False):
+    gamma = stepsize.gamma_constant(game.constants(), TAU)
+    eng = PearlEngine() if view is None else PearlEngine(view=view)
+    return eng.run(game, jnp.zeros((game.n, game.d)), tau=TAU, rounds=rounds,
+                   gamma=gamma, key=jax.random.PRNGKey(0), stochastic=False,
+                   record_trajectory=record_trajectory)
+
+
+def run_mean_field(ns=MF_NS, rounds: int = 30, threshold: float = 1e-3):
+    """The O(d) wire at scale: per-player bytes and state flat in n.
+
+    ``record_trajectory`` stays off (the default): the scan carries one
+    (n, d) iterate and emits O(rounds) scalars, so the n = 10^6 row needs
+    the game + one iterate in memory, never a (rounds, n, d) stack.
+    """
+    view = MeanFieldView()
+    rows = []
+    t0 = time.perf_counter()
+    for n in ns:
+        game = make_mean_field_game(n=n, d=D, heterogeneity=1.0, seed=0)
+        r = _run(game, view, rounds)
+        per_round = r.bytes_up + r.bytes_down
+        rows.append({
+            "n": n,
+            "d": D,
+            "tau": TAU,
+            "rounds": rounds,
+            "bytes_per_round": int(per_round[0]),
+            "bytes_up_per_player": int(r.bytes_up[0]) // n,
+            "bytes_down_per_player": int(r.bytes_down[0]) // n,
+            "ref_state_bytes_per_player":
+                view.ref_scalars_per_player(n, D) * 4,
+            "rounds_to_eq": rounds_to_reach(r.rel_errors, threshold),
+            "final_rel_error": float(r.rel_errors[-1]),
+        })
+    # the scaling claim, asserted at the source: per-player wire and
+    # reference state must not grow with n
+    for f in ("bytes_up_per_player", "bytes_down_per_player",
+              "ref_state_bytes_per_player"):
+        vals = {row[f] for row in rows}
+        assert len(vals) == 1, f"{f} not flat in n: {vals}"
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("scaling_mean_field", us,
+         ";".join(f"n={r['n']}:down/player={r['bytes_down_per_player']}B,"
+                  f"err={r['final_rel_error']:.1e}" for r in rows))
+    return rows
+
+
+def run_exact(ns=EXACT_NS, rounds: int = 30, threshold: float = 1e-3):
+    """The legacy joint broadcast: per-player downlink linear in n."""
+    rows = []
+    t0 = time.perf_counter()
+    for n in ns:
+        game = make_mean_field_game(n=n, d=D, heterogeneity=1.0, seed=0)
+        r = _run(game, None, rounds)
+        per_round = r.bytes_up + r.bytes_down
+        rows.append({
+            "n": n,
+            "d": D,
+            "tau": TAU,
+            "rounds": rounds,
+            "bytes_per_round": int(per_round[0]),
+            "bytes_up_per_player": int(r.bytes_up[0]) // n,
+            "bytes_down_per_player": int(r.bytes_down[0]) // n,
+            "ref_state_bytes_per_player": n * D * 4,
+            "rounds_to_eq": rounds_to_reach(r.rel_errors, threshold),
+            "final_rel_error": float(r.rel_errors[-1]),
+        })
+    downs = [row["bytes_down_per_player"] for row in rows]
+    assert all(a < b for a, b in zip(downs, downs[1:])), \
+        f"exact per-player downlink should grow with n: {downs}"
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("scaling_exact", us,
+         ";".join(f"n={r['n']}:down/player={r['bytes_down_per_player']}B"
+                  for r in rows))
+    return rows
+
+
+def run_gap(ns=EXACT_NS, rounds: int = 400, agree_rounds: int = 40,
+            agree_atol: float = 1e-5):
+    """Accuracy ledger at the overlapping n where both paths run.
+
+    ``closed_form_gap`` is max|x* - x*_mf| from the two float64 solves;
+    ``run_gap`` is the converged uncorrected-view iterate against the exact
+    equilibrium (it finds the mean-field fixed point, so the run gap tracks
+    the closed form); ``corrected_matches_exact`` pins that the
+    self-corrected view reproduces the exact engine's iterate.
+    """
+    rows = []
+    t0 = time.perf_counter()
+    for n in ns:
+        game = make_mean_field_game(n=n, d=D, heterogeneity=1.0, seed=0)
+        x_star = np.asarray(game.equilibrium(), dtype=np.float64)
+        mf_star = np.asarray(game.mean_field_equilibrium(), dtype=np.float64)
+        r_unc = _run(game, MeanFieldView(self_correction=False), rounds)
+        r_cor = _run(game, MeanFieldView(), agree_rounds)
+        r_exact = _run(game, None, agree_rounds)
+        corrected_diff = float(np.abs(
+            np.asarray(r_cor.x_final) - np.asarray(r_exact.x_final)).max())
+        rows.append({
+            "n": n,
+            "d": D,
+            "closed_form_gap": float(np.abs(x_star - mf_star).max()),
+            "run_gap": float(np.abs(
+                np.asarray(r_unc.x_final, dtype=np.float64) - x_star).max()),
+            "corrected_matches_exact": bool(corrected_diff <= agree_atol),
+        })
+    gaps = [row["closed_form_gap"] for row in rows]
+    assert all(a > b for a, b in zip(gaps, gaps[1:])), \
+        f"mean-field gap should shrink with n: {gaps}"
+    assert all(row["corrected_matches_exact"] for row in rows), \
+        "self-corrected view drifted from the exact engine"
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("scaling_gap", us,
+         ";".join(f"n={r['n']}:gap={r['closed_form_gap']:.1e}"
+                  for r in rows))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--rounds", type=int, default=30,
+                        help="rounds for the scaling sweeps (30 reaches the "
+                             "1e-3 neighborhood at every n)")
+    parser.add_argument("--gap-rounds", type=int, default=400,
+                        help="budget for converging the uncorrected view "
+                             "to its mean-field fixed point")
+    parser.add_argument("--threshold", type=float, default=1e-3)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweeps as structured JSON "
+                             "(BENCH_scaling.json convention)")
+    args = parser.parse_args()
+
+    print("name,us_per_call,derived")
+    mf_rows = run_mean_field(rounds=args.rounds, threshold=args.threshold)
+    exact_rows = run_exact(rounds=args.rounds, threshold=args.threshold)
+    gap_rows = run_gap(rounds=args.gap_rounds)
+    if args.json:
+        payload = {"benchmark": "bench_scaling", "mean_field": mf_rows,
+                   "exact": exact_rows, "gap": gap_rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,7 @@ def main() -> None:
         bench_quadratic,
         bench_robot,
         bench_roofline,
+        bench_scaling,
         bench_tuned,
     )
 
@@ -70,6 +71,14 @@ def main() -> None:
         ("collective_parity", lambda: bench_collective.run_parity(
             rounds=100 if FAST else 400)),
         ("roofline", bench_roofline.run),
+        # mean-field scaling: per-player wire/state flat in n up to 10^6
+        # (FAST caps the sweep at 10^5; the full run and the committed
+        # BENCH_scaling.json carry the million-player row)
+        ("scaling", lambda: (
+            bench_scaling.run_mean_field(
+                ns=bench_scaling.MF_NS[:-1] if FAST else bench_scaling.MF_NS),
+            bench_scaling.run_exact(),
+            bench_scaling.run_gap(rounds=200 if FAST else 400))),
     ]
     failures = []
     for name, fn in jobs:

@@ -31,7 +31,12 @@ import argparse
 import json
 import sys
 
-# benchmark name -> list sections: {section: (key_fields, exact_fields)}.
+# benchmark name -> list sections:
+#   {section: (key_fields, exact_fields[, approx_fields])}.
+# ``exact_fields`` must match bit-for-bit (pure accounting arithmetic);
+# ``approx_fields`` are float metrics compared at the --tol relative
+# tolerance (deterministic sweeps, but platform-level float differences
+# legitimately wiggle a converged error in the last digits).
 # ``rounds_to_eq`` and ``diverged`` are handled structurally (see below);
 # fields absent from a row are ignored, so one spec serves all artifacts.
 SPECS = {
@@ -57,6 +62,23 @@ SPECS = {
         "rows": (("sync", "engine"), ("bytes_per_round", "max_staleness")),
         "parity": (("sync",), ("d0_bitwise_equal",)),
         "wire": (("sync",), ("wire_dtypes", "compressed_wire_dtypes")),
+    },
+    # the million-player sweep: every byte/state field is pure accounting
+    # (pinned exactly — per-player flatness in n is the whole claim), while
+    # the converged errors / equilibrium gaps are float metrics checked at
+    # the relative tolerance
+    "bench_scaling": {
+        "mean_field": (("n",),
+                       ("d", "tau", "bytes_per_round",
+                        "bytes_up_per_player", "bytes_down_per_player",
+                        "ref_state_bytes_per_player"),
+                       ("final_rel_error",)),
+        "exact": (("n",),
+                  ("d", "tau", "bytes_per_round", "bytes_up_per_player",
+                   "bytes_down_per_player", "ref_state_bytes_per_player"),
+                  ("final_rel_error",)),
+        "gap": (("n",), ("d", "corrected_matches_exact"),
+                ("closed_form_gap", "run_gap")),
     },
 }
 
@@ -107,7 +129,9 @@ def compare(smoke: dict, committed: dict, tol: float) -> list[str]:
         return [f"no drift spec for benchmark {name!r} — add one to "
                 f"scripts/check_bench_drift.py"]
     errors = []
-    for section, (key_fields, exact_fields) in spec.items():
+    for section, fields_spec in spec.items():
+        key_fields, exact_fields = fields_spec[0], fields_spec[1]
+        approx_fields = fields_spec[2] if len(fields_spec) > 2 else ()
         srows = {_key(r, key_fields): r for r in smoke.get(section, [])}
         crows = {_key(r, key_fields): r for r in committed.get(section, [])}
         if not srows:
@@ -129,6 +153,15 @@ def compare(smoke: dict, committed: dict, tol: float) -> list[str]:
                     errors.append(
                         f"{name}.{section}{key}.{f}: smoke={srow.get(f)!r} "
                         f"!= committed={crow[f]!r}")
+            for f in approx_fields:
+                if f not in crow:
+                    continue
+                s, c = srow.get(f), crow[f]
+                if not isinstance(s, (int, float)) or \
+                        abs(s - c) > tol * max(abs(c), 1e-12):
+                    errors.append(
+                        f"{name}.{section}{key}.{f}: smoke={s!r} outside "
+                        f"{tol:.0%} of committed={c!r}")
             if srow.get("diverged") and not crow.get("diverged", False) \
                     and "diverged" in crow:
                 errors.append(

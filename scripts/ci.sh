@@ -75,3 +75,21 @@ for w in d['wire'] if w['sync'] in ('int8', 'int4')), \
   "$SMOKE_DIR/BENCH_wallclock.json"
 python scripts/check_bench_drift.py \
   "$SMOKE_DIR/BENCH_wallclock.json" BENCH_wallclock.json
+
+# million-player scaling smoke: the n = 10^6 mean-field row must actually
+# run, and its per-player downlink must equal the n = 10^2 row's (the O(d)
+# wire is flat in n — the tentpole claim); the drift check then pins every
+# byte/state field against the committed artifact
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_scaling \
+  --json "$SMOKE_DIR/BENCH_scaling.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+mf = {r['n']: r for r in d['mean_field']}; \
+assert 1000000 in mf, 'n=10^6 mean-field row missing'; \
+assert mf[1000000]['bytes_down_per_player'] \
+== mf[100]['bytes_down_per_player'], 'per-player downlink not flat in n'; \
+assert mf[1000000]['ref_state_bytes_per_player'] \
+== mf[100]['ref_state_bytes_per_player'], 'per-player state not flat in n'; \
+assert d['exact'] and d['gap'], 'empty exact/gap sweep'" \
+  "$SMOKE_DIR/BENCH_scaling.json"
+python scripts/check_bench_drift.py \
+  "$SMOKE_DIR/BENCH_scaling.json" BENCH_scaling.json

@@ -79,14 +79,20 @@ from repro.core.engine import (
     DecentralizedExtragradientUpdate,
     ExactSync,
     JointUpdate,
+    JointView,
     PearlResult,
     PlayerUpdate,
     SgdUpdate,
     SyncStrategy,
+    _SummaryRefGame,
     account_round_bytes,
     as_round_gammas,
     build_round_context,
+    check_summary_view,
     relative_error_curve,
+    relative_error_curve_from_sq,
+    resolve_view,
+    summary_wire,
     validate_round_args,
 )
 from repro.core.game import VectorGame
@@ -303,7 +309,8 @@ class StaleSync(SyncStrategy):
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
                           "max_staleness", "gossip_steps", "policy", "ss_ctx",
-                          "mesh", "mesh_axis", "overlap"))
+                          "mesh", "mesh_axis", "overlap", "view",
+                          "record_trajectory"))
 def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                        delays: Array, key: Array, *, update,
                        sync: SyncStrategy, topology: Topology, tau: int,
@@ -312,7 +319,10 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                        policy: StepsizePolicy = Theorem34Policy(),
                        ss_ctx: RoundContext | None = None,
                        mesh=None, mesh_axis: str = "players",
-                       overlap: bool = False):
+                       overlap: bool = False,
+                       view: JointView | None = None,
+                       record_trajectory: bool = True,
+                       x_star: Array | None = None):
     """One compiled program: rounds-scan with a snapshot ring buffer.
 
     Mirrors the lockstep ``_engine_scan`` op-for-op — same RNG chain, same
@@ -376,13 +386,15 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
         return jax.vmap(local_fn)(jnp.arange(n), player_keys, delay_row,
                                   g_row)
 
-    def tau_local_steps(i, pkey, x_start, x_ref, gamma):
-        state0 = update.init_state(game, i, x_start, x_ref)
+    def tau_local_steps(i, pkey, x_start, x_ref, gamma, game_=game):
+        """``game_`` defaults to the real game (legacy closure binding);
+        the mean-field branch passes the ``_SummaryRefGame`` shim."""
+        state0 = update.init_state(game_, i, x_start, x_ref)
         keys = jax.random.split(pkey, tau)
 
         def step(c, k):
             x_i, st = c
-            x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
+            x_i, st = update.step(game_, i, x_i, x_ref, gamma, k, st,
                                   stochastic)
             return (x_i, st), None
 
@@ -390,6 +402,7 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
         return x_i
 
     use_wire = sync.has_wire_state or mesh is not None
+    mean_field = view is not None and view.summary_based
 
     def star_wire(x_sync, ws):
         """(decoded broadcast, next wire state): what every receiver sees
@@ -405,7 +418,86 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
             ws = sync.post_wire(t, ws)
         return x_wire, ws
 
-    if topology.is_server and overlap:
+    if mean_field:
+        # Mean-field star under staleness: the ring buffer holds past
+        # DECODED summary broadcasts — (depth - 1, moments, d) — instead of
+        # joint snapshots, so the stale-read state stays O(moments * d) per
+        # slot. Self-correction additionally needs each player's own
+        # contribution to the SAME stale population (the leave-one-out
+        # subtraction must remove what the stale summary actually
+        # contains), so a second buffer carries the per-player power sums
+        # at (depth - 1, n, moments, d) — the same order as the exact
+        # path's joint ring buffer. D = 0 carries neither buffer and
+        # compiles the lockstep mean-field program bit-for-bit.
+        moments = view.moments
+        shim = _SummaryRefGame(game)
+
+        def round_body(carry, scan_in):
+            gamma, ridx, delay_row = scan_in
+            if depth == 1:
+                x_sync, key, s, ws = carry
+            elif view.self_correction:
+                buf_pop, buf_pows, x_sync, key, s, ws = carry
+            else:
+                buf_pop, x_sync, key, s, ws = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            del ctx   # mask strategies are rejected for mean-field views
+
+            pop = game.population_summary(x_sync, moments)
+            pop_wire, ws = summary_wire(sync, pop, ws)
+            if depth > 1:
+                full_pop = jnp.concatenate([pop_wire[None], buf_pop])
+                if view.self_correction:
+                    pows_cur = jnp.stack(
+                        [x_sync ** (p + 1) for p in range(moments)], axis=1)
+                    full_pows = jnp.concatenate([pows_cur[None], buf_pows])
+
+            def local(i, pkey, d_i, g_i):
+                own = x_sync[i]
+                pop_d = pop_wire if depth == 1 else full_pop[d_i]
+                if view.self_correction:
+                    own_pows = (jnp.stack(
+                        [own ** (p + 1) for p in range(moments)])
+                        if depth == 1 else full_pows[d_i, i])
+                    summary = (n * pop_d - own_pows) / (n - 1)
+                else:
+                    summary = pop_d
+                return tau_local_steps(i, pkey, own, (own, summary), g_i,
+                                       shim)
+
+            x_next = vmap_players(local, player_keys, delay_row, gamma)
+            participants = jnp.asarray(n, jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator_via_summary(x_next) ** 2))
+            out = (x_next, res, participants, participants)
+            if depth == 1:
+                return (x_next, key, s, ws), out
+            if view.self_correction:
+                return (full_pop[:-1], full_pows[:-1], x_next, key, s,
+                        ws), out
+            return (full_pop[:-1], x_next, key, s, ws), out
+
+        pop0 = game.population_summary(x0, moments)
+        ws0 = sync.init_wire_state(pop0)
+        if depth == 1:
+            init = (x0, key, sync.init_state(), ws0)
+        else:
+            # slots hold what a receiver would have DECODED before round 0
+            slot0 = (sync.roundtrip(pop0) if sync.has_wire_state
+                     else sync.compress(pop0).astype(pop0.dtype))
+            buf_pop0 = jnp.broadcast_to(slot0[None],
+                                        (depth - 1, *slot0.shape))
+            if view.self_correction:
+                pows0 = jnp.stack(
+                    [x0 ** (p + 1) for p in range(moments)], axis=1)
+                buf_pows0 = jnp.broadcast_to(pows0[None],
+                                             (depth - 1, *pows0.shape))
+                init = (buf_pop0, buf_pows0, x0, key, sync.init_state(),
+                        ws0)
+            else:
+                init = (buf_pop0, x0, key, sync.init_state(), ws0)
+    elif topology.is_server and overlap:
         def round_body(carry, scan_in):
             gamma, _, delay_row = scan_in
             g_prev, x_sync, key, s, ws = carry
@@ -606,13 +698,27 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
         init = (Vbuf0, x0, key, sync.init_state())
 
     scan_in = (gammas, jnp.arange(gammas.shape[0]), delays)
-    carry, (xs, residuals, participants, links) = jax.lax.scan(
-        round_body, init, scan_in
+    if record_trajectory:
+        scan_body = round_body
+    else:
+        # identical carried computation; the scan EMITS the per-round
+        # squared error scalar instead of stacking the (n, d) iterate
+        def scan_body(carry, scan_in_r):
+            carry, (x_r, res, p, l) = round_body(carry, scan_in_r)
+            return carry, (jnp.sum((x_r - x_star) ** 2), res, p, l)
+    carry, (ys, residuals, participants, links) = jax.lax.scan(
+        scan_body, init, scan_in
     )
-    # the wire-buffered star case at D = 0 has no leading buffer component
-    x_index = 0 if (topology.is_server and use_wire and not overlap
-                    and depth == 1) else 1
-    return carry[x_index], xs, residuals, participants, links
+    if mean_field:
+        # the summary buffers (and at self-correction the power-sum buffer)
+        # precede x in the carry only at D > 0
+        x_index = 0 if depth == 1 else (2 if view.self_correction else 1)
+    else:
+        # the wire-buffered star case at D = 0 has no leading buffer
+        # component
+        x_index = 0 if (topology.is_server and use_wire and not overlap
+                        and depth == 1) else 1
+    return carry[x_index], ys, residuals, participants, links
 
 
 # =========================================================================
@@ -675,6 +781,11 @@ class AsyncPearlEngine:
     #: ConstantDelay(1)/max_staleness=1 delay model — overlap IS one round
     #: of staleness, and the engine refuses to hide that.
     overlap: bool = False
+    #: reference axis (:class:`~repro.core.engine.JointView`); None keeps
+    #: the legacy topology-decided views. A MeanFieldView runs the O(d)
+    #: summary path with a summary ring buffer (dense summaries only —
+    #: sampled interaction is lockstep-engine territory).
+    view: JointView | None = None
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
@@ -690,8 +801,22 @@ class AsyncPearlEngine:
             return self.sync.inner, self.sync.delays, self.sync.max_staleness
         return self.sync, self.delays, self.max_staleness
 
-    def _check(self) -> tuple[SyncStrategy, DelaySchedule, int]:
+    def _check(
+        self, game: VectorGame | None = None
+    ) -> tuple[SyncStrategy, DelaySchedule, int, JointView]:
         sync, delays, D = self._resolved()
+        view = resolve_view(self.view, self.topology)
+        check_summary_view(view, update=self.update, sync=sync,
+                           mesh=self.mesh, game=game)
+        if view.summary_based and view.sample is not None:
+            raise ValueError(
+                "sampled neighbor reads (MeanFieldView(sample=...)) index "
+                "the live joint snapshot; under staleness every reader "
+                "would need the (depth, n, d) joint ring buffer the "
+                "summary path exists to avoid — use the dense summary "
+                "(sample=None) here, or the lockstep PearlEngine for "
+                "sampled interaction"
+            )
         if D < 0:
             raise ValueError(f"max_staleness must be >= 0, got {D}")
         if self.gossip_steps < 1:
@@ -758,12 +883,13 @@ class AsyncPearlEngine:
             staleness_available=True, staleness_remedy="",
             topology_name=type(self.topology).__name__,
         )
-        return sync, delays, D
+        return sync, delays, D, view
 
-    def _scan(self, game, x0, *, rounds, tau, gamma, key, stochastic):
+    def _scan(self, game, x0, *, rounds, tau, gamma, key, stochastic,
+              record_trajectory=True, x_star=None):
         if key is None:
             key = jax.random.PRNGKey(0)
-        sync, delays, D = self._check()
+        sync, delays, D, view = self._check(game)
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         table = draw_delay_table(delays, rounds, x0.shape[0], D)
@@ -780,8 +906,9 @@ class AsyncPearlEngine:
             tau=tau, stochastic=stochastic, max_staleness=D,
             gossip_steps=self.gossip_steps, policy=policy, ss_ctx=ss_ctx,
             mesh=self.mesh, mesh_axis=self.mesh_axis, overlap=self.overlap,
+            view=view, record_trajectory=record_trajectory, x_star=x_star,
         )
-        return sync, table, outs
+        return sync, view, table, outs
 
     def run(
         self,
@@ -794,36 +921,48 @@ class AsyncPearlEngine:
         key: Array | None = None,
         stochastic: bool = True,
         x_star: Array | None = None,
+        record_trajectory: bool = False,
     ) -> AsyncPearlResult:
         """Run ``rounds`` asynchronous rounds and record diagnostics.
 
-        Same contract as :meth:`repro.core.engine.PearlEngine.run`; the
-        result additionally carries the realized staleness table. Byte
-        accounting is identical to the lockstep engine's — staleness delays
-        arrival, not transmission — so sync-vs-async byte comparisons at
-        matched ``tau`` are direct.
+        Same contract as :meth:`repro.core.engine.PearlEngine.run`
+        (including ``record_trajectory``); the result additionally carries
+        the realized staleness table. Byte accounting is identical to the
+        lockstep engine's — staleness delays arrival, not transmission — so
+        sync-vs-async byte comparisons at matched ``tau`` are direct.
         """
         if x_star is None:
             x_star = game.equilibrium()
-        sync, table, (x_final, xs, residuals, participants, links) = \
+        sync, view, table, (x_final, ys, residuals, participants, links) = \
             self._scan(game, x0, rounds=rounds, tau=tau, gamma=gamma,
-                       key=key, stochastic=stochastic)
-        res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
+                       key=key, stochastic=stochastic,
+                       record_trajectory=record_trajectory,
+                       x_star=None if record_trajectory else x_star)
+        if view.summary_based:
+            res0 = jnp.sqrt(jnp.sum(game.operator_via_summary(x0) ** 2))
+        else:
+            res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
         n, d = x0.shape
         bytes_up, bytes_down = account_round_bytes(
             update=self.update, sync=sync, topology=self.topology,
             gossip_steps=self.gossip_steps, participants=participants,
             links=links, n=n, d=d,
             base_bps=int(np.dtype(x0.dtype).itemsize), rounds=rounds,
+            view=view,
         )
+        if record_trajectory:
+            rel_errors = relative_error_curve(x0, x_star, ys)
+        else:
+            rel_errors = relative_error_curve_from_sq(x0, x_star, ys)
         return AsyncPearlResult(
             x_final=x_final,
-            rel_errors=relative_error_curve(x0, x_star, xs),
+            rel_errors=rel_errors,
             residuals=np.concatenate([[float(res0)], np.asarray(residuals)]),
             tau=tau,
             rounds=rounds,
             bytes_up=bytes_up,
             bytes_down=bytes_down,
+            xs=ys if record_trajectory else None,
             staleness=table,
         )
 
@@ -839,9 +978,9 @@ class AsyncPearlEngine:
         stochastic: bool = True,
     ) -> Array:
         """Raw per-round iterates ``(rounds, n, d)`` — no equilibrium needed."""
-        _, _, (_, xs, _, _, _) = self._scan(
+        _, _, _, (_, xs, _, _, _) = self._scan(
             game, x0, rounds=rounds, tau=tau, gamma=gamma, key=key,
-            stochastic=stochastic,
+            stochastic=stochastic, record_trajectory=True,
         )
         return xs
 

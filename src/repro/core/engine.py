@@ -119,6 +119,12 @@ class PearlResult:
     rounds: int
     bytes_up: np.ndarray | None = None    # (R,) uplink bytes per round
     bytes_down: np.ndarray | None = None  # (R,) downlink bytes per round
+    #: full (rounds, n, d) per-round iterates — populated only when ``run``
+    #: is called with ``record_trajectory=True``; the default run carries
+    #: O(rounds) error scalars through the scan instead of materializing
+    #: the trajectory (a rounds x n x d tensor is the dominant memory term
+    #: at large n, and error curves never needed it)
+    xs: Array | None = None
 
     @property
     def iterations(self) -> int:
@@ -171,6 +177,24 @@ def relative_error_curve(x0: Array, x_star: Array, xs: Array) -> np.ndarray:
     return np.concatenate([[first], np.asarray(errs)])
 
 
+def relative_error_curve_from_sq(x0: Array, x_star: Array,
+                                 err_sq: Array) -> np.ndarray:
+    """:func:`relative_error_curve` from in-scan ``(R,)`` squared errors.
+
+    The ``record_trajectory=False`` path computes ``||x_r - x*||^2`` inside
+    the rounds-scan (O(rounds) scalars instead of a ``(rounds, n, d)``
+    stacked trajectory) and this helper applies the same guarded
+    normalization the trajectory-based curve uses — including the
+    at-equilibrium fallback to absolute errors.
+    """
+    init_err_sq = jnp.sum((x0 - x_star) ** 2)
+    at_equilibrium = not bool(init_err_sq > 0.0)
+    denom = 1.0 if at_equilibrium else init_err_sq
+    errs = jnp.asarray(err_sq) / denom
+    first = 0.0 if at_equilibrium else 1.0
+    return np.concatenate([[first], np.asarray(errs)])
+
+
 def account_round_bytes(
     *,
     update,
@@ -183,6 +207,7 @@ def account_round_bytes(
     d: int,
     base_bps: int,
     rounds: int,
+    view: "JointView | None" = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Per-round (uplink, downlink) byte arrays for one engine run.
 
@@ -190,6 +215,13 @@ def account_round_bytes(
     ``links`` directed-edge counts) turn into wire bytes, shared by the
     lockstep and the bounded-staleness engines — staleness delays *arrival*,
     it never changes what the wire moved.
+
+    A summary-based ``view`` (:class:`MeanFieldView`) changes the downlink
+    honestly: each participant still uploads its ``d``-block exact, but
+    downloads only the ``moments`` summary blocks at the wire dtype (plus
+    one scale per summary block for low-bit wires) — O(d) per player per
+    round, flat in ``n``. The sampled mode bills identically: a player's
+    personalized summary is still ``moments`` blocks on the wire.
     """
     parts = np.asarray(participants, dtype=np.int64)
     if isinstance(update, JointUpdate):
@@ -198,6 +230,17 @@ def account_round_bytes(
         )
         return (update.syncs_per_round * per_sync_up,
                 update.syncs_per_round * per_sync_down)
+    if view is not None and view.summary_based:
+        up_item, down_item = direction_itemsizes(sync, base_bps,
+                                                 compressed="down")
+        up, down = star_round_bytes(
+            parts, n=n, block_scalars=d, up_itemsize=up_item,
+            down_itemsize=down_item, down_blocks=view.moments,
+        )
+        overhead = getattr(sync, "wire_overhead_bytes_per_block", 0)
+        if overhead:
+            down = down + parts * view.moments * overhead
+        return up, down
     if topology.is_server:
         return sync.round_bytes(parts, n, d, base_bps)
     # Edge-aware: each directed active link carries one view-relay message
@@ -895,18 +938,297 @@ class DropoutSync(_RandomizedSync):
 
 
 # =========================================================================
+# JointView protocol — what player i sees of the population each round
+# =========================================================================
+class JointView(abc.ABC):
+    """The REFERENCE axis of a round: what player ``i`` optimizes against.
+
+    Every PEARL round has the same skeleton — tau local steps against a
+    frozen reference, then an exchange that refreshes the reference — and
+    the engines historically hard-wired two reference shapes to the
+    topology: the star broadcast (every player reads the server's joint
+    snapshot) and the gossip per-player views. ``JointView`` names that
+    axis explicitly so both become instances of one abstraction and a third
+    can exist: :class:`MeanFieldView`, where a player's reference is an
+    O(d) tensor of population moments instead of the ``(n, d)`` joint —
+    the mean-field structural win (*Federated Learning as a Mean-Field
+    Game*, PAPERS.md) that makes per-player state, compute, and wire flat
+    in ``n``.
+
+    Views are frozen hashable dataclasses (jit static arguments) and carry
+    no array state — the scan owns the reference tensors; the view decides
+    their SHAPE and semantics. ``ref_scalars_per_player`` is the honest
+    size of what one player holds/receives per round (the scaling
+    benchmark's per-player memory column); ``summary_based`` is the
+    trace-time dispatch bit.
+    """
+
+    name: str = "view"
+    #: True when the per-player reference is an O(d) population summary
+    #: rather than (a view of) the full (n, d) joint action
+    summary_based: bool = False
+
+    @abc.abstractmethod
+    def ref_scalars_per_player(self, n: int, d: int) -> int:
+        """Scalars of reference state one player reads each round."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StarView(JointView):
+    """The paper's server broadcast: every player reads the full joint
+    snapshot (its own row kept live) — the bit-for-bit legacy star path,
+    now named. Requires a server topology. O(n d) per player."""
+
+    name: str = "star"
+
+    def ref_scalars_per_player(self, n, d):
+        return n * d
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipView(JointView):
+    """Server-free per-player views: player ``i`` carries a full ``(n, d)``
+    estimate of the joint action, refreshed by anchored neighbor averaging
+    — the decentralized-VI path, unchanged. Requires a graph topology.
+    O(n d) per player."""
+
+    name: str = "gossip"
+
+    def ref_scalars_per_player(self, n, d):
+        return n * d
+
+
+@dataclasses.dataclass(frozen=True)
+class MeanFieldView(JointView):
+    """O(d) references: players best-respond to population moments.
+
+    The server maintains the ``(moments, d)`` population sufficient
+    statistics of the joint action (row ``p`` = ``mean_i (x^i)**(p+1)``;
+    see :class:`repro.core.game.AggregativeGame`) and broadcasts THAT — the
+    wire and each player's reference are ``moments * d`` scalars regardless
+    of ``n``. Requires the server topology (the summary is one maintained
+    tensor, the star's defining property) and an
+    :class:`~repro.core.game.AggregativeGame` (a game whose coupling
+    genuinely factors through the moments — the engine cannot check the
+    math, only the contract).
+
+    ``self_correction=True`` (default) applies the exact leave-one-out
+    identity ``mean_{j!=i} (x^j)**p = (n * pop_p - (x^i)**p) / (n - 1)``
+    to each player's read, so for a true aggregative game the summary path
+    follows the exact engine to reduction-order ULPs at ANY n.
+    ``self_correction=False`` is the infinitesimal-player idealization
+    (every player reads the raw population moments, own contribution
+    included): per-player error O(beta * heterogeneity / (n - 1)), the gap
+    the scaling benchmark measures shrinking with n.
+
+    ``sample=k`` replaces the dense summary with per-round resampled
+    neighbor subsets: player ``i`` reads the moments of ``k`` opponents
+    drawn uniformly WITH replacement from the other ``n - 1`` players (the
+    finite-n sampled-interaction correction, generalizing per-round
+    Erdos-Renyi rounds to the summary path). Draws come from the fold-in
+    key hierarchy ``fold_in(fold_in(PRNGKey(seed), round), player)`` —
+    round r's subsets are derivable without replaying rounds ``0..r-1``,
+    the same per-round hierarchy discipline as
+    :class:`repro.core.topology.ResampledErdosRenyi`, and independent of
+    the sampling-noise key chain. Sampled subsets exclude the reader by
+    construction, so the leave-one-out correction is built in and
+    ``self_correction`` is ignored.
+    """
+
+    moments: int = 1
+    self_correction: bool = True
+    sample: int | None = None
+    seed: int = 0
+    name: str = "mean_field"
+    summary_based = True
+
+    def __post_init__(self):
+        if self.moments not in (1, 2):
+            raise ValueError(
+                f"MeanFieldView.moments must be 1 (opponent mean) or 2 "
+                f"(+ mean of squares), got {self.moments}"
+            )
+        if self.sample is not None and self.sample < 1:
+            raise ValueError(
+                f"MeanFieldView.sample must be >= 1 (or None for the dense "
+                f"summary), got {self.sample}"
+            )
+
+    def ref_scalars_per_player(self, n, d):
+        del n
+        return self.moments * d
+
+
+def resolve_view(view: JointView | None, topology: Topology) -> JointView:
+    """Resolve the engine's ``view`` argument against its topology.
+
+    ``None`` keeps the legacy behavior — the topology decides:
+    :class:`StarView` under a server, :class:`GossipView` on a graph.
+    Explicit views are checked for topology compatibility here (the
+    summary-specific composition rules live in the engines' checks).
+    """
+    if view is None:
+        return StarView() if topology.is_server else GossipView()
+    if isinstance(view, StarView) and not topology.is_server:
+        raise ValueError(
+            f"StarView is the server broadcast; got the server-free "
+            f"{type(topology).__name__} — use GossipView (or view=None)"
+        )
+    if isinstance(view, GossipView) and topology.is_server:
+        raise ValueError(
+            f"GossipView relays per-player views over graph edges; the "
+            f"{type(topology).__name__} server has none — use StarView "
+            f"(or view=None)"
+        )
+    if view.summary_based and not topology.is_server:
+        raise ValueError(
+            f"MeanFieldView is a server-maintained O(d) summary broadcast; "
+            f"{type(topology).__name__} gossip relays (n, d) views with no "
+            f"single summary owner — use the Star topology (sampled "
+            f"interaction is MeanFieldView(sample=k), not a graph)"
+        )
+    return view
+
+
+def check_summary_view(view: JointView, *, update, sync: SyncStrategy,
+                       mesh, game: VectorGame | None = None) -> None:
+    """The mean-field composition rules, shared by both engines — every
+    axis whose semantics a summary reference would silently change is
+    rejected loudly. No-op for full-joint views."""
+    if not view.summary_based:
+        return
+    from repro.core.game import AggregativeGame
+
+    if isinstance(update, JointUpdate):
+        raise ValueError(
+            f"{type(update).__name__} owns the whole within-round "
+            f"computation on the replicated (n, d) joint action; "
+            f"MeanFieldView never materializes a broadcast joint for it "
+            f"to read — joint baselines require the star's full "
+            f"broadcast (view=None)"
+        )
+    if isinstance(update, DecentralizedExtragradientUpdate):
+        raise ValueError(
+            f"{type(update).__name__} interleaves gossip mixing "
+            f"sweeps between its phases and MeanFieldView has no views "
+            f"to mix — use sgd/extragradient/optimistic_gradient/"
+            f"heavy_ball locals with the summary reference"
+        )
+    if sync.uses_mask:
+        raise ValueError(
+            f"{type(sync).__name__} draws a per-round participation "
+            f"mask, and a population summary over a PARTIAL population "
+            f"silently changes what 'mean_i x^i' means to every reader — "
+            f"mean-field views support full-participation strategies "
+            f"only (use the exact/quantized/low-bit wires)"
+        )
+    if mesh is not None:
+        raise ValueError(
+            "mesh lowering gathers the full (n, d) joint across the "
+            "player axis (sharded_joint_wire) — the exact O(n d) wire "
+            "MeanFieldView exists to avoid; the summary broadcast is "
+            "O(d) and needs no collective lowering, run it with "
+            "mesh=None"
+        )
+    if sync.has_wire_state and view.sample is not None:
+        raise ValueError(
+            f"{type(sync).__name__} banks an error-feedback "
+            f"residual against the ONE broadcast summary; sampled "
+            f"interaction (sample={view.sample}) gives every player a "
+            f"personalized summary with no single wire tensor — use "
+            f"error_feedback=False or the dense summary (sample=None)"
+        )
+    if game is not None:
+        if not isinstance(game, AggregativeGame):
+            raise ValueError(
+                f"MeanFieldView needs an AggregativeGame (a coupling "
+                f"that factors through population moments — "
+                f"player_grad_summary); {type(game).__name__} only "
+                f"exposes the full-joint oracle, and evaluating it at a "
+                f"summary would silently compute a different game"
+            )
+        if view.moments < game.summary_moments:
+            raise ValueError(
+                f"{type(game).__name__}.player_grad_summary consumes "
+                f"{game.summary_moments} opponent moments but the view "
+                f"maintains only {view.moments} — use MeanFieldView("
+                f"moments={game.summary_moments})"
+            )
+        if view.sample is not None and view.sample > game.n - 1:
+            raise ValueError(
+                f"MeanFieldView.sample={view.sample} exceeds the "
+                f"{game.n - 1} opponents a player can draw from"
+            )
+
+
+class _SummaryRefGame:
+    """Pytree shim routing the PlayerUpdate oracle calls to the summary API.
+
+    The update rules pass ``x_ref`` OPAQUELY from the engine to
+    ``game.player_grad(_stoch)``, so the mean-field scan can hand them a
+    ``(own_ref, summary)`` pair instead of the ``(n, d)`` joint and wrap
+    the game in this shim — every existing :class:`PlayerUpdate`
+    (sgd/extragradient/optimistic/heavy-ball) then runs unchanged on O(d)
+    references, including :class:`OptimisticGradientUpdate`'s
+    deterministic-gradient state init.
+    """
+
+    __slots__ = ("inner",)
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def player_grad(self, i, x_i, ref):
+        own_ref, summary = ref
+        return self.inner.player_grad_summary(i, x_i, own_ref, summary)
+
+    def player_grad_stoch(self, i, x_i, ref, key):
+        own_ref, summary = ref
+        return self.inner.player_grad_stoch_summary(i, x_i, own_ref,
+                                                    summary, key)
+
+
+jax.tree_util.register_pytree_node(
+    _SummaryRefGame,
+    lambda g: ((g.inner,), None),
+    lambda aux, children: _SummaryRefGame(children[0]),
+)
+
+
+def summary_wire(sync: SyncStrategy, pop: Array, ws):
+    """(decoded summary, next wire state): what players read after the wire.
+
+    THE one place the mean-field engines apply a sync strategy to the
+    ``(moments, d)`` summary tensor — compression acts on the O(d) summary,
+    never the joint. Stateless strategies use the gossip wire idiom
+    ``compress(pop)`` re-widened to the compute dtype (bf16 round-trip for
+    :class:`QuantizedSync`, quantize-dequantize for stateless low-bit,
+    identity for :class:`ExactSync`); error-feedback strategies run their
+    ``pre_wire -> roundtrip -> post_wire`` chain with the residual banked
+    against the summary (an O(d) residual — the wire state scales with the
+    summary, not the population).
+    """
+    if sync.has_wire_state:
+        t = sync.pre_wire(pop, ws)
+        return sync.roundtrip(t), sync.post_wire(t, ws)
+    return sync.compress(pop).astype(pop.dtype), ws
+
+
+# =========================================================================
 # The engine
 # =========================================================================
 @partial(jax.jit,
          static_argnames=("update", "sync", "topology", "tau", "stochastic",
                           "gossip_steps", "policy", "ss_ctx", "mesh",
-                          "mesh_axis"))
+                          "mesh_axis", "view", "record_trajectory"))
 def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                  update, sync: SyncStrategy, topology: Topology, tau: int,
                  stochastic: bool, gossip_steps: int = 1,
                  policy: StepsizePolicy = Theorem34Policy(),
                  ss_ctx: RoundContext | None = None,
-                 mesh=None, mesh_axis: str = "players"):
+                 mesh=None, mesh_axis: str = "players",
+                 view: JointView | None = None,
+                 record_trajectory: bool = True, x_star: Array | None = None):
     """One compiled program: rounds-scan over (local phase -> synchronize).
 
     RNG chain (bit-compatible with the legacy loops): per round
@@ -928,9 +1250,23 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
     branches at trace time and compiles the identical legacy program — the
     bit-for-bit pin discipline.
 
-    Returns ``(x_final, xs, residuals, participants, links)`` where ``links``
-    is the per-round wire-message count (server messages under star, directed
-    active edges under gossip) feeding the edge-aware byte accounting.
+    ``view`` selects the reference axis (:class:`JointView`): ``None`` (or
+    the matching :class:`StarView`/:class:`GossipView`) compiles the legacy
+    topology-decided program unchanged; a :class:`MeanFieldView` runs the
+    O(d) summary branch, where the only broadcast tensor is the
+    ``(moments, d)`` population moments and compression applies to THAT.
+
+    ``record_trajectory=False`` replaces the stacked ``(rounds, n, d)``
+    trajectory output with in-scan squared errors ``||x_r - x*||^2``
+    against the traced ``x_star`` — O(rounds) scalars, the only memory
+    shape that survives million-player runs. The carried round bodies are
+    identical either way; only the scan's emitted outputs change.
+
+    Returns ``(x_final, ys, residuals, participants, links)`` where ``ys``
+    is the stacked trajectory (``record_trajectory=True``) or the per-round
+    squared error scalars, and ``links`` is the per-round wire-message
+    count (server messages under star, directed active edges under gossip)
+    feeding the edge-aware byte accounting.
     """
     from repro.core import collective
 
@@ -950,14 +1286,19 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                 jnp.arange(n), player_keys)
         return jax.vmap(local_fn)(jnp.arange(n), player_keys, g_row)
 
-    def tau_local_steps(i, pkey, x_start, x_ref, gamma):
-        """tau local steps for player i against the frozen reference view."""
-        state0 = update.init_state(game, i, x_start, x_ref)
+    def tau_local_steps(i, pkey, x_start, x_ref, gamma, game_=game):
+        """tau local steps for player i against the frozen reference view.
+
+        ``game_`` defaults to the real game (the legacy program, closure
+        binding unchanged); the mean-field branch passes the
+        :class:`_SummaryRefGame` shim so the same update rules run on
+        ``(own_ref, summary)`` references."""
+        state0 = update.init_state(game_, i, x_start, x_ref)
         keys = jax.random.split(pkey, tau)
 
         def step(c, k):
             x_i, st = c
-            x_i, st = update.step(game, i, x_i, x_ref, gamma, k, st,
+            x_i, st = update.step(game_, i, x_i, x_ref, gamma, k, st,
                                   stochastic)
             return (x_i, st), None
 
@@ -977,6 +1318,72 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
             return (x_next, keys[0], s), (x_next, res, full, full)
 
         init = (x0, key, sync.init_state())
+    elif view is not None and view.summary_based:
+        # Mean-field star: the server maintains the (moments, d) population
+        # sufficient statistics — the ONE tensor on the wire. Per-player
+        # reference, compute, and wire are O(moments * d) regardless of n;
+        # the joint action itself exists only as the (n, d) scan carry (one
+        # row per player — each player owns O(d) of it). Residuals go
+        # through the game's O(n d) summary-corrected operator, never the
+        # O(n^2 d) vmapped full-joint oracle.
+        moments = view.moments
+        shim = _SummaryRefGame(game)
+
+        def round_body(carry, scan_in):
+            gamma, ridx = scan_in
+            x_sync, key, s, ws = carry
+            key, sub = jax.random.split(key)
+            player_keys = jax.random.split(sub, n)
+            s, ctx = sync.pre_round(s)
+            del ctx   # mask strategies are rejected for mean-field views
+
+            if view.sample is None:
+                pop = game.population_summary(x_sync, moments)
+                pop_wire, ws = summary_wire(sync, pop, ws)
+
+                def local(i, pkey, g_i):
+                    own = x_sync[i]
+                    if view.self_correction:
+                        # exact leave-one-out moments from the population
+                        # moments and the player's own contribution
+                        own_pows = jnp.stack(
+                            [own ** (p + 1) for p in range(moments)])
+                        summary = (n * pop_wire - own_pows) / (n - 1)
+                    else:
+                        summary = pop_wire
+                    return tau_local_steps(i, pkey, own, (own, summary),
+                                           g_i, shim)
+            else:
+                # per-round resampled neighbor subsets from one fold-in key
+                # hierarchy (seed -> round -> player): reproducible without
+                # replaying earlier rounds, independent of the sampling-
+                # noise chain. Offsets in [1, n-1] exclude the reader, so
+                # the leave-one-out correction is built in.
+                round_key = jax.random.fold_in(
+                    jax.random.PRNGKey(view.seed), ridx)
+
+                def local(i, pkey, g_i):
+                    own = x_sync[i]
+                    k_i = jax.random.fold_in(round_key, i)
+                    offs = jax.random.randint(k_i, (view.sample,), 1, n)
+                    nbrs = x_sync[jnp.mod(i + offs, n)]
+                    summary = jnp.stack(
+                        [jnp.mean(nbrs ** (p + 1), axis=0)
+                         for p in range(moments)])
+                    # per-player summaries have no single wire tensor, so
+                    # only stateless compression composes (EF is rejected)
+                    summary = sync.compress(summary).astype(summary.dtype)
+                    return tau_local_steps(i, pkey, own, (own, summary),
+                                           g_i, shim)
+
+            x_next = vmap_players(local, player_keys, gamma)
+            participants = jnp.asarray(n, jnp.int32)
+            res = jnp.sqrt(jnp.sum(game.operator_via_summary(x_next) ** 2))
+            return (x_next, key, s, ws), (x_next, res, participants,
+                                          participants)
+
+        init = (x0, key, sync.init_state(),
+                sync.init_wire_state(game.population_summary(x0, moments)))
     elif topology.is_server:
         def round_body(carry, scan_in):
             gamma, _ = scan_in
@@ -1147,11 +1554,19 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
 
     gossip = not (isinstance(update, JointUpdate) or topology.is_server)
     scan_in = (gammas, jnp.arange(gammas.shape[0]))
-    carry, (xs, residuals, participants, links) = jax.lax.scan(
-        round_body, init, scan_in
+    if record_trajectory:
+        scan_body = round_body
+    else:
+        # identical carried computation; the scan EMITS the per-round
+        # squared error scalar instead of stacking the (n, d) iterate
+        def scan_body(carry, scan_in_r):
+            carry, (x_r, res, p, l) = round_body(carry, scan_in_r)
+            return carry, (jnp.sum((x_r - x_star) ** 2), res, p, l)
+    carry, (ys, residuals, participants, links) = jax.lax.scan(
+        scan_body, init, scan_in
     )
     x_final = carry[1] if gossip else carry[0]
-    return x_final, xs, residuals, participants, links
+    return x_final, ys, residuals, participants, links
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1186,6 +1601,10 @@ class PearlEngine:
     policy: StepsizePolicy | str | None = None   # None = Theorem34Policy()
     mesh: Any = None        # jax.sharding.Mesh with the player axis, or None
     mesh_axis: str = "players"
+    #: reference axis (JointView). None = the topology decides (StarView
+    #: under a server, GossipView on a graph — the legacy programs,
+    #: bit-for-bit). MeanFieldView runs the O(d) summary path.
+    view: JointView | None = None
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
@@ -1202,7 +1621,10 @@ class PearlEngine:
             return None
         return build_round_context(game, self.topology, tau=tau)
 
-    def _check_topology(self):
+    def _check_topology(self, game: VectorGame | None = None) -> JointView:
+        view = resolve_view(self.view, self.topology)
+        check_summary_view(view, update=self.update, sync=self.sync,
+                           mesh=self.mesh, game=game)
         if self.gossip_steps < 1:
             raise ValueError(f"gossip_steps must be >= 1, got {self.gossip_steps}")
         if getattr(self.sync, "requires_async", False):
@@ -1283,6 +1705,7 @@ class PearlEngine:
                     f"billing would silently fall back to ExactSync bytes — "
                     f"joint baselines support only sync=ExactSync()"
                 )
+        return view
 
     def run(
         self,
@@ -1295,6 +1718,7 @@ class PearlEngine:
         key: Array | None = None,
         stochastic: bool = True,
         x_star: Array | None = None,
+        record_trajectory: bool = False,
     ) -> PearlResult:
         """Run ``rounds`` synchronization rounds and record diagnostics.
 
@@ -1311,23 +1735,33 @@ class PearlEngine:
           stochastic: use the players' stochastic oracles or full gradients.
           x_star:     equilibrium for error tracking; defaults to
                       ``game.equilibrium()``.
+          record_trajectory: materialize the full ``(rounds, n, d)``
+                      trajectory on :attr:`PearlResult.xs` (the legacy
+                      behavior, bit-for-bit pinned). The default carries
+                      only O(rounds) error scalars through the scan — the
+                      memory shape that survives million-player runs.
         """
         if key is None:
             key = jax.random.PRNGKey(0)
         if x_star is None:
             x_star = game.equilibrium()
-        self._check_topology()
+        view = self._check_topology(game)
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         policy = self._resolved_policy()
-        x_final, xs, residuals, participants, links = _engine_scan(
+        x_final, ys, residuals, participants, links = _engine_scan(
             game, x0, gammas, key,
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
             policy=policy, ss_ctx=self._context_for(policy, game, tau),
-            mesh=self.mesh, mesh_axis=self.mesh_axis,
+            mesh=self.mesh, mesh_axis=self.mesh_axis, view=view,
+            record_trajectory=record_trajectory,
+            x_star=None if record_trajectory else x_star,
         )
-        res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
+        if view.summary_based:
+            res0 = jnp.sqrt(jnp.sum(game.operator_via_summary(x0) ** 2))
+        else:
+            res0 = jnp.sqrt(jnp.sum(game.operator(x0) ** 2))
 
         n, d = x0.shape
         bytes_up, bytes_down = account_round_bytes(
@@ -1335,16 +1769,22 @@ class PearlEngine:
             gossip_steps=self.gossip_steps, participants=participants,
             links=links, n=n, d=d,
             base_bps=int(np.dtype(x0.dtype).itemsize), rounds=rounds,
+            view=view,
         )
 
+        if record_trajectory:
+            rel_errors = relative_error_curve(x0, x_star, ys)
+        else:
+            rel_errors = relative_error_curve_from_sq(x0, x_star, ys)
         return PearlResult(
             x_final=x_final,
-            rel_errors=relative_error_curve(x0, x_star, xs),
+            rel_errors=rel_errors,
             residuals=np.concatenate([[float(res0)], np.asarray(residuals)]),
             tau=1 if isinstance(self.update, JointUpdate) else tau,
             rounds=rounds,
             bytes_up=bytes_up,
             bytes_down=bytes_down,
+            xs=ys if record_trajectory else None,
         )
 
     def trajectory(
@@ -1365,7 +1805,7 @@ class PearlEngine:
         """
         if key is None:
             key = jax.random.PRNGKey(0)
-        self._check_topology()
+        view = self._check_topology(game)
         validate_round_args(tau, rounds)
         gammas = as_round_gammas(gamma, rounds)
         policy = self._resolved_policy()
@@ -1374,7 +1814,8 @@ class PearlEngine:
             update=self.update, sync=self.sync, topology=self.topology,
             tau=tau, stochastic=stochastic, gossip_steps=self.gossip_steps,
             policy=policy, ss_ctx=self._context_for(policy, game, tau),
-            mesh=self.mesh, mesh_axis=self.mesh_axis,
+            mesh=self.mesh, mesh_axis=self.mesh_axis, view=view,
+            record_trajectory=True,
         )
         return xs
 
@@ -1438,4 +1879,10 @@ SYNC_STRATEGIES: dict[str, Callable[[], SyncStrategy]] = {
     "int4": Int4Sync,
     "partial": PartialParticipation,
     "dropout": DropoutSync,
+}
+
+JOINT_VIEWS: dict[str, Callable[[], JointView]] = {
+    "star": StarView,
+    "gossip": GossipView,
+    "mean_field": MeanFieldView,
 }

@@ -127,6 +127,90 @@ class VectorGame(abc.ABC):
         raise NotImplementedError
 
 
+class AggregativeGame(VectorGame):
+    """A game whose coupling factors through population moments (aggregative).
+
+    Player ``i``'s gradient depends on the opponents ``x^{-i}`` only through
+    aggregate sufficient statistics — the opponent mean, optionally the
+    opponent mean-of-squares — so a player can best-respond to an O(d)
+    summary instead of the full ``(n, d)`` joint action. This is the
+    structural property the engine's
+    :class:`~repro.core.engine.MeanFieldView` exploits to run millions of
+    players at O(d) per-player state and wire (cf. *Federated Learning as a
+    Mean-Field Game*, PAPERS.md).
+
+    The summary convention, shared with the engine: a ``(moments, d)``
+    array whose row 0 is the (believed) opponent mean
+    ``mean_{j != i} x^j`` and row 1 (when ``summary_moments >= 2``) the
+    opponent mean of squares ``mean_{j != i} (x^j)**2``. Whether those rows
+    are the exact leave-one-out moments, the population moments (the
+    infinitesimal-player approximation), or a sampled-subset estimate is the
+    VIEW's choice, not the game's — the game just evaluates the gradient at
+    whatever belief it is handed.
+
+    Subclasses must keep :meth:`VectorGame.player_grad` (the full-joint
+    contract) consistent with :meth:`player_grad_summary` under the exact
+    leave-one-out summary: that consistency is what makes the mean-field
+    engine's self-corrected path agree with the exact engine to reduction-
+    order ULPs (pinned in tests/test_meanfield.py).
+    """
+
+    #: how many opponent moments :meth:`player_grad_summary` consumes
+    summary_moments: int = 1
+
+    @abc.abstractmethod
+    def player_grad_summary(
+        self, i: Array, x_i: Array, own_ref: Array, summary: Array
+    ) -> Array:
+        """``grad_{x^i} f_i`` from the O(d) opponent summary.
+
+        Args:
+          i:        player index (traced; usable under vmap).
+          x_i:      player ``i``'s current local action, shape ``(d,)``.
+          own_ref:  player ``i``'s own frozen block at the last sync,
+                    shape ``(d,)`` (what the summary's owner contributed).
+          summary:  ``(moments, d)`` believed opponent moments (row 0 the
+                    opponent mean; see class docstring).
+        """
+
+    def player_grad_stoch_summary(
+        self, i: Array, x_i: Array, own_ref: Array, summary: Array, key: Array
+    ) -> Array:
+        """Unbiased stochastic estimate of :meth:`player_grad_summary`.
+
+        Default: the deterministic summary gradient (``sigma_i = 0``)."""
+        del key
+        return self.player_grad_summary(i, x_i, own_ref, summary)
+
+    def population_summary(self, x: Array, moments: int) -> Array:
+        """``(moments, d)`` population sufficient statistics of the joint
+        action — the O(d) object the mean-field server maintains and
+        broadcasts. Row ``p`` is ``mean_i (x^i)**(p+1)``."""
+        return jnp.stack(
+            [jnp.mean(x ** (p + 1), axis=0) for p in range(moments)]
+        )
+
+    def operator_via_summary(self, x: Array) -> Array:
+        """Joint operator evaluated through the summary oracle, O(n d).
+
+        Uses the EXACT leave-one-out correction
+        ``mean_{j != i} (x^j)**p = (n * mean_k (x^k)**p - (x^i)**p) / (n-1)``,
+        so for a true aggregative game this equals :meth:`operator` up to
+        reduction order — at O(n d) instead of the O(n^2 d) of vmapping the
+        full-joint oracle. The mean-field engine uses this for residual
+        diagnostics at million-player n.
+        """
+        n = self.n
+        moments = self.summary_moments
+        pop = self.population_summary(x, moments)            # (m, d)
+        powers = jnp.stack([x ** (p + 1) for p in range(moments)], axis=1)
+        others = (n * pop[None] - powers) / (n - 1)          # (n, m, d)
+        idx = jnp.arange(n)
+        return jax.vmap(
+            lambda i, xi, s: self.player_grad_summary(i, xi, xi, s)
+        )(idx, x, others)
+
+
 def register_game(cls=None, *, data: tuple[str, ...] = (), meta: tuple[str, ...] = ()):
     """Register a ``VectorGame`` dataclass as a JAX pytree.
 

@@ -1,6 +1,7 @@
 """The paper's experimental games (Sections 4.1, 4.2, B, F.2)."""
 
 from repro.core.games.counterexample import CounterexampleGame, make_counterexample_game
+from repro.core.games.meanfield import MeanFieldQuadraticGame, make_mean_field_game
 from repro.core.games.noncoco import NonCocoercivegame, make_noncoco_game
 from repro.core.games.quadratic import QuadraticGame, make_quadratic_game
 from repro.core.games.robot import RobotGame, make_robot_game
@@ -8,6 +9,8 @@ from repro.core.games.robot import RobotGame, make_robot_game
 __all__ = [
     "CounterexampleGame",
     "make_counterexample_game",
+    "MeanFieldQuadraticGame",
+    "make_mean_field_game",
     "NonCocoercivegame",
     "make_noncoco_game",
     "QuadraticGame",

@@ -1,0 +1,163 @@
+"""Mean-field quadratic game: n players coupled through the opponent mean.
+
+The scaling workload for the engine's O(d) summary path
+(:class:`~repro.core.engine.MeanFieldView`). Player ``i`` minimizes
+
+    f_i(x^i; x^{-i}) = 1/2 <x^i, A x^i> + <a_i, x^i>
+                       + beta * <x^i, mean_{j != i} x^j>,
+
+with one shared curvature ``A`` (d, d) and per-player linear terms ``a_i``
+— per-player parameters are O(d), so a million-player instance costs
+O(n d) memory total, and every oracle the mean-field engine touches
+(:meth:`player_grad_summary`, :meth:`operator`, :meth:`equilibrium`) is
+O(d) per player. The opponent coupling factors EXACTLY through the
+opponent mean, which makes ``(own block, opponent mean)`` a true
+sufficient statistic: the self-corrected mean-field path agrees with the
+exact engine to reduction-order ULPs at any n (tests/test_meanfield.py).
+
+Closed forms (both O(d) linear solves, valid at any n):
+
+- **Exact equilibrium** ``x*``: summing the stationarity conditions
+  ``A x_i + a_i + beta/(n-1) (S - x_i) = 0`` gives
+  ``(A + beta I) S = -sum_i a_i`` for the aggregate ``S``, then each
+  player solves ``(A - beta/(n-1) I) x_i = -a_i - beta/(n-1) S``.
+- **Mean-field equilibrium** ``xbar`` (the infinitesimal-player limit,
+  opponents replaced by the population mean ``m``): ``(A + beta I) m =
+  -mean_i a_i`` and ``A xbar_i = -a_i - beta m``.
+
+Their gap is the finite-n mean-field error: ``x* - xbar = O(beta
+heterogeneity / (n-1))`` per player, with matching aggregates as n grows —
+the monotone-in-n shrinkage BENCH_scaling.json and the tests measure.
+
+Monotonicity: the joint operator's block matrix is ``I_n (x) A +
+beta/(n-1) (ones ones^T - I_n) (x) I_d``, whose eigenvalues are
+``eig(A) + beta`` (aggregate direction) and ``eig(A) - beta/(n-1)``
+(difference directions) — strongly monotone iff
+``lambda_min(A) > beta/(n-1)``, enforced at construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.game import AggregativeGame, GameConstants, register_game
+
+Array = jax.Array
+
+
+@register_game(data=("A", "a"), meta=("n", "d", "beta"))
+class MeanFieldQuadraticGame(AggregativeGame):
+    """Aggregative quadratic game. Shapes: A (d, d) symmetric, a (n, d)."""
+
+    A: Array
+    a: Array
+    n: int
+    d: int
+    beta: float
+
+    summary_moments = 1
+
+    # -------------------------------------------------------------- gradients
+    def player_grad(self, i: Array, x_i: Array, x_ref: Array) -> Array:
+        """Full-joint contract (row ``i`` of ``x_ref`` ignored): the opponent
+        coupling is the leave-one-out mean ``(sum_j x_ref_j - x_ref_i)/(n-1)``.
+        O(n d) — the exact engine's oracle, for cross-validation at small n."""
+        mean_others = (jnp.sum(x_ref, axis=0) - x_ref[i]) / (self.n - 1)
+        return self.A @ x_i + self.a[i] + self.beta * mean_others
+
+    def player_grad_summary(
+        self, i: Array, x_i: Array, own_ref: Array, summary: Array
+    ) -> Array:
+        """O(d) oracle: the believed opponent mean is ``summary[0]``."""
+        del own_ref
+        return self.A @ x_i + self.a[i] + self.beta * summary[0]
+
+    def objective(self, i: int, x: Array) -> Array:
+        mean_others = (jnp.sum(x, axis=0) - x[i]) / (self.n - 1)
+        return (0.5 * x[i] @ self.A @ x[i] + self.a[i] @ x[i]
+                + self.beta * x[i] @ mean_others)
+
+    # --------------------------------------------------------- joint operator
+    def operator(self, x: Array) -> Array:
+        """Vectorized exact operator, O(n d) total (never O(n^2 d))."""
+        S = jnp.sum(x, axis=0)
+        mean_others = (S[None] - x) / (self.n - 1)
+        return x @ self.A.T + self.a + self.beta * mean_others
+
+    # ------------------------------------------------------------ diagnostics
+    def equilibrium(self) -> Array:
+        A = np.asarray(self.A, dtype=np.float64)
+        a = np.asarray(self.a, dtype=np.float64)
+        beta = float(self.beta)
+        c = beta / (self.n - 1)
+        S = np.linalg.solve(A + beta * np.eye(self.d), -a.sum(axis=0))
+        x = np.linalg.solve(A - c * np.eye(self.d), -(a + c * S[None]).T).T
+        return jnp.asarray(x, dtype=jnp.float32)
+
+    def mean_field_equilibrium(self) -> Array:
+        """Fixed point of the infinitesimal-player best response (opponents
+        replaced by the population mean) — the ``self_correction=False``
+        engine's target. The gap to :meth:`equilibrium` is the finite-n
+        mean-field error, O(beta * heterogeneity / (n-1)) per player."""
+        A = np.asarray(self.A, dtype=np.float64)
+        a = np.asarray(self.a, dtype=np.float64)
+        beta = float(self.beta)
+        m = np.linalg.solve(A + beta * np.eye(self.d), -a.mean(axis=0))
+        x = np.linalg.solve(A, -(a + beta * m[None]).T).T
+        return jnp.asarray(x, dtype=jnp.float32)
+
+    def constants(self) -> GameConstants:
+        A = np.asarray(self.A, dtype=np.float64)
+        eigs = np.linalg.eigvalsh(0.5 * (A + A.T))
+        beta = float(self.beta)
+        mu = float(eigs.min() - beta / (self.n - 1))
+        if mu <= 0:
+            raise ValueError(f"game is not strongly monotone: mu={mu:.3e}")
+        L_F = float(eigs.max() + beta)
+        return GameConstants(mu=mu, ell=L_F**2 / mu, L_max=float(eigs.max()),
+                             L_F=L_F)
+
+
+def make_mean_field_game(
+    n: int = 100,
+    d: int = 8,
+    mu_A: float = 1.0,
+    L_A: float = 2.0,
+    beta: float = 0.5,
+    heterogeneity: float = 1.0,
+    seed: int = 0,
+) -> MeanFieldQuadraticGame:
+    """Construct a mean-field quadratic game.
+
+    ``heterogeneity`` scales the spread of the per-player linear terms
+    around their common mean: 0 gives the SYMMETRIC game (identical
+    players — the mean is a sufficient statistic even without the
+    leave-one-out correction, so the uncorrected mean-field path is exact);
+    larger values widen the finite-n gap the scaling benchmark measures.
+    Per-player draws come from a dedicated sequential stream (seeded
+    ``[seed, 1]``), so player ``i``'s offset depends only on ``(seed, i)``
+    and growing n EXTENDS the population instead of reshuffling it — the
+    n-monotonicity of the mean-field gap is measured on nested populations
+    at a fixed seed.
+    """
+    if n < 2:
+        raise ValueError(f"mean-field game needs n >= 2, got {n}")
+    if not 0.0 <= beta < mu_A * (n - 1):
+        raise ValueError(
+            f"need 0 <= beta < mu_A * (n - 1) for strong monotonicity, "
+            f"got beta={beta}, mu_A={mu_A}, n={n}"
+        )
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+    A = (Q * rng.uniform(mu_A, L_A, size=d)) @ Q.T
+    a_mean = rng.standard_normal(d)
+    # player i's offset is draw i of a fixed stream — independent of n
+    offsets = np.random.default_rng([seed, 1]).standard_normal((n, d))
+    a = a_mean[None] + heterogeneity * offsets
+    return MeanFieldQuadraticGame(
+        A=jnp.asarray(A, dtype=jnp.float32),
+        a=jnp.asarray(a, dtype=jnp.float32),
+        n=n, d=d, beta=float(beta),
+    )

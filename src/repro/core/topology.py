@@ -242,6 +242,60 @@ class ErdosRenyi(Topology):
 
 
 @dataclasses.dataclass(frozen=True)
+class ResampledErdosRenyi(Topology):
+    """Per-round resampled G(n, p): round ``r`` mixes over a FRESH
+    Erdos-Renyi draw — sampled-interaction gossip, the graph-world analogue
+    of ``MeanFieldView(sample=k)``'s per-round neighbor subsets.
+
+    PRNG discipline (the per-round key-hierarchy fix): round ``r``'s graph
+    comes from its OWN dedicated stream ``default_rng([seed, r])`` rather
+    than one sequential stream, so graph ``r`` is derivable without
+    replaying rounds ``0..r-1`` and every consumer — the host engine, the
+    mesh lowering, diagnostics — reconstructs the identical stack from
+    ``(seed, r)`` alone (a sequential stream would pin the realization to
+    whoever drew first and in what order). The engines index the
+    precomputed stacks by ``round % period`` on the host and mesh paths
+    alike, so resampled rounds are reproducible across both lowerings by
+    construction. ``period`` bounds the stack memory: rounds cycle through
+    ``period`` independent draws.
+
+    Connectivity (:meth:`Topology.connected`) is of the UNION graph —
+    B-connectivity, the right notion for time-varying mixing.
+    """
+
+    p: float = 0.5
+    seed: int = 0
+    period: int = 8
+    name: str = "resampled_erdos_renyi"
+
+    def __post_init__(self):
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(
+                f"ResampledErdosRenyi.p must be in [0, 1], got {self.p}")
+        if self.period < 1:
+            raise ValueError(
+                f"ResampledErdosRenyi.period must be >= 1, got {self.period}")
+
+    def _graph(self, n: int, r: int) -> np.ndarray:
+        """Round ``r``'s draw — a pure function of ``(seed, r, n, p)``."""
+        rng = np.random.default_rng([self.seed, r])
+        upper = np.triu(rng.random((n, n)) < self.p, k=1)
+        return upper | upper.T
+
+    def adjacency(self, n):
+        # the union graph: degree/connectivity diagnostics see every edge
+        # that is ever active within one period
+        return self.adjacency_stack(n).any(axis=0)
+
+    def adjacency_stack(self, n):
+        return np.stack([self._graph(n, r) for r in range(self.period)])
+
+    def mixing_stack(self, n):
+        return np.stack([metropolis_weights(self._graph(n, r))
+                         for r in range(self.period)])
+
+
+@dataclasses.dataclass(frozen=True)
 class ExplicitGraph(Topology):
     """Arbitrary undirected edge list — e.g. deliberately disconnected
     components for the no-equilibrium counterexamples."""
@@ -359,5 +413,6 @@ TOPOLOGIES = {
     "ring": Ring,
     "torus": Torus,
     "erdos_renyi": lambda: ErdosRenyi(p=0.5, seed=2),
+    "resampled_erdos_renyi": lambda: ResampledErdosRenyi(p=0.5, seed=2),
     "ring+torus": lambda: TimeVarying((Ring(), Torus())),
 }

@@ -196,6 +196,7 @@ def make_pearl_round(
     mesh=None,
     mesh_axis: str = "players",
     mesh_inner_specs=None,
+    view=None,
 ) -> Callable:
     """Build one compiled PEARL round on the engine's federated-round template.
 
@@ -247,6 +248,17 @@ def make_pearl_round(
     merge is host-loop semantics (host-drawn masks, host-refreshed stale
     references), so ``mesh`` x {mask strategy, graph topology,
     external_refs} is rejected rather than silently ignored.
+
+    ``view`` names the reference axis in the engines' ``JointView``
+    vocabulary. The consensus game is aggregative, so the star fast path
+    ALREADY IS the O(d) mean-field wire (players receive the across-player
+    mean, never the ``(n, d)`` joint — :class:`PearlCommReport` bills one
+    block of downlink): ``view=MeanFieldView(self_correction=False)``
+    declares exactly that and is the only explicit view accepted, on the
+    fast path only. Views the trainer has no wire for — ``StarView``'s
+    full-joint broadcast, corrected/second-moment/sampled summaries, or a
+    summary over the general stale-block round's partial/stale snapshot —
+    are rejected loudly rather than silently renamed.
     """
     if tau < 1:
         # a zero-length inner scan would silently return the players
@@ -262,6 +274,40 @@ def make_pearl_round(
             f"host loop"
         )
     topo = topology if topology is not None else Star()
+    if view is not None:
+        from repro.core.engine import MeanFieldView
+
+        if not isinstance(view, MeanFieldView):
+            raise ValueError(
+                f"the neural trainer's reference is always an aggregate "
+                f"(the consensus game is aggregative): the star fast path "
+                f"broadcasts the O(d) across-player mean, never the (n, d) "
+                f"joint — {type(view).__name__} does not describe any "
+                f"trainer wire; use view=None or "
+                f"MeanFieldView(self_correction=False)"
+            )
+        if (view.moments != 1 or view.self_correction
+                or view.sample is not None):
+            raise ValueError(
+                f"the trainer's wire is the plain population mean: "
+                f"MeanFieldView(moments=1, self_correction=False, "
+                f"sample=None) is the only summary it implements — got "
+                f"moments={view.moments}, "
+                f"self_correction={view.self_correction}, "
+                f"sample={view.sample}; the dense engines "
+                f"(PearlEngine/AsyncPearlEngine) implement the corrected/"
+                f"second-moment/sampled variants"
+            )
+        if external_refs or needs_general_round(strategy, topo):
+            raise ValueError(
+                f"MeanFieldView names the star full-participation fast "
+                f"path's O(d) mean wire; the general stale-block round "
+                f"(topology={type(topo).__name__}, "
+                f"sync={type(strategy).__name__}, "
+                f"external_refs={external_refs}) re-mixes per-player "
+                f"references over a partial/stale snapshot, which silently "
+                f"changes what 'mean_j x^j' means — use view=None there"
+            )
     policy = resolve_policy(policy)
     scaled = not isinstance(policy, Theorem34Policy)
     if scaled:

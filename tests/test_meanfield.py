@@ -1,0 +1,441 @@
+"""The mean-field path: O(d) references validated against the exact engine.
+
+Load-bearing claims pinned here:
+- on the SYMMETRIC quadratic game (identical players) the population mean is
+  a true sufficient statistic even without the leave-one-out correction, and
+  the mean-field engine agrees with the exact engine to reduction-order ULPs;
+- with the self-correction (the exact leave-one-out identity) the agreement
+  holds on HETEROGENEOUS games at any n;
+- without it (the infinitesimal-player idealization) the converged gap to the
+  exact equilibrium shrinks monotonically in n at fixed seeds, on nested
+  populations;
+- the full rejection matrix: every composition whose semantics a summary
+  reference would silently change (masks, joint updates, gossip sweeps,
+  meshes, error feedback x sampling, non-aggregative games) raises loudly;
+- `record_trajectory` is a pure output change: opting back into the stacked
+  trajectory is bit-for-bit on x_final, and sampled-interaction rounds are
+  reproducible from (seed, round, player) alone;
+- async mean-field: D = 0 reproduces the lockstep summary program
+  bit-for-bit; D > 0 runs the summary ring buffer and still converges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    ConstantDelay,
+    UniformDelay,
+)
+from repro.core.engine import (
+    DecentralizedExtragradientUpdate,
+    DropoutSync,
+    ExtragradientUpdate,
+    GossipView,
+    Int8Sync,
+    JOINT_VIEWS,
+    JointExtragradientUpdate,
+    MeanFieldView,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+    StarView,
+    resolve_view,
+)
+from repro.core.games import (
+    MeanFieldQuadraticGame,
+    make_mean_field_game,
+    make_quadratic_game,
+)
+from repro.core.topology import Ring, Star
+
+ROUNDS = 40
+TAU = 4
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_mean_field_game(n=50, d=6, heterogeneity=1.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sym_game():
+    return make_mean_field_game(n=50, d=6, heterogeneity=0.0, seed=0)
+
+
+def run(g, *, view=None, sync=None, update=None, rounds=ROUNDS, **kw):
+    eng_kw = {}
+    if view is not None:
+        eng_kw["view"] = view
+    if sync is not None:
+        eng_kw["sync"] = sync
+    if update is not None:
+        eng_kw["update"] = update
+    gamma = stepsize.gamma_constant(g.constants(), TAU)
+    return PearlEngine(**eng_kw).run(
+        g, jnp.zeros((g.n, g.d)), tau=TAU, rounds=rounds, gamma=gamma,
+        key=jax.random.PRNGKey(0), stochastic=False, **kw)
+
+
+class TestExactAgreement:
+    def test_symmetric_game_uncorrected_mean_is_sufficient(self, sym_game):
+        """Identical players: every trajectory row coincides, so the raw
+        population mean IS the leave-one-out mean — the uncorrected
+        mean-field path matches the exact engine to reduction order."""
+        r_exact = run(sym_game)
+        r_mf = run(sym_game, view=MeanFieldView(self_correction=False))
+        np.testing.assert_allclose(np.asarray(r_mf.x_final),
+                                   np.asarray(r_exact.x_final),
+                                   rtol=0, atol=1e-6)
+
+    def test_self_corrected_matches_exact_engine_heterogeneous(self, game):
+        """The leave-one-out identity makes the O(d) path follow the exact
+        O(n d) broadcast on heterogeneous games — reduction-order ULPs."""
+        r_exact = run(game)
+        r_mf = run(game, view=MeanFieldView())
+        np.testing.assert_allclose(np.asarray(r_mf.x_final),
+                                   np.asarray(r_exact.x_final),
+                                   rtol=0, atol=1e-6)
+        np.testing.assert_allclose(r_mf.rel_errors, r_exact.rel_errors,
+                                   rtol=0, atol=1e-6)
+
+    def test_self_corrected_matches_under_extragradient(self, game):
+        r_exact = run(game, update=ExtragradientUpdate())
+        r_mf = run(game, update=ExtragradientUpdate(), view=MeanFieldView())
+        np.testing.assert_allclose(np.asarray(r_mf.x_final),
+                                   np.asarray(r_exact.x_final),
+                                   rtol=0, atol=1e-6)
+
+    def test_converges_to_closed_form_equilibrium(self, game):
+        r = run(game, view=MeanFieldView(), rounds=200)
+        assert r.rel_errors[-1] < 1e-5
+        np.testing.assert_allclose(np.asarray(r.x_final),
+                                   np.asarray(game.equilibrium()),
+                                   rtol=0, atol=1e-3)
+
+    def test_uncorrected_converges_to_mean_field_equilibrium(self, game):
+        """The infinitesimal-player path finds the mean-field fixed point,
+        NOT the exact finite-n equilibrium — the gap is the approximation."""
+        r = run(game, view=MeanFieldView(self_correction=False), rounds=400)
+        mf_star = np.asarray(game.mean_field_equilibrium())
+        x_star = np.asarray(game.equilibrium())
+        err_mf = np.abs(np.asarray(r.x_final) - mf_star).max()
+        err_exact = np.abs(np.asarray(r.x_final) - x_star).max()
+        assert err_mf < 1e-4
+        assert err_exact > 10 * err_mf   # the finite-n gap is real at n=50
+
+
+class TestGapShrinkage:
+    def test_closed_form_gap_monotone_in_n(self):
+        """Nested populations at a fixed seed: the per-player mean-field
+        error (exact vs infinitesimal-player equilibrium) decreases in n."""
+        gaps = []
+        for n in (10, 30, 100, 300, 1000):
+            g = make_mean_field_game(n=n, d=6, heterogeneity=1.0, seed=0)
+            diff = np.asarray(g.equilibrium(), dtype=np.float64) \
+                - np.asarray(g.mean_field_equilibrium(), dtype=np.float64)
+            gaps.append(float(np.abs(diff).max()))
+        assert all(a > b for a, b in zip(gaps, gaps[1:])), gaps
+        # O(1/(n-1)) rate: 100x the players, ~100x smaller gap
+        assert gaps[-1] < gaps[0] / 50
+
+    def test_run_gap_monotone_in_n(self):
+        """Same shrinkage measured on actual engine runs: converge the
+        uncorrected path, compare against the exact equilibrium."""
+        gaps = []
+        for n in (10, 30, 100):
+            g = make_mean_field_game(n=n, d=6, heterogeneity=1.0, seed=0)
+            r = run(g, view=MeanFieldView(self_correction=False), rounds=400)
+            gaps.append(float(np.abs(
+                np.asarray(r.x_final) - np.asarray(g.equilibrium())).max()))
+        assert all(a > b for a, b in zip(gaps, gaps[1:])), gaps
+
+    def test_sampled_interaction_beats_raw_mean_in_expectation(self, game):
+        """sample=k draws exclude the reader, so the sampled estimate is
+        unbiased for the leave-one-out mean — its converged iterate should
+        land near the EXACT equilibrium (noise-limited), not the mean-field
+        one."""
+        r = run(game, view=MeanFieldView(sample=16, seed=3), rounds=400)
+        x_star = np.asarray(game.equilibrium())
+        err = np.abs(np.asarray(r.x_final) - x_star).max()
+        assert err < 0.15  # sampling noise floor at constant gamma
+
+
+class TestByteAccounting:
+    def test_summary_wire_is_o_d_per_player(self, game):
+        n, d = game.n, game.d
+        r_exact = run(game)
+        r_mf = run(game, view=MeanFieldView())
+        # uplink unchanged: every player still uploads its block
+        assert r_mf.bytes_up[0] == r_exact.bytes_up[0] == n * d * 4
+        # downlink: the (moments, d) summary per player, not the (n, d) joint
+        assert r_exact.bytes_down[0] == n * n * d * 4
+        assert r_mf.bytes_down[0] == n * 1 * d * 4
+
+    def test_two_moment_summary_bills_both_rows(self, game):
+        r = run(game, view=MeanFieldView(moments=2))
+        assert r.bytes_down[0] == game.n * 2 * game.d * 4
+
+    def test_quantized_summary_halves_downlink(self, game):
+        r = run(game, view=MeanFieldView(),
+                sync=QuantizedSync(jnp.bfloat16))
+        assert r.bytes_down[0] == game.n * game.d * 2
+        assert r.bytes_up[0] == game.n * game.d * 4
+
+    def test_low_bit_summary_bills_scale_overhead(self, game):
+        r = run(game, view=MeanFieldView(), sync=Int8Sync())
+        # one int8 summary block + one scale per player
+        assert r.bytes_down[0] == game.n * (game.d * 1 + 4)
+
+    def test_per_player_bytes_flat_in_n(self):
+        per_player = []
+        for n in (20, 80):
+            g = make_mean_field_game(n=n, d=6, heterogeneity=1.0, seed=0)
+            r = run(g, view=MeanFieldView(), rounds=3)
+            per_player.append(r.bytes_down[0] / n)
+        assert per_player[0] == per_player[1] == 6 * 4
+
+
+class TestRecordTrajectory:
+    def test_default_omits_trajectory_and_pins_x_final(self, game):
+        r_off = run(game, view=MeanFieldView())
+        r_on = run(game, view=MeanFieldView(), record_trajectory=True)
+        assert r_off.xs is None
+        assert r_on.xs.shape == (ROUNDS, game.n, game.d)
+        np.testing.assert_array_equal(np.asarray(r_on.x_final),
+                                      np.asarray(r_off.x_final))
+        np.testing.assert_allclose(r_on.rel_errors, r_off.rel_errors,
+                                   rtol=1e-6, atol=1e-9)
+
+    def test_legacy_star_path_opt_in_is_bit_for_bit(self, game):
+        """The exact path: record_trajectory=True must reproduce the run's
+        x_final bit-for-bit AND its xs must match trajectory()."""
+        r_on = run(game, record_trajectory=True)
+        r_off = run(game)
+        np.testing.assert_array_equal(np.asarray(r_on.x_final),
+                                      np.asarray(r_off.x_final))
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        xs = PearlEngine().trajectory(
+            game, jnp.zeros((game.n, game.d)), tau=TAU, rounds=ROUNDS,
+            gamma=gamma, key=jax.random.PRNGKey(0), stochastic=False)
+        np.testing.assert_array_equal(np.asarray(r_on.xs), np.asarray(xs))
+
+    def test_at_equilibrium_rel_errors_stay_zero(self, game):
+        """The guarded normalization survives the in-scan squared-error
+        path: starting AT x* keeps the curve at 0, not 0/0."""
+        x_star = game.equilibrium()
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        r = PearlEngine(view=MeanFieldView()).run(
+            game, x_star, tau=TAU, rounds=5, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        assert r.rel_errors[0] == 0.0
+        assert np.all(np.isfinite(r.rel_errors))
+
+
+class TestSampledInteraction:
+    def test_reproducible_across_runs(self, game):
+        v = MeanFieldView(sample=8, seed=7)
+        r1 = run(game, view=v)
+        r2 = run(game, view=v)
+        np.testing.assert_array_equal(np.asarray(r1.x_final),
+                                      np.asarray(r2.x_final))
+
+    def test_seed_changes_draws(self, game):
+        r1 = run(game, view=MeanFieldView(sample=8, seed=0), rounds=5)
+        r2 = run(game, view=MeanFieldView(sample=8, seed=1), rounds=5)
+        assert not np.array_equal(np.asarray(r1.x_final),
+                                  np.asarray(r2.x_final))
+
+    def test_larger_sample_tracks_dense_summary(self, game):
+        """More draws, less sampling noise: sample=n-1-ish should sit closer
+        to the exact engine's iterate than a small sample does."""
+        r_exact = run(game)
+        errs = {}
+        for k in (2, 32):
+            r = run(game, view=MeanFieldView(sample=k, seed=5))
+            errs[k] = float(np.abs(np.asarray(r.x_final)
+                                   - np.asarray(r_exact.x_final)).max())
+        assert errs[32] < errs[2]
+
+
+class TestRejectionMatrix:
+    def test_mean_field_needs_star(self, game):
+        with pytest.raises(ValueError, match="single summary owner"):
+            PearlEngine(topology=Ring(), view=MeanFieldView()).run(
+                game, jnp.zeros((game.n, game.d)), tau=1, rounds=1, gamma=0.1)
+
+    def test_star_view_needs_server(self):
+        with pytest.raises(ValueError, match="server broadcast"):
+            resolve_view(StarView(), Ring())
+
+    def test_gossip_view_needs_graph(self):
+        with pytest.raises(ValueError, match="has none"):
+            resolve_view(GossipView(), Star())
+
+    @pytest.mark.parametrize("sync", [PartialParticipation(fraction=0.5),
+                                      DropoutSync(p=0.2)])
+    def test_mean_field_rejects_masks(self, game, sync):
+        with pytest.raises(ValueError, match="PARTIAL population"):
+            run(game, view=MeanFieldView(), sync=sync, rounds=1)
+
+    def test_mean_field_rejects_joint_update(self, game):
+        with pytest.raises(ValueError, match="joint baselines require"):
+            run(game, view=MeanFieldView(), update=JointExtragradientUpdate(),
+                rounds=1)
+
+    def test_mean_field_rejects_gossip_sweep_update(self, game):
+        with pytest.raises(ValueError, match="no views to mix"):
+            PearlEngine(update=DecentralizedExtragradientUpdate(),
+                        view=MeanFieldView()).run(
+                game, jnp.zeros((game.n, game.d)), tau=1, rounds=1, gamma=0.1)
+
+    def test_mean_field_rejects_mesh(self, game):
+        with pytest.raises(ValueError, match="needs no collective lowering"):
+            PearlEngine(mesh=object(), view=MeanFieldView())._check_topology(
+                game)
+
+    def test_error_feedback_rejects_sampling(self, game):
+        with pytest.raises(ValueError, match="no single wire tensor"):
+            run(game, view=MeanFieldView(sample=4), sync=Int8Sync(), rounds=1)
+
+    def test_non_aggregative_game_rejected(self):
+        quad = make_quadratic_game(n=4, d=8, M=40, L_B=2.0, batch_size=1,
+                                   seed=0)
+        with pytest.raises(ValueError, match="AggregativeGame"):
+            run(quad, view=MeanFieldView(), rounds=1)
+
+    def test_insufficient_moments_rejected(self, game):
+        class TwoMomentGame(MeanFieldQuadraticGame):
+            summary_moments = 2
+
+        g2 = TwoMomentGame(A=game.A, a=game.a, n=game.n, d=game.d,
+                           beta=game.beta)
+        with pytest.raises(ValueError, match="maintains only 1"):
+            PearlEngine(view=MeanFieldView(moments=1))._check_topology(g2)
+
+    def test_oversized_sample_rejected(self, game):
+        with pytest.raises(ValueError, match="exceeds"):
+            run(game, view=MeanFieldView(sample=game.n), rounds=1)
+
+    def test_invalid_view_args(self):
+        with pytest.raises(ValueError, match="moments"):
+            MeanFieldView(moments=3)
+        with pytest.raises(ValueError, match="sample"):
+            MeanFieldView(sample=0)
+
+    def test_async_rejects_sampling(self, game):
+        with pytest.raises(ValueError, match="joint ring buffer"):
+            AsyncPearlEngine(view=MeanFieldView(sample=4))._check(game)
+
+    def test_async_rejects_masks(self, game):
+        with pytest.raises(ValueError, match="PARTIAL population"):
+            AsyncPearlEngine(view=MeanFieldView(),
+                             sync=PartialParticipation(fraction=0.5))._check(game)
+
+    def test_async_mean_field_needs_star(self):
+        with pytest.raises(ValueError, match="single summary owner"):
+            AsyncPearlEngine(topology=Ring(), view=MeanFieldView())._check()
+
+    def test_registry_exposes_three_views(self):
+        assert set(JOINT_VIEWS) == {"star", "gossip", "mean_field"}
+        assert JOINT_VIEWS["mean_field"]().summary_based
+        assert not JOINT_VIEWS["star"]().summary_based
+
+
+class TestTrainerView:
+    """The neural trainer accepts exactly the view its wire implements."""
+
+    @pytest.fixture(scope="class")
+    def cfg(self):
+        from repro.configs import get_config
+
+        return get_config("smollm-360m").smoke_variant()
+
+    def _round(self, cfg, **kw):
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import make_pearl_round
+
+        return make_pearl_round(cfg, sgd(1e-2), tau=2, prox_lambda=1e-3,
+                                **kw)
+
+    def test_uncorrected_mean_field_view_names_the_fast_path(self, cfg):
+        fn = self._round(cfg, view=MeanFieldView(self_correction=False))
+        assert callable(fn)
+
+    def test_star_view_rejected(self, cfg):
+        with pytest.raises(ValueError, match="never the"):
+            self._round(cfg, view=StarView())
+
+    def test_corrected_view_rejected(self, cfg):
+        with pytest.raises(ValueError, match="only summary it implements"):
+            self._round(cfg, view=MeanFieldView())
+
+    def test_sampled_view_rejected(self, cfg):
+        with pytest.raises(ValueError, match="only summary it implements"):
+            self._round(cfg, view=MeanFieldView(self_correction=False,
+                                                sample=2))
+
+    def test_view_rejected_on_general_round(self, cfg):
+        with pytest.raises(ValueError, match="stale-block round"):
+            self._round(cfg, view=MeanFieldView(self_correction=False),
+                        sync=PartialParticipation(fraction=0.5))
+        with pytest.raises(ValueError, match="stale-block round"):
+            self._round(cfg, view=MeanFieldView(self_correction=False),
+                        topology=Ring())
+
+
+class TestAsyncMeanField:
+    @pytest.mark.parametrize("sync", [None, QuantizedSync(jnp.bfloat16),
+                                      Int8Sync()])
+    def test_d0_bit_for_bit_with_lockstep(self, game, sync):
+        """D = 0 async mean-field IS the lockstep summary program — carry,
+        RNG chain, wire, and the in-scan error outputs all collapse."""
+        kw = {} if sync is None else {"sync": sync}
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        x0 = jnp.zeros((game.n, game.d))
+        r_sync = PearlEngine(view=MeanFieldView(), **kw).run(
+            game, x0, tau=TAU, rounds=ROUNDS, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        r_async = AsyncPearlEngine(view=MeanFieldView(), **kw).run(
+            game, x0, tau=TAU, rounds=ROUNDS, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        np.testing.assert_array_equal(np.asarray(r_async.x_final),
+                                      np.asarray(r_sync.x_final))
+        np.testing.assert_array_equal(r_async.rel_errors, r_sync.rel_errors)
+
+    @pytest.mark.parametrize("self_correction", [True, False])
+    def test_staleness_runs_and_converges(self, game, self_correction):
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        r = AsyncPearlEngine(
+            view=MeanFieldView(self_correction=self_correction),
+            delays=UniformDelay(seed=1), max_staleness=3,
+        ).run(game, jnp.zeros((game.n, game.d)), tau=TAU, rounds=200,
+              gamma=gamma, key=jax.random.PRNGKey(0), stochastic=False)
+        assert r.max_realized_staleness > 0
+        assert r.rel_errors[-1] < 1e-2
+
+    def test_stale_summary_differs_from_fresh(self, game):
+        """ConstantDelay(1) must actually read LAST round's summary."""
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        x0 = jnp.zeros((game.n, game.d))
+        r0 = AsyncPearlEngine(view=MeanFieldView()).run(
+            game, x0, tau=TAU, rounds=10, gamma=gamma, stochastic=False)
+        r1 = AsyncPearlEngine(view=MeanFieldView(), delays=ConstantDelay(1),
+                              max_staleness=1).run(
+            game, x0, tau=TAU, rounds=10, gamma=gamma, stochastic=False)
+        assert not np.array_equal(np.asarray(r0.x_final),
+                                  np.asarray(r1.x_final))
+
+    def test_ef_wire_survives_staleness(self, game):
+        """Int8 error feedback banks an O(d) residual against the summary;
+        under staleness the buffered slots hold decoded summaries."""
+        gamma = stepsize.gamma_constant(game.constants(), TAU)
+        r = AsyncPearlEngine(view=MeanFieldView(), sync=Int8Sync(),
+                             delays=UniformDelay(seed=2), max_staleness=2,
+                             ).run(game, jnp.zeros((game.n, game.d)),
+                                   tau=TAU, rounds=150, gamma=gamma,
+                                   stochastic=False)
+        assert r.rel_errors[-1] < 1e-2

@@ -32,6 +32,7 @@ from repro.core.engine import (
 from repro.core.games import make_quadratic_game
 from repro.core.topology import (
     ErdosRenyi,
+    ResampledErdosRenyi,
     ExplicitGraph,
     Ring,
     Star,
@@ -375,3 +376,65 @@ class TestStarDefault:
     def test_topologies_are_hashable_static_args(self):
         for factory in TOPOLOGIES.values():
             hash(factory())   # frozen dataclasses: usable as jit static args
+
+
+# ------------------------------------------- per-round resampled interaction
+class TestResampledErdosRenyi:
+    """Sampled-interaction gossip: round r mixes over a fresh G(n, p) draw,
+    keyed per-round so every consumer reconstructs graph r from (seed, r)
+    alone — no sequential stream to replay."""
+
+    def test_rounds_actually_differ(self):
+        stack = ResampledErdosRenyi(p=0.5, seed=3, period=8).adjacency_stack(8)
+        assert stack.shape == (8, 8, 8)
+        assert any(not np.array_equal(stack[0], stack[r]) for r in range(1, 8))
+
+    def test_round_r_derivable_without_replay(self):
+        """Per-round key hierarchy: graph r is a pure function of (seed, r),
+        so topologies with different periods agree on their shared prefix —
+        the fix a sequential stream could never provide."""
+        short = ResampledErdosRenyi(p=0.5, seed=3, period=2)
+        long = ResampledErdosRenyi(p=0.5, seed=3, period=8)
+        np.testing.assert_array_equal(short.adjacency_stack(8),
+                                      long.adjacency_stack(8)[:2])
+
+    def test_reproducible_and_seed_sensitive(self):
+        a = ResampledErdosRenyi(p=0.5, seed=11).adjacency_stack(8)
+        b = ResampledErdosRenyi(p=0.5, seed=11).adjacency_stack(8)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(
+            a, ResampledErdosRenyi(p=0.5, seed=12).adjacency_stack(8))
+
+    def test_union_adjacency_and_b_connectivity(self):
+        topo = ResampledErdosRenyi(p=0.4, seed=5, period=6)
+        stack = topo.adjacency_stack(8)
+        np.testing.assert_array_equal(topo.adjacency(8), stack.any(axis=0))
+        # connectivity is of the union graph (B-connectivity)
+        assert topo.connected(8) == is_connected(stack.any(axis=0))
+
+    def test_each_round_mixing_is_doubly_stochastic(self):
+        W = ResampledErdosRenyi(p=0.6, seed=7, period=4).mixing_stack(6)
+        assert W.shape == (4, 6, 6)
+        for r in range(4):
+            assert is_doubly_stochastic(W[r])
+            np.testing.assert_allclose(W[r], W[r].T)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ResampledErdosRenyi(p=1.5)
+        with pytest.raises(ValueError):
+            ResampledErdosRenyi(period=0)
+
+    def test_registered(self):
+        assert "resampled_erdos_renyi" in TOPOLOGIES
+        hash(TOPOLOGIES["resampled_erdos_renyi"]())
+
+    def test_engine_runs_and_converges(self, quad, x0):
+        """A union-connected resampled sequence reaches the same equilibrium
+        neighborhood as static gossip, cycling the stack by round % period."""
+        topo = ResampledErdosRenyi(p=0.7, seed=1, period=4)
+        assert topo.connected(quad.n)
+        gamma = stepsize.gamma_constant(quad.constants(), 4)
+        r = PearlEngine(topology=topo).run(
+            quad, x0, tau=4, rounds=1500, gamma=gamma, stochastic=False)
+        assert r.rel_errors[-1] < 1e-8
