@@ -1,0 +1,258 @@
+"""Bytes-to-loss + seconds-per-round for NEURAL players (BENCH_neural.json).
+
+Every wall-clock artifact so far (BENCH_wallclock.json) times the dense
+quadratic-game engine. This benchmark runs the real model stack: smollm
+(smoke-reduced) players through :class:`repro.train.NeuralPlayerAdapter` on
+the two-axis (players x model) fake mesh with the Pallas kernel path on —
+the PR 8 end-to-end configuration — and measures the wire matrix:
+
+- sync: exact f32 | bf16 | int8+EF (the error-feedback residual threads
+  through the jitted round; its per-leaf f32 scales are billed);
+- tau: 1 (the non-local baseline: sync every step) vs 4 local steps.
+
+Each cell reports the billed bytes per round (uplink + the f32 mean
+downlink), the loss trajectory, rounds/bytes to a fixed loss target, and
+median/p90 seconds per round. Three guard sections keep the rows honest:
+
+- ``wire``: the compiled round's player-axis all-gather operand dtype per
+  sync, from dry-run HLO (u16 for bf16, u8 for int8 — never f32);
+- ``roofline``: the billed bytes converted to production-mesh ICI seconds
+  (the :mod:`repro.launch.perf` pod-collective term, ``bytes / ICI_BW``) —
+  the link between the byte ledger and the napkin-math time model; the
+  per-local-step column falls tau-fold by construction, which is the
+  paper's Theorem 3.4 claim as a wire-time statement;
+- in-benchmark asserts pin the predicted byte ratios (bf16 uplink = half of
+  exact; int8 uplink = a quarter plus the per-leaf scale overhead).
+
+Seconds are machine-local — the drift checker treats byte fields as exact,
+loss fields at tolerance, and seconds as schema-only. Skips gracefully on a
+single-device host (the committed artifact is the fake-8 run).
+"""
+
+from __future__ import annotations
+
+if __name__ == "__main__":  # pragma: no cover - exercised by CI smoke
+    from repro.launch.env import ensure_wallclock_env
+
+    ensure_wallclock_env()
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import collective
+from repro.core.engine import Int8Sync
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.optim.optimizers import sgd
+from repro.train import NeuralPlayerAdapter
+
+N_PLAYERS = 2
+TAUS = (1, 4)
+LOSS_TARGET = 6.5   # absolute lm_loss threshold (init is ~6.9 at vocab 512)
+
+SYNCS = {
+    "exact": {},
+    "bf16": {"sync_dtype": jnp.bfloat16},
+    "int8_ef": {"sync": Int8Sync()},
+}
+
+# the compiled sync all-gather's operand dtype per wire (dry-run HLO pin);
+# exact is uncompressed so only f32 may appear
+EXPECTED_GATHER = {"exact": {"f32"}, "bf16": {"u16"}, "int8_ef": {"u8"}}
+
+
+def _cfg():
+    return get_config("smollm-360m").smoke_variant()
+
+
+def _stream(cfg):
+    return SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, batch_size=2,
+        n_players=N_PLAYERS, seed=0,
+    ))
+
+
+def _adapter(cfg, tau, sync_kwargs):
+    return NeuralPlayerAdapter(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=tau,
+                               prox_lambda=1e-3, seed=0, **sync_kwargs)
+
+
+def _has_mesh():
+    cfg = _cfg()
+    return _adapter(cfg, 1, {}).mesh is not None
+
+
+def _rounds_to_target(losses) -> int | None:
+    hits = [i for i, l in enumerate(losses) if l <= LOSS_TARGET]
+    return hits[0] if hits else None
+
+
+def run_matrix(*, rounds: int, warmup: int, repeats: int):
+    """sync x tau cells: losses, billed bytes, and timed repeats."""
+    rows = []
+    for sname, skw in SYNCS.items():
+        for tau in TAUS:
+            cfg = _cfg()
+            adapter = _adapter(cfg, tau, skw)
+            stream = _stream(cfg)
+            hist = adapter.run(stream, rounds)
+            losses = [h["lm_loss"] for h in hist]
+            rep = adapter.comm_report()
+            up, down = rep.per_round_bytes()
+            per_round = int(up[0] + down[0])
+            r_eq = _rounds_to_target(losses)
+
+            for _ in range(warmup):
+                adapter.run(stream, 1)
+            secs = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                adapter.run(stream, 1)
+                secs.append(time.perf_counter() - t0)
+            med = float(np.median(secs))
+            p90 = float(np.percentile(secs, 90))
+
+            rows.append({
+                "sync": sname,
+                "tau": tau,
+                "rounds": rounds,
+                "param_count": rep.param_count,
+                "bytes_per_round": per_round,
+                "uplink_bytes_per_round": int(up[0]),
+                "uplink_overhead_bytes": rep.uplink_overhead_bytes,
+                "loss_first": losses[0],
+                "loss_final": losses[-1],
+                "rounds_to_eq": r_eq,
+                "bytes_to_eq": (per_round * r_eq
+                                if r_eq is not None else None),
+                "sec_per_round_median": med,
+                "sec_per_round_p90": p90,
+                "sec_to_eq": med * r_eq if r_eq is not None else None,
+            })
+            emit(f"neural_{sname}_tau{tau}", med * 1e6,
+                 f"loss={losses[-1]:.4f},B/rnd={per_round}")
+
+    # predicted byte ratios: the wire does what the dtype says it does
+    by = {(r["sync"], r["tau"]): r for r in rows}
+    for tau in TAUS:
+        exact = by[("exact", tau)]["uplink_bytes_per_round"]
+        bf16 = by[("bf16", tau)]["uplink_bytes_per_round"]
+        int8 = by[("int8_ef", tau)]
+        assert bf16 * 2 == exact, (bf16, exact)
+        lanes = int8["uplink_bytes_per_round"] \
+            - N_PLAYERS * int8["uplink_overhead_bytes"]
+        assert lanes * 4 == exact, (lanes, exact)
+    return rows
+
+
+def run_wire_assertions():
+    """Dry-run HLO of each compiled round: the player-axis gather operand
+    must be the wire dtype — the claim that survives to the program."""
+    rows = []
+    t0 = time.perf_counter()
+    for sname, skw in SYNCS.items():
+        cfg = _cfg()
+        adapter = _adapter(cfg, TAUS[-1], skw)
+        hlo = adapter.lower_round_hlo(seq_len=32, batch_size=2)
+        gathers = {o.operand_dtype
+                   for o in collective.wire_dtype_report(hlo)
+                   if o.op == "all-gather"}
+        if sname != "exact":
+            collective.assert_wire_dtype(hlo, compressed=True)
+            assert EXPECTED_GATHER[sname] <= gathers, (sname, gathers)
+            # the model-parallel axis may legitimately gather f32 shards;
+            # the compressed set must be exactly the sync's container
+            compressed = {o.operand_dtype
+                          for o in collective.compressed_wire_ops(hlo)
+                          if o.op == "all-gather"}
+            assert compressed == EXPECTED_GATHER[sname], (sname, compressed)
+        rows.append({
+            "sync": sname,
+            "wire_dtypes": sorted(
+                {o.operand_dtype
+                 for o in collective.wire_dtype_report(hlo)}),
+            "compressed_gather_dtypes": sorted(
+                {o.operand_dtype
+                 for o in collective.compressed_wire_ops(hlo)
+                 if o.op == "all-gather"}),
+        })
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    emit("neural_wire", us,
+         ";".join(f"{r['sync']}:"
+                  f"{'+'.join(r['compressed_gather_dtypes']) or 'none'}"
+                  for r in rows))
+    return rows
+
+
+def run_roofline(matrix_rows):
+    """Billed bytes -> production-mesh ICI seconds (the launch/perf.py
+    pod-collective term): the time the wire would cost where it matters."""
+    from repro.roofline.analysis import ICI_BW
+
+    rows = []
+    for r in matrix_rows:
+        rows.append({
+            "sync": r["sync"],
+            "tau": r["tau"],
+            "bytes_per_round": r["bytes_per_round"],
+            "ici_s_per_round": r["bytes_per_round"] / ICI_BW,
+            "ici_s_per_local_step": r["bytes_per_round"] / ICI_BW / r["tau"],
+        })
+    if rows:
+        emit("neural_roofline", 0.0,
+             ";".join(f"{r['sync']}/tau{r['tau']}:"
+                      f"{r['ici_s_per_local_step']:.2e}s" for r in rows))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--rounds", type=int, default=6,
+                        help="training rounds per cell (the committed "
+                             "artifact and the CI smoke run the same scale)")
+    parser.add_argument("--warmup", type=int, default=0,
+                        help="extra warmup rounds before timing (the "
+                             "training run already compiled the round)")
+    parser.add_argument("--repeats", type=int, default=3)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweep as structured JSON "
+                             "(BENCH_neural.json convention)")
+    args = parser.parse_args(argv)
+
+    if not _has_mesh():
+        emit("neural_matrix", 0.0, "skipped: single-device (set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8)")
+        return
+
+    wire = run_wire_assertions()
+    rows = run_matrix(rounds=args.rounds, warmup=args.warmup,
+                      repeats=args.repeats)
+    roofline = run_roofline(rows)
+    if args.json:
+        from repro.launch.env import find_tcmalloc
+        payload = {
+            "benchmark": "bench_neural",
+            "device_count": jax.device_count(),
+            "arch": "smollm-360m (smoke)",
+            "n_players": N_PLAYERS,
+            "loss_target": LOSS_TARGET,
+            "timing": {"warmup": args.warmup, "repeats": args.repeats,
+                       "tcmalloc": find_tcmalloc() is not None},
+            "rows": rows,
+            "wire": wire,
+            "roofline": roofline,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

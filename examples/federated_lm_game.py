@@ -6,12 +6,15 @@ Three silos each own a ~100M-parameter llama-style LM (a width-reduced
 smollm-360m) and a private heterogeneous token distribution. They play the
 paper's Section 2.2 consensus game: each minimizes its own LM loss plus a
 proximal pull toward the stale across-player parameter mean. PEARL-SGD =
-tau local AdamW/SGD steps per synchronization; the synchronization is the
-only cross-silo communication.
+tau local SGD steps per synchronization; the synchronization is the only
+cross-silo communication.
 
-On the production mesh each player is a pod (launch/dryrun.py --pearl lowers
-exactly this program on the 2x16x16 mesh); here the same code runs all
-players on CPU via vmap. Prints per-round losses and the communication ledger.
+The players run through :class:`repro.train.NeuralPlayerAdapter`: on a
+multi-device host (real or ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+they land on the two-axis (players x model) mesh with the sync lowered to an
+explicit shard_map collective; on one device the same code compiles the host
+path. ``--sync``/``--topology``/``--participation`` select the wire and the
+communication regime; the ledger bills what the drawn masks actually moved.
 """
 
 import argparse
@@ -19,11 +22,11 @@ import dataclasses
 import time
 
 from repro.configs import get_config
-from repro.data.synthetic import DataConfig, SyntheticTokenStream
 from repro.models.model import param_shapes
 from repro.optim.optimizers import sgd
 from repro.roofline.analysis import count_params
-from repro.train.pearl_trainer import PearlCommReport, PearlTrainer
+from repro.train import NeuralPlayerAdapter
+from repro.train.pearl_trainer import PearlCommReport
 
 
 def build_player_config(target_params: str):
@@ -39,7 +42,27 @@ def build_player_config(target_params: str):
     return base.smoke_variant()
 
 
-def main():
+def build_sync(name: str, participation: float):
+    """The wire (--sync) composed with the participation model."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import Int4Sync, Int8Sync, PartialParticipation
+
+    if participation < 1.0:
+        if name != "exact":
+            raise SystemExit(
+                "--participation composes the mask with the exact wire in "
+                "this example; pick one of the two")
+        return {"sync": PartialParticipation(fraction=participation, seed=0)}
+    return {
+        "exact": {},
+        "bf16": {"sync_dtype": jnp.bfloat16},
+        "int8": {"sync": Int8Sync()},
+        "int4": {"sync": Int4Sync()},
+    }[name]
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300,
                     help="total LOCAL steps per player")
@@ -50,40 +73,62 @@ def main():
     ap.add_argument("--size", choices=["full", "smoke"], default="smoke",
                     help="'full' = ~100M params/player (slow on CPU)")
     ap.add_argument("--prox", type=float, default=1e-3)
-    args = ap.parse_args()
+    ap.add_argument("--sync", choices=["exact", "bf16", "int8", "int4"],
+                    default="exact", help="wire representation of the sync")
+    ap.add_argument("--topology", choices=["star", "ring"], default="star")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="< 1.0 draws a per-round participation mask")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="use the pure-jnp model path")
+    args = ap.parse_args(argv)
+
+    from repro.core.topology import Ring
+    from repro.data.synthetic import DataConfig, SyntheticTokenStream
 
     cfg = build_player_config(args.size)
     n_params = count_params(param_shapes(cfg))
+    kwargs = build_sync(args.sync, args.participation)
+    if args.topology == "ring":
+        kwargs["topology"] = Ring()
+
+    adapter = NeuralPlayerAdapter(
+        cfg, sgd(3e-2), n_players=args.players, tau=args.tau,
+        prox_lambda=args.prox, seed=0, use_kernels=not args.no_kernels,
+        **kwargs,
+    )
+    mesh_desc = (dict(adapter.mesh.shape) if adapter.mesh is not None
+                 else "host (single device)")
     print(f"player model: {cfg.name}  params={n_params / 1e6:.1f}M  "
-          f"players={args.players}  tau={args.tau}")
+          f"players={args.players}  tau={args.tau}  mesh={mesh_desc}")
 
     stream = SyntheticTokenStream(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
         n_players=args.players, seed=0,
     ))
-    trainer = PearlTrainer(cfg, sgd(3e-2), n_players=args.players,
-                           tau=args.tau, prox_lambda=args.prox, seed=0)
 
     rounds = max(1, args.steps // args.tau)
     t0 = time.time()
     for r in range(rounds):
-        hist = trainer.run(stream, rounds=1)
+        hist = adapter.run(stream, rounds=1)
         rec = hist[-1]
         if r % max(1, rounds // 10) == 0 or r == rounds - 1:
             print(f"round {r:4d}/{rounds}  lm_loss={rec['lm_loss']:.4f}  "
                   f"({time.time() - t0:.0f}s)")
 
-    report = PearlCommReport(n_players=args.players, param_count=n_params,
-                             tau=args.tau, rounds=rounds)
+    # mask-aware: bills the blocks/links the drawn masks actually moved
+    report = adapter.comm_report()
     base = PearlCommReport(n_players=args.players, param_count=n_params,
                            tau=1, rounds=args.steps)
-    print("\ncommunication ledger (fp32 on the wire):")
+    print(f"\ncommunication ledger ({args.sync} on the wire, "
+          f"{args.topology} topology):")
     print(f"  PEARL tau={args.tau}: {report.total_bytes / 1e9:.2f} GB over "
           f"{rounds} syncs")
-    print(f"  non-local (tau=1):   {base.total_bytes / 1e9:.2f} GB over "
+    print(f"  non-local (tau=1, fp32): {base.total_bytes / 1e9:.2f} GB over "
           f"{args.steps} syncs")
-    print(f"  saving: {base.total_bytes / report.total_bytes:.1f}x — the "
-          "paper's claim, realized at LM scale")
+    if report.total_bytes:
+        print(f"  saving: {base.total_bytes / report.total_bytes:.1f}x — the "
+              "paper's claim, realized at LM scale")
+    return adapter
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
-"""Serving example: batched prefill + token-by-token decode with KV cache.
+"""Serving example: equilibrium player policies through the decode stack.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]
 
-Loads a reduced variant of any assigned architecture, prefills a batch of
-prompts, and greedily decodes continuations — exercising the exact
-``serve_step`` the decode_32k/long_500k dry-run shapes lower (ring-buffer
-caches for windowed layers, O(1) recurrent state for SSM/xLSTM blocks).
+Trains a small MpFL consensus game for a few PEARL rounds
+(:class:`repro.train.NeuralPlayerAdapter` — on a multi-device host the
+players land on the two-axis mesh), then serves EACH player's equilibrium
+policy through the exact ``serve_step`` the decode_32k/long_500k dry-run
+shapes lower (batched prefill + token-by-token decode, ring-buffer caches
+for windowed layers, O(1) recurrent state for SSM/xLSTM blocks) under
+synthetic prompt traffic drawn from that player's own distribution.
+
+``--rounds 0`` skips training and serves the random init (the legacy
+smoke); encoder/vision architectures only support that mode, since the
+PEARL trainer drives text-token players.
 """
 
 import argparse
@@ -19,35 +26,76 @@ from repro.models import init_params
 from repro.serve.decode import generate
 
 
-def main():
+def equilibrium_players(cfg, n_players: int, rounds: int, tau: int):
+    """Train the consensus game briefly; return per-player param pytrees."""
+    from repro.data.synthetic import DataConfig, SyntheticTokenStream
+    from repro.optim.optimizers import sgd
+    from repro.train import NeuralPlayerAdapter
+
+    adapter = NeuralPlayerAdapter(cfg, sgd(3e-2), n_players=n_players,
+                                  tau=tau, prox_lambda=1e-3, seed=0)
+    stream = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, batch_size=2,
+        n_players=n_players, seed=0,
+    ))
+    hist = adapter.run(stream, rounds=rounds)
+    print(f"trained {n_players} players for {rounds} rounds "
+          f"(tau={tau}): lm_loss {hist[0]['lm_loss']:.4f} -> "
+          f"{hist[-1]['lm_loss']:.4f}")
+    return [adapter.player_params(i) for i in range(n_players)], stream
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2-1.2b", choices=list(ARCH_IDS))
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--players", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="PEARL rounds before serving; 0 = random init")
+    ap.add_argument("--tau", type=int, default=2)
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke_variant()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    key = jax.random.PRNGKey(1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.modality == "vision":
-        batch["patch_embeds"] = 0.1 * jax.random.normal(
-            key, (args.batch, cfg.n_modality_tokens, cfg.d_model))
-    if cfg.enc_layers:
-        batch["enc_frames"] = 0.1 * jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model))
+    multimodal = cfg.modality == "vision" or bool(cfg.enc_layers)
+    if args.rounds > 0 and multimodal:
+        raise SystemExit(
+            f"{args.arch} needs encoder/vision inputs; the PEARL players "
+            f"are text-token LMs — rerun with --rounds 0")
 
-    t0 = time.time()
-    out = generate(params, cfg, batch, max_new_tokens=args.new_tokens,
-                   capacity=args.prompt_len + args.new_tokens + 8,
-                   window=cfg.sliding_window if cfg.family == "hybrid" else 0)
-    dt = time.time() - t0
-    print(f"arch={args.arch} (reduced)  decode: "
-          f"{args.batch * args.new_tokens / dt:.1f} tok/s on CPU")
-    print("generated token ids:")
-    print(np.asarray(out))
+    key = jax.random.PRNGKey(1)
+    if args.rounds > 0:
+        players, stream = equilibrium_players(cfg, args.players,
+                                              args.rounds, args.tau)
+        # synthetic traffic: each player's prompts come from ITS distribution
+        prompts = [stream.batch(i, step=10_000)[:args.batch,
+                                                :args.prompt_len]
+                   for i in range(args.players)]
+    else:
+        players = [init_params(cfg, jax.random.PRNGKey(0))]
+        prompts = [jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab_size)]
+
+    window = cfg.sliding_window if cfg.family == "hybrid" else 0
+    for i, (params, tokens) in enumerate(zip(players, prompts)):
+        batch = {"tokens": jax.numpy.asarray(tokens)}
+        if cfg.modality == "vision":
+            batch["patch_embeds"] = 0.1 * jax.random.normal(
+                key, (args.batch, cfg.n_modality_tokens, cfg.d_model))
+        if cfg.enc_layers:
+            batch["enc_frames"] = 0.1 * jax.random.normal(
+                key, (args.batch, args.prompt_len, cfg.d_model))
+        t0 = time.time()
+        out = generate(params, cfg, batch, max_new_tokens=args.new_tokens,
+                       capacity=args.prompt_len + args.new_tokens + 8,
+                       window=window)
+        dt = time.time() - t0
+        tag = f"player {i}" if args.rounds > 0 else "random init"
+        print(f"arch={args.arch} (reduced)  {tag}  decode: "
+              f"{args.batch * args.new_tokens / dt:.1f} tok/s on CPU")
+        print(np.asarray(out))
+    return players
 
 
 if __name__ == "__main__":

@@ -63,6 +63,19 @@ SPECS = {
         "parity": (("sync",), ("d0_bitwise_equal",)),
         "wire": (("sync",), ("wire_dtypes", "compressed_wire_dtypes")),
     },
+    # neural players on the two-axis mesh: byte fields and wire dtypes are
+    # exact (accounting + compiled HLO), losses are float metrics at the
+    # relative tolerance, seconds schema-only (same rule as bench_wallclock)
+    "bench_neural": {
+        "rows": (("sync", "tau"),
+                 ("param_count", "bytes_per_round",
+                  "uplink_bytes_per_round", "uplink_overhead_bytes"),
+                 ("loss_first", "loss_final")),
+        "wire": (("sync",),
+                 ("wire_dtypes", "compressed_gather_dtypes")),
+        "roofline": (("sync", "tau"), ("bytes_per_round",),
+                     ("ici_s_per_round", "ici_s_per_local_step")),
+    },
     # the million-player sweep: every byte/state field is pure accounting
     # (pinned exactly — per-player flatness in n is the whole claim), while
     # the converged errors / equilibrium gaps are float metrics checked at
@@ -137,7 +150,7 @@ def compare(smoke: dict, committed: dict, tol: float) -> list[str]:
         if not srows:
             errors.append(f"{name}.{section}: smoke artifact has no rows")
             continue
-        if name == "bench_wallclock" and section == "rows":
+        if name in ("bench_wallclock", "bench_neural") and section == "rows":
             for origin, rows in (("smoke", srows), ("committed", crows)):
                 for key, row in rows.items():
                     errors.extend(_check_wallclock_row(

@@ -14,12 +14,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/render_experiments.py -
 python scripts/check_links.py
 
 # multi-device section: the sharding/collective tests on a fake 8-device
-# mesh, including the HLO wire-dtype assertions (they skip on one device, so
-# running them WITHOUT this flag would silently drop the acceptance pin)
+# mesh, including the HLO wire-dtype assertions and the neural-player
+# two-axis mesh cases (they skip on one device, so running them WITHOUT
+# this flag would silently drop the acceptance pin)
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_collective.py tests/test_sharding.py \
-  tests/test_lowbit_sync.py tests/test_async_mesh.py
+  tests/test_lowbit_sync.py tests/test_async_mesh.py \
+  tests/test_pearl_trainer.py tests/test_neural.py
 
 # fast-mode smokes of every --json benchmark artifact path (temp dir: the
 # committed BENCH_*.json are the paper-scale sweeps, not these smokes)
@@ -75,6 +77,24 @@ for w in d['wire'] if w['sync'] in ('int8', 'int4')), \
   "$SMOKE_DIR/BENCH_wallclock.json"
 python scripts/check_bench_drift.py \
   "$SMOKE_DIR/BENCH_wallclock.json" BENCH_wallclock.json
+
+# neural players end to end on the fake two-axis mesh: the smoke runs the
+# SAME rounds as the committed artifact (losses drift-compare at tolerance,
+# bytes and wire dtypes exactly; seconds schema-only). The in-benchmark
+# asserts re-verify the compiled sync gather dtype per wire and the
+# predicted uplink byte ratios
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.bench_neural --rounds 6 --repeats 1 \
+  --json "$SMOKE_DIR/BENCH_neural.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['rows'], 'empty neural matrix (no fake mesh?)'; \
+assert {w['sync']: w['compressed_gather_dtypes'] for w in d['wire']} \
+== {'exact': [], 'bf16': ['u16'], 'int8_ef': ['u8']}, \
+'neural sync wire not at the claimed dtype in compiled HLO'" \
+  "$SMOKE_DIR/BENCH_neural.json"
+python scripts/check_bench_drift.py \
+  "$SMOKE_DIR/BENCH_neural.json" BENCH_neural.json
 
 # million-player scaling smoke: the n = 10^6 mean-field row must actually
 # run, and its per-player downlink must equal the n = 10^2 row's (the O(d)

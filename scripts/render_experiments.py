@@ -33,6 +33,7 @@ ENGINE = os.path.join(ROOT, "BENCH_engine.json")
 COLLECTIVE = os.path.join(ROOT, "BENCH_collective.json")
 WALLCLOCK = os.path.join(ROOT, "BENCH_wallclock.json")
 SCALING = os.path.join(ROOT, "BENCH_scaling.json")
+NEURAL = os.path.join(ROOT, "BENCH_neural.json")
 
 
 def _load(path):
@@ -217,6 +218,41 @@ def render_scaling(data) -> str:
     return "\n".join(lines)
 
 
+def render_neural(data) -> str:
+    if data is None or not data.get("rows"):
+        return "*(BENCH_neural.json artifact missing — run " \
+               "`python benchmarks/bench_neural.py --json " \
+               "BENCH_neural.json` on a multi-device host)*"
+    wire = {w["sync"]: w for w in data.get("wire", [])}
+    roof = {(r["sync"], r["tau"]): r for r in data.get("roofline", [])}
+    lines = [
+        "| sync | tau | bytes/round | loss (first → final) | rounds-to-eq | "
+        "bytes-to-eq | wire gather | ICI s/local step |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in data["rows"]:
+        w = wire.get(r["sync"], {})
+        gather = ", ".join(w.get("compressed_gather_dtypes", [])) or "f32"
+        ici = roof.get((r["sync"], r["tau"]), {}).get("ici_s_per_local_step")
+        lines.append(
+            f"| {r['sync']} | {r['tau']} | {_kb(r['bytes_per_round'])} | "
+            f"{r['loss_first']:.4f} → {r['loss_final']:.4f} | "
+            f"{_rounds(r)} | {_kb(r['bytes_to_eq'])} | {gather} | "
+            f"{'—' if ici is None else f'{ici:.2e}'} |")
+    lines.append(
+        f"\n*{data.get('n_players', '?')} × {data.get('arch', '?')} players "
+        f"on the two-axis (players × model) mesh "
+        f"({data.get('device_count', '?')} devices), Pallas kernels on; "
+        f"loss target {data.get('loss_target', '?')}. The wire-gather "
+        f"column is the compiled player-axis all-gather operand dtype "
+        f"(dry-run HLO); ICI seconds are the billed bytes at the "
+        f"production-mesh link bandwidth (`launch/perf.py`'s pod-collective "
+        f"term) — per LOCAL step they fall tau-fold, Theorem 3.4 as wire "
+        f"time. Seconds columns in the artifact are machine-local and "
+        f"schema-checked only.*")
+    return "\n".join(lines)
+
+
 SECTIONS = {
     "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
     "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
@@ -225,6 +261,7 @@ SECTIONS = {
     "AUTO-BENCH-WIRE-PARITY": lambda: render_wire_parity(_load(COLLECTIVE)),
     "AUTO-BENCH-WALLCLOCK": lambda: render_wallclock(_load(WALLCLOCK)),
     "AUTO-BENCH-SCALING": lambda: render_scaling(_load(SCALING)),
+    "AUTO-BENCH-NEURAL": lambda: render_neural(_load(NEURAL)),
 }
 
 

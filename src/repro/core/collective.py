@@ -328,6 +328,106 @@ def sharded_joint_wire(x: Array, *, mesh: Mesh, sync,
 
 
 # =========================================================================
+# The general stale-block merge (masks / graphs / delayed refs)
+# =========================================================================
+def masked_payload(x_local, mask_local, wire) -> Array:
+    """Per-device wire payload for the stale-block merge.
+
+    Participants' blocks cross at the wire encoding; non-participants' slots
+    are **zero bits**. The SPMD gather is static-shape — a runtime mask
+    cannot change how many buffers cross — so "masked players ship zero wire
+    bytes" is a payload-content claim: the masked slots carry no information
+    (and cost nothing under any compressing transport). Exposed so tests can
+    pin the zeroed rows value-level, alongside the HLO operand-dtype
+    assertion.
+    """
+    enc = x_local if wire is None else wire.encode(x_local)
+    keep = mask_local.astype(bool).reshape(
+        (-1,) + (1,) * (enc.ndim - 1))
+    return jnp.where(keep, enc, jnp.zeros_like(enc))
+
+
+def sharded_stale_merge(new_params, snapshot, refs, mask, mix, *,
+                        mesh: Mesh, sync=None, sync_dtype=None,
+                        axis_name: str = PLAYER_AXIS, inner_specs=None):
+    """Mesh lowering of the trainer's general stale-block merge.
+
+    Host-loop semantics (``repro.train.pearl_trainer.make_pearl_round``):
+
+    - participants overwrite their snapshot block with the freshly
+      compressed local params; non-participants' blocks stay stale;
+    - every participant re-mixes its reference from the merged snapshot via
+      its row of ``mix``; non-participants keep their stale reference.
+
+    Per-player params/refs and the mixing rows are sharded carries on
+    ``axis_name``; the snapshot and the host-drawn mask enter replicated
+    (each device needs every player's stale block to apply its mixing rows).
+    One all-gather moves the **participants'** freshly encoded blocks — the
+    only cross-player collective in the round, at the wire dtype, with
+    masked slots zeroed (:func:`masked_payload`). ``decode(encode(x))`` is
+    bit-identical to the host path's ``compress(x).astype(dtype)``, so
+    host/mesh trajectory differences are reduction-order only; byte
+    accounting is computed host-side from the drawn masks and is untouched
+    by the lowering (the PR 5 invariance rule).
+
+    Returns ``(new_refs, new_snapshot)`` — refs sharded over ``axis_name``,
+    snapshot replicated.
+    """
+    from repro.core.engine import resolve_sync
+
+    strategy = resolve_sync(sync, sync_dtype)
+    wire = wire_spec(strategy)
+    leaves = jax.tree.leaves(new_params)
+    if not leaves:
+        return refs, snapshot
+    n = leaves[0].shape[0]
+    _validate_players(n, mesh, axis_name)
+    k = n // _axis_size(mesh, axis_name)
+
+    def body(p_l, snap_f, refs_l, mask_f, mix_l):
+        me = jax.lax.axis_index(axis_name)
+        mask_l = jax.lax.dynamic_slice_in_dim(mask_f, me * k, k)
+        keep_f = mask_f.astype(bool)
+        keep_l = mask_l.astype(bool)
+
+        def leaf(p, snap, ref):
+            payload = masked_payload(p, keep_l, wire)
+            gathered = jax.lax.all_gather(payload, axis_name, axis=0,
+                                          tiled=True)
+            fresh = gathered if wire is None else wire.decode(gathered,
+                                                              p.dtype)
+            merged = jnp.where(
+                keep_f.reshape((-1,) + (1,) * (snap.ndim - 1)), fresh, snap)
+            mixed = jnp.einsum("ij,j...->i...", mix_l.astype(merged.dtype),
+                               merged)
+            new_ref = jnp.where(
+                keep_l.reshape((-1,) + (1,) * (ref.ndim - 1)), mixed, ref)
+            return new_ref, merged
+
+        p_leaves, treedef = jax.tree.flatten(p_l)
+        out_r, out_s = [], []
+        for p, s, rf in zip(p_leaves, jax.tree.leaves(snap_f),
+                            jax.tree.leaves(refs_l)):
+            nr, ns = leaf(p, s, rf)
+            out_r.append(nr)
+            out_s.append(ns)
+        return (jax.tree.unflatten(treedef, out_r),
+                jax.tree.unflatten(treedef, out_s))
+
+    if inner_specs is None:
+        sharded = jax.tree.map(lambda _: P(axis_name), new_params)
+        replicated = jax.tree.map(lambda _: P(), new_params)
+    else:
+        sharded = jax.tree.map(lambda s: P(axis_name, *s), inner_specs)
+        replicated = jax.tree.map(lambda s: P(None, *s), inner_specs)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(sharded, replicated, sharded, P(), P(axis_name, None)),
+        out_specs=(sharded, replicated), check_rep=False,
+    )(new_params, snapshot, refs, mask, mix)
+
+
+# =========================================================================
 # Gossip: Metropolis mixing over mesh neighbors
 # =========================================================================
 def circulant_offsets(adjacency: np.ndarray) -> tuple[int, ...] | None:

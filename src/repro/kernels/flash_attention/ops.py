@@ -1,25 +1,28 @@
-"""jit'd public wrapper around the flash-attention Pallas kernel."""
+"""jit'd public wrapper around the flash-attention Pallas kernel.
+
+The Pallas kernel is forward-only; `pallas_call` has no autodiff rule, so
+differentiating through it raises at trace time. The public op therefore
+carries a ``custom_vjp``: the primal runs the kernel, the backward pass
+differentiates the pure-jnp oracle (:mod:`.ref`) on the saved inputs. The
+two forwards agree to kernel-parity tolerance (tests/test_kernels.py), so
+the cotangents are those of the reference softmax attention — the standard
+arrangement when only the forward kernel is hand-written.
+"""
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, pad_to
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
-    """Flash attention over (B, S, H, hd) with KV pre-expanded to H heads.
-
-    Pads S to block multiples (mask handles the tail), reshapes heads into
-    the grid batch, and restores the original layout.
-    """
-    if interpret is None:
-        interpret = default_interpret()
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, window, block_q, block_k, interpret):
     b, sq, h, hd = q.shape
     sk = k.shape[1]
     bq = min(block_q, max(16, 1 << (sq - 1).bit_length()))
@@ -37,3 +40,37 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                kv_len=sk)
     out = out[:, :sq]
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    out = _flash_attention(q, k, v, causal, window, block_q, block_k,
+                           interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    ref_out, vjp = jax.vjp(
+        lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window),
+        q, k, v,
+    )
+    return vjp(g.astype(ref_out.dtype))
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Flash attention over (B, S, H, hd) with KV pre-expanded to H heads.
+
+    Pads S to block multiples (mask handles the tail), reshapes heads into
+    the grid batch, and restores the original layout. Differentiable: the
+    backward pass is the VJP of the jnp oracle (see module docstring).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, causal, window, block_q, block_k,
+                            interpret)

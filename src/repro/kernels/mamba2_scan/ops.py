@@ -1,12 +1,46 @@
-"""jit'd public wrapper for the chunked-SSD Pallas kernel."""
+"""jit'd public wrapper for the chunked-SSD Pallas kernel.
+
+Forward-only kernel + ``custom_vjp``: the backward pass differentiates the
+sequential jnp oracle (:mod:`.ref`) on the saved inputs, so the op is
+trainable (see flash_attention/ops.py for the rationale).
+"""
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.mamba2_scan.kernel import ssd_chunked_pallas
+from repro.kernels.mamba2_scan.ref import ssd_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_scan(x, dt, A, B, C, chunk, interpret):
+    L = x.shape[1]
+    q = min(chunk, L)
+    while L % q:
+        q //= 2
+    y, h_final = ssd_chunked_pallas(x, dt, A, B, C, chunk=q,
+                                    interpret=interpret)
+    return y, h_final.astype(x.dtype)
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk, interpret):
+    out = _ssd_scan(x, dt, A, B, C, chunk, interpret)
+    return out, (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, A, B, C = res
+    ref_out, vjp = jax.vjp(ssd_ref, x, dt, A, B, C)
+    g = jax.tree.map(lambda gi, oi: gi.astype(oi.dtype), g, ref_out)
+    return vjp(g)
+
+
+_ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
@@ -15,10 +49,4 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     """Drop-in replacement for models.ssm.ssd_chunked (same contract)."""
     if interpret is None:
         interpret = default_interpret()
-    L = x.shape[1]
-    q = min(chunk, L)
-    while L % q:
-        q //= 2
-    y, h_final = ssd_chunked_pallas(x, dt, A, B, C, chunk=q,
-                                    interpret=interpret)
-    return y, h_final.astype(x.dtype)
+    return _ssd_scan(x, dt, A, B, C, chunk, interpret)

@@ -1,24 +1,24 @@
-"""jit'd public wrapper for the chunkwise mLSTM Pallas kernel."""
+"""jit'd public wrapper for the chunkwise mLSTM Pallas kernel.
+
+Forward-only kernel + ``custom_vjp``: the backward pass differentiates the
+sequential jnp oracle (:mod:`.ref`) on the saved inputs, so the op is
+trainable (see flash_attention/ops.py for the rationale).
+"""
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.mlstm_chunk.kernel import mlstm_chunked_pallas
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
 
 
-def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, logi: jax.Array,
-               logf: jax.Array, *, chunk: int = 128,
-               interpret: bool | None = None):
-    """Drop-in replacement for models.xlstm.mlstm_chunked.
-
-    q,k,v: (b, L, H, dh); logi/logf (b, L, H). Returns (h (b,L,H,dh),
-    (C (b,H,dh,dh), n (b,H,dh), m (b,H))).
-    """
-    if interpret is None:
-        interpret = default_interpret()
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _mlstm_scan(q, k, v, logi, logf, chunk, interpret):
     b, L, H, dh = q.shape
     cq = min(chunk, L)
     while L % cq:
@@ -40,3 +40,31 @@ def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, logi: jax.Array,
         n.reshape(b, H, dh),
         m.reshape(b, H),
     )
+
+
+def _mlstm_fwd(q, k, v, logi, logf, chunk, interpret):
+    out = _mlstm_scan(q, k, v, logi, logf, chunk, interpret)
+    return out, (q, k, v, logi, logf)
+
+
+def _mlstm_bwd(chunk, interpret, res, g):
+    q, k, v, logi, logf = res
+    ref_out, vjp = jax.vjp(mlstm_ref, q, k, v, logi, logf)
+    g = jax.tree.map(lambda gi, oi: gi.astype(oi.dtype), g, ref_out)
+    return vjp(g)
+
+
+_mlstm_scan.defvjp(_mlstm_fwd, _mlstm_bwd)
+
+
+def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, logi: jax.Array,
+               logf: jax.Array, *, chunk: int = 128,
+               interpret: bool | None = None):
+    """Drop-in replacement for models.xlstm.mlstm_chunked.
+
+    q,k,v: (b, L, H, dh); logi/logf (b, L, H). Returns (h (b,L,H,dh),
+    (C (b,H,dh,dh), n (b,H,dh), m (b,H))).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mlstm_scan(q, k, v, logi, logf, chunk, interpret)

@@ -1,7 +1,9 @@
 """Training: single-player train_step + MpFL PearlTrainer (players = pods)."""
 
+from repro.train.neural import NeuralPlayerAdapter, two_axis_mesh
 from repro.train.pearl_trainer import PearlCommReport, PearlTrainer, make_pearl_round
 from repro.train.train_step import lm_loss, make_loss_fn, make_train_step
 
-__all__ = ["PearlCommReport", "PearlTrainer", "make_pearl_round",
+__all__ = ["NeuralPlayerAdapter", "two_axis_mesh",
+           "PearlCommReport", "PearlTrainer", "make_pearl_round",
            "lm_loss", "make_loss_fn", "make_train_step"]

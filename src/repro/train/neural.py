@@ -1,0 +1,141 @@
+"""Neural PEARL players on the two-axis mesh.
+
+The paper's players are neural learners with individual objectives;
+:class:`~repro.train.pearl_trainer.PearlTrainer` supplies the PEARL loop
+(tau local steps against a frozen stale reference, one synchronization per
+round) for any player-stacked param pytree. This module binds it to the
+real model stack:
+
+- **players** come from the model configs (``get_config("smollm-360m")``,
+  ``get_config("xlstm-125m")``, ...) — per-player param pytrees initialized
+  per player, local updates through ``train_step.make_loss_fn`` with the
+  Pallas kernel path on by default;
+- **the mesh is two-axis**: the player/pod collective axis (PR 5) times the
+  within-player tensor-parallel axis, with per-leaf PartitionSpecs from
+  :func:`repro.models.sharding.param_partition_specs` threaded into the
+  shard_map collectives as ``mesh_inner_specs`` — so the sync all-gather
+  crosses only the player axis while each player's matrices stay
+  model-sharded;
+- **wire claims stay HLO-verified**: :meth:`NeuralPlayerAdapter.
+  lower_round_hlo` compiles the trainer's round dry-run so tests and
+  benchmarks can assert the quantized sync's operand dtype with
+  :func:`repro.core.collective.assert_wire_dtype`, same as the PR 5/6
+  matrix wires.
+
+On a single device (plain tier-1 CI) the adapter degrades to the host
+lowering — ``mesh=None`` compiles the identical legacy program — so smokes
+run anywhere; the multi-device CI job exercises the sharded paths on the
+fake 8-device mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core.collective import PLAYER_AXIS
+from repro.models.model import param_shapes
+from repro.models.sharding import param_partition_specs
+from repro.optim.optimizers import Optimizer
+from repro.train.pearl_trainer import PearlTrainer
+
+__all__ = ["NeuralPlayerAdapter", "two_axis_mesh"]
+
+
+def two_axis_mesh(n_players: int, *, devices=None,
+                  axis_name: str = PLAYER_AXIS,
+                  model_axis: str = "model") -> Mesh | None:
+    """A ``(players, model)`` mesh sized to the available devices.
+
+    The player axis takes the largest divisor of ``n_players`` that fits;
+    the model axis absorbs the remaining device factor (within-player
+    tensor parallelism — :func:`~repro.models.sharding.param_partition_specs`
+    shards head/ffn/vocab dims over it when divisible). Returns ``None``
+    when only a trivial 1x1 mesh would fit a multi-player run: a mesh with
+    no wire would make the HLO-level claims vacuous, and the host lowering
+    is bit-identical anyway.
+    """
+    if n_players < 1:
+        raise ValueError(f"n_players must be >= 1, got {n_players}")
+    devs = list(jax.devices() if devices is None else devices)
+    psize = max(k for k in range(1, min(n_players, len(devs)) + 1)
+                if n_players % k == 0)
+    msize = max(1, len(devs) // psize)
+    if psize * msize < 2:
+        return None
+    grid = np.array(devs[: psize * msize]).reshape(psize, msize)
+    return Mesh(grid, (axis_name, model_axis))
+
+
+class NeuralPlayerAdapter:
+    """PearlTrainer with real neural players, sharded on the two-axis mesh.
+
+    Thin by design: model construction, sharding policy, and the PEARL loop
+    all already exist — this class wires them together (mesh construction,
+    spec threading, kernel path) and adds the dry-run HLO surface the wire
+    assertions need. All ``PearlTrainer`` keywords pass through (``sync``,
+    ``sync_dtype``, ``topology``, ``delays``/``max_staleness``,
+    ``policy``, ...).
+
+    ``devices=None`` sizes the mesh to ``jax.devices()``;
+    ``devices=False`` forces the host lowering (no mesh).
+    """
+
+    def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *,
+                 n_players: int, tau: int, prox_lambda: float,
+                 use_kernels: bool = True, devices=None,
+                 axis_name: str = PLAYER_AXIS, **trainer_kwargs):
+        self.cfg = cfg
+        self.n_players = n_players
+        self.mesh = (None if devices is False
+                     else two_axis_mesh(n_players, devices=devices or None,
+                                        axis_name=axis_name))
+        self.inner_specs = None
+        if self.mesh is not None:
+            self.inner_specs = param_partition_specs(
+                param_shapes(cfg), cfg,
+                model_size=self.mesh.shape["model"])
+            trainer_kwargs.update(mesh=self.mesh, mesh_axis=axis_name,
+                                  mesh_inner_specs=self.inner_specs)
+        self.trainer = PearlTrainer(
+            cfg, optimizer, n_players=n_players, tau=tau,
+            prox_lambda=prox_lambda, use_kernels=use_kernels,
+            **trainer_kwargs,
+        )
+
+    def run(self, stream, rounds: int):
+        return self.trainer.run(stream, rounds)
+
+    def comm_report(self, rounds: int | None = None):
+        return self.trainer.comm_report(rounds)
+
+    def player_params(self, i: int):
+        """One player's (unstacked) param pytree — e.g. for serving."""
+        return jax.tree.map(lambda x: x[i], self.trainer.params)
+
+    def lower_round_hlo(self, *, seq_len: int = 32,
+                        batch_size: int = 2) -> str:
+        """Optimized HLO of the compiled round (dry-run, nothing executed).
+
+        The assertion surface for the wire claims: feed to
+        :func:`repro.core.collective.assert_wire_dtype` /
+        :func:`~repro.core.collective.wire_dtype_report`.
+        """
+        tr = self.trainer
+        tokens = {"tokens": jnp.zeros(
+            (self.n_players, tr.tau, batch_size, seq_len), jnp.int32)}
+        if tr._general:
+            args = (tr.params, tr.opt_state, tokens, tr.refs, tr.snapshot,
+                    jnp.ones((self.n_players,), bool),
+                    jnp.asarray(tr._mixes[0]))
+            if tr._policy_active:
+                args = args + (jnp.ones((self.n_players,), jnp.float32),)
+        elif tr._lowbit:
+            args = (tr.params, tr.opt_state, tokens, tr.xbar,
+                    tr._wire_state)
+        else:
+            args = (tr.params, tr.opt_state, tokens, tr.xbar)
+        return tr._round.lower(*args).compile().as_text()

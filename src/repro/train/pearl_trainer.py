@@ -128,11 +128,10 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None,
     if hasattr(strategy, "wire_encode"):
         raise ValueError(
             f"{type(strategy).__name__} is a sub-bf16 engine wire (per-block "
-            f"scales + error-feedback state); the trainer's pre-reduction "
-            f"compression and PearlCommReport do not thread the scale "
-            f"overhead or the residual — use the dense engines "
-            f"(PearlEngine/AsyncPearlEngine) for low-bit sync, or "
-            f"QuantizedSync for the trainer"
+            f"scales + error-feedback state); tree_mean is stateless and "
+            f"per-call — use tree_mean_lowbit, which threads the residual "
+            f"and returns it (the trainer's star fast path does this "
+            f"automatically), or QuantizedSync here"
         )
     if mesh is not None:
         from repro.core.collective import sharded_tree_mean
@@ -160,6 +159,62 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None,
         return jnp.mean(x, axis=axis, dtype=jnp.float32)
 
     return jax.tree.map(mean, stacked)
+
+
+def tree_mean_lowbit(stacked, wire_state, sync, *, mesh=None,
+                     mesh_axis: str = "players", mesh_inner_specs=None):
+    """Across-player mean over a low-bit error-feedback wire, for pytrees.
+
+    The engine's ``Int8Sync``/``Int4Sync`` wire, extended from ``(n, d)``
+    matrices to player-stacked param pytrees: each leaf ``(n, ...)`` is
+    flattened per player to ``(n, D_leaf)`` so the strategy's last-axis
+    block scale becomes one f32 scale per (player, leaf). The transmit
+    tensor is ``t = x + e`` (``e`` the carried residual, zero for
+    ``error_feedback=False``), the wire moves ``roundtrip(t)``, and the new
+    residual ``e' = t - roundtrip(t)`` is returned for the caller to carry
+    across rounds — the trainer threads it through the jitted round.
+
+    With a ``mesh`` the reduction goes through
+    :func:`repro.core.collective.sharded_tree_mean`, whose ``LowBitCodec``
+    ``decode(encode(t))`` is bit-identical to ``roundtrip(t)`` — so the
+    compiled collective's operand is the single u8 payload (scale bytes ++
+    lanes), asserted on dry-run HLO. The flattened ``(n, D)`` wire has no
+    within-player axes, so ``mesh_inner_specs`` is accepted for signature
+    symmetry but the gather itself is player-axis only.
+
+    Returns ``(mean, new_wire_state)``; ``mean`` matches the shape of one
+    player's pytree, f32.
+    """
+    del mesh_inner_specs   # the flattened wire has no inner axes to thread
+    if not hasattr(sync, "wire_encode"):
+        raise ValueError(
+            f"tree_mean_lowbit is the low-bit wire path; "
+            f"{type(sync).__name__} has no wire_encode — use tree_mean"
+        )
+    stateful = sync.has_wire_state
+
+    t_flat = jax.tree.map(
+        lambda x, e: (x + e).reshape(x.shape[0], -1) if stateful
+        else x.reshape(x.shape[0], -1),
+        stacked, wire_state if stateful else stacked,
+    )
+    rt = jax.tree.map(sync.roundtrip, t_flat)
+    if mesh is None:
+        mean = jax.tree.map(
+            lambda r, x: jnp.mean(r, axis=0, dtype=jnp.float32).reshape(
+                x.shape[1:]), rt, stacked)
+    else:
+        from repro.core.collective import sharded_tree_mean
+
+        mean_flat = sharded_tree_mean(t_flat, mesh=mesh, sync=sync,
+                                      axis_name=mesh_axis)
+        mean = jax.tree.map(lambda m, x: m.reshape(x.shape[1:]),
+                            mean_flat, stacked)
+    if not stateful:
+        return mean, wire_state
+    new_state = jax.tree.map(
+        lambda t, r, x: (t - r).reshape(x.shape), t_flat, rt, stacked)
+    return mean, new_state
 
 
 def stack_players(params_list):
@@ -237,17 +292,26 @@ def make_pearl_round(
     here so the compiled round can never silently ignore a policy.
 
     A ``mesh`` (player dimension on ``mesh_axis`` — ``"pod"`` on the
-    production multi-pod mesh, where player = pod) lowers the star fast
-    path's synchronization through the explicit shard_map collective
-    (:func:`repro.core.collective.sharded_tree_mean`), so a
-    ``QuantizedSync`` wire provably stays compressed in the compiled HLO.
-    ``mesh_inner_specs`` optionally carries the per-leaf PartitionSpecs of
-    the non-player dims (the launcher's tensor-parallel layout) so the
-    collective crosses only the player axis. Only the star
-    full-participation fast path is mesh-lowered: the general stale-block
-    merge is host-loop semantics (host-drawn masks, host-refreshed stale
-    references), so ``mesh`` x {mask strategy, graph topology,
-    external_refs} is rejected rather than silently ignored.
+    production multi-pod mesh, where player = pod) lowers the round's
+    cross-player communication through the explicit shard_map collectives
+    of :mod:`repro.core.collective`, so a ``QuantizedSync`` (or low-bit)
+    wire provably stays compressed in the compiled HLO. The star fast path
+    goes through :func:`~repro.core.collective.sharded_tree_mean`; the
+    general stale-block merge through
+    :func:`~repro.core.collective.sharded_stale_merge` — per-player params,
+    refs, and mixing rows are sharded carries on the player axis, the
+    host-drawn mask and the snapshot enter replicated, and the one
+    all-gather ships participants' freshly encoded blocks with masked slots
+    zeroed. ``mesh_inner_specs`` optionally carries the per-leaf
+    PartitionSpecs of the non-player dims (the launcher's tensor-parallel
+    layout) so the collectives cross only the player axis. The host loop is
+    still chosen in two places: ``mesh=None`` compiles the identical legacy
+    program (trace-time branch, pinned collective-free), and the async
+    reference refresh (``external_refs=True``) stays host logic — its
+    in-round merge is purely elementwise (participants overwrite their own
+    snapshot block; no cross-player collective is needed until the
+    host-side delayed re-mix), so that round compiles under a mesh as plain
+    sharded SPMD with no in-round wire at all.
 
     ``view`` names the reference axis in the engines' ``JointView``
     vocabulary. The consensus game is aggregative, so the star fast path
@@ -348,22 +412,33 @@ def make_pearl_round(
             f"strategy, or a graph topology"
         )
 
-    if mesh is not None and (external_refs
-                             or needs_general_round(strategy, topo)):
-        raise ValueError(
-            f"mesh lowering covers the star full-participation fast path; "
-            f"the general stale-block merge (topology="
-            f"{type(topo).__name__}, sync={type(strategy).__name__}, "
-            f"external_refs={external_refs}) is host-loop semantics — run "
-            f"it with mesh=None, or use the dense engine's mesh-lowered "
-            f"gossip (PearlEngine(mesh=...)) for graph topologies"
-        )
-
     # ``external_refs`` compiles the stale-block merge round even when the
     # star fast path would suffice, and skips the in-round reference re-mix:
     # the async trainer refreshes references host-side from DELAYED
     # snapshots, so computing fresh ones here would be wasted work.
     if not external_refs and not needs_general_round(strategy, topo):
+        if hasattr(strategy, "wire_encode"):
+            # Low-bit wire: the sync is stateful (error-feedback residual),
+            # so the round carries wire_state explicitly — signature
+            # pearl_round(params, opt, batches, xbar, wire_state) returning
+            # (..., new_wire_state, metrics).
+            round_fn = make_federated_round(
+                local_step, lambda stacked: None, unroll=unroll,
+            )
+
+            def pearl_round(stacked_params, stacked_opt, batches, xbar,
+                            wire_state):
+                (new_p, new_o), _, metrics = round_fn(
+                    (stacked_params, stacked_opt), batches["tokens"], xbar
+                )
+                new_xbar, new_state = tree_mean_lowbit(
+                    new_p, wire_state, strategy, mesh=mesh,
+                    mesh_axis=mesh_axis, mesh_inner_specs=mesh_inner_specs,
+                )
+                return new_p, new_o, new_xbar, new_state, metrics
+
+            return pearl_round
+
         round_fn = make_federated_round(
             local_step,
             lambda stacked: tree_mean(stacked[0], sync=strategy, mesh=mesh,
@@ -382,6 +457,17 @@ def make_pearl_round(
 
         return pearl_round
 
+    if getattr(strategy, "has_wire_state", False):
+        raise ValueError(
+            f"{type(strategy).__name__} carries error-feedback wire state, "
+            f"which is defined for the star full-participation broadcast "
+            f"(ONE wire tensor per round with a well-defined residual); the "
+            f"general stale-block merge (topology={type(topo).__name__}, "
+            f"external_refs={external_refs}) has no per-player residual "
+            f"carry — construct the strategy with error_feedback=False "
+            f"(stateless low-bit) or use the star fast path"
+        )
+
     # General stale-block merge: per-player references (broadcast_in_axes=0),
     # the collective replaced by mask-merge + topology mixing.
     round_fn = make_federated_round(
@@ -399,6 +485,19 @@ def make_pearl_round(
         (new_p, new_o), _, metrics = round_fn(
             (stacked_params, stacked_opt), batches["tokens"], bcast
         )
+        if mesh is not None and not external_refs:
+            # Mesh lowering of the merge below: one all-gather of the
+            # participants' encoded blocks (masked slots zeroed) at the
+            # wire dtype, merge + per-row re-mix computed device-local.
+            # decode(encode(x)) is bit-identical to compress(x).astype, so
+            # the host/mesh trajectories differ by reduction order only.
+            from repro.core.collective import sharded_stale_merge
+
+            new_refs, new_snapshot = sharded_stale_merge(
+                new_p, snapshot, refs, mask, mix, mesh=mesh, sync=strategy,
+                axis_name=mesh_axis, inner_specs=mesh_inner_specs,
+            )
+            return new_p, new_o, new_refs, new_snapshot, metrics
         # Participants put their freshly quantized block on the wire; the
         # stale blocks of everyone else survive in the snapshot.
         wire = jax.tree.map(
@@ -468,17 +567,27 @@ class PearlCommReport:
     topology: Topology | None = None
     participants: Any = None   # (rounds,) billed uploads; None = everyone
     messages: Any = None       # (rounds,) billed gossip links; None = all edges
+    sync: Any = None           # full strategy (low-bit wires resolve via it)
+    blocks_per_player: int = 1  # pytree leaves per upload (scale overhead)
 
     def __post_init__(self):
         explicit = self.bytes_per_scalar is not None
         if explicit:
             up = down = int(self.bytes_per_scalar)
+        elif self.sync is not None:
+            up, down = direction_itemsizes(self.sync, 4, compressed="up")
         else:
             strategy = (QuantizedSync(self.sync_dtype)
                         if self.sync_dtype is not None else ExactSync())
             up, down = direction_itemsizes(strategy, 4, compressed="up")
         self.bytes_per_scalar = up
         self._down_bps = down
+        # low-bit wires bill one f32 scale per transmitted leaf on top of
+        # the lane payload (the engine's wire_overhead_bytes_per_block, with
+        # block = flattened param leaf here); zero for every other strategy
+        per_block = (getattr(self.sync, "wire_overhead_bytes_per_block", 0)
+                     if not explicit else 0)
+        self.uplink_overhead_bytes = int(self.blocks_per_player * per_block)
 
     @property
     def downlink_bytes_per_scalar(self) -> int:
@@ -488,12 +597,15 @@ class PearlCommReport:
     @classmethod
     def from_sync(cls, sync: SyncStrategy, *, n_players: int, param_count: int,
                   tau: int, rounds: int, topology: Topology | None = None,
-                  participants=None, messages=None) -> "PearlCommReport":
+                  participants=None, messages=None,
+                  blocks_per_player: int = 1) -> "PearlCommReport":
         """Report for an engine sync strategy under a topology."""
         dtype = sync.dtype if isinstance(sync, QuantizedSync) else None
+        lowbit = sync if hasattr(sync, "wire_encode") else None
         return cls(n_players=n_players, param_count=param_count, tau=tau,
                    rounds=rounds, sync_dtype=dtype, topology=topology,
-                   participants=participants, messages=messages)
+                   participants=participants, messages=messages,
+                   sync=lowbit, blocks_per_player=blocks_per_player)
 
     @property
     def sync_bytes_per_round(self) -> int:
@@ -523,16 +635,20 @@ class PearlCommReport:
                 down_itemsize=self.downlink_bytes_per_scalar,
                 down_blocks=1,   # the server rebroadcasts only the mean
             )
+            # per-leaf f32 scales ride the uplink of each billed upload
+            up = up + billed * self.uplink_overhead_bytes
             return up, down
         if self.messages is not None:
             msgs = np.asarray(self.messages)
         else:
             edges = topo.directed_edge_counts(self.n_players)
             msgs = edges[np.arange(self.rounds) % len(edges)]
-        return gossip_round_bytes(
+        up, down = gossip_round_bytes(
             msgs, payload_blocks=1, block_scalars=self.param_count,
             itemsize=self.bytes_per_scalar,
         )
+        # stateless low-bit relays carry their per-leaf scales per message
+        return up + msgs * self.uplink_overhead_bytes, down
 
     @property
     def total_bytes(self) -> int:
@@ -581,10 +697,19 @@ class PearlTrainer:
     no closed-form constants); mismatches raise at construction.
 
     A ``mesh=`` keyword (forwarded to :func:`make_pearl_round`) lowers the
-    star fast path's sync collective under shard_map with an explicit wire
-    dtype — see :mod:`repro.core.collective`. It composes with
-    ``sync_dtype``/``QuantizedSync`` but not with masks, graphs, or the
-    async loop (those are host-loop semantics; construction raises).
+    round's cross-player communication under shard_map with an explicit
+    wire dtype — see :mod:`repro.core.collective`. The star fast path goes
+    through ``sharded_tree_mean``; masks, graph topologies, and the async
+    loop compile the general merge through ``sharded_stale_merge`` (the
+    host still draws masks, refreshes delayed references, and bills bytes —
+    the lowering changes where the merge arithmetic runs, not the
+    semantics, so accounting is identical across lowerings).
+
+    A low-bit ``sync`` (``Int8Sync``/``Int4Sync``) on the star fast path
+    threads the error-feedback residual through the jitted round
+    (:func:`tree_mean_lowbit`) and bills the per-leaf f32 scale overhead;
+    the general merge accepts only the stateless (``error_feedback=False``)
+    variant.
     """
 
     def __init__(self, cfg: ModelConfig, optimizer: Optimizer, *, n_players: int,
@@ -666,6 +791,12 @@ class PearlTrainer:
             topology=self.topology, external_refs=self._async,
             policy=self.policy, **round_kwargs
         ))
+        self._lowbit = (not self._general
+                        and hasattr(self.sync, "wire_encode"))
+        if self._lowbit:
+            # error-feedback residual (zeros when error_feedback=False, in
+            # which case the round returns it unchanged)
+            self._wire_state = jax.tree.map(jnp.zeros_like, self.params)
         if self._general:
             # init acts as round 0's broadcast: everyone's block is known
             self.snapshot = self.params
@@ -823,6 +954,12 @@ class PearlTrainer:
                     self._ref_delays = np.where(m_np, 0,
                                                 self._ref_delays + 1)
                 self.xbar = tree_mean(self.snapshot)
+            elif self._lowbit:
+                (self.params, self.opt_state, self.xbar, self._wire_state,
+                 metrics) = self._round(
+                    self.params, self.opt_state, tokens, self.xbar,
+                    self._wire_state,
+                )
             else:
                 self.params, self.opt_state, self.xbar, metrics = self._round(
                     self.params, self.opt_state, tokens, self.xbar,
@@ -856,13 +993,15 @@ class PearlTrainer:
             else:
                 messages = np.asarray(
                     self._round_messages[:n_rounds], dtype=np.int64)
+        shapes = param_shapes(self.cfg)
         return PearlCommReport.from_sync(
             self.sync,
             n_players=self.n_players,
-            param_count=count_params(param_shapes(self.cfg)),
+            param_count=count_params(shapes),
             tau=self.tau,
             rounds=n_rounds,
             topology=self.topology,
             participants=participants,
             messages=messages,
+            blocks_per_player=len(jax.tree.leaves(shapes)),
         )

@@ -218,9 +218,11 @@ class TestAccountingAndRejections:
                    topology=Ring())
         assert float(res.rel_errors[-1]) < float(res.rel_errors[0])
 
-    def test_trainer_tree_mean_rejects_lowbit(self):
+    def test_trainer_tree_mean_redirects_lowbit(self):
+        # stateless per-call tree_mean cannot carry the EF residual; the
+        # error points at tree_mean_lowbit, which threads it (PR 8)
         t = {"w": jnp.zeros((4, 8), jnp.float32)}
-        with pytest.raises(ValueError, match="dense engines"):
+        with pytest.raises(ValueError, match="tree_mean_lowbit"):
             tree_mean(t, sync=Int8Sync())
 
     def test_frozen_hashable(self):

@@ -334,3 +334,179 @@ class TestCommReport:
         with pytest.raises(ValueError):
             tree_mean({"w": jnp.ones((2, 3))},
                       sync=PartialParticipation(fraction=0.5))
+
+    def test_lowbit_report_bills_per_leaf_scales(self, cfg):
+        """An int8 wire bills one f32 scale per transmitted param leaf on
+        top of the 1 B/scalar lanes; every other strategy bills zero
+        overhead, so the legacy byte pins stay intact."""
+        from repro.core.engine import Int8Sync
+        from repro.models.model import param_shapes
+
+        trainer = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                               prox_lambda=1e-3, sync=Int8Sync())
+        rep = trainer.comm_report(rounds=2)
+        n_leaves = len(jax.tree.leaves(param_shapes(cfg)))
+        assert rep.uplink_overhead_bytes == 4 * n_leaves
+        assert rep.bytes_per_scalar == 1
+        up, down = rep.per_round_bytes()
+        assert (up == N_PLAYERS * (rep.param_count + 4 * n_leaves)).all()
+        # every player downloads the f32 mean
+        assert (down == N_PLAYERS * rep.param_count * 4).all()
+        plain = PearlCommReport(n_players=4, param_count=100, tau=2,
+                                rounds=1)
+        assert plain.uplink_overhead_bytes == 0
+
+
+class TestLowBitTrainer:
+    """Int8/Int4 error-feedback wires on the star fast path: the residual
+    threads through the jitted round (tree_mean_lowbit)."""
+
+    def test_int8_ef_round_trains_and_carries_residual(self, cfg):
+        from repro.core.engine import Int8Sync
+
+        trainer = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                               prox_lambda=1e-3, sync=Int8Sync())
+        hist = trainer.run(_stream(cfg), rounds=4)
+        assert hist[-1]["lm_loss"] < hist[0]["lm_loss"]
+        # the error-feedback residual is live state, not zeros
+        res = float(sum(jnp.sum(jnp.abs(l))
+                        for l in jax.tree.leaves(trainer._wire_state)))
+        assert res > 0.0
+
+    def test_stateless_int8_keeps_zero_state(self, cfg):
+        from repro.core.engine import Int8Sync
+
+        trainer = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                               prox_lambda=1e-3,
+                               sync=Int8Sync(error_feedback=False))
+        trainer.run(_stream(cfg), rounds=2)
+        assert all(not np.asarray(l).any()
+                   for l in jax.tree.leaves(trainer._wire_state))
+
+    def test_tree_mean_lowbit_matches_strategy_roundtrip(self, cfg):
+        """Host semantics: mean == mean_j roundtrip(x_j + e_j), residual
+        == what the wire failed to carry."""
+        from repro.core.engine import Int8Sync
+        from repro.train.pearl_trainer import tree_mean_lowbit
+
+        rng = np.random.default_rng(0)
+        stacked = {"w": jnp.asarray(
+            rng.standard_normal((N_PLAYERS, 4, 6)), jnp.float32)}
+        state = jax.tree.map(jnp.zeros_like, stacked)
+        sync = Int8Sync()
+        mean, new_state = tree_mean_lowbit(stacked, state, sync)
+        flat = stacked["w"].reshape(N_PLAYERS, -1)
+        rt = sync.roundtrip(flat)
+        np.testing.assert_array_equal(
+            np.asarray(mean["w"]),
+            np.asarray(jnp.mean(rt, axis=0,
+                                dtype=jnp.float32).reshape(4, 6)))
+        np.testing.assert_array_equal(
+            np.asarray(new_state["w"]),
+            np.asarray((flat - rt).reshape(N_PLAYERS, 4, 6)))
+
+    def test_tree_mean_redirects_lowbit_to_lowbit_path(self):
+        from repro.core.engine import Int8Sync
+
+        with pytest.raises(ValueError, match="tree_mean_lowbit"):
+            tree_mean({"w": jnp.ones((2, 3))}, sync=Int8Sync())
+
+    def test_ef_lowbit_rejected_off_the_fast_path(self, cfg):
+        """The general merge has no per-player residual carry: EF low-bit +
+        mask/topology raises; error_feedback=False is the escape hatch."""
+        from repro.core.engine import Int8Sync
+        from repro.core.topology import Ring
+
+        with pytest.raises(ValueError, match="error_feedback=False"):
+            PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                         prox_lambda=1e-3, topology=Ring(),
+                         sync=Int8Sync())
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            topology=Ring(), sync=Int8Sync(error_feedback=False))
+        hist = trainer.run(_stream(cfg), rounds=2)
+        assert np.isfinite(hist[-1]["lm_loss"])
+
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device (fake) mesh: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+@multi_device
+class TestMeshLoweredTrainer:
+    """The PR 8 tentpole pins: mesh x {masks, external refs, staleness}
+    compile the general stale-block merge under shard_map, track the
+    host-loop trajectories, and bill identical bytes."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        from repro.core import collective
+
+        return collective.player_mesh(N_PLAYERS)
+
+    def _run_pair(self, cfg, mesh, rounds=3, **kw):
+        host = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                            prox_lambda=1e-3, seed=2, **kw)
+        h = host.run(_stream(cfg), rounds=rounds)
+        mesht = PearlTrainer(cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2,
+                             prox_lambda=1e-3, seed=2, mesh=mesh, **kw)
+        m = mesht.run(_stream(cfg), rounds=rounds)
+        for a, b in zip(h, m):
+            assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-5)
+        hr, mr = host.comm_report(), mesht.comm_report()
+        np.testing.assert_array_equal(np.stack(hr.per_round_bytes()),
+                                      np.stack(mr.per_round_bytes()))
+        return host, mesht
+
+    def test_mask_parity(self, cfg, mesh):
+        from repro.core.engine import PartialParticipation
+
+        self._run_pair(cfg, mesh,
+                       sync=PartialParticipation(fraction=0.5, seed=7))
+
+    def test_graph_times_mask_parity(self, cfg, mesh):
+        from repro.core.engine import PartialParticipation
+        from repro.core.topology import Ring
+
+        self._run_pair(cfg, mesh, topology=Ring(),
+                       sync=PartialParticipation(fraction=0.7, seed=1))
+
+    def test_external_refs_parity(self, cfg, mesh):
+        """Async d=0 (external refs, host-side refresh): the in-round merge
+        is elementwise, so the mesh round compiles as plain sharded SPMD."""
+        from repro.core.async_engine import ZeroDelay
+
+        self._run_pair(cfg, mesh, delays=ZeroDelay(), max_staleness=0)
+
+    def test_staleness_parity(self, cfg, mesh):
+        """Bounded staleness: delayed references come from the host ring
+        buffer either way; the lowering must not perturb the schedule."""
+        from repro.core.async_engine import ConstantDelay
+
+        host, mesht = self._run_pair(cfg, mesh, rounds=4,
+                                     delays=ConstantDelay(lag=1),
+                                     max_staleness=1)
+        np.testing.assert_array_equal(
+            np.stack(host.staleness_log), np.stack(mesht.staleness_log))
+
+    def test_quantized_merge_wire_in_round_hlo(self, cfg, mesh):
+        """The merge's all-gather ships bf16 bits (u16) in the compiled
+        round — the PR 5 HLO-level claim, now for the general round."""
+        from repro.core import collective
+        from repro.core.topology import Ring
+
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=N_PLAYERS, tau=2, prox_lambda=1e-3,
+            topology=Ring(), sync_dtype=jnp.bfloat16, mesh=mesh)
+        tokens = {"tokens": jnp.zeros((N_PLAYERS, 2, 2, 32), jnp.int32)}
+        hlo = trainer._round.lower(
+            trainer.params, trainer.opt_state, tokens, trainer.refs,
+            trainer.snapshot, jnp.ones((N_PLAYERS,), bool),
+            jnp.asarray(trainer._mixes[0]),
+        ).compile().as_text()
+        report = collective.assert_wire_dtype(hlo, compressed=True)
+        assert any(o.op == "all-gather" and o.operand_dtype == "u16"
+                   for o in report)
