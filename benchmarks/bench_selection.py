@@ -1,0 +1,214 @@
+"""Selection-policy sweep: bytes-to-equilibrium of value-driven participation.
+
+The headline question for the selection axis (ROADMAP item 4): when only a
+``fraction`` of players may talk per round, does choosing WHO by observed
+contribution (GTG-Shapley greedy, UCB bandit, power-of-choice) beat the
+value-blind uniform draw at the same budget? The separating regime is
+warm-start heterogeneity: most players start AT the equilibrium and two
+start far, so a uniform draw wastes most of its slots re-synchronizing
+players who are done (and whose best-response to far-away opponents
+actively moves them OFF the equilibrium), while a value-driven policy
+routes the budget to the players carrying the error.
+
+Three sweeps, one artifact (``BENCH_selection.json``):
+
+- ``selection``: greedy vs UCB vs power-of-choice vs the uniform control at
+  a fixed fraction on the warm-start quadratic game — rounds and wire bytes
+  to the 1e-3 neighborhood (the acceptance headline: greedy strictly beats
+  uniform on bytes-to-eq).
+- ``mean_field``: the same contest composed with ``MeanFieldView(sample=k)``
+  — selection is the one mask strategy the sampled summary path admits
+  (absentees stay stale in the live snapshot the sampled reads index).
+- ``staleness``: the composition probe — can value-driven selection rescue
+  the strong-coupling straggler regime where the fixed Theorem 3.4 step
+  size fails and ``delay_adaptive`` succeeds? Honest outcome (recorded so
+  nobody over-claims): NO. Deterministic value-driven masks act like
+  adversarial staleness at strong coupling — freezing a chosen block for
+  several rounds is exactly the perturbation the antisymmetric coupling
+  amplifies — while the uniform draw's randomness averages the same
+  exclusions out. Value-driven selection is a weak-coupling /
+  heterogeneous-progress tool, not a stability device.
+
+``python -m benchmarks.bench_selection --json BENCH_selection.json`` writes
+the artifact; ``scripts/render_experiments.py`` renders it into
+EXPERIMENTS.md and ``scripts/check_bench_drift.py`` guards it.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import stepsize
+from repro.core.async_engine import AsyncPearlEngine, StragglerDelay
+from repro.core.engine import MeanFieldView, PearlEngine
+from repro.core.games import make_mean_field_game, make_quadratic_game
+from repro.core.metrics import rounds_to_reach
+from repro.core.selection import SELECTION_POLICIES
+
+POLICY_ORDER = ("greedy_shapley", "ucb", "power_of_choice", "uniform")
+
+
+def _policy(name: str, fraction: float, **kw):
+    return SELECTION_POLICIES[name](fraction=fraction, **kw)
+
+
+def warm_start_game(n: int = 10, d: int = 10, far: int = 2,
+                    scale: float = 10.0):
+    """The separating config: ``far`` players start ``scale`` Gaussians away
+    from the equilibrium, everyone else starts ON it."""
+    game = make_quadratic_game(n=n, d=d, M=40, L_B=1.0, batch_size=1, seed=1)
+    off = np.zeros((n, d))
+    off[:far] = scale * np.random.default_rng(3).standard_normal((far, d))
+    x0 = jnp.asarray(np.asarray(game.equilibrium()) + off, jnp.float32)
+    return game, x0
+
+
+def _row(name, r, threshold, rounds, **extra):
+    hit = rounds_to_reach(r.rel_errors, threshold)
+    final = float(r.rel_errors[-1])
+    per_round = r.bytes_up + r.bytes_down
+    return {
+        "policy": name,
+        "rounds": rounds,   # the budget, for budget-aware drift checks
+        "rounds_to_eq": hit,
+        "bytes_to_eq": (int(per_round[:hit].sum())
+                        if hit is not None else None),
+        "final_rel_error": final,
+        "diverged": bool(not np.isfinite(final) or final > 1e3),
+        "bytes_per_round": int(per_round[0]),
+        **extra,
+    }
+
+
+def run_selection(tau: int = 4, rounds: int = 600, threshold: float = 1e-3,
+                  fraction: float = 0.2):
+    """Greedy vs UCB vs power-of-choice vs uniform at a fixed budget on the
+    warm-start heterogeneity game (deterministic gradients; one shared
+    Theorem 3.4 step size, so the contest is pure participation pattern)."""
+    game, x0 = warm_start_game()
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+
+    rows = []
+    t0 = time.perf_counter()
+    for name in POLICY_ORDER:
+        r = PearlEngine(sync=_policy(name, fraction)).run(
+            game, x0, tau=tau, rounds=rounds, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False,
+        )
+        rows.append(_row(name, r, threshold, rounds,
+                         fraction=fraction, tau=tau))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    emit("selection", us,
+         ";".join(f"{r['policy']}:R={r['rounds_to_eq']},"
+                  f"B={r['bytes_to_eq']}" for r in rows))
+    return rows
+
+
+def run_mean_field(tau: int = 4, rounds: int = 400, threshold: float = 1e-2,
+                   fraction: float = 0.2, sample: int = 8):
+    """Selection x sampled mean-field: the O(d)-downlink population with a
+    participation budget. Uniform is the control at the same fraction and
+    the same sampled-interaction seed."""
+    game = make_mean_field_game(n=50, d=6, heterogeneity=1.0, seed=0)
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+    x0 = jnp.zeros((game.n, game.d))
+
+    rows = []
+    t0 = time.perf_counter()
+    for name in ("greedy_shapley", "uniform"):
+        r = PearlEngine(sync=_policy(name, fraction),
+                        view=MeanFieldView(sample=sample, seed=0)).run(
+            game, x0, tau=tau, rounds=rounds, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False,
+        )
+        rows.append(_row(name, r, threshold, rounds, fraction=fraction,
+                         tau=tau, n=game.n, sample=sample))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    emit("selection_mean_field", us,
+         ";".join(f"{r['policy']}:R={r['rounds_to_eq']},"
+                  f"err={r['final_rel_error']:.1e}" for r in rows))
+    return rows
+
+
+def run_staleness_composition(tau: int = 4, rounds: int = 2500,
+                              threshold: float = 1e-6):
+    """Value-driven selection under strong-coupling stragglers — the honest
+    negative. Grid: step-size policy (theorem34 | delay_adaptive) x
+    selection (uniform | staleness-penalized greedy) at D = 16 on the
+    bench_async policy-rescue game. The delay-adaptive x uniform cell
+    converges; BOTH greedy cells fail — deterministic exclusion at strong
+    coupling is adversarial staleness, and no step-size policy rescues it."""
+    game = make_quadratic_game(n=6, d=10, M=40, L_B=5.0, batch_size=1,
+                               seed=0)
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+    x0 = jnp.asarray(
+        np.random.default_rng(0).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+    sched = StragglerDelay(fraction=0.25, seed=0)
+    selections = {
+        "uniform": _policy("uniform", 0.5),
+        "greedy_shapley": _policy("greedy_shapley", 0.5,
+                                  staleness_penalty=0.1),
+    }
+
+    rows = []
+    t0 = time.perf_counter()
+    for pname in ("theorem34", "delay_adaptive"):
+        for sname, sync in selections.items():
+            r = AsyncPearlEngine(sync=sync, delays=sched, max_staleness=16,
+                                 policy=pname).run(
+                game, x0, tau=tau, rounds=rounds, gamma=gamma,
+                key=jax.random.PRNGKey(0), stochastic=False,
+            )
+            rows.append(_row(sname, r, threshold, rounds,
+                             stepsize_policy=pname, max_staleness=16,
+                             tau=tau, mean_staleness=r.mean_staleness))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    def _fmt(row):
+        tag = "DIV" if row["diverged"] else f"{row['final_rel_error']:.1e}"
+        return f"{row['stepsize_policy']}x{row['policy']}:err={tag}"
+
+    emit("selection_staleness", us, ";".join(_fmt(r) for r in rows))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--tau", type=int, default=4)
+    parser.add_argument("--rounds", type=int, default=600,
+                        help="budget for the warm-start selection contest")
+    parser.add_argument("--threshold", type=float, default=1e-3)
+    parser.add_argument("--mean-field-rounds", type=int, default=400)
+    parser.add_argument("--staleness-rounds", type=int, default=2500)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweeps as structured JSON "
+                             "(BENCH_selection.json convention)")
+    args = parser.parse_args()
+
+    rows = run_selection(tau=args.tau, rounds=args.rounds,
+                         threshold=args.threshold)
+    mf_rows = run_mean_field(tau=args.tau, rounds=args.mean_field_rounds)
+    st_rows = run_staleness_composition(tau=args.tau,
+                                        rounds=args.staleness_rounds)
+    if args.json:
+        payload = {"benchmark": "bench_selection", "selection": rows,
+                   "mean_field": mf_rows, "staleness": st_rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,7 @@ from repro.core import stepsize
 from repro.core.async_engine import DELAY_SCHEDULES, AsyncPearlEngine
 from repro.core.engine import PLAYER_UPDATES, SYNC_STRATEGIES, PearlEngine
 from repro.core.games import make_quadratic_game
+from repro.core.selection import SELECTION_POLICIES, resolve_selection
 from repro.core.stepsize import STEPSIZE_POLICIES
 from repro.core.topology import TOPOLOGIES
 
@@ -56,11 +57,22 @@ parser.add_argument("--policy", choices=sorted(STEPSIZE_POLICIES),
                     help="step-size policy (theorem34 = the paper's fixed "
                          "rule; delay_adaptive needs --staleness; spectral "
                          "needs a server-free --topology)")
+parser.add_argument("--selection", choices=sorted(SELECTION_POLICIES),
+                    default=None,
+                    help="value-driven participation scheduling on the sync "
+                         "axis (replaces --sync; greedy_shapley/ucb/"
+                         "power_of_choice score observed deltas, uniform is "
+                         "the bit-for-bit partial-participation control); "
+                         "needs the star topology")
 parser.add_argument("--rounds", type=int, default=2500,
                     help="communication budget (rounds)")
 args = parser.parse_args()
 if args.staleness < 0:
     parser.error(f"--staleness must be >= 0, got {args.staleness}")
+
+if args.selection is not None and args.sync != "exact":
+    parser.error("--selection replaces --sync (a selection policy IS the "
+                 "sync strategy); drop one of them")
 
 topology = TOPOLOGIES[args.topology]()
 L_B = 20.0 if topology.is_server and args.staleness == 0 else 1.0
@@ -70,7 +82,11 @@ print(f"game: n={game.n} d={game.d} kappa={consts.kappa:.0f} q={consts.q:.3f}")
 print(f"engine: method={args.method} sync={args.sync} "
       f"topology={args.topology} staleness={args.staleness}"
       + (f" delay={args.delay}" if args.staleness else "")
-      + (f" policy={args.policy}" if args.policy != "theorem34" else ""))
+      + (f" policy={args.policy}" if args.policy != "theorem34" else "")
+      + (f" selection={args.selection}" if args.selection else ""))
+
+sync = (resolve_selection(args.selection) if args.selection
+        else SYNC_STRATEGIES[args.sync]())
 
 x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
 if args.staleness > 0:
@@ -81,14 +97,14 @@ if args.staleness > 0:
     delays = (ConstantDelay(lag=args.staleness) if args.delay == "constant"
               else DELAY_SCHEDULES[args.delay]())
     engine = AsyncPearlEngine(update=PLAYER_UPDATES[args.method](),
-                              sync=SYNC_STRATEGIES[args.sync](),
+                              sync=sync,
                               topology=topology,
                               delays=delays,
                               max_staleness=args.staleness,
                               policy=args.policy)
 else:
     engine = PearlEngine(update=PLAYER_UPDATES[args.method](),
-                         sync=SYNC_STRATEGIES[args.sync](),
+                         sync=sync,
                          topology=topology,
                          policy=args.policy)
 

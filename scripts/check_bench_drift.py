@@ -80,6 +80,17 @@ SPECS = {
     # (pinned exactly — per-player flatness in n is the whole claim), while
     # the converged errors / equilibrium gaps are float metrics checked at
     # the relative tolerance
+    # the selection-policy sweep: masks are seed-deterministic, so the
+    # per-round byte accounting is exact; equilibrium metrics are handled
+    # structurally (rounds_to_eq tolerance, one-sided diverged)
+    "bench_selection": {
+        "selection": (("policy",), ("fraction", "tau", "bytes_per_round")),
+        "mean_field": (("policy",),
+                       ("fraction", "tau", "n", "sample",
+                        "bytes_per_round")),
+        "staleness": (("stepsize_policy", "policy"),
+                      ("max_staleness", "tau", "bytes_per_round")),
+    },
     "bench_scaling": {
         "mean_field": (("n",),
                        ("d", "tau", "bytes_per_round",

@@ -21,7 +21,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_collective.py tests/test_sharding.py \
   tests/test_lowbit_sync.py tests/test_async_mesh.py \
-  tests/test_pearl_trainer.py tests/test_neural.py
+  tests/test_selection.py tests/test_pearl_trainer.py tests/test_neural.py
 
 # fast-mode smokes of every --json benchmark artifact path (temp dir: the
 # committed BENCH_*.json are the paper-scale sweeps, not these smokes)
@@ -95,6 +95,25 @@ assert {w['sync']: w['compressed_gather_dtypes'] for w in d['wire']} \
   "$SMOKE_DIR/BENCH_neural.json"
 python scripts/check_bench_drift.py \
   "$SMOKE_DIR/BENCH_neural.json" BENCH_neural.json
+
+# selection-policy smoke: the deterministic sweeps replay the committed
+# trajectories at a reduced budget, so the acceptance headline — greedy
+# bytes-to-eq strictly no worse than the uniform control at the same
+# fraction — is re-asserted on every push, and the drift check pins the
+# mask-driven byte accounting against the committed artifact
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_selection \
+  --rounds 250 --mean-field-rounds 100 --staleness-rounds 100 \
+  --json "$SMOKE_DIR/BENCH_selection.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+rows = {r['policy']: r for r in d['selection']}; \
+assert rows, 'empty selection sweep'; \
+g, u = rows['greedy_shapley']['bytes_to_eq'], rows['uniform']['bytes_to_eq']; \
+assert g is not None and u is not None, 'selection sweep missed threshold'; \
+assert g <= u, f'greedy bytes-to-eq {g} worse than uniform {u}'; \
+assert d['mean_field'] and d['staleness'], 'empty composition sweeps'" \
+  "$SMOKE_DIR/BENCH_selection.json"
+python scripts/check_bench_drift.py \
+  "$SMOKE_DIR/BENCH_selection.json" BENCH_selection.json
 
 # million-player scaling smoke: the n = 10^6 mean-field row must actually
 # run, and its per-player downlink must equal the n = 10^2 row's (the O(d)

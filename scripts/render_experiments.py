@@ -34,6 +34,7 @@ COLLECTIVE = os.path.join(ROOT, "BENCH_collective.json")
 WALLCLOCK = os.path.join(ROOT, "BENCH_wallclock.json")
 SCALING = os.path.join(ROOT, "BENCH_scaling.json")
 NEURAL = os.path.join(ROOT, "BENCH_neural.json")
+SELECTION = os.path.join(ROOT, "BENCH_selection.json")
 
 
 def _load(path):
@@ -253,6 +254,42 @@ def render_neural(data) -> str:
     return "\n".join(lines)
 
 
+def render_selection(data) -> str:
+    if data is None or not data.get("selection"):
+        return "*(BENCH_selection.json artifact missing — run the benchmark)*"
+    lines = [
+        "| policy | fraction | rounds-to-eq | bytes-to-eq | "
+        "final rel. error |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["selection"]:
+        lines.append(
+            f"| {r['policy']} | {r['fraction']} | {_rounds(r)} | "
+            f"{_kb(r['bytes_to_eq'])} | {_err(r)} |")
+    lines += [
+        "",
+        "Composed with the sampled mean-field view "
+        "(``MeanFieldView(sample=k)``, the one mask-compatible summary "
+        "mode) and, below that, with strong-coupling stragglers — the "
+        "honest negative: deterministic value-driven masks act like "
+        "adversarial staleness at strong coupling, and even the "
+        "delay-adaptive step-size policy cannot rescue them:",
+        "",
+        "| sweep | policy | step-size policy | rounds-to-eq | "
+        "final rel. error |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data.get("mean_field", []):
+        lines.append(
+            f"| mean-field (n={r['n']}, sample={r['sample']}) | "
+            f"{r['policy']} | theorem34 | {_rounds(r)} | {_err(r)} |")
+    for r in data.get("staleness", []):
+        lines.append(
+            f"| straggler D={r['max_staleness']} | {r['policy']} | "
+            f"{r['stepsize_policy']} | {_rounds(r)} | {_err(r)} |")
+    return "\n".join(lines)
+
+
 SECTIONS = {
     "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
     "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
@@ -262,6 +299,7 @@ SECTIONS = {
     "AUTO-BENCH-WALLCLOCK": lambda: render_wallclock(_load(WALLCLOCK)),
     "AUTO-BENCH-SCALING": lambda: render_scaling(_load(SCALING)),
     "AUTO-BENCH-NEURAL": lambda: render_neural(_load(NEURAL)),
+    "AUTO-BENCH-SELECTION": lambda: render_selection(_load(SELECTION)),
 }
 
 

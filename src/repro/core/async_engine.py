@@ -403,6 +403,13 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
 
     use_wire = sync.has_wire_state or mesh is not None
     mean_field = view is not None and view.summary_based
+    # Stateful selection policies (core/selection.py) replace the
+    # pre_round/mask chain with select/observe; the flag is trace-time, so
+    # every legacy strategy compiles the identical program. Selection only
+    # reaches the legacy star body: mesh x mask is rejected (and overlap
+    # requires a mesh), no selection policy carries wire state, and
+    # server-free gossip has no scorer (validate_selection).
+    selection = getattr(sync, "stateful_selection", False)
 
     def star_wire(x_sync, ws):
         """(decoded broadcast, next wire state): what every receiver sees
@@ -571,11 +578,17 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
             init = (buf0, x0, key, sync.init_state(), ws0)
     elif topology.is_server:
         def round_body(carry, scan_in):
-            gamma, _, delay_row = scan_in
+            gamma, ridx, delay_row = scan_in
             buf, x_sync, key, s = carry
             key, sub = jax.random.split(key)
             player_keys = jax.random.split(sub, n)
-            s, ctx = sync.pre_round(s)
+            if selection:
+                # the policy sees the round's DRAWN staleness row, so a
+                # staleness-aware policy can de-prioritize stale players
+                s, m = sync.select(s, n, ridx, delay_row)
+                ctx = ()
+            else:
+                s, ctx = sync.pre_round(s)
 
             def local(i, pkey, d_i, g_i):
                 # the freshest broadcast this player has RECEIVED is d_i
@@ -591,20 +604,24 @@ def _async_engine_scan(game: VectorGame, x0: Array, gammas: Array,
                 return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
 
             x_prop = vmap_players(local, player_keys, delay_row, gamma)
-            m = sync.mask(n, ctx)
+            if not selection:
+                m = sync.mask(n, ctx)
             if m is None:
                 x_next = x_prop
                 participants = jnp.asarray(n, jnp.int32)
             else:
                 x_next = jnp.where(m[:, None], x_prop, x_sync)
                 participants = jnp.sum(m).astype(jnp.int32)
+            if selection:
+                s = sync.observe(s, m, x_prop - x_sync, ridx)
             res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
             buf_next = jnp.concatenate([x_next[None], buf[:-1]])
             return (buf_next, x_next, key, s), (x_next, res, participants,
                                                 participants)
 
         buf0 = jnp.broadcast_to(x0[None], (depth, *x0.shape))
-        init = (buf0, x0, key, sync.init_state())
+        init = (buf0, x0, key,
+                sync.select_state(n) if selection else sync.init_state())
     else:
         # Server-free gossip under staleness: a receiver processes the wire
         # messages from ``delay`` rounds ago — it mixes over the network
@@ -846,6 +863,11 @@ class AsyncPearlEngine:
                     f"per-round participation mask — use the host path "
                     f"(mesh=None) for masked regimes"
                 )
+        if getattr(sync, "stateful_selection", False):
+            from repro.core.selection import validate_selection
+            validate_selection(sync, server=self.topology.is_server,
+                               mesh=self.mesh,
+                               topology_name=type(self.topology).__name__)
         if self.overlap:
             if self.mesh is None:
                 raise ValueError(

@@ -1115,13 +1115,25 @@ def check_summary_view(view: JointView, *, update, sync: SyncStrategy,
             f"heavy_ball locals with the summary reference"
         )
     if sync.uses_mask:
-        raise ValueError(
-            f"{type(sync).__name__} draws a per-round participation "
-            f"mask, and a population summary over a PARTIAL population "
-            f"silently changes what 'mean_i x^i' means to every reader — "
-            f"mean-field views support full-participation strategies "
-            f"only (use the exact/quantized/low-bit wires)"
-        )
+        if not getattr(sync, "stateful_selection", False):
+            raise ValueError(
+                f"{type(sync).__name__} draws a per-round participation "
+                f"mask, and a population summary over a PARTIAL population "
+                f"silently changes what 'mean_i x^i' means to every reader "
+                f"— mean-field views support full-participation strategies "
+                f"only (use the exact/quantized/low-bit wires, or a "
+                f"selection policy with MeanFieldView(sample=k))"
+            )
+        if view.sample is None:
+            raise ValueError(
+                f"{type(sync).__name__} masks who participates, and the "
+                f"DENSE population summary would silently average stale "
+                f"blocks into what every reader believes is the live "
+                f"'mean_i x^i' — selection composes with sampled "
+                f"interaction only (MeanFieldView(sample=k): absentees "
+                f"simply stay stale in the live snapshot the sampled "
+                f"reads index)"
+            )
     if mesh is not None:
         raise ValueError(
             "mesh lowering gathers the full (n, d) joint across the "
@@ -1271,6 +1283,11 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
     from repro.core import collective
 
     n = x0.shape[0]
+    # stateful selection policies (repro.core.selection) dispatch at trace
+    # time: their value-estimate state rides the strategy-state carry slot,
+    # and the mask comes from select/observe instead of pre_round/mask —
+    # legacy strategies compile the identical program
+    selection = getattr(sync, "stateful_selection", False)
     if ss_ctx is None:
         ss_ctx = RoundContext(tau=tau)
 
@@ -1334,8 +1351,15 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
             x_sync, key, s, ws = carry
             key, sub = jax.random.split(key)
             player_keys = jax.random.split(sub, n)
-            s, ctx = sync.pre_round(s)
-            del ctx   # mask strategies are rejected for mean-field views
+            if selection:
+                # selection composes with sampled interaction only
+                # (check_summary_view): participants refresh their block,
+                # absentees stay stale in the live carry the sampled
+                # reads index — no population statistic is falsified
+                s, m = sync.select(s, n, ridx, None)
+            else:
+                s, ctx = sync.pre_round(s)
+                del ctx   # legacy mask strategies are rejected here
 
             if view.sample is None:
                 pop = game.population_summary(x_sync, moments)
@@ -1376,21 +1400,35 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                     return tau_local_steps(i, pkey, own, (own, summary),
                                            g_i, shim)
 
-            x_next = vmap_players(local, player_keys, gamma)
-            participants = jnp.asarray(n, jnp.int32)
+            x_prop = vmap_players(local, player_keys, gamma)
+            if selection:
+                x_next = jnp.where(m[:, None], x_prop, x_sync)
+                participants = jnp.sum(m).astype(jnp.int32)
+                s = sync.observe(s, m, x_prop - x_sync, ridx)
+            else:
+                x_next = x_prop
+                participants = jnp.asarray(n, jnp.int32)
             res = jnp.sqrt(jnp.sum(game.operator_via_summary(x_next) ** 2))
             return (x_next, key, s, ws), (x_next, res, participants,
                                           participants)
 
-        init = (x0, key, sync.init_state(),
+        init = (x0, key,
+                sync.select_state(n) if selection else sync.init_state(),
                 sync.init_wire_state(game.population_summary(x0, moments)))
     elif topology.is_server:
         def round_body(carry, scan_in):
-            gamma, _ = scan_in
+            gamma, ridx = scan_in
             x_sync, key, s, ws = carry
             key, sub = jax.random.split(key)
             player_keys = jax.random.split(sub, n)
-            s, ctx = sync.pre_round(s)
+            if selection:
+                # stateful selection: the mask comes from the policy's
+                # carried value estimates (PAST rounds only — no peeking at
+                # this round's deltas), not from a pre_round key draw
+                s, m = sync.select(s, n, ridx, None)
+                ctx = ()
+            else:
+                s, ctx = sync.pre_round(s)
 
             if sync.has_wire_state:
                 # Error feedback: ONE transmit tensor per round — the
@@ -1421,20 +1459,25 @@ def _engine_scan(game: VectorGame, x0: Array, gammas: Array, key: Array, *,
                 return tau_local_steps(i, pkey, x_sync[i], x_ref, g_i)
 
             x_prop = vmap_players(local, player_keys, gamma)
-            m = sync.mask(n, ctx)
+            if not selection:
+                m = sync.mask(n, ctx)
             if m is None:
                 x_next = x_prop
                 participants = jnp.asarray(n, jnp.int32)
             else:
                 x_next = jnp.where(m[:, None], x_prop, x_sync)
                 participants = jnp.sum(m).astype(jnp.int32)
+            if selection:
+                s = sync.observe(s, m, x_prop - x_sync, ridx)
             res = jnp.sqrt(jnp.sum(game.operator(x_next) ** 2))
             return (x_next, key, s, ws), (x_next, res, participants,
                                           participants)
 
         # legacy strategies carry an empty wire-state pytree: zero ops, so
         # the compiled program (and every bit-for-bit pin) is unchanged
-        init = (x0, key, sync.init_state(), sync.init_wire_state(x0))
+        init = (x0, key,
+                sync.select_state(n) if selection else sync.init_state(),
+                sync.init_wire_state(x0))
     else:
         # Server-free gossip: each player carries a VIEW of the whole joint
         # action (the decentralized-VI formulation — node i evaluates only
@@ -1625,6 +1668,12 @@ class PearlEngine:
         view = resolve_view(self.view, self.topology)
         check_summary_view(view, update=self.update, sync=self.sync,
                            mesh=self.mesh, game=game)
+        if getattr(self.sync, "stateful_selection", False):
+            from repro.core.selection import validate_selection
+
+            validate_selection(self.sync, server=self.topology.is_server,
+                               mesh=self.mesh,
+                               topology_name=type(self.topology).__name__)
         if self.gossip_steps < 1:
             raise ValueError(f"gossip_steps must be >= 1, got {self.gossip_steps}")
         if getattr(self.sync, "requires_async", False):

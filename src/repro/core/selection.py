@@ -1,0 +1,452 @@
+"""Value-driven participation: stateful selection policies on the mask axis.
+
+Every mask strategy the engines shipped so far is value-blind — uniform
+partial participation and Bernoulli dropout draw who talks without looking
+at what anyone contributed. This module adds the selection-policy layer
+(ROADMAP item 4, the GreedyFed direction): a :class:`SelectionPolicy` is a
+:class:`~repro.core.engine.SyncStrategy` whose per-round participation mask
+is chosen from OBSERVED round context — the deltas players shipped in past
+rounds, visit counts, the round index, and (in the async engine) the drawn
+per-player staleness row — instead of a coin flip.
+
+Protocol (three methods on top of the SyncStrategy surface):
+
+- ``select_state(n)``   — the policy's state pytree (value estimates,
+  visit counts, and for the uniform policy the PRNG chain). Rides the
+  engines' rounds-scan carry in the slot the legacy strategies use for
+  their key chain; host numpy in the trainer's event loop.
+- ``select(state, n, ridx, delay_row)`` → ``(state, mask)`` — the round's
+  ``(n,)`` boolean participation mask, computed from PAST observations
+  only (the mask must not peek at the current round's deltas: selection
+  happens before anyone computes). ``delay_row`` is the async engine's
+  realized per-player staleness for the round, ``None`` under lockstep.
+- ``observe(state, mask, delta, ridx)`` — fold the round's arriving
+  player deltas (``(n, d)`` rows, non-participants zeroed by the mask)
+  into the value estimates.
+
+Engines dispatch on the ``stateful_selection`` class flag at trace time,
+so the compiled program of every legacy strategy is untouched; the legacy
+``pre_round``/``mask`` surface raises loudly here instead of silently
+running a value-blind draw.
+
+The value estimate is a GTG-Shapley-style marginal-progress score
+(GreedyFed; see SNIPPETS.md snippet 1 and docs/THEORY.md for the honest
+caveat): for the round's coalition-progress game
+
+    v(S) = || sum_{i in S} delta_i ||^2
+
+the Shapley value has a CLOSED FORM — ``v(S ∪ {i}) − v(S) = ||δ_i||² +
+2 Σ_{j∈S} δ_i·δ_j`` and each opponent precedes ``i`` in half of the
+orderings, so
+
+    φ_i = ||δ_i||² + Σ_{j≠i} δ_i·δ_j = δ_i · Δ,   Δ = Σ_j δ_j,
+
+with efficiency ``Σ_i φ_i = v(N)`` for free. No permutation sampling: the
+estimate is exactly permutation-invariant in the arriving deltas (a
+property test pins this). Outside cooperative-game assumptions this is a
+heuristic ranking signal, not a payoff division — the equilibrium game is
+not a transferable-utility coalition game.
+
+Two design points the equilibrium setting forces (both found the hard way;
+the failure modes are in docs/THEORY.md):
+
+- **Values are RAW magnitudes, normalized at select time.** The EWM keeps
+  the unnormalized Shapley progress, so a player far from equilibrium
+  (huge deltas) outranks a converged one — that magnitude gap IS the
+  allocation signal. Normalizing per round (each round's scores summing
+  to 1) erases it: after warm-up every participant looks equally
+  valuable and greed degenerates to round-robin. The running scale is
+  divided out in :meth:`SelectionPolicy.priorities` instead (values /
+  max|values|), so the knobs below are dimensionless.
+- **Aging guarantees every player is re-selected.** Unlike FL — where an
+  unselected client merely contributes nothing — an unselected PLAYER's
+  block is frozen in the joint state, and the game cannot reach
+  equilibrium until every block moves. Pure greed starves low-value
+  players forever (observed: top-k locks onto one pair and the error
+  plateaus at the frozen-block subgame). ``priority_i += aging · age_i``
+  (``age_i`` = rounds since i last participated, normalized values ≤ 1)
+  bounds any player's starvation at ~``2/aging`` rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import SyncStrategy
+
+__all__ = [
+    "SelectionPolicy",
+    "GreedyShapley",
+    "UCBSelection",
+    "PowerOfChoice",
+    "UniformSelection",
+    "SELECTION_POLICIES",
+    "is_selection_policy",
+    "resolve_selection",
+    "validate_selection",
+    "shapley_progress",
+]
+
+
+def is_selection_policy(sync) -> bool:
+    """True when ``sync`` is a stateful selection policy (trace-time flag
+    the engines and trainer branch on)."""
+    return getattr(sync, "stateful_selection", False)
+
+
+def shapley_progress(delta, mask):
+    """Exact per-player Shapley value of the round's progress game.
+
+    ``delta`` is the ``(n, d)`` matrix of arriving player deltas, ``mask``
+    the ``(n,)`` participation mask. For ``v(S) = ||Σ_{i∈S} δ_i||²`` the
+    Shapley value is ``φ_i = δ_i · Δ`` (module docstring) — a closed form
+    over the SET of arriving deltas, hence permutation-invariant by
+    construction, with ``Σ φ_i = v(participants)``. Non-participants ship
+    nothing and score 0.
+    """
+    dm = jnp.where(mask[:, None], delta, 0.0)
+    return dm @ jnp.sum(dm, axis=0)
+
+
+def _top_k_mask(priority, n: int, k: int):
+    """Boolean mask of the ``k`` highest-priority players.
+
+    ``jax.lax.top_k`` breaks ties toward the lowest index, which makes the
+    optimistic cold start (unseen players at +inf) a deterministic
+    round-robin sweep before any greedy behavior kicks in."""
+    _, idx = jax.lax.top_k(priority, k)
+    return jnp.zeros((n,), dtype=bool).at[idx].set(True)
+
+
+class SelectionPolicy(SyncStrategy):
+    """Base of the selection axis; mixes into the SyncStrategy protocol.
+
+    Subclasses are frozen hashable dataclasses (jit static args) declaring
+    ``fraction`` (participation budget) and ``seed``. Value-driven policies
+    select EXACTLY ``participants(n) = max(1, round(fraction·n))`` players
+    per round (a fixed budget, unlike the Bernoulli draw of
+    :class:`~repro.core.engine.PartialParticipation` whose fraction only
+    holds in expectation); :class:`UniformSelection` keeps the Bernoulli
+    draw to stay bit-for-bit with the legacy strategy.
+
+    Selection is server-side scheduling: the server scores arriving deltas
+    and decides who talks next round. Server-free gossip has no scorer, and
+    the dense engines' mesh lowering compiles a full wire exchange that
+    mask-aware billing would contradict — :func:`validate_selection`
+    rejects both (the trainer's general merge DOES lower masked, via
+    ``collective.masked_payload``; that is the one mask × mesh path).
+    """
+
+    stateful_selection = True
+    uses_mask = True
+
+    fraction: float
+    seed: int
+
+    def _validate_fraction(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"{type(self).__name__}.fraction must be in (0, 1], "
+                f"got {self.fraction}"
+            )
+
+    def participants(self, n: int) -> int:
+        """The fixed per-round participation budget k."""
+        return max(1, round(self.fraction * n))
+
+    # --------------------------------------------------- selection protocol
+    def select_state(self, n: int):
+        """Value estimates, visit counts, rounds-since-selected; unseen
+        players (count 0) are selected optimistically (+inf priority) so
+        every player is observed once before greed takes over."""
+        return {"values": jnp.zeros((n,), jnp.float32),
+                "counts": jnp.zeros((n,), jnp.int32),
+                "age": jnp.zeros((n,), jnp.int32)}
+
+    def priorities(self, state):
+        """Shared priority base: normalized value + aging bonus.
+
+        Values are divided by the running max magnitude so the ``aging``
+        coefficient is dimensionless (module docstring); unseen players
+        rank +inf, which with ``top_k``'s lowest-index tie-break makes the
+        cold start a deterministic sweep of the whole population."""
+        vhat = state["values"] / (jnp.max(jnp.abs(state["values"])) + 1e-30)
+        vhat = vhat + jnp.float32(self.aging) * state["age"].astype(
+            jnp.float32)
+        return jnp.where(state["counts"] > 0, vhat, jnp.inf)
+
+    def select(self, state, n: int, ridx, delay_row):
+        raise NotImplementedError
+
+    def observe(self, state, mask, delta, ridx):
+        """Exponentially-weighted memory over RAW Shapley progress (the
+        GTG-Shapley estimator of GreedyFed): participants' values move
+        toward this round's score, absentees keep theirs, and everyone's
+        rounds-since-selected clock ticks."""
+        del ridx
+        phi = shapley_progress(delta, mask)
+        beta = jnp.float32(self.memory)
+        values = jnp.where(mask, beta * state["values"] + (1 - beta) * phi,
+                           state["values"])
+        counts = state["counts"] + mask.astype(jnp.int32)
+        age = jnp.where(mask, 0, state["age"] + 1)
+        return {"values": values, "counts": counts, "age": age}
+
+    # -------------------------------------------- legacy surface: loud stop
+    # Engines dispatch on ``stateful_selection`` and never touch the
+    # pre_round/mask chain; any code path that still does would silently
+    # run a value-blind draw, so it raises instead.
+    def init_state(self):
+        raise RuntimeError(
+            f"{type(self).__name__} is a stateful selection policy: use "
+            f"select_state(n)/select/observe (the engines dispatch on "
+            f"stateful_selection), not the pre_round/mask chain"
+        )
+
+    def pre_round(self, state):
+        raise RuntimeError(
+            f"{type(self).__name__} draws masks via select(), not "
+            f"pre_round() — this code path cannot honor stateful selection"
+        )
+
+    def mask(self, n, ctx):
+        raise RuntimeError(
+            f"{type(self).__name__} draws masks via select(), not "
+            f"mask() — this code path cannot honor stateful selection"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyShapley(SelectionPolicy):
+    """Greedy top-k by exponentially-weighted Shapley marginal progress.
+
+    The GreedyFed rule: keep an EWM (``memory``) of each player's
+    closed-form Shapley share of round progress (:func:`shapley_progress`)
+    and pick the ``k = round(fraction·n)`` most valuable players each
+    round. Unseen players rank +inf — an optimistic cold start that sweeps
+    the whole population once (deterministically, lowest index first)
+    before the greedy ranking takes over.
+
+    ``staleness_penalty`` composes with the async engine: each round the
+    drawn staleness row is subtracted from the priorities
+    (``priority_i −= penalty · delay_i``), de-prioritizing players whose
+    broadcasts arrive stale. 0.0 (default) is staleness-blind — the
+    lockstep engine, which has no delay row, accepts only that value.
+    """
+
+    fraction: float = 0.5
+    memory: float = 0.9
+    aging: float = 0.05
+    staleness_penalty: float = 0.0
+    seed: int = 0
+    name: str = "greedy_shapley"
+
+    def __post_init__(self):
+        self._validate_fraction()
+        if not 0.0 <= self.memory < 1.0:
+            raise ValueError(
+                f"GreedyShapley.memory must be in [0, 1), got {self.memory}"
+            )
+        if self.aging < 0.0:
+            raise ValueError(
+                f"GreedyShapley.aging must be >= 0, got {self.aging}"
+            )
+        if self.staleness_penalty < 0.0:
+            raise ValueError(
+                f"GreedyShapley.staleness_penalty must be >= 0, "
+                f"got {self.staleness_penalty}"
+            )
+
+    def select(self, state, n, ridx, delay_row):
+        del ridx
+        priority = self.priorities(state)
+        if delay_row is not None and self.staleness_penalty > 0.0:
+            priority = priority - self.staleness_penalty * jnp.asarray(
+                delay_row, jnp.float32)
+        return state, _top_k_mask(priority, n, self.participants(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class UCBSelection(SelectionPolicy):
+    """Bandit selection: EWM progress value plus a UCB exploration bonus.
+
+    ``priority_i = value_i + c · sqrt(log(t + 2) / count_i)`` — the
+    standard upper-confidence trade-off, so rarely-observed players keep
+    being re-checked even after a bad early round (where plain greedy
+    would write them off on one noisy estimate).
+    """
+
+    fraction: float = 0.5
+    memory: float = 0.9
+    aging: float = 0.05
+    c: float = 0.5
+    seed: int = 0
+    name: str = "ucb"
+
+    def __post_init__(self):
+        self._validate_fraction()
+        if not 0.0 <= self.memory < 1.0:
+            raise ValueError(
+                f"UCBSelection.memory must be in [0, 1), got {self.memory}"
+            )
+        if self.aging < 0.0:
+            raise ValueError(
+                f"UCBSelection.aging must be >= 0, got {self.aging}"
+            )
+        if self.c < 0.0:
+            raise ValueError(f"UCBSelection.c must be >= 0, got {self.c}")
+
+    def select(self, state, n, ridx, delay_row):
+        del delay_row
+        bonus = self.c * jnp.sqrt(
+            jnp.log(jnp.asarray(ridx, jnp.float32) + 2.0)
+            / jnp.maximum(state["counts"], 1).astype(jnp.float32))
+        priority = self.priorities(state) + bonus
+        return state, _top_k_mask(priority, n, self.participants(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerOfChoice(SelectionPolicy):
+    """Power-of-choice: a random candidate set, then greedy within it.
+
+    Each round a uniformly random candidate set of ``candidates`` players
+    (default ``min(2k, n)``) is drawn from the per-round key
+    ``fold_in(PRNGKey(seed), round)`` — the PR 7 per-``(seed, round)``
+    discipline, so round r's candidate set is reproducible without
+    replaying rounds 0..r−1 — and the ``k`` most valuable candidates
+    participate. Interpolates uniform (candidates = k) and greedy
+    (candidates = n) while keeping every player reachable every round.
+    """
+
+    fraction: float = 0.5
+    memory: float = 0.9
+    aging: float = 0.05
+    candidates: int | None = None
+    seed: int = 0
+    name: str = "power_of_choice"
+
+    def __post_init__(self):
+        self._validate_fraction()
+        if not 0.0 <= self.memory < 1.0:
+            raise ValueError(
+                f"PowerOfChoice.memory must be in [0, 1), got {self.memory}"
+            )
+        if self.aging < 0.0:
+            raise ValueError(
+                f"PowerOfChoice.aging must be >= 0, got {self.aging}"
+            )
+        if self.candidates is not None and self.candidates < 1:
+            raise ValueError(
+                f"PowerOfChoice.candidates must be >= 1, "
+                f"got {self.candidates}"
+            )
+
+    def candidate_count(self, n: int) -> int:
+        k = self.participants(n)
+        m = 2 * k if self.candidates is None else self.candidates
+        return min(max(m, k), n)
+
+    def candidate_mask(self, n: int, ridx):
+        """The round's candidate set — pure function of (seed, round)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), ridx)
+        perm = jax.random.permutation(key, n)
+        return jnp.zeros((n,), dtype=bool).at[
+            perm[: self.candidate_count(n)]].set(True)
+
+    def select(self, state, n, ridx, delay_row):
+        del delay_row
+        cand = self.candidate_mask(n, ridx)
+        priority = jnp.where(cand, self.priorities(state), -jnp.inf)
+        return state, _top_k_mask(priority, n, self.participants(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSelection(SelectionPolicy):
+    """Value-blind control on the selection axis, pinned bit-for-bit to
+    :class:`~repro.core.engine.PartialParticipation`.
+
+    Same key chain (``state = PRNGKey(seed)``; per round ``state, sub =
+    split(state)``; ``mask = uniform(sub, (n,)) < fraction``), so a run
+    under this policy realizes the IDENTICAL masks, trajectories, and byte
+    bill as the legacy strategy — the control every value-driven policy is
+    benchmarked against, inside the selection API. Note the Bernoulli draw:
+    the fraction holds in expectation, not per round (the legacy
+    semantics), unlike the fixed top-k budget of the other policies.
+    """
+
+    fraction: float = 0.5
+    seed: int = 0
+    name: str = "uniform"
+
+    def __post_init__(self):
+        self._validate_fraction()
+
+    def select_state(self, n: int):
+        del n
+        return jax.random.PRNGKey(self.seed)
+
+    def select(self, state, n, ridx, delay_row):
+        del ridx, delay_row
+        state, sub = jax.random.split(state)
+        return state, jax.random.uniform(sub, (n,)) < self.fraction
+
+    def observe(self, state, mask, delta, ridx):
+        del mask, delta, ridx
+        return state
+
+
+def resolve_selection(selection) -> "SelectionPolicy | None":
+    """Normalize a ``selection`` argument: an instance wins, a registry
+    name constructs one, ``None`` stays ``None`` (no selection axis)."""
+    if selection is None or is_selection_policy(selection):
+        return selection
+    if isinstance(selection, str):
+        try:
+            return SELECTION_POLICIES[selection]()
+        except KeyError:
+            raise ValueError(
+                f"unknown selection policy {selection!r}; "
+                f"known: {sorted(SELECTION_POLICIES)}"
+            ) from None
+    raise TypeError(
+        f"selection must be a SelectionPolicy, registry name, or None, "
+        f"got {type(selection).__name__}"
+    )
+
+
+def validate_selection(sync, *, server: bool, mesh,
+                       topology_name: str = "Star") -> None:
+    """THE shared rejection point for the selection axis (both engines and
+    the trainer call it, so the wording cannot drift). No-op for
+    non-selection strategies."""
+    if not is_selection_policy(sync):
+        return
+    if not server:
+        raise ValueError(
+            f"{type(sync).__name__} is server-side participation "
+            f"scheduling: the server scores arriving deltas and decides "
+            f"who talks next round, and the {topology_name} gossip "
+            f"topology has no scorer to run it — use the Star topology, "
+            f"or the value-blind PartialParticipation mask on graphs"
+        )
+    if mesh is not None:
+        raise ValueError(
+            f"mesh lowering covers full-participation synchronization; "
+            f"{type(sync).__name__} draws a per-round participation mask, "
+            f"and compiling a full wire exchange the mask-aware byte "
+            f"accounting contradicts would make the billing dishonest — "
+            f"use the host path (mesh=None); the TRAINER's general merge "
+            f"is the one mask-aware mesh lowering (masked_payload)"
+        )
+
+
+# ------------------------------------------------------------------ registry
+SELECTION_POLICIES = {
+    "greedy_shapley": GreedyShapley,
+    "ucb": UCBSelection,
+    "power_of_choice": PowerOfChoice,
+    "uniform": UniformSelection,
+}

@@ -751,6 +751,17 @@ class PearlTrainer:
         self.sync = resolve_sync(round_kwargs.get("sync"),
                                  round_kwargs.get("sync_dtype"))
         self.topology = topology if topology is not None else Star()
+        # stateful selection policies (core/selection.py): host-side state,
+        # masks drawn by select() from observed per-player param deltas. The
+        # trainer's general merge is the ONE mask-aware mesh lowering
+        # (sharded_stale_merge ships masked_payload zero-bit rows), so
+        # validate with mesh=None regardless of the round's mesh kwarg.
+        self._selection = getattr(self.sync, "stateful_selection", False)
+        if self._selection:
+            from repro.core.selection import validate_selection
+            validate_selection(self.sync, server=self.topology.is_server,
+                               mesh=None,
+                               topology_name=type(self.topology).__name__)
         self._general = (needs_general_round(self.sync, self.topology)
                          or self._async)
         self.policy = resolve_policy(policy)
@@ -803,7 +814,9 @@ class PearlTrainer:
             self._mixes = self.topology.mixing_stack(n_players)
             self._adjs = self.topology.adjacency_stack(n_players)
             self.refs = self._mix_refs(0)
-            self._sync_state = self.sync.init_state()
+            self._sync_state = (self.sync.select_state(n_players)
+                                if self._selection
+                                else self.sync.init_state())
         if self._async:
             # ring buffer of merged snapshots, newest first: index =
             # staleness in rounds (slot 0 is the current snapshot)
@@ -826,11 +839,32 @@ class PearlTrainer:
         )
 
     def _draw_mask(self) -> Array:
+        if self._selection:
+            # the trainer analog of the async engine's drawn delay row is
+            # the staleness the refs consumed THIS round actually carry
+            delay_row = (jnp.asarray(self._ref_delays, jnp.float32)
+                         if self._async else None)
+            self._sync_state, m = self.sync.select(
+                self._sync_state, self.n_players, self._global_round,
+                delay_row)
+            return m
         self._sync_state, ctx = self.sync.pre_round(self._sync_state)
         m = self.sync.mask(self.n_players, ctx)
         if m is None:
             m = jnp.ones((self.n_players,), dtype=bool)
         return m
+
+    def _observe_selection(self, mask, prev_params):
+        """Fold the round's realized per-player parameter movement into the
+        selection policy's value estimates (flattened ``(n, D)`` deltas;
+        non-participants are zeroed inside the Shapley scorer)."""
+        new_l = jax.tree.leaves(self.params)
+        old_l = jax.tree.leaves(prev_params)
+        delta = jnp.concatenate(
+            [(a - b).reshape(self.n_players, -1)
+             for a, b in zip(new_l, old_l)], axis=1)
+        self._sync_state = self.sync.observe(
+            self._sync_state, mask, delta, self._global_round)
 
     def _refresh_stale_refs(self, delay_row: np.ndarray, round_idx: int,
                             arrived_mask: np.ndarray):
@@ -921,8 +955,11 @@ class PearlTrainer:
                         if np.ndim(scale) == 0 else \
                         jnp.asarray(scale, dtype=jnp.float32)
                     round_args = round_args + (scale_row,)
+                prev_params = self.params if self._selection else None
                 (self.params, self.opt_state, new_refs, self.snapshot,
                  metrics) = self._round(*round_args)
+                if self._selection:
+                    self._observe_selection(mask, prev_params)
                 if self._async:
                     # merge-on-arrival: uploads landed on time (the snapshot
                     # merge above), but the broadcast each participant takes

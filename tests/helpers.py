@@ -1,0 +1,128 @@
+"""Shared fixtures-by-convention for the engine test files.
+
+The same three things were growing verbatim copies across
+``test_engine.py``, ``test_async_engine.py``, and ``test_async_mesh.py``
+(and would have grown a fourth copy in ``test_selection.py``): the
+canonical quadratic test games with their Gaussian starts, the
+verbatim-compact legacy scan loops the engine is pinned against, and the
+bit-for-bit run comparison used by every D = 0 / refactor-equivalence pin.
+They live here once.  Plain functions, not pytest fixtures — each test
+file keeps its own ``@pytest.fixture`` scoping and caching decisions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.games import make_quadratic_game
+
+# canonical test games --------------------------------------------------------
+
+
+def strong_quad():
+    """The PR 1 anchor game: strong coupling (default L_B = 20), n = 4."""
+    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+
+
+def weak_quad(n=6, d=10, seed=0):
+    """Weak coupling (L_B = 1): staleness and masks cost rounds instead of
+    destabilizing — the async/mesh composition game."""
+    return make_quadratic_game(n=n, d=d, M=40, L_B=1.0, batch_size=1,
+                               seed=seed)
+
+
+def gaussian_x0(game, seed=7):
+    """The standard Gaussian start, f32, keyed the way the seed tests were."""
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((game.n, game.d)),
+        dtype=jnp.float32,
+    )
+
+
+# run comparison --------------------------------------------------------------
+
+
+def assert_runs_bitwise_equal(a, b, *, check_bytes=True):
+    """The bit-for-bit pin: two engine results realized the SAME run.
+
+    Iterates, error curves, and (by default) both byte ledgers must match
+    exactly — a refactor or a D = 0 collapse may not perturb a single ULP
+    or bill a single different byte.
+    """
+    np.testing.assert_array_equal(np.asarray(a.x_final), np.asarray(b.x_final))
+    np.testing.assert_array_equal(a.rel_errors, b.rel_errors)
+    if check_bytes:
+        np.testing.assert_array_equal(a.bytes_up, b.bytes_up)
+        np.testing.assert_array_equal(a.bytes_down, b.bytes_down)
+
+
+# legacy reference loops ------------------------------------------------------
+
+
+def legacy_pearl_sgd(game, x0, gammas, key, *, tau, stochastic,
+                     sync_dtype=None):
+    """Verbatim-compact copy of the seed repo's pearl.py::_run scan loop."""
+    n = x0.shape[0]
+
+    def local_updates(i, x_sync, gamma, key):
+        if sync_dtype is not None:
+            x_ref = x_sync.astype(sync_dtype).astype(x_sync.dtype)
+            x_ref = x_ref.at[i].set(x_sync[i])
+        else:
+            x_ref = x_sync
+
+        def step(x_i, k):
+            if stochastic:
+                g = game.player_grad_stoch(i, x_i, x_ref, k)
+            else:
+                g = game.player_grad(i, x_i, x_ref)
+            return x_i - gamma * g, None
+
+        keys = jax.random.split(key, tau)
+        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
+        return x_i
+
+    def round_body(carry, gamma):
+        x_sync, key = carry
+        key, sub = jax.random.split(key)
+        player_keys = jax.random.split(sub, n)
+        x_next = jax.vmap(local_updates, in_axes=(0, None, None, 0))(
+            jnp.arange(n), x_sync, gamma, player_keys
+        )
+        return (x_next, key), x_next
+
+    (x_final, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
+    return x_final, xs
+
+
+def legacy_pearl_eg(game, x0, gammas, key, *, tau, stochastic):
+    """Verbatim-compact copy of the seed repo's baselines.py::_pearl_eg_run."""
+    n = x0.shape[0]
+
+    def local(i, x_sync, gamma, key):
+        def step(x_i, k):
+            k1, k2 = jax.random.split(k)
+            if stochastic:
+                g_half = game.player_grad_stoch(i, x_i, x_sync, k1)
+                x_half = x_i - gamma * g_half
+                g = game.player_grad_stoch(i, x_half, x_sync, k2)
+            else:
+                x_half = x_i - gamma * game.player_grad(i, x_i, x_sync)
+                g = game.player_grad(i, x_half, x_sync)
+            return x_i - gamma * g, None
+
+        keys = jax.random.split(key, tau)
+        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
+        return x_i
+
+    def round_body(carry, gamma):
+        x_sync, key = carry
+        key, sub = jax.random.split(key)
+        pkeys = jax.random.split(sub, n)
+        x_next = jax.vmap(local, in_axes=(0, None, None, 0))(
+            jnp.arange(n), x_sync, gamma, pkeys
+        )
+        return (x_next, key), x_next
+
+    (x, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
+    return x, xs

@@ -31,35 +31,35 @@ from repro.core.engine import (
     PearlEngine,
     QuantizedSync,
 )
-from repro.core.games import make_quadratic_game
 from repro.core.topology import Ring
+
+from helpers import (
+    assert_runs_bitwise_equal,
+    gaussian_x0,
+    strong_quad,
+    weak_quad,
+)
 
 
 @pytest.fixture(scope="module")
 def quad():
-    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+    return strong_quad()
 
 
 @pytest.fixture(scope="module")
 def weak():
     """Weak coupling: staleness costs rounds instead of destabilizing."""
-    return make_quadratic_game(n=6, d=10, M=40, L_B=1.0, batch_size=1, seed=0)
+    return weak_quad()
 
 
 @pytest.fixture(scope="module")
 def x0(quad):
-    return jnp.asarray(
-        np.random.default_rng(7).standard_normal((quad.n, quad.d)),
-        dtype=jnp.float32,
-    )
+    return gaussian_x0(quad)
 
 
 @pytest.fixture(scope="module")
 def x0w(weak):
-    return jnp.asarray(
-        np.random.default_rng(0).standard_normal((weak.n, weak.d)),
-        dtype=jnp.float32,
-    )
+    return gaussian_x0(weak, seed=0)
 
 
 # ------------------------------------------------------------- the D=0 pin
@@ -88,11 +88,7 @@ class TestLockstepEquivalence:
             quad, x0, tau=4, rounds=self.ROUNDS, gamma=gamma, key=key,
             stochastic=stochastic,
         )
-        np.testing.assert_array_equal(np.asarray(r_async.x_final),
-                                      np.asarray(r_sync.x_final))
-        np.testing.assert_array_equal(r_async.rel_errors, r_sync.rel_errors)
-        np.testing.assert_array_equal(r_async.bytes_up, r_sync.bytes_up)
-        np.testing.assert_array_equal(r_async.bytes_down, r_sync.bytes_down)
+        assert_runs_bitwise_equal(r_async, r_sync)
 
     @pytest.mark.parametrize("sync", [
         None,
@@ -110,9 +106,7 @@ class TestLockstepEquivalence:
             weak, x0w, tau=4, rounds=60, gamma=gamma, stochastic=False)
         r_async = AsyncPearlEngine(**kw).run(
             weak, x0w, tau=4, rounds=60, gamma=gamma, stochastic=False)
-        np.testing.assert_array_equal(np.asarray(r_async.x_final),
-                                      np.asarray(r_sync.x_final))
-        np.testing.assert_array_equal(r_async.bytes_up, r_sync.bytes_up)
+        assert_runs_bitwise_equal(r_async, r_sync)
 
     def test_zero_bound_ignores_schedule(self, quad, x0):
         """max_staleness = 0 clips every schedule to the lockstep table."""

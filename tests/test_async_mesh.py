@@ -36,8 +36,9 @@ from repro.core.engine import (
     PearlEngine,
     QuantizedSync,
 )
-from repro.core.games import make_quadratic_game
 from repro.core.topology import Ring
+
+from helpers import assert_runs_bitwise_equal, gaussian_x0, weak_quad
 
 multi_device = pytest.mark.skipif(
     jax.device_count() < 2,
@@ -64,13 +65,11 @@ def mesh():
 
 @pytest.fixture(scope="module")
 def setup():
-    game = make_quadratic_game(n=N, d=10, M=40, L_B=1.0, batch_size=1,
-                               seed=0)
+    game = weak_quad(n=N, d=10)
     # 0.4x the lockstep-safe step: staleness shrinks the stable region,
     # and one shared gamma keeps every engine in it
     gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
-    x0 = jnp.asarray(
-        np.random.default_rng(0).standard_normal((N, 10)), jnp.float32)
+    x0 = gaussian_x0(game, seed=0)
     return game, gamma, x0
 
 
@@ -91,9 +90,7 @@ class TestD0Parity:
         lock = _run(PearlEngine(sync=sync, mesh=mesh), setup)
         d0 = _run(AsyncPearlEngine(sync=sync, mesh=mesh, delays=ZeroDelay(),
                                    max_staleness=0), setup)
-        np.testing.assert_array_equal(np.asarray(lock.x_final),
-                                      np.asarray(d0.x_final))
-        np.testing.assert_array_equal(lock.rel_errors, d0.rel_errors)
+        assert_runs_bitwise_equal(lock, d0, check_bytes=False)
 
     def test_d0_bytes_equal_lockstep(self, setup, mesh):
         lock = _run(PearlEngine(sync=Int8Sync(), mesh=mesh), setup,
@@ -199,10 +196,7 @@ class TestAsyncGossipMultiSweep:
         d0 = _run(AsyncPearlEngine(topology=Ring(), gossip_steps=2,
                                    delays=ZeroDelay(), max_staleness=0),
                   setup)
-        np.testing.assert_array_equal(np.asarray(lock.x_final),
-                                      np.asarray(d0.x_final))
-        np.testing.assert_array_equal(lock.bytes_up, d0.bytes_up)
-        np.testing.assert_array_equal(lock.bytes_down, d0.bytes_down)
+        assert_runs_bitwise_equal(lock, d0)
 
     def test_multisweep_tightens_consensus_under_staleness(self, setup):
         one = _run(AsyncPearlEngine(topology=Ring(), gossip_steps=1,

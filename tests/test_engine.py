@@ -28,91 +28,26 @@ from repro.core.engine import (
     SgdUpdate,
     as_round_gammas,
 )
-from repro.core.games import make_quadratic_game
 from repro.core.metrics import final_plateau
 from repro.core.pearl import pearl_sgd
+
+from helpers import (
+    assert_runs_bitwise_equal,
+    gaussian_x0,
+    legacy_pearl_eg as _legacy_pearl_eg,
+    legacy_pearl_sgd as _legacy_pearl_sgd,
+    strong_quad,
+)
 
 
 @pytest.fixture(scope="module")
 def quad():
-    return make_quadratic_game(n=4, d=8, M=40, batch_size=1, seed=0)
+    return strong_quad()
 
 
 @pytest.fixture(scope="module")
 def x0(quad):
-    return jnp.asarray(
-        np.random.default_rng(7).standard_normal((quad.n, quad.d)),
-        dtype=jnp.float32,
-    )
-
-
-# ---------------------------------------------------------------- references
-def _legacy_pearl_sgd(game, x0, gammas, key, *, tau, stochastic, sync_dtype=None):
-    """Verbatim-compact copy of the seed repo's pearl.py::_run scan loop."""
-    n = x0.shape[0]
-
-    def local_updates(i, x_sync, gamma, key):
-        if sync_dtype is not None:
-            x_ref = x_sync.astype(sync_dtype).astype(x_sync.dtype)
-            x_ref = x_ref.at[i].set(x_sync[i])
-        else:
-            x_ref = x_sync
-
-        def step(x_i, k):
-            if stochastic:
-                g = game.player_grad_stoch(i, x_i, x_ref, k)
-            else:
-                g = game.player_grad(i, x_i, x_ref)
-            return x_i - gamma * g, None
-
-        keys = jax.random.split(key, tau)
-        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
-        return x_i
-
-    def round_body(carry, gamma):
-        x_sync, key = carry
-        key, sub = jax.random.split(key)
-        player_keys = jax.random.split(sub, n)
-        x_next = jax.vmap(local_updates, in_axes=(0, None, None, 0))(
-            jnp.arange(n), x_sync, gamma, player_keys
-        )
-        return (x_next, key), x_next
-
-    (x_final, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
-    return x_final, xs
-
-
-def _legacy_pearl_eg(game, x0, gammas, key, *, tau, stochastic):
-    """Verbatim-compact copy of the seed repo's baselines.py::_pearl_eg_run."""
-    n = x0.shape[0]
-
-    def local(i, x_sync, gamma, key):
-        def step(x_i, k):
-            k1, k2 = jax.random.split(k)
-            if stochastic:
-                g_half = game.player_grad_stoch(i, x_i, x_sync, k1)
-                x_half = x_i - gamma * g_half
-                g = game.player_grad_stoch(i, x_half, x_sync, k2)
-            else:
-                x_half = x_i - gamma * game.player_grad(i, x_i, x_sync)
-                g = game.player_grad(i, x_half, x_sync)
-            return x_i - gamma * g, None
-
-        keys = jax.random.split(key, tau)
-        x_i, _ = jax.lax.scan(step, x_sync[i], keys)
-        return x_i
-
-    def round_body(carry, gamma):
-        x_sync, key = carry
-        key, sub = jax.random.split(key)
-        pkeys = jax.random.split(sub, n)
-        x_next = jax.vmap(local, in_axes=(0, None, None, 0))(
-            jnp.arange(n), x_sync, gamma, pkeys
-        )
-        return (x_next, key), x_next
-
-    (x, _), xs = jax.lax.scan(round_body, (x0, key), gammas)
-    return x, xs
+    return gaussian_x0(quad)
 
 
 # -------------------------------------------------------------- equivalence
@@ -189,9 +124,7 @@ class TestLegacyEquivalence:
                      key=jax.random.PRNGKey(1))
         r2 = pearl_sgd(quad, x0, tau=4, rounds=40, gamma=gamma,
                        key=jax.random.PRNGKey(1))
-        np.testing.assert_array_equal(np.asarray(r1.x_final),
-                                      np.asarray(r2.x_final))
-        np.testing.assert_array_equal(r1.rel_errors, r2.rel_errors)
+        assert_runs_bitwise_equal(r1, r2)
 
 
 # ------------------------------------------------------------- new plugins
@@ -264,8 +197,7 @@ class TestSyncStrategies:
         part = PearlEngine(sync=PartialParticipation(fraction=1.0)).run(
             quad, x0, tau=4, rounds=60, gamma=gamma, key=key
         )
-        np.testing.assert_array_equal(np.asarray(exact.x_final),
-                                      np.asarray(part.x_final))
+        assert_runs_bitwise_equal(exact, part)
 
     def test_quantized_downlink_bytes_halved(self, quad, x0):
         c = quad.constants()

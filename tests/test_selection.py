@@ -1,0 +1,489 @@
+"""The selection-policy correctness harness (ROADMAP item 4).
+
+What is pinned here, per the acceptance criteria:
+
+- mask properties: value-driven policies select EXACTLY ``participants(n)``
+  players every round; the cold start deterministically sweeps the whole
+  population; the same ``(seed, round)`` drive realizes the same mask
+  sequence twice; PowerOfChoice candidate sets are reproducible from
+  ``(seed, round)`` alone (no replay); the closed-form Shapley progress is
+  permutation-equivariant with the efficiency identity;
+- :class:`UniformSelection` is bit-for-bit :class:`PartialParticipation`
+  in BOTH engines — same masks, trajectories, and byte bill;
+- value-driven selection separates on warm-start heterogeneity: greedy
+  reaches the 1e-3 neighborhood in strictly fewer wire bytes than the
+  uniform control at the same fraction;
+- byte-accounting invariance: every policy bills exactly the drawn masks
+  (the engine ledger equals the strategy's own ``round_bytes`` of the
+  known budget), and the trainer — the one mask x mesh path — bills
+  identically across host and mesh lowerings;
+- the rejection matrix: selection x joint baselines, x dense mean-field,
+  x gossip (both engines and the trainer), x the dense engines' mesh, and
+  the legacy ``pre_round``/``mask`` surface all fail loudly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collective, stepsize
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    UniformDelay,
+    ZeroDelay,
+)
+from repro.core.engine import (
+    JointExtragradientUpdate,
+    MeanFieldView,
+    PartialParticipation,
+    PearlEngine,
+)
+from repro.core.games import make_mean_field_game, make_quadratic_game
+from repro.core.metrics import rounds_to_reach
+from repro.core.selection import (
+    SELECTION_POLICIES,
+    GreedyShapley,
+    PowerOfChoice,
+    UCBSelection,
+    UniformSelection,
+    is_selection_policy,
+    resolve_selection,
+    shapley_progress,
+    validate_selection,
+)
+from repro.core.topology import Ring
+
+from helpers import assert_runs_bitwise_equal, gaussian_x0, weak_quad
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device (fake) mesh: run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+N = 6
+
+VALUE_POLICIES = {
+    "greedy": lambda **kw: GreedyShapley(**kw),
+    "ucb": lambda **kw: UCBSelection(**kw),
+    "poc": lambda **kw: PowerOfChoice(**kw),
+}
+
+
+def drive(policy, n, rounds, *, d=4, delta_scale=None, seed=0):
+    """Synthetic observe loop: per-round deltas keyed by fold_in(seed, r),
+    so a drive is a pure function of ``(policy, n, rounds, seed)``."""
+    state = policy.select_state(n)
+    masks = []
+    scale = (jnp.ones((n, 1)) if delta_scale is None
+             else jnp.asarray(delta_scale, jnp.float32)[:, None])
+    for r in range(rounds):
+        state, m = policy.select(state, n, r, None)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), r)
+        delta = scale * jax.random.normal(key, (n, d))
+        state = policy.observe(state, m, delta, r)
+        masks.append(np.asarray(m))
+    return np.stack(masks), jax.tree.map(np.asarray, state)
+
+
+# =========================================================================
+# Mask properties
+# =========================================================================
+class TestMaskProperties:
+    @pytest.mark.parametrize("pname", list(VALUE_POLICIES),
+                             ids=list(VALUE_POLICIES))
+    @pytest.mark.parametrize("n,fraction", [(6, 0.5), (10, 0.3), (5, 0.2)])
+    def test_exact_budget_every_round(self, pname, n, fraction):
+        policy = VALUE_POLICIES[pname](fraction=fraction)
+        masks, _ = drive(policy, n, 30)
+        k = policy.participants(n)
+        assert k == max(1, round(fraction * n))
+        np.testing.assert_array_equal(masks.sum(axis=1), np.full(30, k))
+
+    @pytest.mark.parametrize("pname", ["greedy", "ucb"])
+    def test_cold_start_sweeps_population(self, pname):
+        """Unseen players rank +inf, ties break to the lowest index: the
+        first ceil(n/k) rounds deterministically partition-sweep the
+        population, so every player is observed before greed kicks in."""
+        policy = VALUE_POLICIES[pname](fraction=0.3)
+        n, k = 10, 3
+        masks, state = drive(policy, n, 4)  # ceil(10/3) = 4 rounds
+        assert masks[0].tolist() == [True] * 3 + [False] * 7
+        assert masks[1].tolist() == [False] * 3 + [True] * 3 + [False] * 4
+        assert (state["counts"] >= 1).all()
+
+    @pytest.mark.parametrize("pname", list(VALUE_POLICIES),
+                             ids=list(VALUE_POLICIES))
+    def test_mask_sequence_deterministic(self, pname):
+        policy = VALUE_POLICIES[pname](fraction=0.5)
+        a, sa = drive(policy, N, 25, seed=3)
+        b, sb = drive(policy, N, 25, seed=3)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(sa["values"], sb["values"])
+
+    def test_poc_candidates_reproducible_without_replay(self):
+        """Round r's candidate set is a pure function of (seed, round) —
+        the per-(seed, round) fold_in discipline, no replay of 0..r-1."""
+        policy = PowerOfChoice(fraction=0.5, seed=11)
+        direct = np.asarray(policy.candidate_mask(N, 37))
+        again = np.asarray(policy.candidate_mask(N, 37))
+        np.testing.assert_array_equal(direct, again)
+        assert direct.sum() == policy.candidate_count(N)
+        other = np.asarray(policy.candidate_mask(N, 38))
+        assert not np.array_equal(direct, other) or N <= direct.sum()
+
+    def test_poc_candidate_count_clamped(self):
+        assert PowerOfChoice(fraction=0.5).candidate_count(6) == 6
+        assert PowerOfChoice(fraction=0.2).candidate_count(10) == 4
+        assert PowerOfChoice(fraction=0.2, candidates=1).candidate_count(
+            10) == 2  # clamped up to k
+        assert PowerOfChoice(fraction=0.5, candidates=99).candidate_count(
+            6) == 6  # clamped down to n
+
+    def test_poc_selects_within_candidates(self):
+        policy = PowerOfChoice(fraction=0.3, candidates=4, seed=5)
+        state = policy.select_state(10)
+        for r in range(12):
+            state, m = policy.select(state, 10, r, None)
+            cand = policy.candidate_mask(10, r)
+            assert not np.any(np.asarray(m) & ~np.asarray(cand))
+            key = jax.random.fold_in(jax.random.PRNGKey(0), r)
+            state = policy.observe(state, m, jax.random.normal(key, (10, 4)),
+                                   r)
+
+    def test_shapley_permutation_equivariance(self):
+        rng = np.random.default_rng(0)
+        delta = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], bool)
+        perm = jnp.asarray(rng.permutation(8))
+        phi = np.asarray(shapley_progress(delta, mask))
+        phi_p = np.asarray(shapley_progress(delta[perm], mask[perm]))
+        np.testing.assert_allclose(phi_p, phi[np.asarray(perm)],
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_shapley_efficiency(self):
+        """Sum of the closed-form Shapley values IS the coalition progress
+        v(participants) = ||sum of masked deltas||^2."""
+        rng = np.random.default_rng(1)
+        delta = jnp.asarray(rng.standard_normal((6, 7)), jnp.float32)
+        mask = jnp.asarray([1, 1, 0, 1, 0, 1], bool)
+        phi = shapley_progress(delta, mask)
+        v_all = jnp.sum(jnp.sum(jnp.where(mask[:, None], delta, 0.0),
+                                axis=0) ** 2)
+        assert float(jnp.sum(phi)) == pytest.approx(float(v_all), rel=1e-5)
+        assert float(jnp.abs(phi * ~mask).max()) == 0.0
+
+    def test_aging_bounds_starvation(self):
+        """A persistently low-value player is still re-selected: the aging
+        bonus caps starvation (the frozen-block failure mode — a player the
+        greedy rule never picks keeps the game away from equilibrium)."""
+        scale = np.ones(N)
+        scale[-1] = 1e-3  # player 5 always ships tiny deltas
+        policy = GreedyShapley(fraction=0.5, aging=0.05)
+        masks, state = drive(policy, N, 120, delta_scale=scale)
+        # beyond the cold-start sweep: selected again, repeatedly
+        assert int(state["counts"][-1]) >= 3
+        gaps = np.diff(np.nonzero(masks[:, -1])[0])
+        assert gaps.size and gaps.max() <= int(2 / 0.05) + 1
+
+    def test_property_budget_and_efficiency(self):
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=50, deadline=None)
+        @given(n=st.integers(min_value=2, max_value=16),
+               fraction=st.floats(min_value=0.05, max_value=1.0),
+               seed=st.integers(min_value=0, max_value=2**16))
+        def prop(n, fraction, seed):
+            policy = GreedyShapley(fraction=fraction)
+            k = policy.participants(n)
+            assert 1 <= k <= n
+            masks, _ = drive(policy, n, 6, seed=seed)
+            assert (masks.sum(axis=1) == k).all()
+
+        prop()
+
+    def test_property_shapley_invariance(self):
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=50, deadline=None)
+        @given(seed=st.integers(min_value=0, max_value=2**16),
+               n=st.integers(min_value=2, max_value=12))
+        def prop(seed, n):
+            rng = np.random.default_rng(seed)
+            delta = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+            mask = jnp.asarray(rng.integers(0, 2, n), bool)
+            perm = rng.permutation(n)
+            phi = np.asarray(shapley_progress(delta, mask))
+            phi_p = np.asarray(
+                shapley_progress(delta[jnp.asarray(perm)],
+                                 mask[jnp.asarray(perm)]))
+            np.testing.assert_allclose(phi_p, phi[perm],
+                                       rtol=1e-4, atol=1e-5)
+
+        prop()
+
+
+# =========================================================================
+# UniformSelection == PartialParticipation, bit for bit, in BOTH engines
+# =========================================================================
+class TestUniformPins:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        game = weak_quad(n=N, d=10)
+        gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
+        return game, gamma, gaussian_x0(game, seed=0)
+
+    def _run(self, engine, setup, rounds=40):
+        game, gamma, x0 = setup
+        return engine.run(game, x0, tau=4, rounds=rounds, gamma=gamma,
+                          key=jax.random.PRNGKey(0), stochastic=False)
+
+    def test_lockstep_bit_for_bit(self, setup):
+        legacy = self._run(
+            PearlEngine(sync=PartialParticipation(fraction=0.5, seed=7)),
+            setup)
+        sel = self._run(
+            PearlEngine(sync=UniformSelection(fraction=0.5, seed=7)), setup)
+        assert_runs_bitwise_equal(legacy, sel)
+
+    def test_async_bit_for_bit_under_staleness(self, setup):
+        kw = dict(delays=UniformDelay(seed=0), max_staleness=2)
+        legacy = self._run(
+            AsyncPearlEngine(sync=PartialParticipation(fraction=0.5, seed=7),
+                             **kw), setup)
+        sel = self._run(
+            AsyncPearlEngine(sync=UniformSelection(fraction=0.5, seed=7),
+                             **kw), setup)
+        assert_runs_bitwise_equal(legacy, sel)
+
+    def test_async_d0_collapses_to_lockstep(self, setup):
+        lock = self._run(
+            PearlEngine(sync=UniformSelection(fraction=0.5, seed=7)), setup)
+        d0 = self._run(
+            AsyncPearlEngine(sync=UniformSelection(fraction=0.5, seed=7),
+                             delays=ZeroDelay(), max_staleness=0), setup)
+        assert_runs_bitwise_equal(lock, d0)
+
+
+# =========================================================================
+# Value-driven selection: the separation + composition smokes
+# =========================================================================
+class TestValueDriven:
+    @pytest.fixture(scope="class")
+    def warm(self):
+        """Warm-start heterogeneity (the BENCH_selection.json config, shrunk):
+        8 of 10 players start AT the equilibrium, 2 start far — uniform
+        participation wastes 80% of its slots moving players who are done."""
+        game = make_quadratic_game(n=10, d=10, M=40, L_B=1.0, batch_size=1,
+                                   seed=1)
+        off = np.zeros((10, 10))
+        off[:2] = 10.0 * np.random.default_rng(3).standard_normal((2, 10))
+        x0 = jnp.asarray(np.asarray(game.equilibrium()) + off, jnp.float32)
+        gamma = stepsize.gamma_constant(game.constants(), 4)
+        return game, gamma, x0
+
+    def _bytes_to_eq(self, r, threshold=1e-3):
+        hit = rounds_to_reach(r.rel_errors, threshold)
+        assert hit is not None
+        per_round = r.bytes_up + r.bytes_down
+        return int(per_round[:hit].sum())
+
+    def test_greedy_beats_uniform_bytes_to_eq(self, warm):
+        game, gamma, x0 = warm
+        kw = dict(tau=4, rounds=600, gamma=gamma,
+                  key=jax.random.PRNGKey(0), stochastic=False)
+        greedy = PearlEngine(sync=GreedyShapley(fraction=0.2)).run(
+            game, x0, **kw)
+        uniform = PearlEngine(sync=UniformSelection(fraction=0.2)).run(
+            game, x0, **kw)
+        assert self._bytes_to_eq(greedy) < self._bytes_to_eq(uniform)
+
+    def test_selection_composes_with_sampled_mean_field(self):
+        game = make_mean_field_game(n=50, d=6, heterogeneity=1.0, seed=0)
+        gamma = stepsize.gamma_constant(game.constants(), 4)
+        r = PearlEngine(sync=GreedyShapley(fraction=0.2),
+                        view=MeanFieldView(sample=8, seed=0)).run(
+            game, jnp.zeros((game.n, game.d)), tau=4, rounds=200,
+            gamma=gamma, key=jax.random.PRNGKey(0), stochastic=False)
+        assert np.isfinite(r.rel_errors[-1])
+        assert float(r.rel_errors[-1]) < float(r.rel_errors[1])
+
+    def test_staleness_penalty_runs_in_async(self):
+        game = weak_quad(n=N, d=10)
+        gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
+        x0 = gaussian_x0(game, seed=0)
+        r = AsyncPearlEngine(
+            sync=GreedyShapley(fraction=0.5, staleness_penalty=0.1),
+            delays=UniformDelay(seed=0), max_staleness=2).run(
+            game, x0, tau=4, rounds=60, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        assert np.isfinite(r.rel_errors[-1])
+
+
+# =========================================================================
+# Byte accounting: the bill IS the drawn masks
+# =========================================================================
+class TestByteAccounting:
+    @pytest.mark.parametrize("pname", list(VALUE_POLICIES),
+                             ids=list(VALUE_POLICIES))
+    def test_engine_bills_exactly_the_budget(self, pname):
+        """Value policies draw exactly k participants; the engine ledger
+        must equal the strategy's own round_bytes of that known budget —
+        nothing billed full, nothing billed free."""
+        game = weak_quad(n=N, d=10)
+        gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
+        policy = VALUE_POLICIES[pname](fraction=0.5)
+        r = PearlEngine(sync=policy).run(
+            game, gaussian_x0(game, seed=0), tau=4, rounds=20, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        k = policy.participants(N)
+        up, down = policy.round_bytes(np.full(20, k), N, game.d, 4)
+        np.testing.assert_array_equal(r.bytes_up, up)
+        np.testing.assert_array_equal(r.bytes_down, down)
+
+
+@multi_device
+class TestTrainerMeshInvariance:
+    """Satellite 3, the mask x mesh half: the trainer's general merge is
+    the ONE masked mesh lowering (collective.masked_payload) — the bill,
+    computed host-side off the drawn masks, must be identical across
+    lowerings for every selection policy."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        if jax.device_count() < 2:
+            pytest.skip("single device")
+        return collective.player_mesh(N)
+
+    @pytest.fixture(scope="class")
+    def cfg(self):
+        from repro.configs import get_config
+
+        return get_config("smollm-360m").smoke_variant()
+
+    def _stream(self, cfg):
+        from repro.data.synthetic import DataConfig, SyntheticTokenStream
+
+        return SyntheticTokenStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, batch_size=2,
+            n_players=N, seed=0,
+        ))
+
+    def _build(self, cfg, sync, **kw):
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        return PearlTrainer(cfg, sgd(5e-2), n_players=N, tau=2,
+                            prox_lambda=1e-3, seed=2, sync=sync, **kw)
+
+    @pytest.mark.parametrize("pname", ["greedy", "ucb", "uniform"])
+    def test_bill_identical_across_lowerings(self, cfg, mesh, pname):
+        sync = (UniformSelection(fraction=0.5, seed=7) if pname == "uniform"
+                else VALUE_POLICIES[pname](fraction=0.5))
+        host = self._build(cfg, sync)
+        h = host.run(self._stream(cfg), rounds=3)
+        mesht = self._build(cfg, sync, mesh=mesh)
+        m = mesht.run(self._stream(cfg), rounds=3)
+        assert host._round_participants == mesht._round_participants
+        hr, mr = host.comm_report(), mesht.comm_report()
+        np.testing.assert_array_equal(np.stack(hr.per_round_bytes()),
+                                      np.stack(mr.per_round_bytes()))
+        for a, b in zip(h, m):
+            assert a["lm_loss"] == pytest.approx(b["lm_loss"], rel=1e-4)
+
+    def test_uniform_bill_matches_partial_participation(self, cfg):
+        """The trainer-level half of the uniform pin: same masks, same
+        participants, same bytes as the legacy strategy."""
+        sel = self._build(cfg, UniformSelection(fraction=0.5, seed=7))
+        sel.run(self._stream(cfg), rounds=3)
+        legacy = self._build(cfg, PartialParticipation(fraction=0.5, seed=7))
+        legacy.run(self._stream(cfg), rounds=3)
+        assert sel._round_participants == legacy._round_participants
+        np.testing.assert_array_equal(
+            np.stack(sel.comm_report().per_round_bytes()),
+            np.stack(legacy.comm_report().per_round_bytes()))
+
+
+# =========================================================================
+# Rejection matrix + registry
+# =========================================================================
+class TestRejectionMatrix:
+    def test_selection_rejects_joint_update(self):
+        with pytest.raises(ValueError, match="ExactSync"):
+            PearlEngine(update=JointExtragradientUpdate(),
+                        sync=GreedyShapley())._check_topology()
+
+    def test_selection_rejects_dense_mean_field(self):
+        with pytest.raises(ValueError, match="sample"):
+            PearlEngine(sync=GreedyShapley(),
+                        view=MeanFieldView())._check_topology()
+
+    def test_selection_rejects_gossip_lockstep(self):
+        with pytest.raises(ValueError, match="scorer"):
+            PearlEngine(topology=Ring(),
+                        sync=GreedyShapley())._check_topology()
+
+    def test_selection_rejects_gossip_async(self):
+        with pytest.raises(ValueError, match="scorer"):
+            AsyncPearlEngine(topology=Ring(), sync=GreedyShapley())._check()
+
+    def test_selection_rejects_engine_mesh(self):
+        # a 1-device mesh is enough: the rejection is structural
+        mesh = collective.player_mesh(1)
+        with pytest.raises(ValueError, match="mask"):
+            PearlEngine(sync=GreedyShapley(), mesh=mesh)._check_topology()
+        with pytest.raises(ValueError, match="mask"):
+            AsyncPearlEngine(sync=GreedyShapley(), mesh=mesh)._check()
+
+    def test_async_selection_rejects_mean_field(self):
+        with pytest.raises(ValueError, match="lockstep"):
+            AsyncPearlEngine(sync=GreedyShapley(),
+                             view=MeanFieldView(sample=8))._check()
+        with pytest.raises(ValueError, match="sample"):
+            AsyncPearlEngine(sync=GreedyShapley(),
+                             view=MeanFieldView())._check()
+
+    def test_legacy_surface_raises(self):
+        policy = GreedyShapley()
+        with pytest.raises(RuntimeError, match="select"):
+            policy.init_state()
+        with pytest.raises(RuntimeError, match="select"):
+            policy.pre_round(None)
+        with pytest.raises(RuntimeError, match="select"):
+            policy.mask(N, ())
+
+    def test_validate_selection_is_noop_for_legacy_strategies(self):
+        validate_selection(PartialParticipation(fraction=0.5),
+                           server=False, mesh=object())
+
+    def test_resolve_selection(self):
+        assert resolve_selection(None) is None
+        p = GreedyShapley(fraction=0.3)
+        assert resolve_selection(p) is p
+        for name, cls in SELECTION_POLICIES.items():
+            got = resolve_selection(name)
+            assert isinstance(got, cls) and is_selection_policy(got)
+        with pytest.raises(ValueError, match="unknown selection policy"):
+            resolve_selection("shapely")
+        with pytest.raises(TypeError, match="SelectionPolicy"):
+            resolve_selection(3.0)
+
+    def test_parameter_validation(self):
+        for bad in (0.0, -0.1, 1.5):
+            with pytest.raises(ValueError, match="fraction"):
+                GreedyShapley(fraction=bad)
+        with pytest.raises(ValueError, match="memory"):
+            GreedyShapley(memory=1.0)
+        with pytest.raises(ValueError, match="aging"):
+            UCBSelection(aging=-0.1)
+        with pytest.raises(ValueError, match="c must"):
+            UCBSelection(c=-1.0)
+        with pytest.raises(ValueError, match="candidates"):
+            PowerOfChoice(candidates=0)
+        with pytest.raises(ValueError, match="staleness_penalty"):
+            GreedyShapley(staleness_penalty=-0.5)
