@@ -1,0 +1,225 @@
+"""Incentive-layer sweep: participation as a best-response game.
+
+The selection axis so far assumed the SERVER owns the mask (ROADMAP item 4:
+greedy/UCB/power-of-choice route a fixed budget by observed value). The
+incentive layer inverts the ownership: each player joins a round iff its
+utility — payment plus network-effect value minus a private cost — is
+non-negative against everyone else's decision, and the realized mask is the
+best-response fixed point (:class:`repro.core.incentives.
+BestResponseParticipation`). The server's lever is no longer WHO but HOW
+MUCH: the payment rule and price level.
+
+Three sweeps, one artifact (``BENCH_incentives.json``):
+
+- ``price_sweep``: the fixed payment rule at increasing price on the
+  warm-start heterogeneity game. Realized participation tracks the
+  continuum closed form ``s* = (p - c_min)/((c_max - c_min) - v)`` of the
+  network-effects meta-game, and bytes-to-equilibrium is the server's
+  procurement bill at each price point.
+- ``collapse``: the free-rider cliff pinned as the honest negative. Any
+  price at or below the cheapest player's cost sheds EVERY player from the
+  all-in start — the best-response cascade is a death spiral, not a
+  proportional decline: zero bytes move, the joint state freezes at x0,
+  and no convergence metric improves. Under-funding a strategic federation
+  does not buy a slower federation; it buys no federation.
+- ``vs_greedy``: the incentive mask against PR 9's value-driven
+  ``GreedyShapley`` at the same realized budget (k = 2 of 10 players).
+  Payments route by COST, greedy routes by VALUE: when the cheap players
+  happen to carry the error (``aligned``) the fixed-price coalition matches
+  greedy without any value tracking, and when cost and value anti-correlate
+  (``misaligned``, reversed cost grid) the purchased coalition is exactly
+  the players who are already done — equal spend, no convergence. The pair
+  brackets what a price CAN and CANNOT buy.
+
+``python -m benchmarks.bench_incentives --json BENCH_incentives.json``
+writes the artifact; ``scripts/render_experiments.py`` renders it into
+EXPERIMENTS.md and ``scripts/check_bench_drift.py`` guards it.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_selection import warm_start_game
+from benchmarks.common import emit
+from repro.core import stepsize
+from repro.core.engine import PearlEngine
+from repro.core.games.participation import NetworkEffectsParticipationGame
+from repro.core.incentives import BestResponseParticipation
+from repro.core.metrics import rounds_to_reach
+from repro.core.selection import GreedyShapley
+
+#: the meta-game value-of-the-crowd used throughout (must stay below
+#: c_max - c_min = 0.6 for the closed form to apply)
+VALUE = 0.2
+
+
+def _row(name, r, threshold, rounds, bytes_full_round, **extra):
+    hit = rounds_to_reach(r.rel_errors, threshold)
+    final = float(r.rel_errors[-1])
+    per_round = np.asarray(r.bytes_up) + np.asarray(r.bytes_down)
+    return {
+        "scheme": name,
+        "rounds": rounds,
+        "rounds_to_eq": hit,
+        "bytes_to_eq": (int(per_round[:hit].sum())
+                        if hit is not None else None),
+        "bytes_total": int(per_round.sum()),
+        "final_rel_error": final,
+        "diverged": bool(not np.isfinite(final) or final > 1e3),
+        "bytes_full_round": bytes_full_round,
+        **extra,
+    }
+
+
+def _run(game, x0, sync, tau, rounds, gamma):
+    return PearlEngine(sync=sync).run(
+        game, x0, tau=tau, rounds=rounds, gamma=gamma,
+        key=jax.random.PRNGKey(0), stochastic=False,
+    )
+
+
+def _full_round_bytes(game, x0, tau, rounds, gamma):
+    """Per-round wire of the full-participation control — the denominator
+    for realized participation rates and the pinned accounting constant."""
+    full = PearlEngine().run(
+        game, x0, tau=tau, rounds=2, gamma=gamma,
+        key=jax.random.PRNGKey(0), stochastic=False,
+    )
+    up = int(np.asarray(full.bytes_up)[0])
+    both = up + int(np.asarray(full.bytes_down)[0])
+    return up, both
+
+
+def run_price_sweep(tau: int = 4, rounds: int = 600,
+                    threshold: float = 1e-3):
+    """Fixed payment rule at increasing price: realized participation vs
+    the continuum closed form, and the procurement bytes-to-equilibrium."""
+    game, x0 = warm_start_game()
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+    full_up, full_round = _full_round_bytes(game, x0, tau, rounds, gamma)
+
+    rows = []
+    t0 = time.perf_counter()
+    for price in (0.15, 0.3, 0.45, 0.6, 0.9):
+        meta = NetworkEffectsParticipationGame(
+            n=game.n, price=price, value=VALUE)
+        policy = BestResponseParticipation(price=price, value_weight=VALUE)
+        r = _run(game, x0, policy, tau, rounds, gamma)
+        realized = float(np.asarray(r.bytes_up).sum()
+                         / max(full_up * rounds, 1))
+        rows.append(_row(
+            f"fixed@{price}", r, threshold, rounds, full_round,
+            price=price, payment="fixed", tau=tau,
+            closed_form_rate=meta.equilibrium_rate(),
+            realized_participation=realized))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    emit("incentives_price", us,
+         ";".join(f"p={r['price']}:s*={r['closed_form_rate']:.2f},"
+                  f"s={r['realized_participation']:.2f},"
+                  f"B={r['bytes_to_eq']}" for r in rows))
+    return rows
+
+
+def run_collapse(tau: int = 4, rounds: int = 200, threshold: float = 1e-3):
+    """The free-rider cliff: price <= c_min sheds everyone. Pinned exactly —
+    zero uplink bytes at ANY budget, because the cascade empties the
+    coalition before the first sync."""
+    game, x0 = warm_start_game()
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+    _, full_round = _full_round_bytes(game, x0, tau, rounds, gamma)
+
+    rows = []
+    t0 = time.perf_counter()
+    for price in (0.05, 0.15):
+        policy = BestResponseParticipation(price=price, value_weight=VALUE)
+        r = _run(game, x0, policy, tau, rounds, gamma)
+        up_total = int(np.asarray(r.bytes_up).sum())
+        rows.append(_row(
+            f"fixed@{price}", r, threshold, rounds, full_round,
+            price=price, payment="fixed", tau=tau,
+            closed_form_rate=0.0,
+            bytes_up_total=up_total,
+            collapsed=bool(up_total == 0)))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    emit("incentives_collapse", us,
+         ";".join(f"p={r['price']}:collapsed={r['collapsed']},"
+                  f"up={r['bytes_up_total']}" for r in rows))
+    return rows
+
+
+def run_vs_greedy(tau: int = 4, rounds: int = 600, threshold: float = 1e-3,
+                  fraction: float = 0.2):
+    """Incentive coalition vs PR 9's greedy mask at the same budget (k = 2).
+
+    ``price=0.35`` with ``value_weight=0`` buys exactly the two cheapest
+    players every round (costs 0.23, 0.29 < 0.35 < 0.35 + 0.06) — the same
+    per-round wire as ``GreedyShapley(fraction=0.2)``. The aligned row uses
+    the default cost grid (the cheap players ARE the two far-from-
+    equilibrium ones); the misaligned row reverses the grid, so the same
+    price purchases the two players who are already done."""
+    game, x0 = warm_start_game()
+    gamma = stepsize.gamma_constant(game.constants(), tau)
+    _, full_round = _full_round_bytes(game, x0, tau, rounds, gamma)
+    grid = BestResponseParticipation().cost_vector(game.n)
+    schemes = {
+        "greedy_shapley": GreedyShapley(fraction=fraction),
+        "best_response_aligned": BestResponseParticipation(
+            price=0.35, value_weight=0.0),
+        "best_response_misaligned": BestResponseParticipation(
+            price=0.35, value_weight=0.0,
+            costs=tuple(float(c) for c in np.asarray(grid)[::-1])),
+    }
+
+    rows = []
+    t0 = time.perf_counter()
+    for name, sync in schemes.items():
+        r = _run(game, x0, sync, tau, rounds, gamma)
+        rows.append(_row(name, r, threshold, rounds, full_round,
+                         fraction=fraction, tau=tau))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+
+    emit("incentives_vs_greedy", us,
+         ";".join(f"{r['scheme']}:R={r['rounds_to_eq']},"
+                  f"B={r['bytes_to_eq']}" for r in rows))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--tau", type=int, default=4)
+    parser.add_argument("--rounds", type=int, default=600,
+                        help="budget for the price and vs-greedy sweeps")
+    parser.add_argument("--collapse-rounds", type=int, default=200)
+    parser.add_argument("--threshold", type=float, default=1e-3)
+    parser.add_argument("--json", type=str, default=None, metavar="PATH",
+                        help="write the sweeps as structured JSON "
+                             "(BENCH_incentives.json convention)")
+    args = parser.parse_args()
+
+    price_rows = run_price_sweep(tau=args.tau, rounds=args.rounds,
+                                 threshold=args.threshold)
+    collapse_rows = run_collapse(tau=args.tau, rounds=args.collapse_rounds,
+                                 threshold=args.threshold)
+    greedy_rows = run_vs_greedy(tau=args.tau, rounds=args.rounds,
+                                threshold=args.threshold)
+    if args.json:
+        payload = {"benchmark": "bench_incentives",
+                   "price_sweep": price_rows,
+                   "collapse": collapse_rows,
+                   "vs_greedy": greedy_rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@
     PYTHONPATH=src python examples/quickstart.py --staleness 4 --delay straggler
     PYTHONPATH=src python examples/quickstart.py --staleness 16 --delay straggler --policy delay_adaptive
     PYTHONPATH=src python examples/quickstart.py --topology ring --policy spectral
+    PYTHONPATH=src python examples/quickstart.py --incentive 0.45
 
 Builds the paper's Section 4.1 quadratic game, runs the chosen local update
 rule under the chosen communication strategy and topology for a few
@@ -19,7 +20,10 @@ matrix (see README "Engine architecture" and "Topology layer");
 async engine under the ``--delay`` schedule (README "Async rounds");
 ``--policy`` swaps the Theorem 3.4 step-size rule for a context-aware one
 (README "Step-size policies" — ``delay_adaptive`` needs ``--staleness``,
-``spectral`` a server-free ``--topology``; the engine rejects mismatches).
+``spectral`` a server-free ``--topology``; the engine rejects mismatches);
+``--incentive PRICE`` makes participation strategic — each player joins a
+round iff payment plus network value covers its private cost, and the mask
+is the best-response fixed point (README "Strategic participation").
 Server-free topologies and async runs use a weak-coupling game: stale
 inconsistent views act like delays under the antisymmetric coupling, so the
 stability margin shrinks as the coupling grows.
@@ -64,6 +68,12 @@ parser.add_argument("--selection", choices=sorted(SELECTION_POLICIES),
                          "power_of_choice score observed deltas, uniform is "
                          "the bit-for-bit partial-participation control); "
                          "needs the star topology")
+parser.add_argument("--incentive", type=float, default=None, metavar="PRICE",
+                    help="strategic participation: pay PRICE per round and "
+                         "let each player best-respond (price <= 0.2 is the "
+                         "free-rider collapse, >= 0.8 buys everyone; "
+                         "replaces --sync/--selection; needs the star "
+                         "topology)")
 parser.add_argument("--rounds", type=int, default=2500,
                     help="communication budget (rounds)")
 args = parser.parse_args()
@@ -73,6 +83,15 @@ if args.staleness < 0:
 if args.selection is not None and args.sync != "exact":
     parser.error("--selection replaces --sync (a selection policy IS the "
                  "sync strategy); drop one of them")
+if args.incentive is not None:
+    if args.selection is not None:
+        parser.error("--incentive IS a selection policy (best_response); "
+                     "drop --selection")
+    if args.sync != "exact":
+        parser.error("--incentive replaces --sync (the best-response mask "
+                     "IS the sync strategy); drop one of them")
+    if args.incentive < 0:
+        parser.error(f"--incentive must be >= 0, got {args.incentive}")
 
 topology = TOPOLOGIES[args.topology]()
 L_B = 20.0 if topology.is_server and args.staleness == 0 else 1.0
@@ -83,10 +102,18 @@ print(f"engine: method={args.method} sync={args.sync} "
       f"topology={args.topology} staleness={args.staleness}"
       + (f" delay={args.delay}" if args.staleness else "")
       + (f" policy={args.policy}" if args.policy != "theorem34" else "")
-      + (f" selection={args.selection}" if args.selection else ""))
+      + (f" selection={args.selection}" if args.selection else "")
+      + (f" incentive_price={args.incentive}"
+         if args.incentive is not None else ""))
 
-sync = (resolve_selection(args.selection) if args.selection
-        else SYNC_STRATEGIES[args.sync]())
+if args.incentive is not None:
+    from repro.core.incentives import BestResponseParticipation
+
+    sync = BestResponseParticipation(price=args.incentive)
+elif args.selection:
+    sync = resolve_selection(args.selection)
+else:
+    sync = SYNC_STRATEGIES[args.sync]()
 
 x0 = jnp.asarray(np.random.default_rng(0).standard_normal((game.n, game.d)))
 if args.staleness > 0:

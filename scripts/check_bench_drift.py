@@ -91,6 +91,21 @@ SPECS = {
         "staleness": (("stepsize_policy", "policy"),
                       ("max_staleness", "tau", "bytes_per_round")),
     },
+    # the incentive layer: the free-rider collapse is pure game logic
+    # (zero uplink bytes at ANY budget — pinned exactly) and the
+    # full-participation round is pure accounting; realized participation
+    # depends on the value-estimate feedback loop at the run's scale and
+    # is deliberately NOT pinned
+    "bench_incentives": {
+        "price_sweep": (("scheme",),
+                        ("price", "payment", "tau", "bytes_full_round"),
+                        ("closed_form_rate",)),
+        "collapse": (("scheme",),
+                     ("price", "payment", "tau", "bytes_full_round",
+                      "bytes_up_total", "collapsed", "closed_form_rate")),
+        "vs_greedy": (("scheme",),
+                      ("fraction", "tau", "bytes_full_round")),
+    },
     "bench_scaling": {
         "mean_field": (("n",),
                        ("d", "tau", "bytes_per_round",

@@ -115,6 +115,27 @@ assert d['mean_field'] and d['staleness'], 'empty composition sweeps'" \
 python scripts/check_bench_drift.py \
   "$SMOKE_DIR/BENCH_selection.json" BENCH_selection.json
 
+# incentive-layer smoke: the free-rider collapse must hold exactly (a
+# price at or below the cheapest cost moves ZERO uplink bytes at any
+# budget) and the best-response masks must replay the committed byte
+# accounting; realized participation is feedback-dependent and checked
+# by the drift spec's closed-form-rate tolerance instead
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_incentives \
+  --rounds 250 --collapse-rounds 100 \
+  --json "$SMOKE_DIR/BENCH_incentives.json"
+python -c "import json, sys; d = json.load(open(sys.argv[1])); \
+assert d['price_sweep'], 'empty price sweep'; \
+assert all(r['collapsed'] and r['bytes_up_total'] == 0 \
+for r in d['collapse']), 'free-rider collapse not exact'; \
+rows = {r['scheme']: r for r in d['vs_greedy']}; \
+assert rows['best_response_aligned']['bytes_to_eq'] is not None, \
+'aligned incentive coalition missed threshold'; \
+assert rows['best_response_misaligned']['rounds_to_eq'] is None, \
+'misaligned coalition unexpectedly converged'" \
+  "$SMOKE_DIR/BENCH_incentives.json"
+python scripts/check_bench_drift.py \
+  "$SMOKE_DIR/BENCH_incentives.json" BENCH_incentives.json
+
 # million-player scaling smoke: the n = 10^6 mean-field row must actually
 # run, and its per-player downlink must equal the n = 10^2 row's (the O(d)
 # wire is flat in n — the tentpole claim); the drift check then pins every

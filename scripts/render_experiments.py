@@ -35,6 +35,7 @@ WALLCLOCK = os.path.join(ROOT, "BENCH_wallclock.json")
 SCALING = os.path.join(ROOT, "BENCH_scaling.json")
 NEURAL = os.path.join(ROOT, "BENCH_neural.json")
 SELECTION = os.path.join(ROOT, "BENCH_selection.json")
+INCENTIVES = os.path.join(ROOT, "BENCH_incentives.json")
 
 
 def _load(path):
@@ -290,6 +291,49 @@ def render_selection(data) -> str:
     return "\n".join(lines)
 
 
+def render_incentives(data) -> str:
+    if data is None or not data.get("price_sweep"):
+        return ("*(BENCH_incentives.json artifact missing — run the "
+                "benchmark)*")
+    lines = [
+        "| price | closed-form rate s\\* | realized rate | rounds-to-eq | "
+        "bytes-to-eq |",
+        "|---|---|---|---|---|",
+    ]
+    for r in data["price_sweep"]:
+        lines.append(
+            f"| {r['price']} | {r['closed_form_rate']:.2f} | "
+            f"{r['realized_participation']:.2f} | {_rounds(r)} | "
+            f"{_kb(r['bytes_to_eq'])} |")
+    lines += [
+        "",
+        "The free-rider cliff (the honest negative: a price at or below "
+        "the cheapest cost empties the coalition before the first sync — "
+        "zero bytes move at ANY budget):",
+        "",
+        "| price | collapsed | total uplink bytes | final rel. error |",
+        "|---|---|---|---|",
+    ]
+    for r in data.get("collapse", []):
+        lines.append(
+            f"| {r['price']} | {r['collapsed']} | {r['bytes_up_total']} | "
+            f"{_err(r)} |")
+    lines += [
+        "",
+        "Incentive coalition vs the value-driven greedy mask at the same "
+        "realized budget (k = 2 of 10): payments route by COST, greedy by "
+        "VALUE — the pair brackets what a price can and cannot buy:",
+        "",
+        "| scheme | rounds-to-eq | bytes-to-eq | final rel. error |",
+        "|---|---|---|---|",
+    ]
+    for r in data.get("vs_greedy", []):
+        lines.append(
+            f"| {r['scheme']} | {_rounds(r)} | {_kb(r['bytes_to_eq'])} | "
+            f"{_err(r)} |")
+    return "\n".join(lines)
+
+
 SECTIONS = {
     "AUTO-BENCH-STALENESS": lambda: render_staleness(_load(ASYNC)),
     "AUTO-BENCH-POLICY": lambda: render_policy(_load(ASYNC)),
@@ -300,6 +344,7 @@ SECTIONS = {
     "AUTO-BENCH-SCALING": lambda: render_scaling(_load(SCALING)),
     "AUTO-BENCH-NEURAL": lambda: render_neural(_load(NEURAL)),
     "AUTO-BENCH-SELECTION": lambda: render_selection(_load(SELECTION)),
+    "AUTO-BENCH-INCENTIVES": lambda: render_incentives(_load(INCENTIVES)),
 }
 
 

@@ -76,9 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (
-    DecentralizedExtragradientUpdate,
     ExactSync,
-    JointUpdate,
     JointView,
     PearlResult,
     PlayerUpdate,
@@ -88,20 +86,23 @@ from repro.core.engine import (
     account_round_bytes,
     as_round_gammas,
     build_round_context,
-    check_summary_view,
     relative_error_curve,
     relative_error_curve_from_sq,
-    resolve_view,
     summary_wire,
     validate_round_args,
 )
 from repro.core.game import VectorGame
+from repro.core.spec import (
+    EngineSpec,
+    apply_spec,
+    resolve_stale_sync,
+    validate_spec,
+)
 from repro.core.stepsize import (
     RoundContext,
     StepsizePolicy,
     Theorem34Policy,
     resolve_policy,
-    validate_policy_context,
 )
 from repro.core.topology import Star, Topology
 
@@ -803,107 +804,42 @@ class AsyncPearlEngine:
     #: summary path with a summary ring buffer (dense summaries only —
     #: sampled interaction is lockstep-engine territory).
     view: JointView | None = None
+    #: optional EngineSpec bundling the shared engine axes; axes the spec
+    #: sets overwrite the defaults (setting an axis both ways is rejected —
+    #: see repro.core.spec). The async-only knobs (delays/max_staleness/
+    #: overlap) stay constructor kwargs.
+    spec: EngineSpec | None = None
+
+    def __post_init__(self):
+        apply_spec(self)
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
 
     def _resolved(self) -> tuple[SyncStrategy, DelaySchedule, int]:
         """(wire strategy, delay schedule, bound) after StaleSync unwrap."""
-        if isinstance(self.sync, StaleSync):
-            if self.max_staleness != 0 or self.delays != ZeroDelay():
-                raise ValueError(
-                    "give the delay model either inside StaleSync or via "
-                    "delays/max_staleness, not both"
-                )
-            return self.sync.inner, self.sync.delays, self.sync.max_staleness
-        return self.sync, self.delays, self.max_staleness
+        sync, delays, D = resolve_stale_sync(
+            self.sync,
+            None if self.delays == ZeroDelay() else self.delays,
+            self.max_staleness,
+        )
+        return sync, ZeroDelay() if delays is None else delays, D
 
     def _check(
         self, game: VectorGame | None = None
     ) -> tuple[SyncStrategy, DelaySchedule, int, JointView]:
+        # delegate to THE compatibility matrix (repro.core.spec): every
+        # composition rejection for this engine is raised there.
         sync, delays, D = self._resolved()
-        view = resolve_view(self.view, self.topology)
-        check_summary_view(view, update=self.update, sync=sync,
-                           mesh=self.mesh, game=game)
-        if view.summary_based and view.sample is not None:
-            raise ValueError(
-                "sampled neighbor reads (MeanFieldView(sample=...)) index "
-                "the live joint snapshot; under staleness every reader "
-                "would need the (depth, n, d) joint ring buffer the "
-                "summary path exists to avoid — use the dense summary "
-                "(sample=None) here, or the lockstep PearlEngine for "
-                "sampled interaction"
-            )
-        if D < 0:
-            raise ValueError(f"max_staleness must be >= 0, got {D}")
-        if self.gossip_steps < 1:
-            raise ValueError(
-                f"gossip_steps must be >= 1, got {self.gossip_steps}")
-        if sync.has_wire_state and not self.topology.is_server:
-            raise ValueError(
-                f"{type(sync).__name__} carries an error-feedback residual "
-                f"for the ONE transmit tensor of the star broadcast; gossip "
-                f"relays per-edge views with no single wire tensor to bank "
-                f"a residual against — use error_feedback=False or the Star "
-                f"topology"
-            )
-        if self.mesh is not None:
-            if not self.topology.is_server:
-                raise ValueError(
-                    "the device-resident async mesh path covers the star "
-                    "broadcast (one ring buffer of joint snapshots); gossip "
-                    "staleness is per-receiver view state with no sharded "
-                    "lowering yet — run graph topologies on the host path "
-                    "(mesh=None)"
-                )
-            if sync.uses_mask:
-                raise ValueError(
-                    f"mesh lowering covers full-participation "
-                    f"synchronization; {type(sync).__name__} draws a "
-                    f"per-round participation mask — use the host path "
-                    f"(mesh=None) for masked regimes"
-                )
-        if getattr(sync, "stateful_selection", False):
-            from repro.core.selection import validate_selection
-            validate_selection(sync, server=self.topology.is_server,
-                               mesh=self.mesh,
-                               topology_name=type(self.topology).__name__)
-        if self.overlap:
-            if self.mesh is None:
-                raise ValueError(
-                    "overlap=True double-buffers the sharded wire collective "
-                    "so XLA can ship it during the local steps; without a "
-                    "mesh there is no collective to overlap — pass mesh="
-                    "player_mesh(n) (or drop overlap)"
-                )
-            if not self.topology.is_server:
-                raise ValueError("overlap=True is a star-broadcast "
-                                 "optimization; gossip is not supported")
-            if D != 1 or delays != ConstantDelay(1):
-                raise ValueError(
-                    "overlap=True makes every player read LAST round's "
-                    "broadcast — exactly ConstantDelay(1) staleness. "
-                    "Declare it: delays=ConstantDelay(1), max_staleness=1. "
-                    "The engine refuses to overlap while claiming lockstep "
-                    "freshness."
-                )
-        if isinstance(self.update, JointUpdate):
-            raise ValueError(
-                f"{type(self.update).__name__} reads fresh iterates "
-                f"mid-round (fully synchronized) — asynchronous bounded "
-                f"staleness does not apply; use the lockstep PearlEngine"
-            )
-        if isinstance(self.update, DecentralizedExtragradientUpdate):
-            raise ValueError(
-                f"{type(self.update).__name__} interleaves a mixing sweep "
-                f"between its extragradient phases, and that MID-ROUND "
-                f"sweep has no per-receiver delayed equivalent — use the "
-                f"lockstep PearlEngine on a graph topology"
-            )
-        validate_policy_context(
-            self._resolved_policy(), server=self.topology.is_server,
-            staleness_available=True, staleness_remedy="",
-            topology_name=type(self.topology).__name__,
+        view = validate_spec(
+            EngineSpec(
+                update=self.update, sync=sync, topology=self.topology,
+                gossip_steps=self.gossip_steps,
+                policy=self._resolved_policy(), view=self.view,
+                mesh=self.mesh, mesh_axis=self.mesh_axis,
+            ),
+            async_=True, game=game, delays=delays, max_staleness=D,
+            overlap=self.overlap,
         )
         return sync, delays, D, view
 

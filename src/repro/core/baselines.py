@@ -31,6 +31,7 @@ from repro.core.engine import (
     SumLocalSgdUpdate,
 )
 from repro.core.game import VectorGame
+from repro.core.spec import warn_legacy
 
 Array = jax.Array
 
@@ -40,6 +41,11 @@ def sgda(game: VectorGame, x0: Array, *, steps: int, gamma, key=None,
     """Simultaneous stochastic gradient play — PEARL-SGD with tau = 1."""
     from repro.core.pearl import pearl_sgd
 
+    warn_legacy(
+        "sgda",
+        "run PearlEngine(spec=EngineSpec(update=SgdUpdate())) with tau=1 — "
+        "the baseline is the engine's own round at interval 1",
+    )
     return pearl_sgd(
         game, x0, tau=1, rounds=steps, gamma=gamma, key=key,
         stochastic=stochastic, x_star=x_star,
@@ -49,6 +55,11 @@ def sgda(game: VectorGame, x0: Array, *, steps: int, gamma, key=None,
 def extragradient(game: VectorGame, x0: Array, *, steps: int, gamma,
                   key=None, stochastic: bool = True, x_star=None) -> PearlResult:
     """Fully-communicating stochastic extragradient (two syncs per step)."""
+    warn_legacy(
+        "extragradient",
+        "construct PearlEngine(spec=EngineSpec("
+        "update=JointExtragradientUpdate())) and call .run(...)",
+    )
     engine = PearlEngine(update=JointExtragradientUpdate())
     return engine.run(
         game, x0, rounds=steps, gamma=gamma, key=key, stochastic=stochastic,
@@ -64,6 +75,11 @@ def pearl_eg(game: VectorGame, x0: Array, *, tau: int, rounds: int, gamma,
     stale snapshot; one synchronization per round. The paper's conclusion
     lists extragradient incorporation as future work.
     """
+    warn_legacy(
+        "pearl_eg",
+        "construct PearlEngine(spec=EngineSpec("
+        "update=ExtragradientUpdate())) and call .run(...)",
+    )
     engine = PearlEngine(update=ExtragradientUpdate())
     return engine.run(
         game, x0, tau=tau, rounds=rounds, gamma=gamma, key=key,
@@ -81,6 +97,11 @@ def local_sgd_on_sum(game, x0: Array, *, steps: int, gamma: float,
     MpFL. Runs through the engine's joint-update path; the per-step objective
     and norm traces are recovered from the recorded trajectory.
     """
+    warn_legacy(
+        "local_sgd_on_sum",
+        "construct PearlEngine(spec=EngineSpec("
+        "update=SumLocalSgdUpdate())) and call .trajectory(...)",
+    )
     engine = PearlEngine(update=SumLocalSgdUpdate())
     xs = engine.trajectory(game, x0, rounds=steps, gamma=gamma, key=key,
                            stochastic=stochastic)

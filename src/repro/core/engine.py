@@ -75,12 +75,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.game import VectorGame
+from repro.core.spec import (
+    EngineSpec,
+    apply_spec,
+    check_summary_view,
+    resolve_view,
+    validate_spec,
+)
 from repro.core.stepsize import (
     RoundContext,
     StepsizePolicy,
     Theorem34Policy,
     resolve_policy,
-    validate_policy_context,
 )
 from repro.core.topology import (
     Star,
@@ -1059,118 +1065,8 @@ class MeanFieldView(JointView):
         return self.moments * d
 
 
-def resolve_view(view: JointView | None, topology: Topology) -> JointView:
-    """Resolve the engine's ``view`` argument against its topology.
-
-    ``None`` keeps the legacy behavior — the topology decides:
-    :class:`StarView` under a server, :class:`GossipView` on a graph.
-    Explicit views are checked for topology compatibility here (the
-    summary-specific composition rules live in the engines' checks).
-    """
-    if view is None:
-        return StarView() if topology.is_server else GossipView()
-    if isinstance(view, StarView) and not topology.is_server:
-        raise ValueError(
-            f"StarView is the server broadcast; got the server-free "
-            f"{type(topology).__name__} — use GossipView (or view=None)"
-        )
-    if isinstance(view, GossipView) and topology.is_server:
-        raise ValueError(
-            f"GossipView relays per-player views over graph edges; the "
-            f"{type(topology).__name__} server has none — use StarView "
-            f"(or view=None)"
-        )
-    if view.summary_based and not topology.is_server:
-        raise ValueError(
-            f"MeanFieldView is a server-maintained O(d) summary broadcast; "
-            f"{type(topology).__name__} gossip relays (n, d) views with no "
-            f"single summary owner — use the Star topology (sampled "
-            f"interaction is MeanFieldView(sample=k), not a graph)"
-        )
-    return view
-
-
-def check_summary_view(view: JointView, *, update, sync: SyncStrategy,
-                       mesh, game: VectorGame | None = None) -> None:
-    """The mean-field composition rules, shared by both engines — every
-    axis whose semantics a summary reference would silently change is
-    rejected loudly. No-op for full-joint views."""
-    if not view.summary_based:
-        return
-    from repro.core.game import AggregativeGame
-
-    if isinstance(update, JointUpdate):
-        raise ValueError(
-            f"{type(update).__name__} owns the whole within-round "
-            f"computation on the replicated (n, d) joint action; "
-            f"MeanFieldView never materializes a broadcast joint for it "
-            f"to read — joint baselines require the star's full "
-            f"broadcast (view=None)"
-        )
-    if isinstance(update, DecentralizedExtragradientUpdate):
-        raise ValueError(
-            f"{type(update).__name__} interleaves gossip mixing "
-            f"sweeps between its phases and MeanFieldView has no views "
-            f"to mix — use sgd/extragradient/optimistic_gradient/"
-            f"heavy_ball locals with the summary reference"
-        )
-    if sync.uses_mask:
-        if not getattr(sync, "stateful_selection", False):
-            raise ValueError(
-                f"{type(sync).__name__} draws a per-round participation "
-                f"mask, and a population summary over a PARTIAL population "
-                f"silently changes what 'mean_i x^i' means to every reader "
-                f"— mean-field views support full-participation strategies "
-                f"only (use the exact/quantized/low-bit wires, or a "
-                f"selection policy with MeanFieldView(sample=k))"
-            )
-        if view.sample is None:
-            raise ValueError(
-                f"{type(sync).__name__} masks who participates, and the "
-                f"DENSE population summary would silently average stale "
-                f"blocks into what every reader believes is the live "
-                f"'mean_i x^i' — selection composes with sampled "
-                f"interaction only (MeanFieldView(sample=k): absentees "
-                f"simply stay stale in the live snapshot the sampled "
-                f"reads index)"
-            )
-    if mesh is not None:
-        raise ValueError(
-            "mesh lowering gathers the full (n, d) joint across the "
-            "player axis (sharded_joint_wire) — the exact O(n d) wire "
-            "MeanFieldView exists to avoid; the summary broadcast is "
-            "O(d) and needs no collective lowering, run it with "
-            "mesh=None"
-        )
-    if sync.has_wire_state and view.sample is not None:
-        raise ValueError(
-            f"{type(sync).__name__} banks an error-feedback "
-            f"residual against the ONE broadcast summary; sampled "
-            f"interaction (sample={view.sample}) gives every player a "
-            f"personalized summary with no single wire tensor — use "
-            f"error_feedback=False or the dense summary (sample=None)"
-        )
-    if game is not None:
-        if not isinstance(game, AggregativeGame):
-            raise ValueError(
-                f"MeanFieldView needs an AggregativeGame (a coupling "
-                f"that factors through population moments — "
-                f"player_grad_summary); {type(game).__name__} only "
-                f"exposes the full-joint oracle, and evaluating it at a "
-                f"summary would silently compute a different game"
-            )
-        if view.moments < game.summary_moments:
-            raise ValueError(
-                f"{type(game).__name__}.player_grad_summary consumes "
-                f"{game.summary_moments} opponent moments but the view "
-                f"maintains only {view.moments} — use MeanFieldView("
-                f"moments={game.summary_moments})"
-            )
-        if view.sample is not None and view.sample > game.n - 1:
-            raise ValueError(
-                f"MeanFieldView.sample={view.sample} exceeds the "
-                f"{game.n - 1} opponents a player can draw from"
-            )
+# ``resolve_view`` / ``check_summary_view`` moved to repro.core.spec (the
+# single compatibility matrix) and are re-exported above for compatibility.
 
 
 class _SummaryRefGame:
@@ -1648,6 +1544,13 @@ class PearlEngine:
     #: under a server, GossipView on a graph — the legacy programs,
     #: bit-for-bit). MeanFieldView runs the O(d) summary path.
     view: JointView | None = None
+    #: optional EngineSpec bundling the axes above; axes the spec sets
+    #: overwrite the defaults (setting an axis both ways is rejected —
+    #: see repro.core.spec).
+    spec: EngineSpec | None = None
+
+    def __post_init__(self):
+        apply_spec(self)
 
     def _resolved_policy(self) -> StepsizePolicy:
         return resolve_policy(self.policy)
@@ -1665,96 +1568,17 @@ class PearlEngine:
         return build_round_context(game, self.topology, tau=tau)
 
     def _check_topology(self, game: VectorGame | None = None) -> JointView:
-        view = resolve_view(self.view, self.topology)
-        check_summary_view(view, update=self.update, sync=self.sync,
-                           mesh=self.mesh, game=game)
-        if getattr(self.sync, "stateful_selection", False):
-            from repro.core.selection import validate_selection
-
-            validate_selection(self.sync, server=self.topology.is_server,
-                               mesh=self.mesh,
-                               topology_name=type(self.topology).__name__)
-        if self.gossip_steps < 1:
-            raise ValueError(f"gossip_steps must be >= 1, got {self.gossip_steps}")
-        if getattr(self.sync, "requires_async", False):
-            raise ValueError(
-                f"{type(self.sync).__name__} models bounded staleness and "
-                f"needs the snapshot ring buffer of AsyncPearlEngine "
-                f"(repro.core.async_engine); the lockstep PearlEngine would "
-                f"silently ignore its delay schedule"
-            )
-        policy = self._resolved_policy()
-        validate_policy_context(
-            policy, server=self.topology.is_server,
-            staleness_available=False,
-            staleness_remedy="use AsyncPearlEngine",
-            topology_name=type(self.topology).__name__,
+        # delegate to THE compatibility matrix (repro.core.spec): every
+        # composition rejection for this engine is raised there.
+        return validate_spec(
+            EngineSpec(
+                update=self.update, sync=self.sync, topology=self.topology,
+                gossip_steps=self.gossip_steps,
+                policy=self._resolved_policy(), view=self.view,
+                mesh=self.mesh, mesh_axis=self.mesh_axis,
+            ),
+            game=game,
         )
-        if self.mesh is not None:
-            if isinstance(self.update, JointUpdate):
-                raise ValueError(
-                    f"{type(self.update).__name__} owns the whole "
-                    f"within-round computation on the replicated joint "
-                    f"action — there is no per-player exchange for the mesh "
-                    f"collective layer to lower; run joint baselines "
-                    f"without a mesh"
-                )
-            if self.sync.uses_mask:
-                raise ValueError(
-                    f"mesh lowering covers full-participation "
-                    f"synchronization; {type(self.sync).__name__} draws a "
-                    f"per-round participation mask, and compiling a full "
-                    f"wire exchange the mask-aware byte accounting "
-                    f"contradicts would make the billing dishonest — use "
-                    f"the host path (mesh=None) for masked regimes"
-                )
-        if self.sync.has_wire_state and not self.topology.is_server:
-            raise ValueError(
-                f"{type(self.sync).__name__} carries an error-feedback "
-                f"residual for the ONE transmit tensor of the star "
-                f"broadcast; gossip relays per-edge views with no single "
-                f"wire tensor to bank a residual against — use "
-                f"error_feedback=False (stateless low-bit compression "
-                f"composes with any topology) or the Star topology"
-            )
-        if isinstance(self.update, DecentralizedExtragradientUpdate):
-            if self.topology.is_server:
-                raise ValueError(
-                    f"{type(self.update).__name__} interleaves mixing sweeps "
-                    f"with the extragradient phases and the server broadcast "
-                    f"has no views to mix — on the Star topology use "
-                    f"JointExtragradientUpdate (exact mixing every sync)"
-                )
-            if self.sync.uses_mask:
-                raise ValueError(
-                    f"{type(self.update).__name__} relays every player's "
-                    f"half-point mid-round; a participation mask "
-                    f"({type(self.sync).__name__}) would drop half-points "
-                    f"with no extragradient semantics — full participation "
-                    f"only"
-                )
-        if isinstance(self.update, JointUpdate):
-            if not isinstance(policy, Theorem34Policy):
-                raise ValueError(
-                    f"{type(self.update).__name__} owns the whole "
-                    f"within-round computation on the joint action — "
-                    f"per-player step-size policies do not apply; joint "
-                    f"baselines support only the theorem34 policy"
-                )
-            if not self.topology.is_server:
-                raise ValueError(
-                    f"{type(self.update).__name__} is fully synchronized and "
-                    f"needs the Star topology, got {type(self.topology).__name__}"
-                )
-            if not isinstance(self.sync, ExactSync):
-                raise ValueError(
-                    f"{type(self.update).__name__} owns the whole within-round "
-                    f"computation: the engine never applies "
-                    f"{type(self.sync).__name__}'s pre_round/mask/view, and "
-                    f"billing would silently fall back to ExactSync bytes — "
-                    f"joint baselines support only sync=ExactSync()"
-                )
-        return view
 
     def run(
         self,

@@ -2,7 +2,12 @@
 
 from repro.core.games.counterexample import CounterexampleGame, make_counterexample_game
 from repro.core.games.meanfield import MeanFieldQuadraticGame, make_mean_field_game
+from repro.core.games.minimax_hetero import MinimaxHeteroGame, make_minimax_hetero_game
 from repro.core.games.noncoco import NonCocoercivegame, make_noncoco_game
+from repro.core.games.participation import (
+    NetworkEffectsParticipationGame,
+    make_participation_game,
+)
 from repro.core.games.quadratic import QuadraticGame, make_quadratic_game
 from repro.core.games.robot import RobotGame, make_robot_game
 
@@ -11,6 +16,10 @@ __all__ = [
     "make_counterexample_game",
     "MeanFieldQuadraticGame",
     "make_mean_field_game",
+    "MinimaxHeteroGame",
+    "make_minimax_hetero_game",
+    "NetworkEffectsParticipationGame",
+    "make_participation_game",
     "NonCocoercivegame",
     "make_noncoco_game",
     "QuadraticGame",

@@ -1,0 +1,216 @@
+"""Strategic participation: the round mask as a best-response equilibrium.
+
+Every policy on the selection axis so far — value-driven or not — is
+SERVER-dictated: the server decides who talks and the chosen players comply.
+The paper models clients as rational players, and in deployment they are:
+a player burns compute, battery, and bandwidth to participate, and joins
+only when what it gets back exceeds that cost (*Incentive-Aware Federated
+Averaging under Strategic Participation*; *Federated Learning as a Network
+Effects Game* — PAPERS.md). This module makes participation itself a game
+layered on top of the equilibrium game:
+
+- each player ``i`` carries a private per-round cost of participation
+  ``c_i`` (a fixed heterogeneous grid, or caller-supplied);
+- its benefit from a round has two parts: the server's **payment** and the
+  **progress value** of the round to it. Progress value reuses the
+  GTG-Shapley closed form the selection layer already estimates
+  (:func:`repro.core.selection.shapley_progress` through the same
+  EWM ``observe``): a player whose deltas kept mattering expects its next
+  round to matter, scaled by the network effect — a round with more
+  participants moves the joint state further, so the per-player progress
+  value grows with the participation rate ``k/n`` (the network-effects
+  game's defining externality);
+- the server sets the payment rule (the mechanism-design knob):
+  ``"fixed"`` pays every participant ``price``, ``"proportional"`` pays
+  ``price`` scaled by the player's normalized value estimate (pay the
+  useful players more), ``"auction"`` splits a fixed per-round ``budget``
+  equally among whoever shows up (a budget-balanced all-pay share).
+
+The round mask is then a **simultaneous-move best-response fixed point**:
+starting from everyone-in, each sweep recomputes every player's join/stay
+decision against the others' current decisions, ``br_iters`` times. For the
+``fixed``/``proportional`` rules the payment does not depend on the
+coalition and the progress value is increasing in it, so the best-response
+map is monotone: from the all-ones start the sweep can only remove players
+and the iteration converges monotonically DOWN to the LARGEST equilibrium
+(the server-optimistic one) in at most ``n`` sweeps — ``br_iters`` bounds
+the cascade depth per round, and a cascade longer than ``br_iters`` resumes
+from the same all-ones start next round (the documented non-convergence
+fallback: the LAST sweep's mask is used as-is; it over-includes, never
+under-includes). The ``auction`` rule is non-monotone (more joiners dilute
+the share), so its iteration can 2-cycle; the same last-sweep fallback
+applies and is the honest semantics: a simultaneous-move crowd oscillating
+around the zero-profit coalition size.
+
+The whole layer is ONE :class:`~repro.core.selection.SelectionPolicy`
+subclass, so it threads through :class:`~repro.core.engine.PearlEngine`,
+:class:`~repro.core.async_engine.AsyncPearlEngine` (the best responses see
+the drawn staleness row: ``staleness_discount`` charges a player for acting
+on a stale broadcast, so stale players rationally sit out), and the
+trainer's general merge with zero new engine plumbing — the engines cannot
+tell a dictated mask from an equilibrium one.
+
+The honest negative this layer exists to expose (pinned in
+``BENCH_incentives.json``): price the participation below cost and the
+network effect runs BACKWARD — each dropout lowers everyone else's
+progress value, which drops more players, the free-rider death spiral of
+the network-effects game. An all-False round mask is a legitimate
+equilibrium (nobody syncs, the joint state freezes), and the benchmark's
+collapse row records exactly where the spiral starts. The closed-form
+equilibrium of the continuum game lives in
+:mod:`repro.core.games.participation` and is what the tests pin this
+policy's realized masks against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.selection import SELECTION_POLICIES, SelectionPolicy
+
+__all__ = ["BestResponseParticipation", "PAYMENT_RULES"]
+
+#: the server's payment mechanisms
+PAYMENT_RULES = ("fixed", "proportional", "auction")
+
+
+@dataclasses.dataclass(frozen=True)
+class BestResponseParticipation(SelectionPolicy):
+    """Participation as a game: the mask is a best-response fixed point.
+
+    Player ``i`` joins round ``r`` iff its utility against the others'
+    current decisions is positive:
+
+        u_i(m) = pay_i(k) + value_weight * vhat_i * (k / n)
+                 - c_i - staleness_discount * delay_i,    k = |m| with i in,
+
+    where ``vhat_i`` is the selection layer's EWM Shapley value estimate
+    normalized to ``[0, 1]`` (unseen players are optimistic at 1.0 — every
+    player tries participating before learning it doesn't pay), and
+    ``pay_i`` follows the ``payment`` rule. ``fraction`` is inherited from
+    the selection surface but NOT a budget here: participation is
+    endogenous, the realized rate is an outcome (the benchmark measures
+    it), and ``fraction`` stays at its default 1.0.
+
+    Costs default to the fixed heterogeneous midpoint grid
+    ``c_i = cost_min + (i + 1/2)(cost_max - cost_min)/n`` — the discrete
+    sampling of the uniform cost distribution whose continuum game
+    (:class:`repro.core.games.participation.NetworkEffectsParticipationGame`)
+    has the closed-form equilibrium the tests pin against. Pass ``costs``
+    (a length-``n`` tuple, kept hashable for the jit-static policy) to
+    override.
+    """
+
+    fraction: float = 1.0
+    memory: float = 0.9
+    aging: float = 0.0
+    payment: str = "fixed"
+    price: float = 0.5
+    budget: float = 0.0
+    cost_min: float = 0.2
+    cost_max: float = 0.8
+    costs: tuple[float, ...] | None = None
+    value_weight: float = 1.0
+    staleness_discount: float = 0.0
+    br_iters: int = 16
+    seed: int = 0
+    name: str = "best_response"
+
+    def __post_init__(self):
+        self._validate_fraction()
+        if self.payment not in PAYMENT_RULES:
+            raise ValueError(
+                f"BestResponseParticipation.payment must be one of "
+                f"{PAYMENT_RULES}, got {self.payment!r}"
+            )
+        if not 0.0 <= self.memory < 1.0:
+            raise ValueError(
+                f"BestResponseParticipation.memory must be in [0, 1), "
+                f"got {self.memory}"
+            )
+        if self.price < 0.0:
+            raise ValueError(
+                f"BestResponseParticipation.price must be >= 0, "
+                f"got {self.price}"
+            )
+        if self.budget < 0.0:
+            raise ValueError(
+                f"BestResponseParticipation.budget must be >= 0, "
+                f"got {self.budget}"
+            )
+        if self.costs is None and not self.cost_min <= self.cost_max:
+            raise ValueError(
+                f"BestResponseParticipation needs cost_min <= cost_max, "
+                f"got [{self.cost_min}, {self.cost_max}]"
+            )
+        if self.value_weight < 0.0:
+            raise ValueError(
+                f"BestResponseParticipation.value_weight must be >= 0, "
+                f"got {self.value_weight}"
+            )
+        if self.staleness_discount < 0.0:
+            raise ValueError(
+                f"BestResponseParticipation.staleness_discount must be "
+                f">= 0, got {self.staleness_discount}"
+            )
+        if self.br_iters < 1:
+            raise ValueError(
+                f"BestResponseParticipation.br_iters must be >= 1, "
+                f"got {self.br_iters}"
+            )
+
+    # ------------------------------------------------------------- pieces
+    def cost_vector(self, n: int):
+        """The (n,) per-player participation costs (jit-constant)."""
+        if self.costs is not None:
+            if len(self.costs) != n:
+                raise ValueError(
+                    f"BestResponseParticipation.costs has "
+                    f"{len(self.costs)} entries for n={n} players"
+                )
+            return jnp.asarray(self.costs, jnp.float32)
+        span = self.cost_max - self.cost_min
+        return (self.cost_min
+                + (jnp.arange(n, dtype=jnp.float32) + 0.5) * (span / n))
+
+    def value_estimates(self, state):
+        """EWM Shapley values normalized to [0, 1]; unseen players are
+        optimistic at 1.0 (everyone tries participating once)."""
+        vhat = state["values"] / (jnp.max(jnp.abs(state["values"])) + 1e-30)
+        vhat = jnp.clip(vhat, 0.0, 1.0)
+        return jnp.where(state["counts"] > 0, vhat, 1.0)
+
+    def _payment(self, vhat, k, n: int):
+        """pay_i for a coalition of size ``k`` (i included)."""
+        if self.payment == "fixed":
+            return jnp.full_like(vhat, self.price)
+        if self.payment == "proportional":
+            return self.price * vhat
+        # auction: the per-round budget split equally among participants
+        return jnp.full_like(vhat, self.budget) / jnp.maximum(k, 1.0)
+
+    # ----------------------------------------------------------- protocol
+    def select(self, state, n: int, ridx, delay_row):
+        del ridx
+        vhat = self.value_estimates(state)
+        cost = self.cost_vector(n)
+        if delay_row is not None and self.staleness_discount > 0.0:
+            cost = cost + self.staleness_discount * jnp.asarray(
+                delay_row, jnp.float32)
+        m = jnp.ones((n,), dtype=bool)
+        # simultaneous-move best-response sweeps from the all-ones start
+        # (monotone rules converge DOWN to the largest equilibrium; the
+        # last sweep is the documented non-convergence fallback)
+        for _ in range(self.br_iters):
+            k_others = jnp.sum(m.astype(jnp.float32)) - m.astype(jnp.float32)
+            k_if_join = k_others + 1.0
+            u = (self._payment(vhat, k_if_join, n)
+                 + self.value_weight * vhat * (k_if_join / n)
+                 - cost)
+            m = u > 0.0
+        return state, m
+
+
+SELECTION_POLICIES["best_response"] = BestResponseParticipation

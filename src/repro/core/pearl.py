@@ -29,6 +29,7 @@ from repro.core.engine import (
     resolve_sync,
 )
 from repro.core.game import VectorGame
+from repro.core.spec import warn_legacy
 
 Array = jax.Array
 
@@ -70,6 +71,12 @@ def pearl_sgd(
       sync:       any :class:`repro.core.engine.SyncStrategy` (exact,
                   quantized, partial participation, dropout links).
     """
+    warn_legacy(
+        "pearl_sgd",
+        "construct PearlEngine(spec=EngineSpec(update=SgdUpdate(), "
+        "sync=...)) and call .run(...) — same compiled round, every axis "
+        "in one place",
+    )
     engine = PearlEngine(update=SgdUpdate(), sync=resolve_sync(sync, sync_dtype))
     return engine.run(
         game, x0, tau=tau, rounds=rounds, gamma=gamma, key=key,
@@ -92,6 +99,11 @@ def pearl_sgd_mean(
 
     Matches the paper's Figure 2b protocol (5 independent runs, mean +/- std).
     """
+    warn_legacy(
+        "pearl_sgd_mean",
+        "construct PearlEngine(spec=EngineSpec(update=SgdUpdate())) and "
+        "loop .run(...) over seeds — the adapter only stacks rel_errors",
+    )
     runs = []
     for s in range(n_seeds):
         r = pearl_sgd(

@@ -82,6 +82,7 @@ __all__ = [
     "GreedyShapley",
     "UCBSelection",
     "PowerOfChoice",
+    "SampledGreedy",
     "UniformSelection",
     "SELECTION_POLICIES",
     "is_selection_policy",
@@ -364,6 +365,119 @@ class PowerOfChoice(SelectionPolicy):
 
 
 @dataclasses.dataclass(frozen=True)
+class SampledGreedy(SelectionPolicy):
+    """Greedy selection with O(k) state — the mean-field-scale variant.
+
+    Every other value-driven policy carries three ``(n,)`` arrays of state,
+    which at mean-field scale (PR 8's million-player path, where the JOINT
+    state is O(d)) would make selection the only O(n) object in the round.
+    This policy tracks only ``t = min(tracked, n)`` players: a slot table
+    of ``(ids, values)`` pairs plus a round-robin cursor, so the carried
+    state is O(t) = O(k) regardless of the population size.
+
+    Per round, the budget ``k = participants(n)`` splits into
+
+    - ``e = min(k, max(1, round(explore · k)))`` **explore** slots filled by
+      the cursor's round-robin sweep ``cursor, cursor+1, …  (mod n)`` —
+      every player is probed once per ``n/e`` rounds, which is both the
+      discovery channel and the anti-starvation guarantee (the aging bonus
+      needs per-player clocks this policy refuses to carry);
+    - ``k − e`` **exploit** slots holding the highest-valued tracked ids.
+
+    The two sets can overlap, so the realized participation is AT MOST
+    ``k`` — the byte bill is what the mask says, never more. ``observe``
+    folds the round's Shapley progress into the tracked slots' EWMs and
+    performs ONE insertion per round: the best-scoring participant not yet
+    tracked evicts the worst slot iff it beats that slot's value (empty
+    slots lose to everyone). One insertion, not a re-sort of the
+    population — the whole update touches O(t) state.
+
+    The O(n) arrays inside ``observe`` (the delta matrix, the scatter that
+    marks tracked ids) are the round's own traffic, already materialized by
+    the engine; only the CARRY shrinks to O(k).
+    """
+
+    fraction: float = 0.5
+    memory: float = 0.9
+    tracked: int = 16
+    explore: float = 0.25
+    seed: int = 0
+    name: str = "sampled_greedy"
+
+    def __post_init__(self):
+        self._validate_fraction()
+        if not 0.0 <= self.memory < 1.0:
+            raise ValueError(
+                f"SampledGreedy.memory must be in [0, 1), got {self.memory}"
+            )
+        if self.tracked < 1:
+            raise ValueError(
+                f"SampledGreedy.tracked must be >= 1, got {self.tracked}"
+            )
+        if not 0.0 < self.explore <= 1.0:
+            raise ValueError(
+                f"SampledGreedy.explore must be in (0, 1], "
+                f"got {self.explore}"
+            )
+
+    def slots(self, n: int) -> int:
+        return min(self.tracked, n)
+
+    def explore_count(self, n: int) -> int:
+        k = self.participants(n)
+        return min(k, max(1, round(self.explore * k)))
+
+    def select_state(self, n: int):
+        t = self.slots(n)
+        return {"ids": jnp.full((t,), -1, jnp.int32),
+                "values": jnp.zeros((t,), jnp.float32),
+                "cursor": jnp.zeros((), jnp.int32)}
+
+    def select(self, state, n, ridx, delay_row):
+        del ridx, delay_row
+        k = self.participants(n)
+        e = self.explore_count(n)
+        explore_ids = (state["cursor"]
+                       + jnp.arange(e, dtype=jnp.int32)) % n
+        mask = jnp.zeros((n,), dtype=bool).at[explore_ids].set(True)
+        if k - e > 0:
+            slot_val = jnp.where(state["ids"] >= 0, state["values"],
+                                 -jnp.inf)
+            top = min(k - e, self.slots(n))
+            _, sidx = jax.lax.top_k(slot_val, top)
+            # empty slots scatter out of bounds and are dropped
+            exploit_ids = jnp.where(state["ids"][sidx] >= 0,
+                                    state["ids"][sidx], n)
+            mask = mask.at[exploit_ids].set(True, mode="drop")
+        state = dict(state, cursor=(state["cursor"] + e) % n)
+        return state, mask
+
+    def observe(self, state, mask, delta, ridx):
+        del ridx
+        n = mask.shape[0]
+        phi = shapley_progress(delta, mask)
+        ids, values = state["ids"], state["values"]
+        beta = jnp.float32(self.memory)
+        # EWM update for tracked slots whose player participated
+        slot_phi = phi[jnp.clip(ids, 0, n - 1)]
+        hit = (ids >= 0) & mask[jnp.clip(ids, 0, n - 1)]
+        values = jnp.where(hit, beta * values + (1 - beta) * slot_phi,
+                           values)
+        # one insertion: best untracked participant vs the worst slot
+        tracked = jnp.zeros((n,), dtype=bool).at[ids].set(
+            True, mode="drop")
+        cand_phi = jnp.where(mask & ~tracked, phi, -jnp.inf)
+        cid = jnp.argmax(cand_phi)
+        cval = cand_phi[cid]
+        slot_val = jnp.where(ids >= 0, values, -jnp.inf)
+        ws = jnp.argmin(slot_val)
+        do = jnp.isfinite(cval) & (cval > slot_val[ws])
+        ids = ids.at[ws].set(jnp.where(do, cid.astype(jnp.int32), ids[ws]))
+        values = values.at[ws].set(jnp.where(do, cval, values[ws]))
+        return dict(state, ids=ids, values=values)
+
+
+@dataclasses.dataclass(frozen=True)
 class UniformSelection(SelectionPolicy):
     """Value-blind control on the selection axis, pinned bit-for-bit to
     :class:`~repro.core.engine.PartialParticipation`.
@@ -404,6 +518,10 @@ def resolve_selection(selection) -> "SelectionPolicy | None":
     if selection is None or is_selection_policy(selection):
         return selection
     if isinstance(selection, str):
+        # the incentive layer registers its policy on import; make the
+        # registry complete for name lookups without a hard dependency
+        from repro.core import incentives  # noqa: F401
+
         try:
             return SELECTION_POLICIES[selection]()
         except KeyError:
@@ -444,9 +562,11 @@ def validate_selection(sync, *, server: bool, mesh,
 
 
 # ------------------------------------------------------------------ registry
+# (repro.core.incentives appends "best_response" on import)
 SELECTION_POLICIES = {
     "greedy_shapley": GreedyShapley,
     "ucb": UCBSelection,
     "power_of_choice": PowerOfChoice,
+    "sampled_greedy": SampledGreedy,
     "uniform": UniformSelection,
 }

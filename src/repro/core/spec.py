@@ -1,0 +1,755 @@
+"""EngineSpec: one configuration object, one compatibility matrix.
+
+Nine PRs of axis growth left the engine surface with ~10 orthogonal keyword
+axes (``update``, ``sync``, ``topology``, ``gossip_steps``, ``policy``,
+``view``, ``mesh``/``mesh_axis``, plus the async-only ``delays``/
+``max_staleness``/``overlap``) and the composition rejection matrix smeared
+across four modules. This module consolidates both:
+
+- :class:`EngineSpec` — a frozen bundle of the eight axes every entry point
+  shares. Both engines and :class:`~repro.train.pearl_trainer.PearlTrainer`
+  accept ``spec=``; the spec is pure sugar that resolves to the exact same
+  constructor state as the legacy kwargs (pinned bit-for-bit in
+  ``tests/test_spec.py``). An axis left ``None`` in the spec keeps the
+  target's default; setting the same axis BOTH ways (a non-default kwarg
+  and a spec value) is ambiguous and rejected.
+- :func:`validate_spec` — THE composition matrix. Every invalid axis
+  combination across ``PearlEngine``, ``AsyncPearlEngine``,
+  ``make_pearl_round``/``PearlTrainer``, and the trainer collectives is
+  rejected here (or by the shared helpers this module owns:
+  :func:`resolve_view`, :func:`check_summary_view`,
+  :func:`repro.core.selection.validate_selection`,
+  :func:`repro.core.stepsize.validate_policy_context`,
+  :func:`validate_tree_mean`, :func:`validate_tree_mean_lowbit`) — the
+  engine/trainer bodies contain no composition guards of their own, so the
+  wording in docs/ARCHITECTURE.md's rejection table cannot drift per call
+  site (a test parses that table and fires every row).
+
+Parameter-RANGE validation (``tau >= 1``, fractions in ``[0, 1]``, view
+knobs) stays with the objects that own the parameters; this module owns the
+rules about how axes COMBINE.
+
+Import discipline: ``engine``/``async_engine``/``selection``/``collective``
+all import this module, so everything here imports them lazily inside
+function bodies — :mod:`repro.core.spec` sits below the engines in the
+import graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = [
+    "EngineSpec",
+    "apply_spec",
+    "merge_trainer_spec",
+    "resolve_stale_sync",
+    "resolve_view",
+    "check_summary_view",
+    "validate_spec",
+    "validate_tree_mean",
+    "validate_tree_mean_lowbit",
+    "warn_legacy",
+]
+
+#: the axes EngineSpec carries — the shared engine configuration surface
+SPEC_AXES = ("update", "sync", "topology", "gossip_steps", "policy",
+             "view", "mesh", "mesh_axis")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """The axis configuration of one PEARL run, as a single frozen value.
+
+    Every field defaults to ``None`` = "unset": the receiving constructor
+    keeps its own default for that axis. Set fields overwrite the target's
+    defaults; a target constructed with BOTH a non-default kwarg and a spec
+    value for the same axis is rejected (two sources of truth).
+
+    The trainer consumes the subset of axes it has (``sync``, ``topology``,
+    ``policy``, ``view``, ``mesh``, ``mesh_axis``); a spec that sets
+    ``update`` or ``gossip_steps`` is rejected there — the trainer's local
+    rule is the optimizer, and its graph mixing is one sweep per round.
+    """
+
+    update: Any = None
+    sync: Any = None
+    topology: Any = None
+    gossip_steps: int | None = None
+    policy: Any = None
+    view: Any = None
+    mesh: Any = None
+    mesh_axis: str | None = None
+
+    def set_axes(self) -> dict[str, Any]:
+        """The axes this spec actually sets (non-``None`` fields)."""
+        return {name: getattr(self, name) for name in SPEC_AXES
+                if getattr(self, name) is not None}
+
+
+def apply_spec(obj) -> None:
+    """Merge ``obj.spec`` (an :class:`EngineSpec` or ``None``) into the
+    axis fields of a frozen engine dataclass, inside its ``__post_init__``.
+
+    For each axis the spec sets: if the constructor kwarg was left at its
+    default, the spec's value wins; if the kwarg was ALSO set to something
+    else, the configuration has two sources of truth and is rejected."""
+    spec = getattr(obj, "spec", None)
+    if spec is None:
+        return
+    if not isinstance(spec, EngineSpec):
+        raise TypeError(
+            f"spec must be an EngineSpec (or None), got "
+            f"{type(spec).__name__}"
+        )
+    fields = {f.name: f for f in dataclasses.fields(obj)}
+    for name, value in spec.set_axes().items():
+        default = fields[name].default
+        current = getattr(obj, name)
+        if current != default and current != value:
+            raise ValueError(
+                f"{type(obj).__name__} got {name}= both ways: the spec "
+                f"sets {name}={value!r} but the constructor was also "
+                f"passed {name}={current!r} — give each axis once (the "
+                f"spec is sugar for the same constructor state)"
+            )
+        object.__setattr__(obj, name, value)
+
+
+def merge_trainer_spec(spec: EngineSpec | None, *, topology, policy,
+                       round_kwargs: dict) -> tuple[Any, Any, dict]:
+    """Resolve a trainer's ``spec=`` into its legacy ``(topology, policy,
+    **round_kwargs)`` configuration — the same two-sources-of-truth rule as
+    :func:`apply_spec`. Returns the merged ``(topology, policy,
+    round_kwargs)``."""
+    if spec is None:
+        return topology, policy, round_kwargs
+    if not isinstance(spec, EngineSpec):
+        raise TypeError(
+            f"spec must be an EngineSpec (or None), got "
+            f"{type(spec).__name__}"
+        )
+    axes = spec.set_axes()
+    for name in ("update", "gossip_steps"):
+        if name in axes:
+            raise ValueError(
+                f"PearlTrainer has no {name!r} axis: the trainer's local "
+                f"rule is its optimizer and its graph mixing runs one "
+                f"sweep per round — build an EngineSpec without {name} "
+                f"for the trainer"
+            )
+    round_kwargs = dict(round_kwargs)
+    if "sync" in axes:
+        if round_kwargs.get("sync") is not None or \
+                round_kwargs.get("sync_dtype") is not None:
+            raise ValueError(
+                "PearlTrainer got the sync axis both ways: the spec sets "
+                "sync= but sync=/sync_dtype= was also passed — give the "
+                "axis once"
+            )
+        round_kwargs["sync"] = axes["sync"]
+    for name in ("view", "mesh", "mesh_axis"):
+        if name in axes:
+            if round_kwargs.get(name) is not None and \
+                    round_kwargs.get(name) != axes[name]:
+                raise ValueError(
+                    f"PearlTrainer got {name}= both ways: the spec sets "
+                    f"{name}={axes[name]!r} but "
+                    f"{name}={round_kwargs[name]!r} was also passed — "
+                    f"give each axis once"
+                )
+            round_kwargs[name] = axes[name]
+    if "topology" in axes:
+        if topology is not None and topology != axes["topology"]:
+            raise ValueError(
+                f"PearlTrainer got the topology axis both ways: the spec "
+                f"sets topology={axes['topology']!r} but "
+                f"topology={topology!r} was also passed — give the axis "
+                f"once"
+            )
+        topology = axes["topology"]
+    if "policy" in axes:
+        if policy is not None and policy != axes["policy"]:
+            raise ValueError(
+                f"PearlTrainer got the policy axis both ways: the spec "
+                f"sets policy={axes['policy']!r} but "
+                f"policy={policy!r} was also passed — give the axis once"
+            )
+        policy = axes["policy"]
+    return topology, policy, round_kwargs
+
+
+# =========================================================================
+# Shared resolution helpers (moved here from the engines)
+# =========================================================================
+def resolve_stale_sync(sync, delays, max_staleness):
+    """Unwrap a :class:`~repro.core.async_engine.StaleSync` spelling.
+
+    Returns ``(wire strategy, delay schedule, bound)``. The delay model can
+    travel inside the StaleSync or as explicit ``delays``/``max_staleness``
+    (``delays=None`` here means "not given") — both at once is ambiguous
+    and rejected with the wording both the async engine and the trainer
+    share."""
+    from repro.core.async_engine import StaleSync
+
+    if isinstance(sync, StaleSync):
+        if delays is not None or max_staleness != 0:
+            raise ValueError(
+                "give the delay model either inside StaleSync or via "
+                "delays/max_staleness, not both"
+            )
+        return sync.inner, sync.delays, sync.max_staleness
+    return sync, delays, max_staleness
+
+
+def resolve_view(view, topology):
+    """Resolve the engine's ``view`` argument against its topology.
+
+    ``None`` keeps the legacy behavior — the topology decides:
+    :class:`~repro.core.engine.StarView` under a server,
+    :class:`~repro.core.engine.GossipView` on a graph. Explicit views are
+    checked for topology compatibility here (the summary-specific
+    composition rules live in :func:`check_summary_view`).
+    """
+    from repro.core.engine import GossipView, StarView
+
+    if view is None:
+        return StarView() if topology.is_server else GossipView()
+    if isinstance(view, StarView) and not topology.is_server:
+        raise ValueError(
+            f"StarView is the server broadcast; got the server-free "
+            f"{type(topology).__name__} — use GossipView (or view=None)"
+        )
+    if isinstance(view, GossipView) and topology.is_server:
+        raise ValueError(
+            f"GossipView relays per-player views over graph edges; the "
+            f"{type(topology).__name__} server has none — use StarView "
+            f"(or view=None)"
+        )
+    if view.summary_based and not topology.is_server:
+        raise ValueError(
+            f"MeanFieldView is a server-maintained O(d) summary broadcast; "
+            f"{type(topology).__name__} gossip relays (n, d) views with no "
+            f"single summary owner — use the Star topology (sampled "
+            f"interaction is MeanFieldView(sample=k), not a graph)"
+        )
+    return view
+
+
+def check_summary_view(view, *, update, sync, mesh, game=None) -> None:
+    """The mean-field composition rules, shared by both engines — every
+    axis whose semantics a summary reference would silently change is
+    rejected loudly. No-op for full-joint views."""
+    if not view.summary_based:
+        return
+    from repro.core.engine import (
+        DecentralizedExtragradientUpdate,
+        JointUpdate,
+    )
+    from repro.core.game import AggregativeGame
+
+    if isinstance(update, JointUpdate):
+        raise ValueError(
+            f"{type(update).__name__} owns the whole within-round "
+            f"computation on the replicated (n, d) joint action; "
+            f"MeanFieldView never materializes a broadcast joint for it "
+            f"to read — joint baselines require the star's full "
+            f"broadcast (view=None)"
+        )
+    if isinstance(update, DecentralizedExtragradientUpdate):
+        raise ValueError(
+            f"{type(update).__name__} interleaves gossip mixing "
+            f"sweeps between its phases and MeanFieldView has no views "
+            f"to mix — use sgd/extragradient/optimistic_gradient/"
+            f"heavy_ball locals with the summary reference"
+        )
+    if sync.uses_mask:
+        if not getattr(sync, "stateful_selection", False):
+            raise ValueError(
+                f"{type(sync).__name__} draws a per-round participation "
+                f"mask, and a population summary over a PARTIAL population "
+                f"silently changes what 'mean_i x^i' means to every reader "
+                f"— mean-field views support full-participation strategies "
+                f"only (use the exact/quantized/low-bit wires, or a "
+                f"selection policy with MeanFieldView(sample=k))"
+            )
+        if view.sample is None:
+            raise ValueError(
+                f"{type(sync).__name__} masks who participates, and the "
+                f"DENSE population summary would silently average stale "
+                f"blocks into what every reader believes is the live "
+                f"'mean_i x^i' — selection composes with sampled "
+                f"interaction only (MeanFieldView(sample=k): absentees "
+                f"simply stay stale in the live snapshot the sampled "
+                f"reads index)"
+            )
+    if mesh is not None:
+        raise ValueError(
+            "mesh lowering gathers the full (n, d) joint across the "
+            "player axis (sharded_joint_wire) — the exact O(n d) wire "
+            "MeanFieldView exists to avoid; the summary broadcast is "
+            "O(d) and needs no collective lowering, run it with "
+            "mesh=None"
+        )
+    if sync.has_wire_state and view.sample is not None:
+        raise ValueError(
+            f"{type(sync).__name__} banks an error-feedback "
+            f"residual against the ONE broadcast summary; sampled "
+            f"interaction (sample={view.sample}) gives every player a "
+            f"personalized summary with no single wire tensor — use "
+            f"error_feedback=False or the dense summary (sample=None)"
+        )
+    if game is not None:
+        if not isinstance(game, AggregativeGame):
+            raise ValueError(
+                f"MeanFieldView needs an AggregativeGame (a coupling "
+                f"that factors through population moments — "
+                f"player_grad_summary); {type(game).__name__} only "
+                f"exposes the full-joint oracle, and evaluating it at a "
+                f"summary would silently compute a different game"
+            )
+        if view.moments < game.summary_moments:
+            raise ValueError(
+                f"{type(game).__name__}.player_grad_summary consumes "
+                f"{game.summary_moments} opponent moments but the view "
+                f"maintains only {view.moments} — use MeanFieldView("
+                f"moments={game.summary_moments})"
+            )
+        if view.sample is not None and view.sample > game.n - 1:
+            raise ValueError(
+                f"MeanFieldView.sample={view.sample} exceeds the "
+                f"{game.n - 1} opponents a player can draw from"
+            )
+
+
+# =========================================================================
+# The one compatibility matrix
+# =========================================================================
+def validate_spec(spec: EngineSpec, *, async_: bool = False,
+                  trainer: bool = False, game=None, delays=None,
+                  max_staleness: int = 0, overlap: bool = False,
+                  external_refs: bool = False, trainer_init: bool = False,
+                  staleness_available: bool | None = None,
+                  policy_remedy: str | None = None, coupling=None):
+    """Validate one axis configuration against the full composition matrix.
+
+    The single rejection point for every engine/trainer entry:
+
+    - ``validate_spec(spec, game=...)`` — the lockstep
+      :class:`~repro.core.engine.PearlEngine` rules; returns the resolved
+      :class:`~repro.core.engine.JointView`.
+    - ``validate_spec(spec, async_=True, delays=..., max_staleness=...,
+      overlap=...)`` — the :class:`~repro.core.async_engine.AsyncPearlEngine`
+      rules (``spec.sync`` must already be StaleSync-unwrapped via
+      :func:`resolve_stale_sync`); returns the resolved view.
+    - ``validate_spec(spec, trainer=True, ...)`` — the neural-trainer rules
+      shared by ``make_pearl_round`` (``external_refs``/``policy_remedy``)
+      and ``PearlTrainer.__init__`` (additionally ``trainer_init=True`` with
+      ``delays``/``max_staleness``/``staleness_available``/``coupling``);
+      returns ``None``.
+
+    Every message is verbatim the one the scattered per-module guards used
+    to raise — docs/ARCHITECTURE.md's rejection table is the rendered form
+    of this function, and ``tests/test_spec.py`` asserts each table row
+    still fires.
+    """
+    if trainer:
+        return _validate_trainer(
+            spec, delays=delays, max_staleness=max_staleness,
+            external_refs=external_refs, trainer_init=trainer_init,
+            staleness_available=bool(staleness_available),
+            policy_remedy=policy_remedy or "", coupling=coupling,
+        )
+    if async_:
+        return _validate_async(spec, game=game, delays=delays,
+                               max_staleness=max_staleness, overlap=overlap)
+    return _validate_lockstep(spec, game=game)
+
+
+def _resolved_axes(spec: EngineSpec):
+    """Fill unset axes with the engines' defaults and resolve the policy."""
+    from repro.core.engine import ExactSync, SgdUpdate
+    from repro.core.stepsize import resolve_policy
+    from repro.core.topology import Star
+
+    update = spec.update if spec.update is not None else SgdUpdate()
+    sync = spec.sync if spec.sync is not None else ExactSync()
+    topology = spec.topology if spec.topology is not None else Star()
+    gossip_steps = (spec.gossip_steps if spec.gossip_steps is not None
+                    else 1)
+    policy = resolve_policy(spec.policy)
+    return update, sync, topology, gossip_steps, policy
+
+
+def _validate_lockstep(spec: EngineSpec, *, game):
+    from repro.core.engine import (
+        DecentralizedExtragradientUpdate,
+        ExactSync,
+        JointUpdate,
+    )
+    from repro.core.stepsize import Theorem34Policy, validate_policy_context
+
+    update, sync, topology, gossip_steps, policy = _resolved_axes(spec)
+    view = resolve_view(spec.view, topology)
+    check_summary_view(view, update=update, sync=sync, mesh=spec.mesh,
+                       game=game)
+    if getattr(sync, "stateful_selection", False):
+        from repro.core.selection import validate_selection
+
+        validate_selection(sync, server=topology.is_server, mesh=spec.mesh,
+                           topology_name=type(topology).__name__)
+    if gossip_steps < 1:
+        raise ValueError(f"gossip_steps must be >= 1, got {gossip_steps}")
+    if getattr(sync, "requires_async", False):
+        raise ValueError(
+            f"{type(sync).__name__} models bounded staleness and "
+            f"needs the snapshot ring buffer of AsyncPearlEngine "
+            f"(repro.core.async_engine); the lockstep PearlEngine would "
+            f"silently ignore its delay schedule"
+        )
+    validate_policy_context(
+        policy, server=topology.is_server,
+        staleness_available=False,
+        staleness_remedy="use AsyncPearlEngine",
+        topology_name=type(topology).__name__,
+    )
+    if spec.mesh is not None:
+        if isinstance(update, JointUpdate):
+            raise ValueError(
+                f"{type(update).__name__} owns the whole "
+                f"within-round computation on the replicated joint "
+                f"action — there is no per-player exchange for the mesh "
+                f"collective layer to lower; run joint baselines "
+                f"without a mesh"
+            )
+        if sync.uses_mask:
+            raise ValueError(
+                f"mesh lowering covers full-participation "
+                f"synchronization; {type(sync).__name__} draws a "
+                f"per-round participation mask, and compiling a full "
+                f"wire exchange the mask-aware byte accounting "
+                f"contradicts would make the billing dishonest — use "
+                f"the host path (mesh=None) for masked regimes"
+            )
+    if sync.has_wire_state and not topology.is_server:
+        raise ValueError(
+            f"{type(sync).__name__} carries an error-feedback "
+            f"residual for the ONE transmit tensor of the star "
+            f"broadcast; gossip relays per-edge views with no single "
+            f"wire tensor to bank a residual against — use "
+            f"error_feedback=False (stateless low-bit compression "
+            f"composes with any topology) or the Star topology"
+        )
+    if isinstance(update, DecentralizedExtragradientUpdate):
+        if topology.is_server:
+            raise ValueError(
+                f"{type(update).__name__} interleaves mixing sweeps "
+                f"with the extragradient phases and the server broadcast "
+                f"has no views to mix — on the Star topology use "
+                f"JointExtragradientUpdate (exact mixing every sync)"
+            )
+        if sync.uses_mask:
+            raise ValueError(
+                f"{type(update).__name__} relays every player's "
+                f"half-point mid-round; a participation mask "
+                f"({type(sync).__name__}) would drop half-points "
+                f"with no extragradient semantics — full participation "
+                f"only"
+            )
+    if isinstance(update, JointUpdate):
+        if not isinstance(policy, Theorem34Policy):
+            raise ValueError(
+                f"{type(update).__name__} owns the whole "
+                f"within-round computation on the joint action — "
+                f"per-player step-size policies do not apply; joint "
+                f"baselines support only the theorem34 policy"
+            )
+        if not topology.is_server:
+            raise ValueError(
+                f"{type(update).__name__} is fully synchronized and "
+                f"needs the Star topology, got {type(topology).__name__}"
+            )
+        if not isinstance(sync, ExactSync):
+            raise ValueError(
+                f"{type(update).__name__} owns the whole within-round "
+                f"computation: the engine never applies "
+                f"{type(sync).__name__}'s pre_round/mask/view, and "
+                f"billing would silently fall back to ExactSync bytes — "
+                f"joint baselines support only sync=ExactSync()"
+            )
+    return view
+
+
+def _validate_async(spec: EngineSpec, *, game, delays, max_staleness,
+                    overlap):
+    from repro.core.async_engine import ConstantDelay
+    from repro.core.engine import (
+        DecentralizedExtragradientUpdate,
+        JointUpdate,
+    )
+    from repro.core.stepsize import validate_policy_context
+
+    update, sync, topology, gossip_steps, policy = _resolved_axes(spec)
+    D = max_staleness
+    view = resolve_view(spec.view, topology)
+    check_summary_view(view, update=update, sync=sync, mesh=spec.mesh,
+                       game=game)
+    if view.summary_based and view.sample is not None:
+        raise ValueError(
+            "sampled neighbor reads (MeanFieldView(sample=...)) index "
+            "the live joint snapshot; under staleness every reader "
+            "would need the (depth, n, d) joint ring buffer the "
+            "summary path exists to avoid — use the dense summary "
+            "(sample=None) here, or the lockstep PearlEngine for "
+            "sampled interaction"
+        )
+    if D < 0:
+        raise ValueError(f"max_staleness must be >= 0, got {D}")
+    if gossip_steps < 1:
+        raise ValueError(
+            f"gossip_steps must be >= 1, got {gossip_steps}")
+    if sync.has_wire_state and not topology.is_server:
+        raise ValueError(
+            f"{type(sync).__name__} carries an error-feedback residual "
+            f"for the ONE transmit tensor of the star broadcast; gossip "
+            f"relays per-edge views with no single wire tensor to bank "
+            f"a residual against — use error_feedback=False or the Star "
+            f"topology"
+        )
+    if spec.mesh is not None:
+        if not topology.is_server:
+            raise ValueError(
+                "the device-resident async mesh path covers the star "
+                "broadcast (one ring buffer of joint snapshots); gossip "
+                "staleness is per-receiver view state with no sharded "
+                "lowering yet — run graph topologies on the host path "
+                "(mesh=None)"
+            )
+        if sync.uses_mask:
+            raise ValueError(
+                f"mesh lowering covers full-participation "
+                f"synchronization; {type(sync).__name__} draws a "
+                f"per-round participation mask — use the host path "
+                f"(mesh=None) for masked regimes"
+            )
+    if getattr(sync, "stateful_selection", False):
+        from repro.core.selection import validate_selection
+
+        validate_selection(sync, server=topology.is_server, mesh=spec.mesh,
+                           topology_name=type(topology).__name__)
+    if overlap:
+        if spec.mesh is None:
+            raise ValueError(
+                "overlap=True double-buffers the sharded wire collective "
+                "so XLA can ship it during the local steps; without a "
+                "mesh there is no collective to overlap — pass mesh="
+                "player_mesh(n) (or drop overlap)"
+            )
+        if not topology.is_server:
+            raise ValueError("overlap=True is a star-broadcast "
+                             "optimization; gossip is not supported")
+        if D != 1 or delays != ConstantDelay(1):
+            raise ValueError(
+                "overlap=True makes every player read LAST round's "
+                "broadcast — exactly ConstantDelay(1) staleness. "
+                "Declare it: delays=ConstantDelay(1), max_staleness=1. "
+                "The engine refuses to overlap while claiming lockstep "
+                "freshness."
+            )
+    if isinstance(update, JointUpdate):
+        raise ValueError(
+            f"{type(update).__name__} reads fresh iterates "
+            f"mid-round (fully synchronized) — asynchronous bounded "
+            f"staleness does not apply; use the lockstep PearlEngine"
+        )
+    if isinstance(update, DecentralizedExtragradientUpdate):
+        raise ValueError(
+            f"{type(update).__name__} interleaves a mixing sweep "
+            f"between its extragradient phases, and that MID-ROUND "
+            f"sweep has no per-receiver delayed equivalent — use the "
+            f"lockstep PearlEngine on a graph topology"
+        )
+    validate_policy_context(
+        policy, server=topology.is_server,
+        staleness_available=True, staleness_remedy="",
+        topology_name=type(topology).__name__,
+    )
+    return view
+
+
+def _trainer_needs_general(sync, topology) -> bool:
+    """Mirror of ``pearl_trainer.needs_general_round`` (kept inline so the
+    import graph stays acyclic): the star fast path suffices iff the
+    topology is the server and the strategy draws no mask."""
+    return (not topology.is_server) or sync.uses_mask
+
+
+def _validate_trainer(spec: EngineSpec, *, delays, max_staleness,
+                      external_refs, trainer_init, staleness_available,
+                      policy_remedy, coupling):
+    from repro.core.stepsize import Theorem34Policy, validate_policy_context
+    from repro.core.topology import Star
+
+    sync = spec.sync
+    topo = spec.topology if spec.topology is not None else Star()
+    from repro.core.stepsize import resolve_policy
+
+    policy = resolve_policy(spec.policy)
+    if max_staleness < 0:
+        raise ValueError(
+            f"max_staleness must be >= 0, got {max_staleness}")
+    if max_staleness > 0 and delays is None:
+        raise ValueError(
+            "max_staleness > 0 needs a delays= DelaySchedule (or a "
+            "StaleSync sync) — without one the trainer would silently "
+            "run lockstep"
+        )
+    if getattr(sync, "requires_async", False):
+        raise ValueError(
+            f"{type(sync).__name__} carries a delay model the compiled "
+            f"round cannot honor — construct PearlTrainer with it (or with "
+            f"delays/max_staleness), which unwraps it into the event-shaped "
+            f"host loop"
+        )
+    if spec.view is not None:
+        from repro.core.engine import MeanFieldView
+
+        view = spec.view
+        if not isinstance(view, MeanFieldView):
+            raise ValueError(
+                f"the neural trainer's reference is always an aggregate "
+                f"(the consensus game is aggregative): the star fast path "
+                f"broadcasts the O(d) across-player mean, never the (n, d) "
+                f"joint — {type(view).__name__} does not describe any "
+                f"trainer wire; use view=None or "
+                f"MeanFieldView(self_correction=False)"
+            )
+        if (view.moments != 1 or view.self_correction
+                or view.sample is not None):
+            raise ValueError(
+                f"the trainer's wire is the plain population mean: "
+                f"MeanFieldView(moments=1, self_correction=False, "
+                f"sample=None) is the only summary it implements — got "
+                f"moments={view.moments}, "
+                f"self_correction={view.self_correction}, "
+                f"sample={view.sample}; the dense engines "
+                f"(PearlEngine/AsyncPearlEngine) implement the corrected/"
+                f"second-moment/sampled variants"
+            )
+        if external_refs or _trainer_needs_general(sync, topo):
+            raise ValueError(
+                f"MeanFieldView names the star full-participation fast "
+                f"path's O(d) mean wire; the general stale-block round "
+                f"(topology={type(topo).__name__}, "
+                f"sync={type(sync).__name__}, "
+                f"external_refs={external_refs}) re-mixes per-player "
+                f"references over a partial/stale snapshot, which silently "
+                f"changes what 'mean_j x^j' means — use view=None there"
+            )
+    if trainer_init and getattr(sync, "stateful_selection", False):
+        # the trainer's general merge is the ONE mask-aware mesh lowering
+        # (sharded_stale_merge ships masked_payload zero-bit rows), so
+        # selection validates with mesh=None regardless of the round's mesh
+        from repro.core.selection import validate_selection
+
+        validate_selection(sync, server=topo.is_server, mesh=None,
+                           topology_name=type(topo).__name__)
+    scaled = not isinstance(policy, Theorem34Policy)
+    if scaled:
+        validate_policy_context(
+            policy, server=topo.is_server,
+            staleness_available=staleness_available,
+            staleness_remedy=policy_remedy,
+            topology_name=type(topo).__name__,
+        )
+        if trainer_init and policy.requires_gossip and \
+                float(coupling) <= 1.0:
+            raise ValueError(
+                f"{type(policy).__name__} scales with the excess "
+                f"coupling ratio and the neural consensus game has no "
+                f"closed-form constants — pass coupling > 1.0 (an "
+                f"L_F/L_max estimate); at the default 1.0 the policy "
+                f"would silently run as theorem34"
+            )
+    if scaled and not external_refs and \
+            not _trainer_needs_general(sync, topo):
+        raise ValueError(
+            f"{type(policy).__name__} needs the general stale-block round "
+            f"(per-player references carry the per-player scale); the "
+            f"star/full-participation fast path has no player axis to "
+            f"thread it through — pass external_refs=True, a mask "
+            f"strategy, or a graph topology"
+        )
+    if (external_refs or _trainer_needs_general(sync, topo)) and \
+            getattr(sync, "has_wire_state", False):
+        raise ValueError(
+            f"{type(sync).__name__} carries error-feedback wire state, "
+            f"which is defined for the star full-participation broadcast "
+            f"(ONE wire tensor per round with a well-defined residual); the "
+            f"general stale-block merge (topology={type(topo).__name__}, "
+            f"external_refs={external_refs}) has no per-player residual "
+            f"carry — construct the strategy with error_feedback=False "
+            f"(stateless low-bit) or use the star fast path"
+        )
+    return None
+
+
+# -------------------------------------------- trainer collective guards
+def validate_tree_mean(strategy, axis: int, mesh) -> None:
+    """Composition guards of the trainer's full-participation star
+    collective (``tree_mean``)."""
+    if strategy.uses_mask:
+        raise ValueError(
+            f"tree_mean is the full-participation star collective; "
+            f"{type(strategy).__name__} draws a participation mask and needs "
+            f"the general stale-block merge round (make_pearl_round)"
+        )
+    if hasattr(strategy, "wire_encode"):
+        raise ValueError(
+            f"{type(strategy).__name__} is a sub-bf16 engine wire (per-block "
+            f"scales + error-feedback state); tree_mean is stateless and "
+            f"per-call — use tree_mean_lowbit, which threads the residual "
+            f"and returns it (the trainer's star fast path does this "
+            f"automatically), or QuantizedSync here"
+        )
+    if mesh is not None and axis != 0:
+        raise ValueError(
+            f"the mesh-lowered collective shards the leading player "
+            f"axis; got axis={axis}"
+        )
+
+
+def validate_tree_mean_lowbit(sync) -> None:
+    """Composition guard of the trainer's low-bit wire collective."""
+    if not hasattr(sync, "wire_encode"):
+        raise ValueError(
+            f"tree_mean_lowbit is the low-bit wire path; "
+            f"{type(sync).__name__} has no wire_encode — use tree_mean"
+        )
+
+
+# =========================================================================
+# One-time deprecation warnings for the legacy adapter surface
+# =========================================================================
+_LEGACY_WARNED: set[str] = set()
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Emit ONE DeprecationWarning per process for a legacy entry point.
+
+    The PR 1 adapters and ``make_pearl_round`` keep working bit-for-bit
+    (their pins hold); the warning only points new code at the
+    :class:`EngineSpec` spelling. See README "Migrating to EngineSpec"."""
+    if name in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(name)
+    import warnings
+
+    warnings.warn(
+        f"{name} is a legacy adapter kept for bit-for-bit compatibility; "
+        f"new code should configure the engine through "
+        f"repro.core.spec.EngineSpec — {replacement}",
+        DeprecationWarning,
+        stacklevel=3,
+    )

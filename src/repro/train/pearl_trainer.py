@@ -70,12 +70,20 @@ from repro.core.engine import (
     make_federated_round,
     resolve_sync,
 )
+from repro.core.spec import (
+    EngineSpec,
+    merge_trainer_spec,
+    resolve_stale_sync,
+    validate_spec,
+    validate_tree_mean,
+    validate_tree_mean_lowbit,
+    warn_legacy,
+)
 from repro.core.stepsize import (
     RoundContext,
     StepsizePolicy,
     Theorem34Policy,
     resolve_policy,
-    validate_policy_context,
 )
 from repro.core.topology import (
     Star,
@@ -119,28 +127,10 @@ def tree_mean(stacked, axis: int = 0, sync_dtype=None,
     and compiles the identical legacy program.
     """
     strategy = resolve_sync(sync, sync_dtype)
-    if strategy.uses_mask:
-        raise ValueError(
-            f"tree_mean is the full-participation star collective; "
-            f"{type(strategy).__name__} draws a participation mask and needs "
-            f"the general stale-block merge round (make_pearl_round)"
-        )
-    if hasattr(strategy, "wire_encode"):
-        raise ValueError(
-            f"{type(strategy).__name__} is a sub-bf16 engine wire (per-block "
-            f"scales + error-feedback state); tree_mean is stateless and "
-            f"per-call — use tree_mean_lowbit, which threads the residual "
-            f"and returns it (the trainer's star fast path does this "
-            f"automatically), or QuantizedSync here"
-        )
+    validate_tree_mean(strategy, axis, mesh)
     if mesh is not None:
         from repro.core.collective import sharded_tree_mean
 
-        if axis != 0:
-            raise ValueError(
-                f"the mesh-lowered collective shards the leading player "
-                f"axis; got axis={axis}"
-            )
         return sharded_tree_mean(stacked, mesh=mesh, sync=strategy,
                                  axis_name=mesh_axis,
                                  inner_specs=mesh_inner_specs)
@@ -186,11 +176,7 @@ def tree_mean_lowbit(stacked, wire_state, sync, *, mesh=None,
     player's pytree, f32.
     """
     del mesh_inner_specs   # the flattened wire has no inner axes to thread
-    if not hasattr(sync, "wire_encode"):
-        raise ValueError(
-            f"tree_mean_lowbit is the low-bit wire path; "
-            f"{type(sync).__name__} has no wire_encode — use tree_mean"
-        )
+    validate_tree_mean_lowbit(sync)
     stateful = sync.has_wire_state
 
     t_flat = jax.tree.map(
@@ -232,7 +218,7 @@ def _per_player(mask, like):
     return mask.reshape((-1,) + (1,) * (like.ndim - 1))
 
 
-def make_pearl_round(
+def _make_pearl_round(
     cfg: ModelConfig,
     optimizer: Optimizer,
     *,
@@ -330,59 +316,20 @@ def make_pearl_round(
         # validate_round_args / stepsize.gamma_constant
         raise ValueError(f"tau must be >= 1, got {tau}")
     strategy = resolve_sync(sync, sync_dtype)
-    if getattr(strategy, "requires_async", False):
-        raise ValueError(
-            f"{type(strategy).__name__} carries a delay model the compiled "
-            f"round cannot honor — construct PearlTrainer with it (or with "
-            f"delays/max_staleness), which unwraps it into the event-shaped "
-            f"host loop"
-        )
     topo = topology if topology is not None else Star()
-    if view is not None:
-        from repro.core.engine import MeanFieldView
-
-        if not isinstance(view, MeanFieldView):
-            raise ValueError(
-                f"the neural trainer's reference is always an aggregate "
-                f"(the consensus game is aggregative): the star fast path "
-                f"broadcasts the O(d) across-player mean, never the (n, d) "
-                f"joint — {type(view).__name__} does not describe any "
-                f"trainer wire; use view=None or "
-                f"MeanFieldView(self_correction=False)"
-            )
-        if (view.moments != 1 or view.self_correction
-                or view.sample is not None):
-            raise ValueError(
-                f"the trainer's wire is the plain population mean: "
-                f"MeanFieldView(moments=1, self_correction=False, "
-                f"sample=None) is the only summary it implements — got "
-                f"moments={view.moments}, "
-                f"self_correction={view.self_correction}, "
-                f"sample={view.sample}; the dense engines "
-                f"(PearlEngine/AsyncPearlEngine) implement the corrected/"
-                f"second-moment/sampled variants"
-            )
-        if external_refs or needs_general_round(strategy, topo):
-            raise ValueError(
-                f"MeanFieldView names the star full-participation fast "
-                f"path's O(d) mean wire; the general stale-block round "
-                f"(topology={type(topo).__name__}, "
-                f"sync={type(strategy).__name__}, "
-                f"external_refs={external_refs}) re-mixes per-player "
-                f"references over a partial/stale snapshot, which silently "
-                f"changes what 'mean_j x^j' means — use view=None there"
-            )
     policy = resolve_policy(policy)
     scaled = not isinstance(policy, Theorem34Policy)
-    if scaled:
-        validate_policy_context(
-            policy, server=topo.is_server,
-            staleness_available=external_refs,
-            staleness_remedy="construct PearlTrainer with delays/"
-                             "max_staleness (the event-shaped host loop "
-                             "supplies the counters)",
-            topology_name=type(topo).__name__,
-        )
+    # THE compatibility matrix (repro.core.spec) raises every composition
+    # rejection for this round — before any model state is touched, so the
+    # configuration is known valid before cfg is consulted
+    validate_spec(
+        EngineSpec(sync=strategy, topology=topo, policy=policy, view=view,
+                   mesh=mesh, mesh_axis=mesh_axis),
+        trainer=True, external_refs=external_refs,
+        staleness_available=external_refs,
+        policy_remedy="construct PearlTrainer with delays/max_staleness "
+                      "(the event-shaped host loop supplies the counters)",
+    )
     loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, window=window,
                            use_kernels=use_kernels, prox_lambda=prox_lambda)
 
@@ -402,15 +349,6 @@ def make_pearl_round(
             updates = jax.tree.map(lambda u: scale * u, updates)
         p = apply_updates(p, updates)
         return (p, o), metrics
-
-    if scaled and not external_refs and not needs_general_round(strategy, topo):
-        raise ValueError(
-            f"{type(policy).__name__} needs the general stale-block round "
-            f"(per-player references carry the per-player scale); the "
-            f"star/full-participation fast path has no player axis to "
-            f"thread it through — pass external_refs=True, a mask "
-            f"strategy, or a graph topology"
-        )
 
     # ``external_refs`` compiles the stale-block merge round even when the
     # star fast path would suffice, and skips the in-round reference re-mix:
@@ -456,17 +394,6 @@ def make_pearl_round(
             return new_p, new_o, new_xbar, metrics
 
         return pearl_round
-
-    if getattr(strategy, "has_wire_state", False):
-        raise ValueError(
-            f"{type(strategy).__name__} carries error-feedback wire state, "
-            f"which is defined for the star full-participation broadcast "
-            f"(ONE wire tensor per round with a well-defined residual); the "
-            f"general stale-block merge (topology={type(topo).__name__}, "
-            f"external_refs={external_refs}) has no per-player residual "
-            f"carry — construct the strategy with error_feedback=False "
-            f"(stateless low-bit) or use the star fast path"
-        )
 
     # General stale-block merge: per-player references (broadcast_in_axes=0),
     # the collective replaced by mask-merge + topology mixing.
@@ -525,6 +452,24 @@ def make_pearl_round(
         return new_p, new_o, new_refs, new_snapshot, metrics
 
     return pearl_round
+
+
+def make_pearl_round(cfg, optimizer, **kwargs):
+    """Deprecated public entry to the compiled-round builder.
+
+    Identical behavior to the internal builder (the pins hold bit-for-bit);
+    it only adds a one-time :class:`DeprecationWarning` pointing new code at
+    :class:`PearlTrainer` + :class:`repro.core.spec.EngineSpec`, which own
+    the host state (masks, staleness counters, wire residuals) this raw
+    round makes the caller thread by hand. See README "Migrating to
+    EngineSpec"."""
+    warn_legacy(
+        "make_pearl_round",
+        "construct PearlTrainer(..., spec=EngineSpec(sync=..., "
+        "topology=..., policy=..., view=..., mesh=...)) — it compiles the "
+        "same round and owns the host-side state",
+    )
+    return _make_pearl_round(cfg, optimizer, **kwargs)
 
 
 @dataclasses.dataclass
@@ -717,71 +662,54 @@ class PearlTrainer:
                  topology: Topology | None = None, delays=None,
                  max_staleness: int = 0,
                  policy: StepsizePolicy | str | None = None,
-                 coupling: float = 1.0, **round_kwargs):
-        from repro.core.async_engine import StaleSync
+                 coupling: float = 1.0, spec: EngineSpec | None = None,
+                 **round_kwargs):
         from repro.models.model import init_params
 
         self.cfg = cfg
         self.tau = tau
         self.n_players = n_players
+        # spec= is sugar over the legacy kwargs (same two-sources-of-truth
+        # rule as the engines; update/gossip_steps have no trainer analog)
+        topology, policy, round_kwargs = merge_trainer_spec(
+            spec, topology=topology, policy=policy,
+            round_kwargs=round_kwargs)
         sync_arg = round_kwargs.get("sync")
-        if isinstance(sync_arg, StaleSync):
-            # the StaleSync spelling: the delay model travels with the
-            # strategy; the inner strategy supplies the wire semantics
-            if delays is not None or max_staleness != 0:
-                raise ValueError(
-                    "give the delay model either inside StaleSync or via "
-                    "delays/max_staleness, not both"
-                )
-            delays = sync_arg.delays
-            max_staleness = sync_arg.max_staleness
-            round_kwargs["sync"] = sync_arg.inner
-        if max_staleness < 0:
-            raise ValueError(
-                f"max_staleness must be >= 0, got {max_staleness}")
-        if max_staleness > 0 and delays is None:
-            raise ValueError(
-                "max_staleness > 0 needs a delays= DelaySchedule (or a "
-                "StaleSync sync) — without one the trainer would silently "
-                "run lockstep"
-            )
-        self.delays = delays
-        self.max_staleness = int(max_staleness)
-        self._async = delays is not None
+        # the StaleSync spelling: the delay model travels with the
+        # strategy; the inner strategy supplies the wire semantics
+        inner, delays, max_staleness = resolve_stale_sync(
+            sync_arg, delays, max_staleness)
+        if inner is not sync_arg:
+            round_kwargs["sync"] = inner
         self.sync = resolve_sync(round_kwargs.get("sync"),
                                  round_kwargs.get("sync_dtype"))
         self.topology = topology if topology is not None else Star()
+        self.policy = resolve_policy(policy)
+        self._async = delays is not None
+        # THE compatibility matrix (repro.core.spec) raises every
+        # composition rejection for this trainer — including selection
+        # validation, which runs with mesh=None regardless of the round's
+        # mesh kwarg: the trainer's general merge is the ONE mask-aware
+        # mesh lowering (sharded_stale_merge ships masked_payload zero-bit
+        # rows).
+        validate_spec(
+            EngineSpec(sync=self.sync, topology=self.topology,
+                       policy=self.policy, view=round_kwargs.get("view")),
+            trainer=True, trainer_init=True, delays=delays,
+            max_staleness=max_staleness, external_refs=self._async,
+            staleness_available=self._async,
+            policy_remedy="construct the trainer with delays/max_staleness "
+                          "(or a StaleSync)",
+            coupling=coupling,
+        )
+        self.delays = delays
+        self.max_staleness = int(max_staleness)
         # stateful selection policies (core/selection.py): host-side state,
-        # masks drawn by select() from observed per-player param deltas. The
-        # trainer's general merge is the ONE mask-aware mesh lowering
-        # (sharded_stale_merge ships masked_payload zero-bit rows), so
-        # validate with mesh=None regardless of the round's mesh kwarg.
+        # masks drawn by select() from observed per-player param deltas
         self._selection = getattr(self.sync, "stateful_selection", False)
-        if self._selection:
-            from repro.core.selection import validate_selection
-            validate_selection(self.sync, server=self.topology.is_server,
-                               mesh=None,
-                               topology_name=type(self.topology).__name__)
         self._general = (needs_general_round(self.sync, self.topology)
                          or self._async)
-        self.policy = resolve_policy(policy)
         self._policy_active = not isinstance(self.policy, Theorem34Policy)
-        if self._policy_active:
-            validate_policy_context(
-                self.policy, server=self.topology.is_server,
-                staleness_available=self._async,
-                staleness_remedy="construct the trainer with delays/"
-                                 "max_staleness (or a StaleSync)",
-                topology_name=type(self.topology).__name__,
-            )
-            if self.policy.requires_gossip and float(coupling) <= 1.0:
-                raise ValueError(
-                    f"{type(self.policy).__name__} scales with the excess "
-                    f"coupling ratio and the neural consensus game has no "
-                    f"closed-form constants — pass coupling > 1.0 (an "
-                    f"L_F/L_max estimate); at the default 1.0 the policy "
-                    f"would silently run as theorem34"
-                )
         gap = (1.0 if self.topology.is_server
                else float(spectral_gap(self.topology.mixing_matrix(n_players))))
         # the neural consensus game publishes no closed-form constants, so
@@ -797,7 +725,7 @@ class PearlTrainer:
         self.params = stack_players(params)
         self.opt_state = jax.vmap(optimizer.init)(self.params)
         self.xbar = tree_mean(self.params)
-        self._round = jax.jit(make_pearl_round(
+        self._round = jax.jit(_make_pearl_round(
             cfg, optimizer, tau=tau, prox_lambda=prox_lambda,
             topology=self.topology, external_refs=self._async,
             policy=self.policy, **round_kwargs

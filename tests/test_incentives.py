@@ -1,0 +1,242 @@
+"""Strategic participation: best-response masks against the closed form.
+
+The incentive layer's testbed is :mod:`repro.core.games.participation`:
+the continuum network-effects game has a closed-form largest equilibrium,
+the discrete midpoint-grid game tracks it within O(1/n), and
+:class:`~repro.core.incentives.BestResponseParticipation` with fresh
+(optimistic) value estimates IS that discrete game — so the policy's
+realized masks are pinned against analytic equilibria, not snapshots.
+
+Plus the composition claims: the policy threads through both dense
+engines and the neural trainer as an ordinary selection policy (zero new
+plumbing), and under the async engine the best responses see the drawn
+staleness row (stale players rationally sit out).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_engine import AsyncPearlEngine, UniformDelay
+from repro.core.engine import PearlEngine, SgdUpdate
+from repro.core.games.participation import (
+    NetworkEffectsParticipationGame,
+    make_participation_game,
+)
+from repro.core.incentives import PAYMENT_RULES, BestResponseParticipation
+from repro.core.selection import SELECTION_POLICIES, resolve_selection
+
+from helpers import gaussian_x0, weak_quad
+
+
+def fresh_mask(policy, n, delay_row=None):
+    """The policy's round-0 mask: optimistic values, no history."""
+    state = policy.select_state(n)
+    _, m = policy.select(state, n, 0, delay_row)
+    return np.asarray(m)
+
+
+# ========================================================= closed-form pins
+class TestClosedForm:
+    def test_discrete_br_matches_meta_game(self):
+        """The policy's fixed point IS the meta-game's: same sweep, same
+        equilibrium, player by player."""
+        game = make_participation_game()
+        policy = BestResponseParticipation(
+            price=game.price, value_weight=game.value,
+            cost_min=game.cost_min, cost_max=game.cost_max)
+        game_mask, converged = game.best_response_iterate()
+        assert converged
+        np.testing.assert_array_equal(
+            fresh_mask(policy, game.n), game_mask)
+
+    @pytest.mark.parametrize("price", [0.25, 0.35, 0.45, 0.55])
+    def test_interior_rate_tracks_continuum(self, price):
+        """Discrete largest-equilibrium rate within 1.5/n of the continuum
+        closed form s* = (p - c_min)/((c_max - c_min) - v)."""
+        n = 40
+        game = NetworkEffectsParticipationGame(
+            n=n, price=price, value=0.2)
+        policy = BestResponseParticipation(
+            price=price, value_weight=0.2)
+        rate = fresh_mask(policy, n).mean()
+        assert abs(rate - game.equilibrium_rate()) <= 1.5 / n
+
+    def test_free_rider_collapse(self):
+        """price <= c_min: the cascade sheds EVERY player from the
+        all-ones start — the death spiral, not a proportional decline."""
+        game = make_participation_game(price=0.15)
+        assert game.equilibrium_rate() == 0.0
+        policy = BestResponseParticipation(price=0.15, value_weight=0.2)
+        assert not fresh_mask(policy, game.n).any()
+
+    def test_full_participation_regime(self):
+        """price + v >= c_max: even the costliest player profits."""
+        game = make_participation_game(price=0.75)
+        assert game.equilibrium_rate() == 1.0
+        policy = BestResponseParticipation(price=0.75, value_weight=0.2)
+        assert fresh_mask(policy, game.n).all()
+
+    def test_monotone_cascade_converges_within_n_sweeps(self):
+        game = make_participation_game(n=30, price=0.3)
+        mask, converged = game.best_response_iterate()
+        assert converged
+        # an equilibrium: one more sweep is a fixed point
+        np.testing.assert_array_equal(game.best_response(mask), mask)
+
+    def test_weak_network_effect_regime_required(self):
+        with pytest.raises(ValueError, match="weak-network-effect"):
+            NetworkEffectsParticipationGame(
+                n=10, price=0.4, value=0.7, cost_min=0.2, cost_max=0.8)
+
+
+# ============================================================ payment rules
+class TestPaymentRules:
+    def test_registry_entry_resolves(self):
+        assert "best_response" in SELECTION_POLICIES
+        assert isinstance(resolve_selection("best_response"),
+                          BestResponseParticipation)
+
+    def test_proportional_pays_by_value(self):
+        """Under the proportional rule a worthless player's payment is 0,
+        so it drops out where the flat rule would keep it."""
+        n = 10
+        policy = BestResponseParticipation(
+            payment="proportional", price=0.85, value_weight=0.0)
+        state = policy.select_state(n)
+        state = dict(state,
+                     values=jnp.asarray([1.0] * 5 + [0.0] * 5),
+                     counts=jnp.ones((n,), jnp.int32))
+        _, m = policy.select(state, n, 0, None)
+        m = np.asarray(m)
+        assert m[:5].all() and not m[5:].any()
+        # flat control at the same price covers even the costliest player
+        # (midpoint grid tops out at 0.77 < 0.85), so everyone stays
+        flat = BestResponseParticipation(payment="fixed", price=0.85,
+                                         value_weight=0.0)
+        _, mf = flat.select(dict(state), n, 0, None)
+        assert np.asarray(mf).all()
+
+    def test_auction_fixed_point_and_documented_two_cycle(self):
+        """The auction rule is non-monotone (more joiners dilute the
+        share). A budget covering the costliest player's share at full
+        participation (budget/n >= c_max) is a genuine all-in fixed
+        point; below that the simultaneous-move crowd 2-cycles around
+        the zero-profit coalition (all-in share pays nobody, solo share
+        pays everybody) and the LAST sweep is the documented fallback —
+        pinned here via the sweep parity."""
+        n = 20
+        rich = BestResponseParticipation(payment="auction", budget=16.0,
+                                         value_weight=0.0)
+        m = fresh_mask(rich, n)
+        assert m.all()
+        # fixed point: one more sweep against the all-in mask keeps it
+        _, m2 = rich.select(rich.select_state(n), n, 1, None)
+        assert np.asarray(m2).all()
+        even = BestResponseParticipation(payment="auction", budget=1.0,
+                                         value_weight=0.0, br_iters=16)
+        odd = BestResponseParticipation(payment="auction", budget=1.0,
+                                        value_weight=0.0, br_iters=15)
+        assert fresh_mask(even, n).all()       # last sweep = all-in phase
+        assert not fresh_mask(odd, n).any()    # last sweep = all-out phase
+
+    def test_unknown_payment_rejected(self):
+        assert PAYMENT_RULES == ("fixed", "proportional", "auction")
+        with pytest.raises(ValueError, match="payment"):
+            BestResponseParticipation(payment="bribery")
+
+    def test_knob_ranges_validated(self):
+        with pytest.raises(ValueError, match="price"):
+            BestResponseParticipation(price=-0.1)
+        with pytest.raises(ValueError, match="br_iters"):
+            BestResponseParticipation(br_iters=0)
+        with pytest.raises(ValueError, match="cost_min"):
+            BestResponseParticipation(cost_min=0.9, cost_max=0.1)
+
+    def test_explicit_costs_override_and_length_check(self):
+        policy = BestResponseParticipation(
+            costs=(0.1, 0.9), price=0.5, value_weight=0.0)
+        m = fresh_mask(policy, 2)
+        assert m.tolist() == [True, False]
+        with pytest.raises(ValueError, match="2 entries for n=3"):
+            policy.cost_vector(3)
+
+
+# ====================================================== staleness coupling
+class TestStalenessCoupling:
+    def test_stale_players_rationally_sit_out(self):
+        """staleness_discount charges the drawn delay as extra cost: a
+        player acting on a stale broadcast drops out of the coalition the
+        fresh players keep."""
+        n = 10
+        policy = BestResponseParticipation(
+            price=0.9, value_weight=0.1, staleness_discount=0.2)
+        delay_row = jnp.asarray([0.0] * 5 + [3.0] * 5)
+        m = fresh_mask(policy, n, delay_row)
+        assert m[:5].all() and not m[5:].any()
+        # staleness-blind control keeps everyone
+        blind = BestResponseParticipation(price=0.9, value_weight=0.1)
+        assert fresh_mask(blind, n, delay_row).all()
+
+    def test_lockstep_has_no_delay_row(self):
+        policy = BestResponseParticipation(
+            price=0.9, value_weight=0.1, staleness_discount=0.2)
+        assert fresh_mask(policy, 10, None).all()
+
+
+# ===================================================== engines: zero plumbing
+class TestEngineThreading:
+    @pytest.fixture(scope="class")
+    def game(self):
+        return weak_quad()
+
+    def test_runs_in_lockstep_engine(self, game):
+        eng = PearlEngine(update=SgdUpdate(),
+                          sync=BestResponseParticipation(price=0.9))
+        r = eng.run(game, gaussian_x0(game), tau=2, rounds=6, gamma=2e-3,
+                    key=jax.random.PRNGKey(0))
+        assert np.isfinite(r.rel_errors).all()
+        # endogenous participation bills fewer bytes than the full round
+        full = PearlEngine(update=SgdUpdate()).run(
+            game, gaussian_x0(game), tau=2, rounds=6, gamma=2e-3,
+            key=jax.random.PRNGKey(0))
+        assert r.bytes_up.sum() <= full.bytes_up.sum()
+
+    def test_runs_in_async_engine_with_staleness(self, game):
+        eng = AsyncPearlEngine(
+            update=SgdUpdate(),
+            sync=BestResponseParticipation(price=0.9,
+                                           staleness_discount=0.05),
+            delays=UniformDelay(2), max_staleness=2)
+        r = eng.run(game, gaussian_x0(game), tau=2, rounds=6, gamma=2e-3,
+                    key=jax.random.PRNGKey(0))
+        assert np.isfinite(r.rel_errors).all()
+
+    def test_collapse_freezes_the_joint_state(self, game):
+        """The all-out equilibrium is legitimate: nobody syncs, nobody
+        bills, the joint state never moves off x0."""
+        eng = PearlEngine(update=SgdUpdate(),
+                          sync=BestResponseParticipation(
+                              price=0.05, value_weight=0.0))
+        x0 = gaussian_x0(game)
+        r = eng.run(game, x0, tau=2, rounds=4, gamma=2e-3,
+                    key=jax.random.PRNGKey(0))
+        assert int(r.bytes_up.sum()) == 0
+
+    def test_runs_in_trainer_general_merge(self):
+        from repro.configs import get_config
+        from repro.data.synthetic import DataConfig, SyntheticTokenStream
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        cfg = get_config("smollm-360m").smoke_variant()
+        trainer = PearlTrainer(
+            cfg, sgd(5e-2), n_players=3, tau=2, prox_lambda=1e-3,
+            sync=BestResponseParticipation(price=0.9))
+        stream = SyntheticTokenStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, batch_size=2,
+            n_players=3, seed=0))
+        hist = trainer.run(stream, rounds=2)
+        assert len(hist) == 2
+        assert np.isfinite(hist[-1]["lm_loss"])

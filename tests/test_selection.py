@@ -45,6 +45,7 @@ from repro.core.selection import (
     SELECTION_POLICIES,
     GreedyShapley,
     PowerOfChoice,
+    SampledGreedy,
     UCBSelection,
     UniformSelection,
     is_selection_policy,
@@ -487,3 +488,126 @@ class TestRejectionMatrix:
             PowerOfChoice(candidates=0)
         with pytest.raises(ValueError, match="staleness_penalty"):
             GreedyShapley(staleness_penalty=-0.5)
+
+
+# =========================================================================
+# SampledGreedy: O(k) carried state (the mean-field-scale variant)
+# =========================================================================
+class TestSampledGreedy:
+    def test_state_is_o_k_not_o_n(self):
+        """The carried state is t = min(tracked, n) slots plus a cursor —
+        independent of the population size."""
+        s = SampledGreedy(tracked=16).select_state(100_000)
+        assert s["ids"].shape == (16,) and s["values"].shape == (16,)
+        assert s["cursor"].shape == ()
+        assert SampledGreedy(tracked=64).select_state(8)["ids"].shape == (8,)
+
+    def test_participation_between_explore_and_budget(self):
+        """Explore and exploit slots may overlap: at least e, at most k
+        players per round — the bill is what the mask says, never more."""
+        n = 8
+        policy = SampledGreedy(fraction=0.5, tracked=4)
+        masks, _ = drive(policy, n, 16)
+        per_round = masks.sum(axis=1)
+        assert (per_round <= policy.participants(n)).all()
+        assert (per_round >= policy.explore_count(n)).all()
+
+    def test_cold_start_round_robin_covers_population(self):
+        """With an empty slot table the mask is exactly the cursor window,
+        so ceil(n/e) rounds sweep every player — the discovery channel
+        doubles as the anti-starvation guarantee."""
+        n = 8
+        policy = SampledGreedy(fraction=0.25, tracked=4)
+        e = policy.explore_count(n)
+        state = policy.select_state(n)
+        seen = np.zeros(n, bool)
+        for r in range(-(-n // e)):
+            state, m = policy.select(state, n, r, None)
+            assert int(np.asarray(m).sum()) == e  # empty table: no exploit
+            seen |= np.asarray(m)
+        assert seen.all()
+
+    def test_one_insertion_per_round_and_eviction_rule(self):
+        """observe performs exactly ONE insertion: the best untracked
+        participant enters iff it beats the worst slot's value."""
+        policy = SampledGreedy(fraction=0.5, tracked=2, memory=0.5)
+        n = 4
+        state = policy.select_state(n)
+        mask = jnp.asarray([True, True, False, False])
+        delta = jnp.asarray([[1.0, 0.0], [2.0, 0.0],
+                             [9.0, 9.0], [9.0, 9.0]])
+        # phi = [3, 6, 0, 0]: players 0 and 1 both joined, but only the
+        # best (player 1) is inserted this round
+        state = policy.observe(state, mask, delta, 0)
+        ids = state["ids"].tolist()
+        assert ids.count(1) == 1 and 0 not in ids
+        # next round the remaining empty slot takes player 0
+        state = policy.observe(
+            state, jnp.asarray([True, False, False, False]),
+            jnp.asarray([[1.0, 0.0]] * n), 1)
+        assert sorted(state["ids"].tolist()) == [0, 1]
+        vals = dict(zip(state["ids"].tolist(), state["values"].tolist()))
+        # a weaker candidate cannot evict a stronger slot
+        weak = policy.observe(
+            state, jnp.asarray([False, False, True, False]),
+            jnp.asarray([[0.1, 0.0]] * n), 2)
+        assert sorted(weak["ids"].tolist()) == [0, 1]
+        # a stronger one evicts exactly the WORST slot (player 0 here)
+        strong = policy.observe(
+            state, jnp.asarray([False, False, True, False]),
+            jnp.asarray([[50.0, 0.0]] * n), 2)
+        assert sorted(strong["ids"].tolist()) == [1, 2]
+        got = dict(zip(strong["ids"].tolist(), strong["values"].tolist()))
+        assert got[1] == vals[1]  # surviving slot untouched
+
+    def test_tracked_hit_updates_ewm(self):
+        policy = SampledGreedy(fraction=0.5, tracked=2, memory=0.5)
+        n = 4
+        state = dict(policy.select_state(n),
+                     ids=jnp.asarray([1, -1], jnp.int32),
+                     values=jnp.asarray([6.0, 0.0], jnp.float32))
+        mask = jnp.asarray([False, True, False, False])
+        delta = jnp.zeros((n, 2)).at[1].set(jnp.asarray([2.0, 0.0]))
+        # phi_1 = 4: EWM -> 0.5 * 6 + 0.5 * 4 = 5
+        state = policy.observe(state, mask, delta, 0)
+        idx = state["ids"].tolist().index(1)
+        assert state["values"][idx] == pytest.approx(5.0)
+
+    def test_deterministic_replay(self):
+        policy = SampledGreedy(fraction=0.5, tracked=4)
+        m1, s1 = drive(policy, 8, 12, seed=3)
+        m2, s2 = drive(policy, 8, 12, seed=3)
+        np.testing.assert_array_equal(m1, m2)
+        for k in s1:
+            np.testing.assert_array_equal(s1[k], s2[k])
+
+    def test_discovers_high_value_players(self):
+        """The round-robin probe finds the heavy hitters: after a few
+        sweeps the slot table holds exactly the high-progress players."""
+        n = 12
+        policy = SampledGreedy(fraction=0.5, tracked=3, memory=0.5)
+        scale = [0.1] * 9 + [10.0] * 3
+        _, state = drive(policy, n, 3 * n, delta_scale=scale)
+        assert set(state["ids"].tolist()) == {9, 10, 11}
+
+    def test_runs_in_engine_and_bills_at_most_budget(self):
+        game = weak_quad(n=N, d=10)
+        gamma = 0.4 * stepsize.gamma_constant(game.constants(), 4)
+        policy = SampledGreedy(fraction=0.5, tracked=4)
+        r = PearlEngine(sync=policy).run(
+            game, gaussian_x0(game, seed=0), tau=4, rounds=20, gamma=gamma,
+            key=jax.random.PRNGKey(0), stochastic=False)
+        assert np.isfinite(r.rel_errors).all()
+        k = policy.participants(N)
+        up, _ = policy.round_bytes(np.full(20, k), N, game.d, 4)
+        assert (np.asarray(r.bytes_up) <= up).all()
+
+    def test_knob_validation(self):
+        with pytest.raises(ValueError, match="tracked"):
+            SampledGreedy(tracked=0)
+        with pytest.raises(ValueError, match="explore"):
+            SampledGreedy(explore=0.0)
+        with pytest.raises(ValueError, match="explore"):
+            SampledGreedy(explore=1.5)
+        with pytest.raises(ValueError, match="memory"):
+            SampledGreedy(memory=1.0)

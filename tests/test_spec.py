@@ -1,0 +1,409 @@
+"""EngineSpec: the one config object, the one compatibility matrix.
+
+Three pins:
+
+1. **Spec spelling is bit-for-bit the legacy kwargs.** For each entry
+   point (both dense engines and the neural trainer) a run configured
+   through ``spec=EngineSpec(...)`` realizes the identical trajectory and
+   byte ledger as the same axes passed as constructor kwargs — the spec is
+   sugar, not a second code path.
+2. **Two sources of truth are rejected**, same-value redundancy is not.
+3. **docs/ARCHITECTURE.md's rejection table IS validate_spec.** The
+   doc-sync test parses the table and fires every row: a row whose
+   combination no longer raises — or a new rejection without a row — fails
+   here, so the docs cannot drift from the matrix.
+
+Plus the deprecation shims: the PR 1 adapters and ``make_pearl_round``
+warn exactly once per process and keep working.
+"""
+
+import pathlib
+import re
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+import repro.core.spec as spec_mod
+from repro.core.async_engine import (
+    AsyncPearlEngine,
+    ConstantDelay,
+    StaleSync,
+    UniformDelay,
+)
+from repro.core.engine import (
+    DecentralizedExtragradientUpdate,
+    ExactSync,
+    ExtragradientUpdate,
+    Int4Sync,
+    Int8Sync,
+    JointExtragradientUpdate,
+    MeanFieldView,
+    PartialParticipation,
+    PearlEngine,
+    QuantizedSync,
+    SgdUpdate,
+    StarView,
+)
+from repro.core.games import make_quadratic_game
+from repro.core.games.meanfield import MeanFieldQuadraticGame, make_mean_field_game
+from repro.core.incentives import BestResponseParticipation
+from repro.core.selection import GreedyShapley
+from repro.core.spec import (
+    EngineSpec,
+    merge_trainer_spec,
+    resolve_stale_sync,
+    validate_spec,
+    validate_tree_mean,
+)
+from repro.core.stepsize import SpectralPolicy
+from repro.core.topology import Ring
+
+from helpers import assert_runs_bitwise_equal, gaussian_x0, weak_quad
+
+ARCH = pathlib.Path(__file__).resolve().parents[1] / "docs" / "ARCHITECTURE.md"
+
+
+# ============================================================= equivalence
+class TestSpecEquivalence:
+    """spec= realizes bit-for-bit the legacy kwargs spelling."""
+
+    @pytest.fixture(scope="class")
+    def game(self):
+        return weak_quad()
+
+    def _run(self, engine, game, **kw):
+        import jax
+
+        return engine.run(game, gaussian_x0(game), tau=2, rounds=6,
+                          gamma=2e-3, key=jax.random.PRNGKey(0), **kw)
+
+    @pytest.mark.parametrize("axes", [
+        dict(update=ExtragradientUpdate(), sync=Int8Sync()),
+        dict(topology=Ring(), gossip_steps=2,
+             sync=QuantizedSync(jnp.bfloat16)),
+        dict(sync=GreedyShapley(fraction=0.5, seed=3)),
+    ], ids=["eg-int8-star", "ring-bf16-2sweeps", "selection"])
+    def test_lockstep_spec_equals_kwargs(self, game, axes):
+        legacy = self._run(PearlEngine(**axes), game)
+        specd = self._run(PearlEngine(spec=EngineSpec(**axes)), game)
+        assert_runs_bitwise_equal(legacy, specd)
+
+    def test_async_spec_equals_kwargs(self, game):
+        axes = dict(update=SgdUpdate(), sync=Int8Sync())
+        timing = dict(delays=UniformDelay(2), max_staleness=2)
+        legacy = self._run(AsyncPearlEngine(**axes, **timing), game)
+        specd = self._run(
+            AsyncPearlEngine(spec=EngineSpec(**axes), **timing), game)
+        assert_runs_bitwise_equal(legacy, specd)
+
+    def test_every_axis_lands_on_the_engine(self):
+        s = EngineSpec(update=ExtragradientUpdate(), sync=Int8Sync(),
+                       topology=Ring(), gossip_steps=3,
+                       policy=SpectralPolicy(), mesh_axis="players")
+        eng = PearlEngine(spec=s)
+        assert eng.update == ExtragradientUpdate()
+        assert eng.sync == Int8Sync()
+        assert eng.topology == Ring()
+        assert eng.gossip_steps == 3
+        assert eng.policy == SpectralPolicy()
+        assert eng.mesh_axis == "players"
+
+    def test_trainer_spec_equals_kwargs(self):
+        from repro.configs import get_config
+        from repro.data.synthetic import DataConfig, SyntheticTokenStream
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import PearlTrainer
+
+        cfg = get_config("smollm-360m").smoke_variant()
+
+        def stream():
+            return SyntheticTokenStream(DataConfig(
+                vocab_size=cfg.vocab_size, seq_len=16, batch_size=2,
+                n_players=2, seed=0))
+
+        def run(**kw):
+            t = PearlTrainer(cfg, sgd(5e-2), n_players=2, tau=2,
+                             prox_lambda=1e-3, **kw)
+            hist = t.run(stream(), rounds=2)
+            return t, hist
+
+        t_legacy, h_legacy = run(sync=Int8Sync())
+        t_spec, h_spec = run(spec=EngineSpec(sync=Int8Sync()))
+        assert [h["lm_loss"] for h in h_legacy] == \
+               [h["lm_loss"] for h in h_spec]
+        import jax
+        import numpy as np
+
+        for a, b in zip(jax.tree.leaves(t_legacy.params),
+                        jax.tree.leaves(t_spec.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ================================================================ conflicts
+class TestSpecConflicts:
+    def test_both_ways_different_values_rejected(self):
+        with pytest.raises(ValueError, match="both ways"):
+            PearlEngine(sync=Int8Sync(),
+                        spec=EngineSpec(sync=ExactSync()))
+
+    def test_both_ways_same_value_is_fine(self):
+        eng = PearlEngine(sync=Int8Sync(), spec=EngineSpec(sync=Int8Sync()))
+        assert eng.sync == Int8Sync()
+
+    def test_spec_must_be_an_enginespec(self):
+        with pytest.raises(TypeError, match="EngineSpec"):
+            PearlEngine(spec={"sync": ExactSync()})
+
+    def test_trainer_rejects_update_axis(self):
+        with pytest.raises(ValueError, match="no 'update' axis"):
+            merge_trainer_spec(EngineSpec(update=SgdUpdate()),
+                               topology=None, policy=None, round_kwargs={})
+
+    def test_trainer_sync_both_ways_rejected(self):
+        with pytest.raises(ValueError, match="both ways"):
+            merge_trainer_spec(EngineSpec(sync=Int8Sync()),
+                               topology=None, policy=None,
+                               round_kwargs={"sync": ExactSync()})
+
+    def test_set_axes_lists_only_set_fields(self):
+        assert EngineSpec().set_axes() == {}
+        assert EngineSpec(gossip_steps=2).set_axes() == {"gossip_steps": 2}
+
+
+# =========================================================== doc-table sync
+def _table_rows():
+    """First-column cell of every data row in the rejection table."""
+    section = ARCH.read_text().split(
+        "## Which combinations are rejected, and why", 1)[1]
+    section = section.split("\n## ", 1)[0]
+    rows = []
+    for line in section.splitlines():
+        if (line.startswith("|") and not line.startswith("|---")
+                and "| Verdict |" not in line):
+            rows.append(line.split("|")[1].strip())
+    return rows
+
+
+def _mesh_sentinel():
+    # validate_spec only branches on mesh presence; the collectives that
+    # would consume it are never reached by a rejected composition
+    return object()
+
+
+def _two_moment_game():
+    class TwoMomentGame(MeanFieldQuadraticGame):
+        summary_moments = 2
+
+    g = make_mean_field_game(n=4, d=2)
+    return TwoMomentGame(A=g.A, a=g.a, n=g.n, d=g.d, beta=g.beta)
+
+
+def _trainer_validate(**kw):
+    defaults = dict(trainer=True, delays=None, max_staleness=0,
+                    external_refs=False, trainer_init=False,
+                    staleness_available=False, policy_remedy="r",
+                    coupling=1.0)
+    defaults.update(kw)
+    spec = defaults.pop("spec")
+    return validate_spec(spec, **defaults)
+
+
+# One trigger per table row, keyed by the row's first-column text VERBATIM.
+# Key-set equality against the parsed table is the sync guarantee: add a
+# rejection without a row (or a row without a live rejection) and this
+# test fails.
+TRIGGERS = {
+    "`JointUpdate` × non-`ExactSync`":
+        lambda: validate_spec(EngineSpec(
+            update=JointExtragradientUpdate(),
+            sync=QuantizedSync(jnp.bfloat16))),
+    "`JointUpdate` × graph topology":
+        lambda: validate_spec(EngineSpec(
+            update=JointExtragradientUpdate(), topology=Ring())),
+    "`JointUpdate` × non-`theorem34` policy":
+        lambda: validate_spec(EngineSpec(
+            update=JointExtragradientUpdate(), policy=SpectralPolicy(),
+            topology=Ring())),
+    "`JointUpdate` × `AsyncPearlEngine`":
+        lambda: validate_spec(EngineSpec(update=JointExtragradientUpdate()),
+                              async_=True),
+    "`StaleSync` × `PearlEngine`":
+        lambda: validate_spec(EngineSpec(sync=StaleSync(
+            ExactSync(), UniformDelay(2), 2))),
+    "`StaleSync` + engine-level `delays`/`max_staleness`":
+        lambda: resolve_stale_sync(
+            StaleSync(ExactSync(), UniformDelay(2), 2), UniformDelay(2), 2),
+    "`delay_adaptive` × `PearlEngine` (lockstep)":
+        lambda: validate_spec(EngineSpec(policy="delay_adaptive")),
+    "`delay_adaptive` × lockstep trainer round":
+        lambda: _trainer_validate(spec=EngineSpec(
+            policy="delay_adaptive", sync=ExactSync())),
+    "`spectral` × `star` (any engine, and the trainer)":
+        lambda: validate_spec(EngineSpec(policy="spectral")),
+    "`spectral` trainer without `coupling > 1.0`":
+        lambda: _trainer_validate(spec=EngineSpec(
+            policy="spectral", sync=ExactSync(), topology=Ring()),
+            trainer_init=True, coupling=1.0),
+    "`decentralized_eg` × `star`":
+        lambda: validate_spec(EngineSpec(
+            update=DecentralizedExtragradientUpdate())),
+    "`decentralized_eg` × mask strategy (`partial`/`dropout`)":
+        lambda: validate_spec(EngineSpec(
+            update=DecentralizedExtragradientUpdate(), topology=Ring(),
+            sync=PartialParticipation(fraction=0.5, seed=0))),
+    "`decentralized_eg` × `AsyncPearlEngine`":
+        lambda: validate_spec(EngineSpec(
+            update=DecentralizedExtragradientUpdate(), topology=Ring()),
+            async_=True),
+    "`int8`/`int4` with `error_feedback=True` × graph topology":
+        lambda: validate_spec(EngineSpec(sync=Int8Sync(), topology=Ring())),
+    "`int4` × odd block dimension":
+        lambda: Int4Sync(error_feedback=False).roundtrip(
+            jnp.zeros((2, 3))),
+    "`AsyncPearlEngine(mesh=…)` × graph topology":
+        lambda: validate_spec(EngineSpec(
+            topology=Ring(), mesh=_mesh_sentinel()), async_=True),
+    "`overlap=True` without `mesh` / on gossip / without "
+    "`delays=ConstantDelay(1), max_staleness=1`":
+        lambda: validate_spec(EngineSpec(), async_=True, overlap=True),
+    "`tree_mean` × mask strategy":
+        lambda: validate_tree_mean(
+            PartialParticipation(fraction=0.5, seed=0), 0, None),
+    "`mesh` × mask strategy (dense engines)":
+        lambda: validate_spec(EngineSpec(
+            sync=PartialParticipation(fraction=0.5, seed=0),
+            mesh=_mesh_sentinel())),
+    "`mesh` × `JointUpdate`":
+        lambda: validate_spec(EngineSpec(
+            update=JointExtragradientUpdate(), mesh=_mesh_sentinel())),
+    "`StarView` × graph topology / `GossipView` × star":
+        lambda: validate_spec(EngineSpec(view=StarView(), topology=Ring())),
+    "`MeanFieldView` × graph topology":
+        lambda: validate_spec(EngineSpec(
+            view=MeanFieldView(), topology=Ring())),
+    "`MeanFieldView` × non-`AggregativeGame`":
+        lambda: validate_spec(EngineSpec(view=MeanFieldView()),
+                              game=make_quadratic_game(n=2, d=2, M=2)),
+    "`MeanFieldView(moments=m)` × game with `summary_moments > m`":
+        lambda: validate_spec(EngineSpec(view=MeanFieldView(moments=1)),
+                              game=_two_moment_game()),
+    "`MeanFieldView` × `JointUpdate` / `decentralized_eg`":
+        lambda: validate_spec(EngineSpec(
+            view=MeanFieldView(), update=JointExtragradientUpdate())),
+    "`MeanFieldView` × mask strategy (`partial`/`dropout`)":
+        lambda: validate_spec(EngineSpec(
+            view=MeanFieldView(),
+            sync=PartialParticipation(fraction=0.5, seed=0))),
+    "`MeanFieldView` × `mesh`":
+        lambda: validate_spec(EngineSpec(
+            view=MeanFieldView(), mesh=_mesh_sentinel())),
+    "`MeanFieldView(sample=k)` × error-feedback sync / × "
+    "`AsyncPearlEngine`":
+        lambda: validate_spec(EngineSpec(
+            view=MeanFieldView(sample=2), sync=Int8Sync())),
+    "trainer `view=` anything but `MeanFieldView(moments=1, "
+    "self_correction=False, sample=None)`":
+        lambda: _trainer_validate(spec=EngineSpec(
+            view=StarView(), sync=ExactSync())),
+    "selection policy × graph topology (both engines AND the trainer)":
+        lambda: validate_spec(EngineSpec(
+            sync=GreedyShapley(), topology=Ring())),
+    "selection policy × dense-engine `mesh`":
+        lambda: validate_spec(EngineSpec(
+            sync=GreedyShapley(), mesh=_mesh_sentinel())),
+    "selection policy × dense `MeanFieldView` (`sample=None`)":
+        lambda: validate_spec(EngineSpec(
+            sync=GreedyShapley(), view=MeanFieldView())),
+    "selection policy's legacy `init_state`/`pre_round`/`mask` surface":
+        lambda: GreedyShapley().pre_round(None),
+    "incentive policy (`best_response`) × `JointUpdate`":
+        lambda: validate_spec(EngineSpec(
+            update=JointExtragradientUpdate(),
+            sync=BestResponseParticipation())),
+    "incentive policy (`best_response`) × dense `MeanFieldView`":
+        lambda: validate_spec(EngineSpec(
+            sync=BestResponseParticipation(), view=MeanFieldView())),
+    "spec axis given BOTH ways (`EngineSpec(update=…)` + constructor "
+    "`update=…`, different values)":
+        lambda: PearlEngine(update=ExtragradientUpdate(),
+                            spec=EngineSpec(update=SgdUpdate())),
+    "trainer spec with `update` / `gossip_steps`":
+        lambda: merge_trainer_spec(EngineSpec(gossip_steps=2),
+                                   topology=None, policy=None,
+                                   round_kwargs={}),
+    "`tau < 1`, `rounds < 1`, `gossip_steps < 1`, `max_staleness < 0`, "
+    "fractions/probabilities outside `[0, 1]`, selection knobs out of "
+    "range (`memory ∉ [0, 1)`, `aging < 0`, `c < 0`, `candidates < 1`, "
+    "`tracked < 1`, `explore ∉ (0, 1]`), incentive knobs out of range "
+    "(unknown `payment` rule, negative `price`/`budget`/`value_weight`/"
+    "`staleness_discount`, `br_iters < 1`, `cost_min > cost_max`), "
+    "nested `StaleSync`, `MeanFieldView` with `moments ∉ {1, 2}` or "
+    "`sample < 1` or `sample > n−1`":
+        lambda: BestResponseParticipation(payment="bribery"),
+}
+
+
+class TestDocTableSync:
+    def test_table_and_triggers_cover_each_other(self):
+        rows = _table_rows()
+        assert len(rows) == len(set(rows)), "duplicate table rows"
+        assert set(rows) == set(TRIGGERS), (
+            "docs/ARCHITECTURE.md rejection table and "
+            "tests/test_spec.py::TRIGGERS disagree:\n"
+            f"  rows without a trigger: {sorted(set(rows) - set(TRIGGERS))}\n"
+            f"  triggers without a row: {sorted(set(TRIGGERS) - set(rows))}"
+        )
+
+    @pytest.mark.parametrize("row", sorted(TRIGGERS),
+                             ids=lambda r: r[:48].replace(" ", "_"))
+    def test_every_row_fires(self, row):
+        with pytest.raises((ValueError, RuntimeError)):
+            TRIGGERS[row]()
+
+
+# ============================================================= deprecation
+class TestDeprecationShims:
+    @pytest.fixture(autouse=True)
+    def _fresh_warned(self, monkeypatch):
+        monkeypatch.setattr(spec_mod, "_LEGACY_WARNED", set())
+
+    def test_warn_legacy_is_one_time(self):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            spec_mod.warn_legacy("thing", "use EngineSpec")
+            spec_mod.warn_legacy("thing", "use EngineSpec")
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "EngineSpec" in str(dep[0].message)
+
+    def test_pearl_sgd_warns_and_matches_engine(self):
+        import jax
+
+        game = make_quadratic_game(n=2, d=2, M=4)
+        x0 = gaussian_x0(game)
+        from repro.core.pearl import pearl_sgd
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            r_legacy = pearl_sgd(game, x0, tau=2, rounds=3, gamma=1e-3,
+                                 key=jax.random.PRNGKey(0))
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        r_spec = PearlEngine(spec=EngineSpec(update=SgdUpdate())).run(
+            game, x0, tau=2, rounds=3, gamma=1e-3,
+            key=jax.random.PRNGKey(0))
+        assert_runs_bitwise_equal(r_legacy, r_spec)
+
+    def test_make_pearl_round_warns_once(self):
+        from repro.configs import get_config
+        from repro.optim.optimizers import sgd
+        from repro.train.pearl_trainer import make_pearl_round
+
+        cfg = get_config("smollm-360m").smoke_variant()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            make_pearl_round(cfg, sgd(1e-2), tau=1, prox_lambda=0.0)
+            make_pearl_round(cfg, sgd(1e-2), tau=1, prox_lambda=0.0)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "make_pearl_round" in str(dep[0].message)
